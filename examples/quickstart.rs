@@ -1,0 +1,48 @@
+//! Quickstart: build every solver over one array, answer a few queries,
+//! and show the paper's worked example (§2).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rtxrmq::rmq::exhaustive::Exhaustive;
+use rtxrmq::rmq::hrmq::Hrmq;
+use rtxrmq::rmq::lca::LcaRmq;
+use rtxrmq::rmq::rtx::RtxRmq;
+use rtxrmq::rmq::RmqSolver;
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, RangeDist};
+
+fn main() {
+    // --- the paper's §2 example ---
+    let xs = [9.0f32, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+    let rtx = RtxRmq::new_auto(&xs);
+    println!("X = {xs:?}");
+    println!("RMQ(2, 6) = {} (paper: 5, value {})", rtx.rmq(2, 6), rtx.value_of(rtx.rmq(2, 6)));
+
+    // --- all four approaches on a real batch ---
+    let n = 1 << 16;
+    let values = Rng::new(1).uniform_f32_vec(n);
+    let mut rng = Rng::new(2);
+    let queries = gen_queries(n, 1024, RangeDist::Small, &mut rng);
+
+    let solvers: Vec<Box<dyn RmqSolver>> = vec![
+        Box::new(RtxRmq::new_auto(&values)),
+        Box::new(LcaRmq::new(&values)),
+        Box::new(Hrmq::new(&values)),
+        Box::new(Exhaustive::new(&values)),
+    ];
+    let reference = solvers[0].batch(&queries, 1);
+    for s in &solvers {
+        let t0 = std::time::Instant::now();
+        let answers = s.batch(&queries, 1);
+        let dt = t0.elapsed();
+        assert_eq!(answers, reference, "solvers must agree");
+        println!(
+            "{:<11} answered {} queries in {:>9.2?}  ({:.0} B aux memory)",
+            s.name(),
+            queries.len(),
+            dt,
+            s.memory_bytes() as f64
+        );
+    }
+    println!("all solvers agree on {} small-range queries over n = {n}", queries.len());
+}

@@ -1,0 +1,119 @@
+//! End-to-end serving driver (DESIGN.md §4's E2E row): start the L3
+//! coordinator with all engines **including the PJRT-backed XLA engine**
+//! (L1 Pallas kernels lowered through the L2 JAX graph — Python never
+//! runs here), fire a mixed workload of request batches at it from
+//! concurrent clients, and report routing decisions, latency percentiles
+//! and throughput. Results are recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_batch`
+//! Flags: --n 2^16  --requests 512  --batch 2^10  --no-xla
+
+use rtxrmq::coordinator::batcher::BatcherCfg;
+use rtxrmq::coordinator::router::Policy;
+use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::rmq::sparse_table::SparseTable;
+use rtxrmq::rmq::RmqSolver;
+use rtxrmq::runtime::Runtime;
+use rtxrmq::util::cli::Args;
+use rtxrmq::util::rng::Rng;
+use rtxrmq::util::stats::{fmt_ns, percentile};
+use rtxrmq::workload::{gen_array, gen_queries, RangeDist};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let n: usize = args.get_or("n", 1usize << 16).unwrap();
+    let requests: usize = args.get_or("requests", 384usize).unwrap();
+    let per_request: usize = args.get_or("batch", 1usize << 10).unwrap();
+    let clients: usize = args.get_or("clients", 4usize).unwrap();
+
+    let xs = gen_array(n, 7);
+    let runtime = if args.flag("no-xla") {
+        None
+    } else {
+        match Runtime::load(Path::new("artifacts")) {
+            Ok(rt) => {
+                println!("loaded {} AOT artifact variants via PJRT", rt.variants().count());
+                Some(Arc::new(rt))
+            }
+            Err(e) => {
+                eprintln!("warning: XLA engine disabled ({e}); run `make artifacts`");
+                None
+            }
+        }
+    };
+
+    let t_build = std::time::Instant::now();
+    let coordinator = Arc::new(Coordinator::start(
+        &xs,
+        runtime,
+        CoordinatorCfg {
+            policy: Policy::ModeledCost,
+            batcher: BatcherCfg {
+                max_batch_queries: 1 << 15,
+                max_wait: std::time::Duration::from_millis(1),
+                queue_cap: 128,
+            },
+            engine_workers: rtxrmq::util::pool::default_workers(),
+        },
+    ));
+    println!("engines built in {:.2?} (n = {n})", t_build.elapsed());
+
+    // Concurrent clients with a mixed distribution profile.
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    let latencies = Arc::new(std::sync::Mutex::new(Vec::<f64>::new()));
+    let per_engine = Arc::new(std::sync::Mutex::new(std::collections::HashMap::<String, u64>::new()));
+    for c in 0..clients {
+        let coordinator = coordinator.clone();
+        let latencies = latencies.clone();
+        let per_engine = per_engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + c as u64);
+            let my_requests = requests / clients.max(1);
+            for i in 0..my_requests {
+                let dist = match i % 3 {
+                    0 => RangeDist::Small,
+                    1 => RangeDist::Medium,
+                    _ => RangeDist::Large,
+                };
+                let qs = gen_queries(n, per_request, dist, &mut rng);
+                let t = std::time::Instant::now();
+                let resp = coordinator.query(qs).expect("serve");
+                latencies.lock().unwrap().push(t.elapsed().as_nanos() as f64);
+                *per_engine.lock().unwrap().entry(resp.engine.to_string()).or_default() += 1;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed();
+
+    // Spot-check correctness against the oracle.
+    let st = SparseTable::new(&xs);
+    let mut rng = Rng::new(5);
+    let check = gen_queries(n, 256, RangeDist::Medium, &mut rng);
+    let resp = coordinator.query(check.clone()).unwrap();
+    for (i, &(l, r)) in check.iter().enumerate() {
+        assert_eq!(resp.answers[i], st.rmq(l, r), "query ({l},{r})");
+    }
+    println!("correctness spot-check vs sparse-table oracle: OK (256 queries)");
+
+    let lat = latencies.lock().unwrap();
+    let served: u64 = requests as u64 * per_request as u64 / clients.max(1) as u64 * clients as u64;
+    println!("\n== serve_batch E2E report ==");
+    println!("requests served : {} ({} queries each, {} clients)", lat.len(), per_request, clients);
+    println!("total queries   : {}", served);
+    println!("wall time       : {wall:.2?}");
+    println!("throughput      : {:.0} queries/s", served as f64 / wall.as_secs_f64());
+    println!(
+        "request latency : p50 {}  p95 {}  p99 {}",
+        fmt_ns(percentile(&lat, 50.0)),
+        fmt_ns(percentile(&lat, 95.0)),
+        fmt_ns(percentile(&lat, 99.0))
+    );
+    println!("routing         : {:?}", per_engine.lock().unwrap());
+    println!("\n{}", coordinator.metrics.lock().unwrap());
+}

@@ -1,0 +1,102 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts + manifest.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids, which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+
+Emits one `<name>.hlo.txt` per variant plus `manifest.json` describing
+shapes, so the Rust runtime (`rust/src/runtime`) can pick a variant and
+pad batches without re-deriving anything.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, n, q, bs, block_q, block_n). bs == 0 => exhaustive variant.
+# Tile sizes are the §Perf-tuned defaults; `--quick` keeps only the
+# smallest of each kind for CI.
+VARIANTS = [
+    # Exhaustive (the paper's GPU baseline; small n only — brute force).
+    {"name": "exhaustive_n4096_q256", "kind": "exhaustive", "n": 4096, "q": 256,
+     "block_q": 256, "block_n": 1024},
+    {"name": "exhaustive_n16384_q256", "kind": "exhaustive", "n": 16384, "q": 256,
+     "block_q": 256, "block_n": 2048},
+    # Block-matrix graph (Algorithm 6).
+    {"name": "block_n4096_q256_bs64", "kind": "block", "n": 4096, "q": 256, "bs": 64,
+     "block_q": 256},
+    {"name": "block_n65536_q256_bs256", "kind": "block", "n": 65536, "q": 256, "bs": 256,
+     "block_q": 256},
+    # Preprocessing-only artifact.
+    {"name": "blockmin_n65536_bs256", "kind": "blockmin", "n": 65536, "bs": 256},
+]
+
+QUICK_NAMES = {"exhaustive_n4096_q256", "block_n4096_q256_bs64"}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(v):
+    n, q = v["n"], v.get("q", 0)
+    xs = jax.ShapeDtypeStruct((n,), jnp.float32)
+    ls = jax.ShapeDtypeStruct((q,), jnp.int32)
+    rs = jax.ShapeDtypeStruct((q,), jnp.int32)
+    if v["kind"] == "exhaustive":
+        fn = lambda a, b, c: model.exhaustive_rmq(
+            a, b, c, block_q=v["block_q"], block_n=v["block_n"])
+        return jax.jit(fn).lower(xs, ls, rs)
+    if v["kind"] == "block":
+        fn = lambda a, b, c: model.block_rmq(a, b, c, v["bs"], block_q=v["block_q"])
+        return jax.jit(fn).lower(xs, ls, rs)
+    if v["kind"] == "blockmin":
+        fn = lambda a: model.block_minimums(a, v["bs"])
+        return jax.jit(fn).lower(xs)
+    raise ValueError(v["kind"])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the smallest variant of each kind")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "variants": []}
+    for v in VARIANTS:
+        if args.quick and v["name"] not in QUICK_NAMES:
+            continue
+        lowered = lower_variant(v)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, v["name"] + ".hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry = dict(v)
+        entry["file"] = v["name"] + ".hlo.txt"
+        # Outputs are a tuple (return_tuple=True): (mins f32, args i32).
+        manifest["variants"].append(entry)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

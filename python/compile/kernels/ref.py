@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every kernel in this package must agree with these references bit-for-bit
+on indices (leftmost-min tie-break) and up to float equality on values.
+``jnp.argmin`` returns the *first* occurrence of the minimum, which is
+exactly the paper's leftmost-position convention (§2).
+"""
+
+import jax.numpy as jnp
+
+
+def rmq_ref(xs, ls, rs):
+    """Batched RMQ: for each query q, argmin of xs[ls[q] .. rs[q]].
+
+    Args:
+      xs: f32[n] values.
+      ls, rs: i32[q] inclusive range endpoints, 0 <= l <= r < n.
+
+    Returns:
+      (mins f32[q], args i32[q]) with leftmost tie-break.
+    """
+    n = xs.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    mask = (idx[None, :] >= ls[:, None]) & (idx[None, :] <= rs[:, None])
+    vals = jnp.where(mask, xs[None, :], jnp.inf)
+    args = jnp.argmin(vals, axis=1).astype(jnp.int32)
+    mins = jnp.min(vals, axis=1)
+    return mins, args
+
+
+def block_min_ref(xs, bs):
+    """Per-block minimum and global argmin (paper §5.3's A' array).
+
+    Requires n % bs == 0 (the AOT pipeline pads inputs to this shape).
+    Returns (mins f32[n//bs], args i32[n//bs]).
+    """
+    n = xs.shape[0]
+    assert n % bs == 0, "pad the array before calling"
+    tiles = xs.reshape(n // bs, bs)
+    local = jnp.argmin(tiles, axis=1).astype(jnp.int32)
+    args = (jnp.arange(n // bs, dtype=jnp.int32) * bs + local).astype(jnp.int32)
+    mins = jnp.min(tiles, axis=1)
+    return mins, args
+
+
+def masked_argmin_ref(vals, lo, hi):
+    """Per-row masked argmin over column range [lo, hi] (empty => +inf, 0).
+
+    Args:
+      vals: f32[q, w].
+      lo, hi: i32[q] inclusive column bounds; hi < lo marks an empty range.
+
+    Returns:
+      (mins f32[q], args i32[q]) — args are column indices.
+    """
+    w = vals.shape[1]
+    col = jnp.arange(w, dtype=jnp.int32)
+    mask = (col[None, :] >= lo[:, None]) & (col[None, :] <= hi[:, None])
+    masked = jnp.where(mask, vals, jnp.inf)
+    args = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    mins = jnp.min(masked, axis=1)
+    return mins, args

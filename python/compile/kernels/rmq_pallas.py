@@ -1,0 +1,169 @@
+"""L1 Pallas kernels — the compute hot-spot of the three-layer stack.
+
+Hardware adaptation (DESIGN.md §1): the paper's hot spot is "one ray vs
+many triangles, keep closest hit". An RMQ ray-cast is a *masked min/argmin
+whose mask is a geometric range predicate*, so on TPU we tile that
+reduction for the VPU instead of walking a BVH:
+
+- ``rmq_kernel``: grid (query-tiles × array-blocks). Each step holds one
+  array block and one query tile in VMEM (BlockSpec = the HBM→VMEM
+  schedule the paper expressed with per-block geometry), computes the
+  in-range mask against a global-index iota and folds (min, leftmost
+  argmin) into the output accumulator. The paper's block-matrix
+  decomposition maps exactly onto this grid.
+- ``block_min_kernel``: builds the block-minimums array A' (§5.3).
+- ``masked_argmin_kernel``: per-row bounded argmin over gathered tiles —
+  the partial-block stage of Algorithm 6 in the L2 graph.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls; real-TPU performance is *estimated* from the VMEM
+footprint of these BlockSpecs (EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. (8, 128) is the f32 VPU lane layout; tiles are kept
+# 2D-aligned so the same BlockSpecs lower to Mosaic unchanged on real TPU.
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_N = 2048
+
+
+def _rmq_step(l_ref, r_ref, x_ref, min_ref, arg_ref, *, block_n: int):
+    """One grid step: fold array block j into the query tile's accumulator."""
+    j = pl.program_id(1)
+    base = j * block_n
+    x = x_ref[...]  # f32[block_n]
+    l = l_ref[...]  # i32[block_q]
+    r = r_ref[...]
+    # Global indices of this block's elements.
+    idx = base + jax.lax.iota(jnp.int32, block_n)
+    mask = (idx[None, :] >= l[:, None]) & (idx[None, :] <= r[:, None])
+    vals = jnp.where(mask, x[None, :], jnp.inf)
+    local_arg = jnp.argmin(vals, axis=1).astype(jnp.int32)  # leftmost
+    local_min = jnp.min(vals, axis=1)
+    global_arg = base + local_arg
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[...] = jnp.full(min_ref.shape, jnp.inf, dtype=min_ref.dtype)
+        arg_ref[...] = jnp.zeros(arg_ref.shape, dtype=arg_ref.dtype)
+
+    cur_min = min_ref[...]
+    cur_arg = arg_ref[...]
+    # Strict '<': blocks are visited left-to-right, so ties keep the
+    # earlier (leftmost) index.
+    better = local_min < cur_min
+    min_ref[...] = jnp.where(better, local_min, cur_min)
+    arg_ref[...] = jnp.where(better, global_arg, cur_arg)
+
+
+def rmq_kernel(xs, ls, rs, *, block_q: int = DEFAULT_BLOCK_Q, block_n: int = DEFAULT_BLOCK_N):
+    """Batched exhaustive RMQ (the paper's EXHAUSTIVE baseline on the GPU
+    side, §6.1) as a tiled Pallas reduction.
+
+    Shapes: xs f32[n], ls/rs i32[q] with n % block_n == 0, q % block_q == 0.
+    Returns (mins f32[q], args i32[q]).
+    """
+    n, q = xs.shape[0], ls.shape[0]
+    assert n % block_n == 0 and q % block_q == 0, (n, q, block_n, block_q)
+    grid = (q // block_q, n // block_n)
+    kernel = functools.partial(_rmq_step, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),  # ls
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),  # rs
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),  # xs
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+            pl.BlockSpec((block_q,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+        ],
+        interpret=True,
+    )(ls, rs, xs)
+
+
+def _block_min_step(x_ref, min_ref, arg_ref, *, bs: int):
+    b = pl.program_id(0)
+    x = x_ref[...]
+    local = jnp.argmin(x).astype(jnp.int32)
+    min_ref[...] = jnp.min(x)[None]
+    arg_ref[...] = (b * bs + local)[None]
+
+
+def block_min_kernel(xs, bs):
+    """Block minimums + global argmins (A' of §5.3). n % bs == 0."""
+    n = xs.shape[0]
+    assert n % bs == 0
+    nb = n // bs
+    kernel = functools.partial(_block_min_step, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((bs,), lambda b: (b,))],
+        out_specs=[pl.BlockSpec((1,), lambda b: (b,)), pl.BlockSpec((1,), lambda b: (b,))],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb,), jnp.float32),
+            jax.ShapeDtypeStruct((nb,), jnp.int32),
+        ],
+        interpret=True,
+    )(xs)
+
+
+def _masked_argmin_step(lo_ref, hi_ref, vals_ref, min_ref, arg_ref):
+    vals = vals_ref[...]  # f32[block_q, w]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    w = vals.shape[1]
+    col = jax.lax.iota(jnp.int32, w)
+    mask = (col[None, :] >= lo[:, None]) & (col[None, :] <= hi[:, None])
+    masked = jnp.where(mask, vals, jnp.inf)
+    arg_ref[...] = jnp.argmin(masked, axis=1).astype(jnp.int32)
+    min_ref[...] = jnp.min(masked, axis=1)
+
+
+def masked_argmin_kernel(vals, lo, hi, *, block_q: int = DEFAULT_BLOCK_Q):
+    """Per-row masked argmin over [lo, hi] columns (empty: (inf, 0)).
+
+    vals f32[q, w], lo/hi i32[q], q % block_q == 0.
+    """
+    q, w = vals.shape
+    assert q % block_q == 0, (q, block_q)
+    return pl.pallas_call(
+        _masked_argmin_step,
+        grid=(q // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q, w), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q,), jnp.float32),
+            jax.ShapeDtypeStruct((q,), jnp.int32),
+        ],
+        interpret=True,
+    )(lo, hi, vals)
+
+
+def vmem_footprint_bytes(block_q: int, block_n: int) -> int:
+    """Estimated VMEM bytes held live by one ``rmq_kernel`` grid step:
+    query tile (l, r: 2×i32), array block (f32), accumulators (f32+i32),
+    and the (block_q × block_n) mask/vals intermediate. Used by the §Perf
+    pass to keep the working set under the ~16 MiB/core VMEM budget."""
+    tile = block_q * 4 * 4  # l, r, min, arg
+    block = block_n * 4
+    intermediate = block_q * block_n * (4 + 1)  # f32 vals + bool mask
+    return tile + block + intermediate

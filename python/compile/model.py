@@ -1,0 +1,98 @@
+"""L2 — the JAX compute graphs AOT-compiled for the Rust coordinator.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+- ``exhaustive_rmq``: the paper's EXHAUSTIVE GPU baseline (§6.1) — a
+  single tiled masked-argmin sweep over the whole array.
+- ``block_rmq``: the paper's Algorithm 6 as a dense compute graph: a
+  query decomposes into left-partial-block + right-partial-block
+  (``masked_argmin_kernel`` over gathered tiles) + fully-covered interior
+  (``masked_argmin_kernel`` over the block-minimums array built by
+  ``block_min_kernel``), combined with a leftmost-preferring min.
+
+Shapes are static (XLA): the AOT pipeline emits one artifact per (n, q,
+bs) variant, and the Rust runtime pads query batches to `q`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import rmq_pallas as k
+
+
+def exhaustive_rmq(xs, ls, rs, *, block_q=None, block_n=None):
+    """Batched brute-force RMQ. Returns (mins f32[q], args i32[q])."""
+    kwargs = {}
+    if block_q is not None:
+        kwargs["block_q"] = block_q
+    if block_n is not None:
+        kwargs["block_n"] = block_n
+    mins, args = k.rmq_kernel(xs, ls, rs, **kwargs)
+    return mins, args
+
+
+def _gather_tiles(xs, block_idx, bs):
+    """Gather per-query block tiles: (q,) block indices -> f32[q, bs]."""
+    base = block_idx[:, None] * bs
+    cols = jnp.arange(bs, dtype=jnp.int32)[None, :]
+    return xs[(base + cols).astype(jnp.int32)]
+
+
+def block_rmq(xs, ls, rs, bs, *, block_q=None):
+    """Algorithm 6 as an L2 graph. Requires n % bs == 0.
+
+    Returns (mins f32[q], args i32[q]) — global indices, leftmost ties.
+    """
+    n = xs.shape[0]
+    assert n % bs == 0
+    kwargs = {"block_q": block_q} if block_q is not None else {}
+
+    # Preprocessing stage (paper: "performed once for the input"): the
+    # block minimums A'. XLA CSEs this across the jit; the AOT variant
+    # takes xs as an argument so the artifact recomputes it per call —
+    # the Rust engine amortises by caching answers per array epoch.
+    bmins, bargs = k.block_min_kernel(xs, bs)
+    nb = n // bs
+
+    bl = (ls // bs).astype(jnp.int32)
+    br = (rs // bs).astype(jnp.int32)
+    same = bl == br
+    lloc = (ls % bs).astype(jnp.int32)
+    rloc = (rs % bs).astype(jnp.int32)
+
+    # Left partial block: local range [l%bs, bs-1], clipped to r%bs when
+    # the query lives in a single block (case #1 collapses into this).
+    left_tiles = _gather_tiles(xs, bl, bs)
+    left_hi = jnp.where(same, rloc, jnp.int32(bs - 1))
+    lmin, larg = k.masked_argmin_kernel(left_tiles, lloc, left_hi, **kwargs)
+    lglob = bl * bs + larg
+
+    # Right partial block: [0, r%bs]; empty when the query is one block.
+    right_tiles = _gather_tiles(xs, br, bs)
+    rlo = jnp.where(same, jnp.int32(1), jnp.int32(0))
+    rhi = jnp.where(same, jnp.int32(0), rloc)  # hi < lo => empty
+    rmin, rarg = k.masked_argmin_kernel(right_tiles, rlo, rhi, **kwargs)
+    rglob = br * bs + rarg
+
+    # Interior: block-minimum range [bl+1, br-1]; empty when br-bl < 2.
+    q = ls.shape[0]
+    interior = jnp.broadcast_to(bmins[None, :], (q, nb))
+    imin, iarg_b = k.masked_argmin_kernel(interior, bl + 1, br - 1, **kwargs)
+    iglob = bargs[iarg_b]
+
+    # Leftmost-preferring combine: candidates are in index order
+    # (left block < interior blocks < right block), so strict '<' when
+    # replacing keeps the leftmost global minimum.
+    best_min, best_arg = lmin, lglob
+    take_i = imin < best_min
+    best_min = jnp.where(take_i, imin, best_min)
+    best_arg = jnp.where(take_i, iglob, best_arg)
+    take_r = rmin < best_min
+    best_min = jnp.where(take_r, rmin, best_min)
+    best_arg = jnp.where(take_r, rglob, best_arg)
+    return best_min, best_arg.astype(jnp.int32)
+
+
+def block_minimums(xs, bs):
+    """Expose the preprocessing stage as its own artifact (the Rust
+    coordinator calls it once per array epoch)."""
+    return k.block_min_kernel(xs, bs)

@@ -1,0 +1,135 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and data (including duplicate-heavy arrays that
+exercise the leftmost tie-break); fixed seeds keep CI deterministic.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import rmq_pallas as k
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def make_queries(rng, n, q):
+    ls = rng.integers(0, n, size=q).astype(np.int32)
+    span = rng.integers(0, n, size=q)
+    rs = np.minimum(ls + span, n - 1).astype(np.int32)
+    ls = np.minimum(ls, rs)
+    return ls, rs
+
+
+# ------------------------------------------------------------- rmq_kernel
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n_blocks=st.integers(1, 4),
+    block_n=st.sampled_from([128, 256]),
+    q_tiles=st.integers(1, 2),
+    block_q=st.sampled_from([32, 64]),
+    dup=st.booleans(),
+)
+def test_rmq_kernel_matches_ref(seed, n_blocks, block_n, q_tiles, block_q, dup):
+    rng = np.random.default_rng(seed)
+    n, q = n_blocks * block_n, q_tiles * block_q
+    if dup:
+        xs = rng.integers(0, 4, size=n).astype(np.float32)
+    else:
+        xs = rng.random(n, dtype=np.float32)
+    ls, rs = make_queries(rng, n, q)
+    mins, args = k.rmq_kernel(jnp.array(xs), jnp.array(ls), jnp.array(rs),
+                              block_q=block_q, block_n=block_n)
+    rmins, rargs = ref.rmq_ref(jnp.array(xs), jnp.array(ls), jnp.array(rs))
+    np.testing.assert_array_equal(np.asarray(args), np.asarray(rargs))
+    np.testing.assert_allclose(np.asarray(mins), np.asarray(rmins), rtol=0)
+
+
+def test_rmq_kernel_paper_example():
+    # §2: X = [9,2,7,8,4,1,3] (padded to 8), RMQ(2,6) = 5.
+    xs = jnp.array([9, 2, 7, 8, 4, 1, 3, np.inf], dtype=jnp.float32)
+    ls = jnp.array([2, 0, 0, 3], dtype=jnp.int32)
+    rs = jnp.array([6, 6, 3, 3], dtype=jnp.int32)
+    mins, args = k.rmq_kernel(xs, ls, rs, block_q=4, block_n=8)
+    np.testing.assert_array_equal(np.asarray(args), [5, 5, 1, 3])
+    np.testing.assert_allclose(np.asarray(mins), [1, 1, 2, 8])
+
+
+def test_rmq_kernel_leftmost_across_block_boundary():
+    # Equal minima in different array blocks: the left one must win.
+    xs = jnp.array([5, 1, 7, 9, 1, 8, 2, 3], dtype=jnp.float32)
+    ls = jnp.array([0, 2], dtype=jnp.int32)
+    rs = jnp.array([7, 7], dtype=jnp.int32)
+    _, args = k.rmq_kernel(xs, ls, rs, block_q=2, block_n=4)  # 2 blocks
+    np.testing.assert_array_equal(np.asarray(args), [1, 4])
+
+
+# -------------------------------------------------------- block_min_kernel
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nb=st.integers(1, 16),
+    bs=st.sampled_from([8, 32, 128]),
+    dup=st.booleans(),
+)
+def test_block_min_matches_ref(seed, nb, bs, dup):
+    rng = np.random.default_rng(seed)
+    n = nb * bs
+    xs = (rng.integers(0, 3, size=n) if dup else rng.random(n)).astype(np.float32)
+    mins, args = k.block_min_kernel(jnp.array(xs), bs)
+    rmins, rargs = ref.block_min_ref(jnp.array(xs), bs)
+    np.testing.assert_array_equal(np.asarray(args), np.asarray(rargs))
+    np.testing.assert_allclose(np.asarray(mins), np.asarray(rmins), rtol=0)
+
+
+# ----------------------------------------------------- masked_argmin_kernel
+
+@settings(**SETTINGS)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    q_tiles=st.integers(1, 3),
+    block_q=st.sampled_from([16, 64]),
+    w=st.sampled_from([8, 64, 200]),
+    dup=st.booleans(),
+)
+def test_masked_argmin_matches_ref(seed, q_tiles, block_q, w, dup):
+    rng = np.random.default_rng(seed)
+    q = q_tiles * block_q
+    vals = (rng.integers(0, 3, size=(q, w)) if dup else rng.random((q, w))).astype(np.float32)
+    lo = rng.integers(0, w, size=q).astype(np.int32)
+    hi = rng.integers(-1, w, size=q).astype(np.int32)  # allows empty ranges
+    mins, args = k.masked_argmin_kernel(jnp.array(vals), jnp.array(lo), jnp.array(hi),
+                                        block_q=block_q)
+    rmins, rargs = ref.masked_argmin_ref(jnp.array(vals), jnp.array(lo), jnp.array(hi))
+    np.testing.assert_array_equal(np.asarray(args), np.asarray(rargs))
+    np.testing.assert_array_equal(np.asarray(mins), np.asarray(rmins))
+
+
+def test_masked_argmin_empty_rows_are_inf():
+    vals = jnp.ones((4, 8), dtype=jnp.float32)
+    lo = jnp.array([5, 0, 7, 3], dtype=jnp.int32)
+    hi = jnp.array([4, 7, 6, 3], dtype=jnp.int32)  # rows 0 and 2 empty
+    mins, args = k.masked_argmin_kernel(vals, lo, hi, block_q=4)
+    m = np.asarray(mins)
+    assert np.isinf(m[0]) and np.isinf(m[2])
+    assert m[1] == 1.0 and m[3] == 1.0
+    assert np.asarray(args)[3] == 3
+
+
+def test_vmem_footprint_budget():
+    # The shipped default tiles must sit well inside a 16 MiB VMEM core.
+    assert k.vmem_footprint_bytes(k.DEFAULT_BLOCK_Q, k.DEFAULT_BLOCK_N) < 8 * 2**20
+
+
+@pytest.mark.parametrize("bad", [(100, 64), (256, 100)])
+def test_rmq_kernel_rejects_unaligned(bad):
+    q, n = 256, 2048
+    xs = jnp.zeros((n,), jnp.float32)
+    ls = jnp.zeros((q,), jnp.int32)
+    with pytest.raises(AssertionError):
+        k.rmq_kernel(xs, ls, ls, block_q=bad[0], block_n=bad[1])

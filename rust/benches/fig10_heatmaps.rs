@@ -1,0 +1,102 @@
+//! Fig. 10 — performance heat maps in (n × |(l,r)|) space for all four
+//! approaches. Emits `results/fig10_<approach>.csv` with one row per
+//! cell (blue = fast, yellow = slow in the paper's rendering) and prints
+//! a compact ASCII map per approach.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let approaches = ["RTXRMQ", "LCA", "HRMQ", "EXHAUSTIVE"];
+    let mut writers: Vec<CsvWriter> = approaches
+        .iter()
+        .map(|a| {
+            CsvWriter::create(
+                cfg.out_dir.join(format!("fig10_{}.csv", a.to_lowercase())),
+                &["n", "range_len", "y_exp", "ns_per_rmq"],
+            )
+            .unwrap()
+        })
+        .collect();
+
+    // Per-approach grids for the ASCII rendering: grid[a][(ni, yi)] = ns.
+    let n_sweep = cfg.n_sweep();
+    let y_exps: Vec<i32> = (0..8).map(|k| -2 * k - 1).collect(); // 2^-1 .. 2^-15
+    let mut grids = vec![vec![vec![f64::NAN; y_exps.len()]; n_sweep.len()]; 4];
+
+    for (ni, &n) in n_sweep.iter().enumerate() {
+        let suite = Suite::build(n, cfg.seed ^ n as u64);
+        for (yi, &y) in y_exps.iter().enumerate() {
+            let len = ((n as f64) * (y as f64).exp2()).round().max(1.0) as usize;
+            let queries: Vec<(u32, u32)> = (0..cfg.sample_queries)
+                .map(|_| {
+                    let l = rng.range(0, n - len) as u32;
+                    (l, (l as usize + len - 1) as u32)
+                })
+                .collect();
+            suite.verify(&queries[..queries.len().min(64)], cfg.workers);
+            let p = suite.measure_point(&queries, cfg.model_batch, cfg.workers);
+            let ns = [p.rtx_ns, p.lca_ns, p.hrmq_ns, p.exhaustive_ns];
+            for (a, &v) in ns.iter().enumerate() {
+                grids[a][ni][yi] = v;
+                writers[a]
+                    .row(&[n.to_string(), len.to_string(), y.to_string(), fnum(v)])
+                    .unwrap();
+            }
+        }
+    }
+    for w in &mut writers {
+        w.flush().unwrap();
+    }
+
+    // ASCII heat maps (log-scaled shade per approach, like the paper's
+    // per-plot color scales).
+    for (a, name) in approaches.iter().enumerate() {
+        println!("\n-- Fig 10 heat map: {name} (rows = |(l,r)| = n*2^y, cols = n; '.'=fast '#'=slow) --");
+        let flat: Vec<f64> =
+            grids[a].iter().flatten().copied().filter(|v| v.is_finite()).collect();
+        let (lo, hi) = flat
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(l, h), &v| (l.min(v.ln()), h.max(v.ln())));
+        let shades = [b'.', b':', b'-', b'=', b'+', b'*', b'%', b'#'];
+        for (yi, &y) in y_exps.iter().enumerate() {
+            let mut line = String::new();
+            for ni in 0..n_sweep.len() {
+                let v = grids[a][ni][yi];
+                let t = if hi > lo { (v.ln() - lo) / (hi - lo) } else { 0.0 };
+                let idx = ((t * (shades.len() - 1) as f64).round() as usize).min(shades.len() - 1);
+                line.push(shades[idx] as char);
+            }
+            println!("  y={y:>3}  {line}");
+        }
+    }
+
+    // Headline check from the paper: for RTXRMQ at the largest n,
+    // small/medium ranges must be faster than large ones; for LCA the
+    // opposite holds.
+    let ni = n_sweep.len() - 1;
+    let rows = vec![
+        vec![
+            "RTXRMQ".into(),
+            fnum(grids[0][ni][y_exps.len() - 1]),
+            fnum(grids[0][ni][0]),
+            (grids[0][ni][y_exps.len() - 1] < grids[0][ni][0]).to_string(),
+        ],
+        vec![
+            "LCA".into(),
+            fnum(grids[1][ni][y_exps.len() - 1]),
+            fnum(grids[1][ni][0]),
+            (grids[1][ni][y_exps.len() - 1] > grids[1][ni][0]).to_string(),
+        ],
+    ];
+    print_table(
+        "Fig 10 check at largest n (paper: RTX favors small ranges, LCA favors large)",
+        &["approach", "ns@small", "ns@large", "matches_paper"],
+        &rows,
+    );
+    println!("\nfig10: CSVs written to {}", cfg.out_dir.display());
+}

@@ -1,0 +1,103 @@
+//! Fig. 11 — RTXRMQ's 3D heat map over (n × |(l,r)| × #blocks), with
+//! the Eq. 2 / OptiX-limit-invalid configurations filtered out exactly
+//! as the paper filters its cube. Emits `results/fig11_cube.csv` and
+//! prints, per (n, range), the optimal block count — the projection used
+//! by Fig. 10's RTXRMQ map.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::geometry::precision::{valid_pow2_block_sizes, OptixLimits};
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let mut csv = CsvWriter::create(
+        cfg.out_dir.join("fig11_cube.csv"),
+        &["n", "range_len", "block_size", "nb", "valid", "ns_per_rmq", "work_per_query"],
+    )
+    .unwrap();
+
+    let limits = OptixLimits::default();
+    let n_sweep: Vec<usize> =
+        cfg.n_sweep().into_iter().filter(|&n| n <= (1 << 16).min(cfg.max_n)).collect();
+    let mut best_rows: Vec<Vec<String>> = Vec::new();
+    let mut total_cells = 0usize;
+    let mut filtered_cells = 0usize;
+
+    for &n in &n_sweep {
+        // Block-size axis: every power of two up to n (invalid ones are
+        // recorded as filtered, like the cube's cut-away region).
+        let valid = valid_pow2_block_sizes(n, &limits);
+        for y in [-1i32, -6, -12] {
+            let len = ((n as f64) * (y as f64).exp2()).round().max(1.0) as usize;
+            let queries: Vec<(u32, u32)> = (0..cfg.sample_queries.min(1024))
+                .map(|_| {
+                    let l = rng.range(0, n - len) as u32;
+                    (l, (l as usize + len - 1) as u32)
+                })
+                .collect();
+            let mut best: Option<(usize, f64)> = None;
+            let mut bs = 2usize;
+            while bs <= n {
+                total_cells += 1;
+                let nb = n.div_ceil(bs);
+                if !valid.contains(&bs) {
+                    filtered_cells += 1;
+                    csv.row(&[
+                        n.to_string(),
+                        len.to_string(),
+                        bs.to_string(),
+                        nb.to_string(),
+                        "0".into(),
+                        String::new(),
+                        String::new(),
+                    ])
+                    .unwrap();
+                    bs <<= 2;
+                    continue;
+                }
+                let suite = Suite::build_with_block_size(n, cfg.seed ^ n as u64, bs)
+                    .expect("validated config");
+                let (ns, work) =
+                    suite.rtx_modeled_ns(&queries, cfg.model_batch, &rtxrmq::rtcore::arch::LOVELACE_RTX6000ADA, cfg.workers);
+                csv.row(&[
+                    n.to_string(),
+                    len.to_string(),
+                    bs.to_string(),
+                    nb.to_string(),
+                    "1".into(),
+                    fnum(ns),
+                    fnum(work),
+                ])
+                .unwrap();
+                if best.map_or(true, |(_, b)| ns < b) {
+                    best = Some((bs, ns));
+                }
+                bs <<= 2;
+            }
+            if let Some((bs, ns)) = best {
+                best_rows.push(vec![
+                    n.to_string(),
+                    format!("n*2^{y}"),
+                    bs.to_string(),
+                    n.div_ceil(bs).to_string(),
+                    fnum(ns),
+                ]);
+            }
+        }
+    }
+    csv.flush().unwrap();
+
+    print_table(
+        "Fig 11: optimal block configuration per (n, range) cell",
+        &["n", "range", "best_bs", "nb", "ns_per_rmq"],
+        &best_rows,
+    );
+    println!(
+        "\nfig11: {total_cells} cells, {filtered_cells} filtered by Eq.2/limits \
+         (the paper's cut-away cube region); CSV at {}",
+        cfg.out_dir.join("fig11_cube.csv").display()
+    );
+}

@@ -1,0 +1,114 @@
+//! Fig. 12 — ns/RMQ for all approaches and speedup over HRMQ, under the
+//! Large/Medium/Small (l,r) distributions (paper §6.4), sweeping n.
+//! The headline numbers at n = 1e8: RTXRMQ ≈ 2.5×/4×/5× over HRMQ for
+//! L/M/S; LCA ≈ 12.5×/8×/2.2×; RTXRMQ beats LCA only in the small
+//! regime (~2.3×).
+//!
+//! The small-regime crossover requires paper-scale n (LCA's structures
+//! leave the 96 MB L2 only past n ≈ 2^22), which exceeds the default CI
+//! sweep — so after the measured sweep this driver prints a **paper-
+//! scale extrapolation** row: measured per-query work extended to
+//! n = 1e8 by its observed growth law (RTX traversal work ~ log n; LCA
+//! structure bytes = 20n; HRMQ wall-clock × the CPU cache-regime
+//! factor). Run with `--paper-scale` to push the measured sweep itself
+//! to 2^24. Emits `results/fig12_<dist>.csv`.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::model::rtcost::saturation;
+use rtxrmq::rtcore::arch::LOVELACE_RTX6000ADA;
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, RangeDist};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let gpu = LOVELACE_RTX6000ADA;
+    let paper = [("large", 2.5, 12.5), ("medium", 4.0, 8.0), ("small", 5.0, 2.17)];
+    let n_sweep = cfg.n_sweep();
+
+    // Build each suite once, reuse across the three distributions.
+    let suites: Vec<Suite> =
+        n_sweep.iter().map(|&n| Suite::build(n, cfg.seed ^ n as u64)).collect();
+
+    for (di, dist) in RangeDist::all().into_iter().enumerate() {
+        let mut csv = CsvWriter::create(
+            cfg.out_dir.join(format!("fig12_{}.csv", dist.name())),
+            &["n", "rtx_ns", "lca_ns", "hrmq_ns", "exhaustive_ns", "rtx_speedup", "lca_speedup"],
+        )
+        .unwrap();
+        let mut rows = Vec::new();
+        let mut top: Option<(usize, f64, f64)> = None; // (n, rtx_work, hrmq_single_ns)
+        for (si, &n) in n_sweep.iter().enumerate() {
+            let suite = &suites[si];
+            let qs = gen_queries(n, cfg.sample_queries, dist, &mut rng);
+            suite.verify(&qs[..qs.len().min(64)], cfg.workers);
+            let p = suite.measure_point(&qs, cfg.model_batch, cfg.workers);
+            let (rtx_speedup, lca_speedup) = (p.hrmq_ns / p.rtx_ns, p.hrmq_ns / p.lca_ns);
+            csv.row(&[
+                n.to_string(),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                fnum(p.hrmq_ns),
+                fnum(p.exhaustive_ns),
+                fnum(rtx_speedup),
+                fnum(lca_speedup),
+            ])
+            .unwrap();
+            rows.push(vec![
+                format!("2^{}", n.trailing_zeros()),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                fnum(p.hrmq_ns),
+                fnum(p.exhaustive_ns),
+                format!("{rtx_speedup:.2}x"),
+                format!("{lca_speedup:.2}x"),
+            ]);
+            let hrmq_single = p.hrmq_ns * 192.0 * 0.75; // undo the host model
+            top = Some((n, p.rtx_work, hrmq_single));
+        }
+        csv.flush().unwrap();
+        print_table(
+            &format!("Fig 12 [{} ranges]: ns/RMQ and speedup over HRMQ (measured sweep)", dist.name()),
+            &["n", "RTXRMQ", "LCA", "HRMQ", "EXH", "RTX/HRMQ", "LCA/HRMQ"],
+            &rows,
+        );
+
+        // ---- paper-scale extrapolation to n = 1e8 ----
+        if let Some((n_top, rtx_work, hrmq_single)) = top {
+            let n_paper = 1e8f64;
+            let suite = suites.last().unwrap();
+            // RTX: traversal work scales ~ log2(n) for the block scheme.
+            let work = rtx_work * n_paper.log2() / (n_top as f64).log2();
+            let util = saturation(cfg.model_batch, suite.rt_model.half_sat);
+            let rtx_ns = work * suite.rt_model.ns_per_unit_ref / util;
+            // LCA: structure bytes 20n; range factor at the paper
+            // distribution's mean length at 1e8 (§6.4's growth laws:
+            // small ~ n^0.3, medium ~ n^0.6, large ~ n/2).
+            let mean_paper = dist.mean_len(n_paper as usize);
+            let lca_ns = suite
+                .lca_model
+                .ns_per_query((n_paper * 20.0) as u64, cfg.model_batch, &gpu)
+                * suite.lca_model.range_factor(mean_paper, n_paper as usize);
+            // HRMQ: single-thread wall clock grows with the RAM-regime
+            // factor (structure ~0.4 B/elem + 4 B/elem input leaves all
+            // caches at 1e8).
+            let cpu_factor = 3.0; // L2-resident -> RAM-resident dependent reads
+            let hrmq_ns =
+                suite.hrmq_model.ns_per_query(hrmq_single * cpu_factor, cfg.model_batch);
+            let (_, p_rtx, p_lca) = paper[di];
+            println!(
+                "  extrapolated @n=1e8: RTX {:.1} ns ({:.1}x), LCA {:.1} ns ({:.1}x), HRMQ {:.1} ns | \
+                 paper: RTX {p_rtx}x, LCA {p_lca}x | small-regime winner (RTX vs LCA): {}",
+                rtx_ns,
+                hrmq_ns / rtx_ns,
+                lca_ns,
+                hrmq_ns / lca_ns,
+                hrmq_ns,
+                if rtx_ns < lca_ns { "RTXRMQ" } else { "LCA" },
+            );
+        }
+    }
+    println!("\nfig12: CSVs written to {}", cfg.out_dir.display());
+}

@@ -1,0 +1,71 @@
+//! Fig. 13 — parallel saturation: ns/RMQ as the batch size grows from 1
+//! to 2^26. Paper shape: LCA/HRMQ/EXHAUSTIVE saturate near 2^18 (LCA
+//! with an L2-capacity dip near 2^17); RTXRMQ keeps improving through
+//! 2^26. Per-query work is measured once per distribution; the batch
+//! axis is the models' saturation term. Emits `results/fig13_<dist>.csv`.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, RangeDist};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.max_n;
+    let suite = Suite::build(n, cfg.seed);
+    let batches: Vec<u64> = (0..=26).step_by(2).map(|e| 1u64 << e).collect();
+
+    for dist in RangeDist::all() {
+        let qs = gen_queries(n, cfg.sample_queries, dist, &mut rng);
+        suite.verify(&qs[..qs.len().min(64)], cfg.workers);
+        let mut csv = CsvWriter::create(
+            cfg.out_dir.join(format!("fig13_{}.csv", dist.name())),
+            &["batch", "rtx_ns", "lca_ns", "hrmq_ns", "exhaustive_ns"],
+        )
+        .unwrap();
+        let mut rows = Vec::new();
+        let mut series: Vec<(u64, f64, f64)> = Vec::new();
+        for &b in &batches {
+            let p = suite.measure_point(&qs, b, cfg.workers);
+            csv.row(&[
+                b.to_string(),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                fnum(p.hrmq_ns),
+                fnum(p.exhaustive_ns),
+            ])
+            .unwrap();
+            rows.push(vec![
+                format!("2^{}", b.trailing_zeros()),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                fnum(p.hrmq_ns),
+                fnum(p.exhaustive_ns),
+            ]);
+            series.push((b, p.rtx_ns, p.lca_ns));
+        }
+        csv.flush().unwrap();
+        print_table(
+            &format!("Fig 13 [{} ranges]: ns/RMQ vs batch size (n = {n})", dist.name()),
+            &["batch", "RTXRMQ", "LCA", "HRMQ", "EXH"],
+            &rows,
+        );
+        // Saturation check: LCA gain from 2^18 -> 2^26 must be marginal,
+        // RTXRMQ must still be improving (the paper's key observation).
+        let at = |target: u64| series.iter().find(|&&(b, _, _)| b == target).copied();
+        if let (Some((_, r18, l18)), Some((_, r26, l26))) = (at(1 << 18), at(1 << 26)) {
+            let lca_gain = (l18 - l26) / l18;
+            let rtx_gain = (r18 - r26) / r18;
+            println!(
+                "  saturation 2^18->2^26: LCA gain {:.1}% (paper: ~0), RTXRMQ gain {:.1}% \
+                 (paper: still scaling) -> matches paper: {}",
+                lca_gain * 100.0,
+                rtx_gain * 100.0,
+                rtx_gain > lca_gain
+            );
+        }
+    }
+    println!("\nfig13: CSVs written to {}", cfg.out_dir.display());
+}

@@ -1,0 +1,74 @@
+//! Fig. 14 — performance scaling of RTXRMQ and LCA across GPU
+//! generations (Turing → Ampere → Lovelace) plus the projected next
+//! generation, for Large/Medium/Small ranges. The paper's finding:
+//! RTXRMQ scales near-exponentially with the RT-core generation factor,
+//! LCA only with CUDA throughput, so the projection narrows (L), flips
+//! (M) and widens RTXRMQ's lead (S). Emits `results/fig14_arch.csv`.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::rtcore::arch::generations;
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, RangeDist};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.max_n;
+    let suite = Suite::build(n, cfg.seed);
+    let mut csv = CsvWriter::create(
+        cfg.out_dir.join("fig14_arch.csv"),
+        &["arch", "dist", "rtx_ns", "lca_ns"],
+    )
+    .unwrap();
+
+    let mut rows = Vec::new();
+    // ratios[dist] = (rtx series, lca series) across generations.
+    let mut series: Vec<(Vec<f64>, Vec<f64>)> = vec![(vec![], vec![]); 3];
+    for (di, dist) in RangeDist::all().into_iter().enumerate() {
+        let qs = gen_queries(n, cfg.sample_queries, dist, &mut rng);
+        for gpu in generations() {
+            let p = suite.measure_point_on(&qs, cfg.model_batch, &gpu, cfg.workers);
+            csv.row(&[gpu.name.to_string(), dist.name().to_string(), fnum(p.rtx_ns), fnum(p.lca_ns)])
+                .unwrap();
+            rows.push(vec![
+                gpu.name.to_string(),
+                dist.name().to_string(),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                format!("{:.2}x", p.lca_ns / p.rtx_ns),
+            ]);
+            series[di].0.push(p.rtx_ns);
+            series[di].1.push(p.lca_ns);
+        }
+    }
+    csv.flush().unwrap();
+    print_table(
+        "Fig 14: RTXRMQ vs LCA across GPU generations (last = projected)",
+        &["architecture", "dist", "RTX ns", "LCA ns", "RTX advantage"],
+        &rows,
+    );
+
+    // Scaling-rate check: RTXRMQ's generational improvement factor must
+    // exceed LCA's (the paper's core scaling claim).
+    for (di, dist) in RangeDist::all().into_iter().enumerate() {
+        let (rtx, lca) = &series[di];
+        let rtx_rate = rtx.first().unwrap() / rtx.last().unwrap();
+        let lca_rate = lca.first().unwrap() / lca.last().unwrap();
+        println!(
+            "  [{}] Turing->projected speedup: RTXRMQ {:.1}x vs LCA {:.1}x -> RT scales faster: {}",
+            dist.name(),
+            rtx_rate,
+            lca_rate,
+            rtx_rate > lca_rate
+        );
+    }
+    // Projection outcome for the medium range: RTXRMQ should overtake
+    // LCA on the projected part (paper §6.5).
+    let (rtx_m, lca_m) = &series[1];
+    println!(
+        "  medium-range projected winner: {} (paper projects RTXRMQ)",
+        if rtx_m.last() < lca_m.last() { "RTXRMQ" } else { "LCA" }
+    );
+}

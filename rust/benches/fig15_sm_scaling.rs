@@ -1,0 +1,63 @@
+//! Fig. 15 — scaling within one architecture (Lovelace) across SM
+//! counts: RTX 4070 Ti (60 SMs) → 4080 (76) → 4090 (128) → 6000 Ada
+//! (142). Paper finding: RTXRMQ scales ~linearly with SMs; LCA scales up
+//! to the 4090 but *drops* on the 142-SM part (its 96 MB L2 is shared by
+//! more SMs per byte of bandwidth — we model the plateau via saturation
+//! + cache pressure). Emits `results/fig15_sm.csv`.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::rtcore::arch::lovelace_skus;
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, RangeDist};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.max_n;
+    let suite = Suite::build(n, cfg.seed);
+    let mut csv = CsvWriter::create(
+        cfg.out_dir.join("fig15_sm.csv"),
+        &["sku", "sms", "dist", "rtx_ns", "lca_ns", "rtx_throughput_rel"],
+    )
+    .unwrap();
+
+    let skus = lovelace_skus();
+    let mut rows = Vec::new();
+    for dist in RangeDist::all() {
+        let qs = gen_queries(n, cfg.sample_queries, dist, &mut rng);
+        let mut base_rtx = None;
+        for gpu in skus {
+            let p = suite.measure_point_on(&qs, cfg.model_batch, &gpu, cfg.workers);
+            let base = *base_rtx.get_or_insert(p.rtx_ns * gpu.sm_count as f64);
+            // Relative RTX throughput per SM-normalized baseline: ~1.0
+            // everywhere iff scaling is linear in SMs.
+            let rel = base / (p.rtx_ns * gpu.sm_count as f64);
+            csv.row(&[
+                gpu.name.to_string(),
+                gpu.sm_count.to_string(),
+                dist.name().to_string(),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                fnum(rel),
+            ])
+            .unwrap();
+            rows.push(vec![
+                gpu.name.to_string(),
+                gpu.sm_count.to_string(),
+                dist.name().to_string(),
+                fnum(p.rtx_ns),
+                fnum(p.lca_ns),
+                format!("{rel:.3}"),
+            ]);
+        }
+    }
+    csv.flush().unwrap();
+    print_table(
+        "Fig 15: Lovelace SM scaling (rtx_throughput_rel ~ 1.0 == linear in SMs)",
+        &["SKU", "SMs", "dist", "RTX ns", "LCA ns", "RTX linear-scaling ratio"],
+        &rows,
+    );
+    println!("\nfig15: CSV written to {}", cfg.out_dir.join("fig15_sm.csv").display());
+}

@@ -1,0 +1,65 @@
+//! Fig. 16 — power time series for all approaches under the three range
+//! distributions. The paper measures stable draw: RTXRMQ/EXHAUSTIVE at
+//! the 300 W TDP, LCA at 200–240 W, HRMQ ≈ 600 W on the dual-EPYC host.
+//! We model the run duration from measured work (q = model batch) and
+//! synthesize the series. Emits `results/fig16_<dist>.csv`.
+
+use rtxrmq::bench_harness::{print_table, BenchCfg};
+use rtxrmq::bench_harness::runner::Suite;
+use rtxrmq::model::EnergyModel;
+use rtxrmq::rtcore::arch::{EPYC_9654_X2, LOVELACE_RTX6000ADA};
+use rtxrmq::util::csv::{fnum, CsvWriter};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, RangeDist};
+
+fn main() {
+    let cfg = BenchCfg::from_env();
+    let mut rng = Rng::new(cfg.seed);
+    let n = cfg.max_n;
+    let suite = Suite::build(n, cfg.seed);
+    let energy = EnergyModel::default();
+    let gpu = LOVELACE_RTX6000ADA;
+
+    let mut rows = Vec::new();
+    for dist in RangeDist::all() {
+        let qs = gen_queries(n, cfg.sample_queries, dist, &mut rng);
+        let p = suite.measure_point(&qs, cfg.model_batch, cfg.workers);
+        let q = cfg.model_batch as f64;
+        let watts = [
+            ("RTXRMQ", energy.gpu_watts(energy.util_rtx, &gpu), p.rtx_ns * q),
+            ("LCA", energy.gpu_watts(energy.util_lca, &gpu), p.lca_ns * q),
+            ("HRMQ", energy.cpu_watts(&EPYC_9654_X2), p.hrmq_ns * q),
+            ("EXHAUSTIVE", energy.gpu_watts(energy.util_exhaustive, &gpu), p.exhaustive_ns * q),
+        ];
+        let mut csv = CsvWriter::create(
+            cfg.out_dir.join(format!("fig16_{}.csv", dist.name())),
+            &["approach", "t_s", "watts"],
+        )
+        .unwrap();
+        for (name, w, total_ns) in watts {
+            let duration_s = (total_ns * 1e-9).max(0.05);
+            let series = energy.series(w, duration_s, 10.0, cfg.seed ^ w as u64);
+            for (t, watt) in series.t_s.iter().zip(&series.watts) {
+                csv.row(&[name.to_string(), fnum(*t), fnum(*watt)]).unwrap();
+            }
+            rows.push(vec![
+                dist.name().to_string(),
+                name.to_string(),
+                format!("{w:.0} W"),
+                format!("{:.2} s", duration_s),
+                format!("{:.0} J", series.energy_j),
+            ]);
+        }
+        csv.flush().unwrap();
+    }
+    print_table(
+        "Fig 16: modeled steady power, duration and energy per full batch",
+        &["dist", "approach", "draw", "duration", "energy"],
+        &rows,
+    );
+    println!(
+        "\nfig16: paper reference draws — RTXRMQ/EXH 300 W (TDP), LCA 200–240 W, HRMQ ~600 W; \
+         series CSVs at {}",
+        cfg.out_dir.display()
+    );
+}

@@ -1,0 +1,122 @@
+//! Shared machinery for the per-figure bench drivers (`rust/benches/`).
+//!
+//! Measurement protocol ("measured work, modeled batch"): each bench
+//! executes a *sample* of real queries through the real data structures,
+//! measures the per-query work (BVH counters, wall-clock, scanned
+//! elements), then converts that work to modeled GPU/CPU time **at the
+//! paper's batch size** via `crate::model`. The paper's batches (2^26
+//! queries at n up to 1e8) do not fit a 1-core CI budget; the per-query
+//! work is batch-independent, so sampling is exact for everything except
+//! the saturation term, which the models carry explicitly (Fig. 13).
+
+pub mod runner;
+
+use crate::util::cli::Args;
+use std::path::PathBuf;
+
+/// Configuration shared by all bench drivers.
+#[derive(Clone, Debug)]
+pub struct BenchCfg {
+    pub seed: u64,
+    /// Queries sampled per measurement point.
+    pub sample_queries: usize,
+    /// Batch size the models are evaluated at (paper: 2^26).
+    pub model_batch: u64,
+    /// Largest n in default sweeps.
+    pub max_n: usize,
+    /// Full paper-scale sweep (slow).
+    pub paper_scale: bool,
+    /// Where CSVs are written.
+    pub out_dir: PathBuf,
+    pub workers: usize,
+}
+
+impl BenchCfg {
+    /// Parse from process args (works both under `cargo bench` and when
+    /// invoked directly). Honors `--quick`, `--paper-scale`, `--n`,
+    /// `--samples`, `--seed`, `--out-dir`.
+    pub fn from_env() -> BenchCfg {
+        // cargo bench passes a `--bench` flag; ignore unknown tokens.
+        let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+        let quick = args.flag("quick") || std::env::var("RTXRMQ_BENCH_QUICK").is_ok();
+        let paper_scale = args.flag("paper-scale");
+        let max_n_default = if quick {
+            1 << 14
+        } else if paper_scale {
+            1 << 24
+        } else {
+            1 << 18
+        };
+        BenchCfg {
+            seed: args.get_or("seed", 0xBE9C_u64).unwrap_or(0xBE9C),
+            sample_queries: args
+                .get_or("samples", if quick { 512usize } else { 2048 })
+                .unwrap_or(2048),
+            model_batch: args.get_or("model-batch", 1u64 << 26).unwrap_or(1 << 26),
+            max_n: args.get_or("n", max_n_default).unwrap_or(max_n_default),
+            paper_scale,
+            out_dir: PathBuf::from(args.str_or("out-dir", "results")),
+            workers: crate::util::pool::default_workers(),
+        }
+    }
+
+    /// The n sweep for Fig. 10/12-style experiments: powers of two from
+    /// 2^10 up to `max_n`.
+    pub fn n_sweep(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut n = 1usize << 10;
+        while n <= self.max_n {
+            out.push(n);
+            n <<= 2; // every other power of two keeps CI fast
+        }
+        if *out.last().unwrap_or(&0) != self.max_n {
+            out.push(self.max_n);
+        }
+        out
+    }
+}
+
+/// Print a paper-style table header + rows to stdout.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>width$}", width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_sweep_is_bounded_and_sorted() {
+        let cfg = BenchCfg {
+            seed: 1,
+            sample_queries: 16,
+            model_batch: 1 << 20,
+            max_n: 1 << 16,
+            paper_scale: false,
+            out_dir: PathBuf::from("/tmp"),
+            workers: 1,
+        };
+        let sweep = cfg.n_sweep();
+        assert_eq!(*sweep.first().unwrap(), 1 << 10);
+        assert_eq!(*sweep.last().unwrap(), 1 << 16);
+        assert!(sweep.windows(2).all(|w| w[0] < w[1]));
+    }
+}

@@ -1,0 +1,338 @@
+//! BVH construction: binned SAH (quality reference) and Morton-order
+//! LBVH (the GPU-builder analogue; OptiX's fast build path is in this
+//! family). Both produce the same flat [`Node`] layout, so traversal and
+//! the cost model are builder-agnostic — the Fig-ablation bench compares
+//! their traversal work on identical workloads.
+
+use super::{Aabb, Builder, Bvh, Node};
+use crate::geometry::Triangle;
+use crate::util::bits::morton3_canonical;
+
+/// Number of SAH bins per axis.
+const SAH_BINS: usize = 16;
+
+/// Build a BVH with the requested builder and leaf size.
+pub fn build(tris: &[Triangle], builder: Builder, leaf_size: usize) -> Bvh {
+    assert!(!tris.is_empty(), "no triangles");
+    let leaf_size = leaf_size.max(1);
+    match builder {
+        Builder::BinnedSah => build_sah(tris, leaf_size),
+        Builder::Lbvh => build_lbvh(tris, leaf_size),
+    }
+}
+
+/// Per-primitive build info.
+struct PrimInfo {
+    aabb: Aabb,
+    centroid: [f32; 3],
+}
+
+fn prim_infos(tris: &[Triangle]) -> Vec<PrimInfo> {
+    tris.iter()
+        .map(|t| {
+            let aabb = Aabb::from_triangle(t);
+            PrimInfo { aabb, centroid: aabb.centroid() }
+        })
+        .collect()
+}
+
+fn range_bounds(info: &[PrimInfo], order: &[u32]) -> (Aabb, Aabb) {
+    let mut bounds = Aabb::EMPTY;
+    let mut cbounds = Aabb::EMPTY;
+    for &p in order {
+        bounds = bounds.union(&info[p as usize].aabb);
+        cbounds.grow_point(info[p as usize].centroid);
+    }
+    (bounds, cbounds)
+}
+
+// ---------------------------------------------------------------- SAH --
+
+fn build_sah(tris: &[Triangle], leaf_size: usize) -> Bvh {
+    let info = prim_infos(tris);
+    let mut order: Vec<u32> = (0..tris.len() as u32).collect();
+    let mut nodes: Vec<Node> = Vec::with_capacity(2 * tris.len());
+    nodes.push(Node { aabb: Aabb::EMPTY, left: 0, right: 0, first: 0, count: 0 });
+    // Explicit stack of (node index, range) to avoid recursion depth
+    // limits on adversarial scenes.
+    let mut stack = vec![(0usize, 0usize, tris.len())];
+    while let Some((ni, start, end)) = stack.pop() {
+        let (bounds, cbounds) = range_bounds(&info, &order[start..end]);
+        nodes[ni].aabb = bounds;
+        let len = end - start;
+        if len <= leaf_size {
+            nodes[ni].first = start as u32;
+            nodes[ni].count = len as u32;
+            continue;
+        }
+        // Choose the widest centroid axis.
+        let ext = [
+            cbounds.hi[0] - cbounds.lo[0],
+            cbounds.hi[1] - cbounds.lo[1],
+            cbounds.hi[2] - cbounds.lo[2],
+        ];
+        let axis = if ext[0] >= ext[1] && ext[0] >= ext[2] {
+            0
+        } else if ext[1] >= ext[2] {
+            1
+        } else {
+            2
+        };
+        let mut mid = start + len / 2; // fallback: median split
+        if ext[axis] > 1e-12 {
+            // Binned SAH along `axis`.
+            let k = SAH_BINS as f32 * (1.0 - 1e-6) / ext[axis];
+            let mut bin_bounds = [Aabb::EMPTY; SAH_BINS];
+            let mut bin_count = [0usize; SAH_BINS];
+            for &p in &order[start..end] {
+                let b = (k * (info[p as usize].centroid[axis] - cbounds.lo[axis])) as usize;
+                let b = b.min(SAH_BINS - 1);
+                bin_bounds[b] = bin_bounds[b].union(&info[p as usize].aabb);
+                bin_count[b] += 1;
+            }
+            // Sweep to find the cheapest split.
+            let mut right_acc = [Aabb::EMPTY; SAH_BINS];
+            let mut acc = Aabb::EMPTY;
+            for b in (1..SAH_BINS).rev() {
+                acc = acc.union(&bin_bounds[b]);
+                right_acc[b] = acc;
+            }
+            let mut left_bb = Aabb::EMPTY;
+            let mut left_n = 0usize;
+            let mut best_cost = f32::INFINITY;
+            let mut best_bin = 0usize;
+            for b in 0..SAH_BINS - 1 {
+                left_bb = left_bb.union(&bin_bounds[b]);
+                left_n += bin_count[b];
+                let right_n = len - left_n;
+                if left_n == 0 || right_n == 0 {
+                    continue;
+                }
+                let cost = left_bb.surface_area() * left_n as f32
+                    + right_acc[b + 1].surface_area() * right_n as f32;
+                if cost < best_cost {
+                    best_cost = cost;
+                    best_bin = b;
+                }
+            }
+            if best_cost.is_finite() {
+                // Partition by bin.
+                let split_val = |p: u32| {
+                    let b = (k * (info[p as usize].centroid[axis] - cbounds.lo[axis])) as usize;
+                    b.min(SAH_BINS - 1) <= best_bin
+                };
+                mid = partition(&mut order[start..end], split_val) + start;
+                if mid == start || mid == end {
+                    mid = start + len / 2;
+                    order[start..end].sort_unstable_by(|&a, &b| {
+                        info[a as usize].centroid[axis]
+                            .partial_cmp(&info[b as usize].centroid[axis])
+                            .unwrap()
+                    });
+                }
+            } else {
+                order[start..end].sort_unstable_by(|&a, &b| {
+                    info[a as usize].centroid[axis]
+                        .partial_cmp(&info[b as usize].centroid[axis])
+                        .unwrap()
+                });
+            }
+        }
+        let li = nodes.len();
+        nodes.push(Node { aabb: Aabb::EMPTY, left: 0, right: 0, first: 0, count: 0 });
+        let ri = nodes.len();
+        nodes.push(Node { aabb: Aabb::EMPTY, left: 0, right: 0, first: 0, count: 0 });
+        nodes[ni].left = li as u32;
+        nodes[ni].right = ri as u32;
+        // Push right first so left is processed next (locality).
+        stack.push((ri, mid, end));
+        stack.push((li, start, mid));
+    }
+    Bvh { nodes, prim_order: order, builder: Builder::BinnedSah, leaf_size }
+}
+
+/// In-place stable-ish partition; returns count of elements satisfying
+/// the predicate (placed first).
+fn partition(xs: &mut [u32], pred: impl Fn(u32) -> bool) -> usize {
+    let mut i = 0;
+    for j in 0..xs.len() {
+        if pred(xs[j]) {
+            xs.swap(i, j);
+            i += 1;
+        }
+    }
+    i
+}
+
+// --------------------------------------------------------------- LBVH --
+
+fn build_lbvh(tris: &[Triangle], leaf_size: usize) -> Bvh {
+    let info = prim_infos(tris);
+    // Scene centroid bounds for Morton quantization.
+    let mut cbounds = Aabb::EMPTY;
+    for pi in &info {
+        cbounds.grow_point(pi.centroid);
+    }
+    let scale = |v: f32, lo: f32, hi: f32| -> u32 {
+        if hi <= lo {
+            return 0;
+        }
+        let t = ((v - lo) / (hi - lo)).clamp(0.0, 1.0);
+        (t * ((1 << 21) - 1) as f32) as u32
+    };
+    let mut keyed: Vec<(u64, u32)> = info
+        .iter()
+        .enumerate()
+        .map(|(i, pi)| {
+            let m = morton3_canonical(
+                scale(pi.centroid[0], cbounds.lo[0], cbounds.hi[0]),
+                scale(pi.centroid[1], cbounds.lo[1], cbounds.hi[1]),
+                scale(pi.centroid[2], cbounds.lo[2], cbounds.hi[2]),
+            );
+            (m, i as u32)
+        })
+        .collect();
+    keyed.sort_unstable();
+    let codes: Vec<u64> = keyed.iter().map(|&(m, _)| m).collect();
+    let order: Vec<u32> = keyed.iter().map(|&(_, i)| i).collect();
+
+    let mut nodes: Vec<Node> = Vec::with_capacity(2 * tris.len());
+    nodes.push(Node { aabb: Aabb::EMPTY, left: 0, right: 0, first: 0, count: 0 });
+    let mut stack = vec![(0usize, 0usize, tris.len())];
+    while let Some((ni, start, end)) = stack.pop() {
+        let mut bb = Aabb::EMPTY;
+        for &p in &order[start..end] {
+            bb = bb.union(&info[p as usize].aabb);
+        }
+        nodes[ni].aabb = bb;
+        let len = end - start;
+        if len <= leaf_size {
+            nodes[ni].first = start as u32;
+            nodes[ni].count = len as u32;
+            continue;
+        }
+        // Split where the highest differing Morton bit flips (Karras);
+        // falls back to the median when all codes are equal.
+        let first = codes[start];
+        let last = codes[end - 1];
+        let mid = if first == last {
+            start + len / 2
+        } else {
+            let msb = 63 - (first ^ last).leading_zeros();
+            let mask = !0u64 << msb;
+            // Binary search for the first index whose masked code differs
+            // from `first`'s.
+            let target = first & mask;
+            let mut lo = start;
+            let mut hi = end;
+            while lo < hi {
+                let m = (lo + hi) / 2;
+                if codes[m] & mask == target {
+                    lo = m + 1;
+                } else {
+                    hi = m;
+                }
+            }
+            lo.clamp(start + 1, end - 1)
+        };
+        let li = nodes.len();
+        nodes.push(Node { aabb: Aabb::EMPTY, left: 0, right: 0, first: 0, count: 0 });
+        let ri = nodes.len();
+        nodes.push(Node { aabb: Aabb::EMPTY, left: 0, right: 0, first: 0, count: 0 });
+        nodes[ni].left = li as u32;
+        nodes[ni].right = ri as u32;
+        stack.push((ri, mid, end));
+        stack.push((li, start, mid));
+    }
+    Bvh { nodes, prim_order: order, builder: Builder::Lbvh, leaf_size }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::flat::build_scene;
+    use crate::util::proptest::{check, gen};
+
+    fn scenes(rng: &mut crate::util::rng::Rng) -> Vec<Triangle> {
+        let xs = gen::f32_array(rng, 1..=600);
+        build_scene(&xs)
+    }
+
+    #[test]
+    fn sah_valid_structure() {
+        check("sah structural invariants", 40, |rng| {
+            let tris = scenes(rng);
+            let bvh = build(&tris, Builder::BinnedSah, 4);
+            bvh.validate(&tris)
+        });
+    }
+
+    #[test]
+    fn lbvh_valid_structure() {
+        check("lbvh structural invariants", 40, |rng| {
+            let tris = scenes(rng);
+            let bvh = build(&tris, Builder::Lbvh, 4);
+            bvh.validate(&tris)
+        });
+    }
+
+    #[test]
+    fn single_triangle() {
+        let tris = build_scene(&[0.5]);
+        for b in [Builder::BinnedSah, Builder::Lbvh] {
+            let bvh = build(&tris, b, 4);
+            assert_eq!(bvh.nodes.len(), 1);
+            assert!(bvh.nodes[0].is_leaf());
+            bvh.validate(&tris).unwrap();
+        }
+    }
+
+    #[test]
+    fn identical_positions_dont_loop() {
+        // Constant array: all triangles in the same plane with nested
+        // footprints; centroid extents degenerate on x.
+        let xs = vec![0.5f32; 257];
+        let tris = build_scene(&xs);
+        for b in [Builder::BinnedSah, Builder::Lbvh] {
+            let bvh = build(&tris, b, 2);
+            bvh.validate(&tris).unwrap();
+        }
+    }
+
+    #[test]
+    fn leaf_size_respected() {
+        let mut rng = crate::util::rng::Rng::new(44);
+        let xs = rng.uniform_f32_vec(1000);
+        let tris = build_scene(&xs);
+        for ls in [1usize, 2, 8] {
+            let bvh = build(&tris, Builder::BinnedSah, ls);
+            for n in &bvh.nodes {
+                if n.is_leaf() {
+                    assert!(n.count as usize <= ls.max(1), "leaf of {} > {}", n.count, ls);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sah_reasonable_depth() {
+        // Uniform random values should produce a tree of depth O(log n),
+        // not a degenerate list.
+        let mut rng = crate::util::rng::Rng::new(45);
+        let xs = rng.uniform_f32_vec(4096);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        // depth via DFS
+        let mut max_depth = 0usize;
+        let mut stack = vec![(0u32, 1usize)];
+        while let Some((ni, d)) = stack.pop() {
+            max_depth = max_depth.max(d);
+            let n = &bvh.nodes[ni as usize];
+            if !n.is_leaf() {
+                stack.push((n.left, d + 1));
+                stack.push((n.right, d + 1));
+            }
+        }
+        assert!(max_depth <= 64, "depth {max_depth} too deep for n=4096");
+    }
+}

@@ -1,0 +1,237 @@
+//! Bounding Volume Hierarchy substrate — the software stand-in for the
+//! RT cores' hardware BVH (paper §3). Provides binned-SAH and Morton/LBVH
+//! builders (GPUs build LBVH-like trees; SAH is the quality reference),
+//! closest-hit traversal for the paper's +X query rays with **work
+//! counters** (node visits / triangle tests — the quantities the cost
+//! model converts to RT-core time), and refit for the dynamic-RMQ
+//! future-work feature (§7.iii).
+
+pub mod build;
+pub mod traverse;
+
+use crate::geometry::Triangle;
+
+/// Axis-aligned bounding box.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Aabb {
+    pub lo: [f32; 3],
+    pub hi: [f32; 3],
+}
+
+impl Aabb {
+    pub const EMPTY: Aabb =
+        Aabb { lo: [f32::INFINITY; 3], hi: [f32::NEG_INFINITY; 3] };
+
+    pub fn from_triangle(t: &Triangle) -> Aabb {
+        let (lo, hi) = t.bounds();
+        Aabb { lo, hi }
+    }
+
+    pub fn union(&self, o: &Aabb) -> Aabb {
+        let mut r = *self;
+        for a in 0..3 {
+            r.lo[a] = r.lo[a].min(o.lo[a]);
+            r.hi[a] = r.hi[a].max(o.hi[a]);
+        }
+        r
+    }
+
+    pub fn grow_point(&mut self, p: [f32; 3]) {
+        for a in 0..3 {
+            self.lo[a] = self.lo[a].min(p[a]);
+            self.hi[a] = self.hi[a].max(p[a]);
+        }
+    }
+
+    pub fn centroid(&self) -> [f32; 3] {
+        [
+            0.5 * (self.lo[0] + self.hi[0]),
+            0.5 * (self.lo[1] + self.hi[1]),
+            0.5 * (self.lo[2] + self.hi[2]),
+        ]
+    }
+
+    pub fn surface_area(&self) -> f32 {
+        if self.lo[0] > self.hi[0] {
+            return 0.0;
+        }
+        let d = [self.hi[0] - self.lo[0], self.hi[1] - self.lo[1], self.hi[2] - self.lo[2]];
+        2.0 * (d[0] * d[1] + d[1] * d[2] + d[2] * d[0])
+    }
+
+    /// Slab test specialised to the paper's +X rays: the ray
+    /// `(ox, oy, oz) + t·(1,0,0)` intersects iff the (y, z) point is
+    /// inside the box's (y, z) extent and the box is not entirely behind
+    /// the origin. Returns the entry distance (≥ 0) if hit.
+    #[inline]
+    pub fn entry_posx(&self, origin: [f32; 3]) -> Option<f32> {
+        let (_, oy, oz) = (origin[0], origin[1], origin[2]);
+        if oy < self.lo[1] || oy > self.hi[1] || oz < self.lo[2] || oz > self.hi[2] {
+            return None;
+        }
+        if self.hi[0] < origin[0] {
+            return None;
+        }
+        Some((self.lo[0] - origin[0]).max(0.0))
+    }
+}
+
+/// Flat BVH node. A node is a leaf iff `count > 0`; then
+/// `prim_order[first .. first+count]` lists its triangle indices.
+/// Internal nodes store child node indices in `left`/`right`
+/// (children always have larger indices than the parent — refit relies
+/// on this).
+#[derive(Clone, Copy, Debug)]
+pub struct Node {
+    pub aabb: Aabb,
+    pub left: u32,
+    pub right: u32,
+    pub first: u32,
+    pub count: u32,
+}
+
+impl Node {
+    #[inline]
+    pub fn is_leaf(&self) -> bool {
+        self.count > 0
+    }
+}
+
+/// Which construction algorithm built a BVH (ablation: SAH vs LBVH,
+/// DESIGN.md §7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Builder {
+    /// Top-down binned surface-area-heuristic (quality reference).
+    BinnedSah,
+    /// Morton-order linear BVH (what GPU builders approximate).
+    Lbvh,
+}
+
+/// The acceleration structure.
+pub struct Bvh {
+    pub nodes: Vec<Node>,
+    /// Permutation: leaf ranges index into this, giving triangle ids.
+    pub prim_order: Vec<u32>,
+    pub builder: Builder,
+    /// Max leaf size used at build time.
+    pub leaf_size: usize,
+}
+
+impl Bvh {
+    /// Refit: recompute all node bounds bottom-up after triangle
+    /// positions changed (dynamic RMQ, paper §7.iii). Topology is kept;
+    /// valid because children always follow parents in `nodes`.
+    pub fn refit(&mut self, tris: &[Triangle]) {
+        for i in (0..self.nodes.len()).rev() {
+            let node = self.nodes[i];
+            let aabb = if node.is_leaf() {
+                let mut bb = Aabb::EMPTY;
+                for k in node.first..node.first + node.count {
+                    bb = bb.union(&Aabb::from_triangle(&tris[self.prim_order[k as usize] as usize]));
+                }
+                bb
+            } else {
+                self.nodes[node.left as usize].aabb.union(&self.nodes[node.right as usize].aabb)
+            };
+            self.nodes[i].aabb = aabb;
+        }
+    }
+
+    /// Heap bytes of the acceleration structure itself (Table 2's
+    /// "default" form: our actual node array + permutation).
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<Node>() + self.prim_order.len() * 4
+    }
+
+    /// Modeled OptiX-style sizes for Table 2: the device BVH stores
+    /// float3 vertices (36 B/tri) plus ~64 B per node in its default
+    /// (uncompacted) form; compaction packs nodes to ~32 B. These are
+    /// estimates of the *external* format — our in-memory size is
+    /// `memory_bytes`.
+    pub fn optix_size_estimate(&self, tri_count: usize) -> (usize, usize) {
+        let verts = tri_count * 36;
+        let default = verts + self.nodes.len() * 64 + self.prim_order.len() * 4;
+        let compacted = verts + self.nodes.len() * 32 + self.prim_order.len() * 4;
+        (default, compacted)
+    }
+
+    /// Structural invariants (tests + debug builds).
+    pub fn validate(&self, tris: &[Triangle]) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty bvh".into());
+        }
+        let mut seen = vec![false; self.prim_order.len()];
+        let mut stack = vec![0u32];
+        let mut visited = 0usize;
+        while let Some(ni) = stack.pop() {
+            visited += 1;
+            let n = &self.nodes[ni as usize];
+            if n.is_leaf() {
+                for k in n.first..n.first + n.count {
+                    let p = self.prim_order[k as usize] as usize;
+                    if seen[p] {
+                        return Err(format!("prim {p} in two leaves"));
+                    }
+                    seen[p] = true;
+                    // leaf bounds must contain the triangle
+                    let tb = Aabb::from_triangle(&tris[p]);
+                    for a in 0..3 {
+                        if tb.lo[a] < n.aabb.lo[a] - 1e-6 || tb.hi[a] > n.aabb.hi[a] + 1e-6 {
+                            return Err(format!("prim {p} escapes leaf bounds on axis {a}"));
+                        }
+                    }
+                }
+            } else {
+                if n.left as usize <= ni as usize || n.right as usize <= ni as usize {
+                    return Err("child index not greater than parent".into());
+                }
+                for &c in &[n.left, n.right] {
+                    let cb = &self.nodes[c as usize].aabb;
+                    for a in 0..3 {
+                        if cb.lo[a] < n.aabb.lo[a] - 1e-6 || cb.hi[a] > n.aabb.hi[a] + 1e-6 {
+                            return Err(format!("child {c} escapes parent bounds"));
+                        }
+                    }
+                }
+                stack.push(n.left);
+                stack.push(n.right);
+            }
+        }
+        if visited != self.nodes.len() {
+            return Err(format!("unreachable nodes: visited {visited} of {}", self.nodes.len()));
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("some prims not in any leaf".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aabb_union_and_area() {
+        let a = Aabb { lo: [0.0; 3], hi: [1.0; 3] };
+        let b = Aabb { lo: [2.0, 0.0, 0.0], hi: [3.0, 1.0, 1.0] };
+        let u = a.union(&b);
+        assert_eq!(u.lo, [0.0; 3]);
+        assert_eq!(u.hi, [3.0, 1.0, 1.0]);
+        assert_eq!(a.surface_area(), 6.0);
+        assert_eq!(Aabb::EMPTY.surface_area(), 0.0);
+    }
+
+    #[test]
+    fn posx_entry() {
+        let b = Aabb { lo: [2.0, 0.0, 0.0], hi: [3.0, 1.0, 1.0] };
+        assert_eq!(b.entry_posx([0.0, 0.5, 0.5]), Some(2.0));
+        // origin inside the box in x: entry clamps to 0
+        assert_eq!(b.entry_posx([2.5, 0.5, 0.5]), Some(0.0));
+        // behind
+        assert_eq!(b.entry_posx([4.0, 0.5, 0.5]), None);
+        // outside yz slab
+        assert_eq!(b.entry_posx([0.0, 2.0, 0.5]), None);
+        assert_eq!(b.entry_posx([0.0, 0.5, -0.1]), None);
+    }
+}

@@ -1,0 +1,319 @@
+//! Closest-hit traversal for the paper's +X query rays, with the work
+//! counters the RT cost model consumes (node visits ↔ the "bounding box
+//! intersections between the ray and the internal nodes" the paper blames
+//! for the flat layout's O(n log n) behaviour, §5.2).
+
+use super::Bvh;
+use crate::geometry::{point_in_footprint, Ray, Triangle};
+
+/// Work performed by one or more ray casts. These are the *measured*
+/// quantities converted to modeled GPU time by `crate::model::rtcost`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Counters {
+    /// BVH nodes popped and examined.
+    pub nodes_visited: u64,
+    /// Child AABB slab tests.
+    pub aabb_tests: u64,
+    /// Ray–triangle tests executed.
+    pub tri_tests: u64,
+    /// Rays launched.
+    pub rays: u64,
+}
+
+impl Counters {
+    pub fn add(&mut self, o: &Counters) {
+        self.nodes_visited += o.nodes_visited;
+        self.aabb_tests += o.aabb_tests;
+        self.tri_tests += o.tri_tests;
+        self.rays += o.rays;
+    }
+}
+
+/// A closest hit: distance along +X and the primitive id.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Hit {
+    pub t: f32,
+    pub prim: u32,
+}
+
+/// Reusable traversal stack (allocation-free hot loop — one per worker).
+pub struct TraversalStack {
+    stack: Vec<(u32, f32)>,
+}
+
+impl Default for TraversalStack {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraversalStack {
+    pub fn new() -> TraversalStack {
+        TraversalStack { stack: Vec::with_capacity(96) }
+    }
+}
+
+/// Cast one +X ray and return its closest hit (ties broken towards the
+/// smallest prim id — the leftmost array element, matching the paper's
+/// leftmost-minimum convention).
+pub fn closest_hit(
+    bvh: &Bvh,
+    tris: &[Triangle],
+    ray: &Ray,
+    ts: &mut TraversalStack,
+    counters: &mut Counters,
+) -> Option<Hit> {
+    closest_hit_from(bvh, tris, ray, ts, counters, None)
+}
+
+/// The paper's payload-min variant (§5.3): seed the traversal with the
+/// best hit of *previous* rays of the same Algorithm-6 query, so a
+/// later sub-ray prunes every subtree whose entry distance already
+/// exceeds the carried minimum. t-values are globally comparable (t =
+/// value − Θ for every cell).
+pub fn closest_hit_from(
+    bvh: &Bvh,
+    tris: &[Triangle],
+    ray: &Ray,
+    ts: &mut TraversalStack,
+    counters: &mut Counters,
+    init_best: Option<Hit>,
+) -> Option<Hit> {
+    counters.rays += 1;
+    let origin = ray.origin;
+    let mut best: Option<Hit> = init_best;
+    // Whether `best` came from a *previous* sub-ray. Prim-id tie-breaks
+    // are only meaningful within one geometry region (one cell's prims
+    // are index-ordered; block-min prims are block-ordered); across
+    // sub-rays the earlier ray covers strictly smaller array indices, so
+    // a carried hit always wins an equal-t tie.
+    let mut carried = init_best.is_some();
+    ts.stack.clear();
+    counters.aabb_tests += 1;
+    if let Some(t) = bvh.nodes[0].aabb.entry_posx(origin) {
+        ts.stack.push((0, t));
+    }
+    while let Some((ni, entry)) = ts.stack.pop() {
+        if let Some(b) = best {
+            // Prune: nothing in this subtree can beat the current hit.
+            // Strictly-greater prune keeps equal-t candidates alive for
+            // the leftmost tie-break.
+            if entry > b.t {
+                continue;
+            }
+        }
+        counters.nodes_visited += 1;
+        let node = &bvh.nodes[ni as usize];
+        if node.is_leaf() {
+            for k in node.first..node.first + node.count {
+                let prim = bvh.prim_order[k as usize];
+                let tri = &tris[prim as usize];
+                counters.tri_tests += 1;
+                let t = tri.x_plane() - origin[0];
+                if t < 0.0 {
+                    continue; // behind the origin (t_min = 0)
+                }
+                if let Some(b) = best {
+                    if t > b.t || (t == b.t && (carried || tri.prim >= b.prim)) {
+                        continue;
+                    }
+                }
+                // Perf fast path (§Perf L3.1): for every valid ray origin
+                // (a cell's query space) the triangle footprint is exactly
+                // the open rectangle y < l_i ∧ z > r_i clipped to the
+                // triangle's own extent (the extent terms only exclude
+                // rays from *other* cells, which the 3-unit cell pitch
+                // keeps ≥ 1 unit away; the hypotenuse never cuts a query
+                // space — geometry::tests prove both). The full half-plane
+                // test remains the debug-mode oracle.
+                let hit = origin[1] < tri.v0[1]
+                    && origin[2] > tri.v0[2]
+                    && origin[1] > tri.v2[1]
+                    && origin[2] < tri.v1[2];
+                debug_assert_eq!(hit, point_in_footprint(origin[1], origin[2], tri));
+                if hit {
+                    best = Some(Hit { t, prim: tri.prim });
+                    carried = false;
+                }
+            }
+        } else {
+            counters.aabb_tests += 2;
+            let lt = bvh.nodes[node.left as usize].aabb.entry_posx(origin);
+            let rt = bvh.nodes[node.right as usize].aabb.entry_posx(origin);
+            // Push the farther child first so the nearer is traversed
+            // next (front-to-back order enables early pruning).
+            match (lt, rt) {
+                (Some(a), Some(b)) => {
+                    if a <= b {
+                        ts.stack.push((node.right, b));
+                        ts.stack.push((node.left, a));
+                    } else {
+                        ts.stack.push((node.left, a));
+                        ts.stack.push((node.right, b));
+                    }
+                }
+                (Some(a), None) => ts.stack.push((node.left, a)),
+                (None, Some(b)) => ts.stack.push((node.right, b)),
+                (None, None) => {}
+            }
+        }
+    }
+    best
+}
+
+/// Cast a batch of rays sequentially with a shared stack; returns hits
+/// and accumulates counters. (Parallel batching lives in `rtcore`.)
+pub fn cast_batch(
+    bvh: &Bvh,
+    tris: &[Triangle],
+    rays: &[Ray],
+    counters: &mut Counters,
+) -> Vec<Option<Hit>> {
+    let mut ts = TraversalStack::new();
+    rays.iter().map(|r| closest_hit(bvh, tris, r, &mut ts, counters)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::{build::build, Builder};
+    use crate::geometry::flat::{build_scene, ray_for_query, ray_origin_x};
+    use crate::rmq::naive_rmq;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn global_min_simple_case() {
+        // §5.1: computing the minimum of [5,3,1,9,6,2] = RMQ(0, n-1).
+        let xs = [5.0, 3.0, 1.0, 9.0, 6.0, 2.0];
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 2);
+        let ray = ray_for_query(0, 5, 6, ray_origin_x(&xs));
+        let mut c = Counters::default();
+        let hit =
+            closest_hit(&bvh, &tris, &ray, &mut TraversalStack::new(), &mut c).expect("must hit");
+        assert_eq!(hit.prim, 2);
+        assert_eq!(c.rays, 1);
+        assert!(c.nodes_visited > 0 && c.tri_tests > 0);
+    }
+
+    #[test]
+    fn figure5_query() {
+        // Figure 5: RMQ(3,5) on [5,3,1,9,6,2] = index 5 (value 2).
+        let xs = [5.0, 3.0, 1.0, 9.0, 6.0, 2.0];
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 2);
+        let ray = ray_for_query(3, 5, 6, ray_origin_x(&xs));
+        let mut c = Counters::default();
+        let hit = closest_hit(&bvh, &tris, &ray, &mut TraversalStack::new(), &mut c).unwrap();
+        assert_eq!(hit.prim, 5);
+    }
+
+    #[test]
+    fn both_builders_match_oracle() {
+        check("closest hit == rmq (sah+lbvh)", 60, |rng| {
+            let xs = gen::f32_array(rng, 1..=800);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let theta = ray_origin_x(&xs);
+            for builder in [Builder::BinnedSah, Builder::Lbvh] {
+                let bvh = build(&tris, builder, 4);
+                let mut ts = TraversalStack::new();
+                let mut c = Counters::default();
+                for _ in 0..16 {
+                    let (l, r) = gen::query(rng, n);
+                    let ray = ray_for_query(l as u32, r as u32, n, theta);
+                    let hit = closest_hit(&bvh, &tris, &ray, &mut ts, &mut c)
+                        .ok_or_else(|| format!("no hit for ({l},{r})"))?;
+                    let want = naive_rmq(&xs, l, r);
+                    if hit.prim as usize != want {
+                        return Err(format!(
+                            "{builder:?} ({l},{r}): got {} want {want}",
+                            hit.prim
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ties_resolve_leftmost() {
+        check("equal values leftmost", 60, |rng| {
+            let xs = gen::dup_array(rng, 1..=400, 2);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let bvh = build(&tris, Builder::BinnedSah, 4);
+            let theta = ray_origin_x(&xs);
+            let mut ts = TraversalStack::new();
+            let mut c = Counters::default();
+            for _ in 0..16 {
+                let (l, r) = gen::query(rng, n);
+                let ray = ray_for_query(l as u32, r as u32, n, theta);
+                let hit = closest_hit(&bvh, &tris, &ray, &mut ts, &mut c).unwrap();
+                let want = naive_rmq(&xs, l, r);
+                if hit.prim as usize != want {
+                    return Err(format!("({l},{r}): got {} want {want}", hit.prim));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counters_accumulate_over_batch() {
+        let xs = crate::util::rng::Rng::new(9).uniform_f32_vec(256);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let theta = ray_origin_x(&xs);
+        let rays: Vec<Ray> =
+            (0..32).map(|i| ray_for_query(i, 128 + i, 256, theta)).collect();
+        let mut c = Counters::default();
+        let hits = cast_batch(&bvh, &tris, &rays, &mut c);
+        assert_eq!(hits.len(), 32);
+        assert!(hits.iter().all(|h| h.is_some()));
+        assert_eq!(c.rays, 32);
+        assert!(c.nodes_visited >= 32);
+    }
+
+    #[test]
+    fn refit_preserves_correctness_after_value_update() {
+        // Dynamic RMQ (paper §7.iii): change values, refit, re-query.
+        let mut xs = crate::util::rng::Rng::new(11).uniform_f32_vec(128);
+        let mut tris = build_scene(&xs);
+        let mut bvh = build(&tris, Builder::BinnedSah, 4);
+        // Update some values (keep within [0,1) so theta = min-1 works).
+        xs[7] = 0.001;
+        xs[100] = 0.002;
+        tris = build_scene(&xs);
+        bvh.refit(&tris);
+        bvh.validate(&tris).unwrap();
+        let theta = ray_origin_x(&xs);
+        let mut ts = TraversalStack::new();
+        let mut c = Counters::default();
+        for (l, r) in [(0u32, 127u32), (5, 20), (90, 110), (7, 7)] {
+            let ray = ray_for_query(l, r, 128, theta);
+            let hit = closest_hit(&bvh, &tris, &ray, &mut ts, &mut c).unwrap();
+            assert_eq!(hit.prim as usize, naive_rmq(&xs, l as usize, r as usize), "({l},{r})");
+        }
+    }
+
+    #[test]
+    fn sah_visits_fewer_nodes_than_worst_case() {
+        // Sanity: for a small-range query, front-to-back pruning should
+        // visit far fewer nodes than the tree has.
+        let xs = crate::util::rng::Rng::new(13).uniform_f32_vec(4096);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let theta = ray_origin_x(&xs);
+        let mut c = Counters::default();
+        let ray = ray_for_query(100, 116, 4096, theta); // small range
+        closest_hit(&bvh, &tris, &ray, &mut TraversalStack::new(), &mut c).unwrap();
+        assert!(
+            (c.nodes_visited as usize) < bvh.nodes.len() / 4,
+            "visited {} of {} nodes",
+            c.nodes_visited,
+            bvh.nodes.len()
+        );
+    }
+}

@@ -1,0 +1,208 @@
+//! Engine layer: every RMQ approach behind one interface, built once per
+//! array ("the geometric model is ready to answer any number of RMQ
+//! queries", §5.2 — the same build-once/query-many contract holds for all
+//! engines).
+
+use crate::rmq::exhaustive::Exhaustive;
+use crate::rmq::hrmq::Hrmq;
+use crate::rmq::lca::LcaRmq;
+use crate::rmq::rtx::RtxRmq;
+use crate::rmq::{Query, RmqSolver};
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Engine identifiers (stable names used by the router, CLI and metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineKind {
+    Rtx,
+    Lca,
+    Hrmq,
+    Exhaustive,
+    Xla,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Rtx => "RTXRMQ",
+            EngineKind::Lca => "LCA",
+            EngineKind::Hrmq => "HRMQ",
+            EngineKind::Exhaustive => "EXHAUSTIVE",
+            EngineKind::Xla => "XLA",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s.to_ascii_uppercase().as_str() {
+            "RTX" | "RTXRMQ" => Some(EngineKind::Rtx),
+            "LCA" => Some(EngineKind::Lca),
+            "HRMQ" => Some(EngineKind::Hrmq),
+            "EXHAUSTIVE" | "EX" => Some(EngineKind::Exhaustive),
+            "XLA" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> [EngineKind; 5] {
+        [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive, EngineKind::Xla]
+    }
+}
+
+/// A query engine bound to one array.
+pub trait Engine: Send + Sync {
+    fn kind(&self) -> EngineKind;
+    /// Answer a batch. Must return one index per query, in order.
+    fn solve(&self, queries: &[Query], workers: usize) -> Result<Vec<u32>>;
+    /// Auxiliary structure bytes (Table 2).
+    fn memory_bytes(&self) -> usize;
+}
+
+/// Blanket engine over any RmqSolver.
+struct SolverEngine<S: RmqSolver> {
+    kind: EngineKind,
+    solver: S,
+}
+
+impl<S: RmqSolver> Engine for SolverEngine<S> {
+    fn kind(&self) -> EngineKind {
+        self.kind
+    }
+    fn solve(&self, queries: &[Query], workers: usize) -> Result<Vec<u32>> {
+        Ok(self.solver.batch(queries, workers))
+    }
+    fn memory_bytes(&self) -> usize {
+        self.solver.memory_bytes()
+    }
+}
+
+/// The XLA engine: executes the AOT artifact through PJRT, chunking the
+/// request into the artifact's static batch size (the L2/L1 layers of
+/// the stack, with Python long gone).
+pub struct XlaEngine {
+    runtime: Arc<Runtime>,
+    variant: String,
+    chunk: usize,
+    /// Input size (memory accounting).
+    n: usize,
+    /// Pre-padded array literal, built once per engine (§Perf L3.3).
+    array: crate::runtime::PaddedArray,
+}
+
+impl XlaEngine {
+    pub fn new(runtime: Arc<Runtime>, xs: &[f32]) -> Result<XlaEngine> {
+        let v = runtime
+            .select_rmq_variant(xs.len())
+            .ok_or_else(|| anyhow!("no artifact variant fits n = {} (run make artifacts)", xs.len()))?;
+        let (variant, chunk) = (v.name.clone(), v.q);
+        let array = runtime.prepare_array(&variant, xs)?;
+        Ok(XlaEngine { variant, chunk, n: xs.len(), array, runtime })
+    }
+
+    pub fn variant_name(&self) -> &str {
+        &self.variant
+    }
+}
+
+impl Engine for XlaEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Xla
+    }
+
+    fn solve(&self, queries: &[Query], _workers: usize) -> Result<Vec<u32>> {
+        let mut out = Vec::with_capacity(queries.len());
+        for chunk in queries.chunks(self.chunk) {
+            let res = self.runtime.exec_rmq_prepadded(&self.array, chunk)?;
+            out.extend(res.args.iter().map(|&a| a as u32));
+        }
+        Ok(out)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // The compiled executable + padded input literal.
+        self.n * 4
+    }
+}
+
+/// All engines for one array. The XLA engine is optional (artifacts may
+/// not cover very large n).
+pub struct EngineSet {
+    pub n: usize,
+    engines: Vec<Box<dyn Engine>>,
+}
+
+impl EngineSet {
+    /// Build every available engine for the array. `runtime` enables the
+    /// XLA engine when an artifact variant fits.
+    pub fn build(xs: &[f32], runtime: Option<Arc<Runtime>>) -> EngineSet {
+        let mut engines: Vec<Box<dyn Engine>> = vec![
+            Box::new(SolverEngine { kind: EngineKind::Rtx, solver: RtxRmq::new_auto(xs) }),
+            Box::new(SolverEngine { kind: EngineKind::Lca, solver: LcaRmq::new(xs) }),
+            Box::new(SolverEngine { kind: EngineKind::Hrmq, solver: Hrmq::new(xs) }),
+            Box::new(SolverEngine { kind: EngineKind::Exhaustive, solver: Exhaustive::new(xs) }),
+        ];
+        if let Some(rt) = runtime {
+            if let Ok(x) = XlaEngine::new(rt, xs) {
+                engines.push(Box::new(x));
+            }
+        }
+        EngineSet { n: xs.len(), engines }
+    }
+
+    pub fn get(&self, kind: EngineKind) -> Option<&dyn Engine> {
+        self.engines.iter().find(|e| e.kind() == kind).map(|e| e.as_ref())
+    }
+
+    pub fn kinds(&self) -> Vec<EngineKind> {
+        self.engines.iter().map(|e| e.kind()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::sparse_table::oracle_batch;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_queries, RangeDist};
+
+    #[test]
+    fn all_solver_engines_agree_with_oracle() {
+        let mut rng = Rng::new(60);
+        let xs = rng.uniform_f32_vec(2000);
+        let set = EngineSet::build(&xs, None);
+        let queries = gen_queries(2000, 128, RangeDist::Medium, &mut rng);
+        let want = oracle_batch(&xs, &queries);
+        for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive] {
+            let e = set.get(kind).expect("engine present");
+            let got = e.solve(&queries, 2).unwrap();
+            assert_eq!(got, want, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn engine_kind_names_roundtrip() {
+        for k in EngineKind::all() {
+            assert_eq!(EngineKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(EngineKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn xla_engine_absent_without_runtime() {
+        let xs = Rng::new(61).uniform_f32_vec(64);
+        let set = EngineSet::build(&xs, None);
+        assert!(set.get(EngineKind::Xla).is_none());
+        assert_eq!(set.kinds().len(), 4);
+    }
+
+    #[test]
+    fn memory_ordering_matches_table2() {
+        // Table 2: HRMQ << LCA << RTXRMQ.
+        let xs = Rng::new(62).uniform_f32_vec(1 << 14);
+        let set = EngineSet::build(&xs, None);
+        let mem = |k: EngineKind| set.get(k).unwrap().memory_bytes();
+        assert!(mem(EngineKind::Hrmq) < mem(EngineKind::Lca));
+        assert!(mem(EngineKind::Lca) < mem(EngineKind::Rtx));
+        assert_eq!(mem(EngineKind::Exhaustive), 0);
+    }
+}

@@ -1,0 +1,122 @@
+//! Serving metrics: per-engine latency histograms, query/batch counts,
+//! and a human-readable snapshot for the CLI and the E2E example.
+
+use super::engine::EngineKind;
+use crate::util::stats::{fmt_ns, LatencyHistogram};
+use std::collections::HashMap;
+use std::fmt;
+
+#[derive(Clone, Default)]
+pub struct EngineMetrics {
+    pub batches: u64,
+    pub queries: u64,
+    pub batch_latency: LatencyHistogram,
+}
+
+#[derive(Clone, Default)]
+pub struct Metrics {
+    per_engine: HashMap<EngineKind, EngineMetrics>,
+    pub requests: u64,
+    pub rejected: u64,
+    pub started: Option<std::time::Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { started: Some(std::time::Instant::now()), ..Default::default() }
+    }
+
+    pub fn record_batch(&mut self, kind: EngineKind, queries: u64, latency_ns: u64) {
+        let e = self.per_engine.entry(kind).or_default();
+        e.batches += 1;
+        e.queries += queries;
+        e.batch_latency.record(latency_ns);
+    }
+
+    pub fn record_request(&mut self) {
+        self.requests += 1;
+    }
+
+    pub fn record_rejected(&mut self) {
+        self.rejected += 1;
+    }
+
+    pub fn engine(&self, kind: EngineKind) -> Option<&EngineMetrics> {
+        self.per_engine.get(&kind)
+    }
+
+    pub fn total_queries(&self) -> u64 {
+        self.per_engine.values().map(|e| e.queries).sum()
+    }
+
+    /// Overall throughput in queries/second since start.
+    pub fn throughput_qps(&self) -> f64 {
+        match self.started {
+            Some(t0) => {
+                let s = t0.elapsed().as_secs_f64();
+                if s > 0.0 {
+                    self.total_queries() as f64 / s
+                } else {
+                    0.0
+                }
+            }
+            None => 0.0,
+        }
+    }
+}
+
+impl fmt::Display for Metrics {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "requests={} rejected={} total_queries={} throughput={:.0} q/s",
+            self.requests,
+            self.rejected,
+            self.total_queries(),
+            self.throughput_qps()
+        )?;
+        let mut kinds: Vec<_> = self.per_engine.keys().copied().collect();
+        kinds.sort_by_key(|k| k.name());
+        for k in kinds {
+            let e = &self.per_engine[&k];
+            writeln!(
+                f,
+                "  {:<10} batches={:<6} queries={:<9} batch p50={} p99={} mean={}",
+                k.name(),
+                e.batches,
+                e.queries,
+                fmt_ns(e.batch_latency.quantile_ns(0.5) as f64),
+                fmt_ns(e.batch_latency.quantile_ns(0.99) as f64),
+                fmt_ns(e.batch_latency.mean_ns()),
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_aggregates() {
+        let mut m = Metrics::new();
+        m.record_request();
+        m.record_batch(EngineKind::Rtx, 100, 1_000);
+        m.record_batch(EngineKind::Rtx, 50, 2_000);
+        m.record_batch(EngineKind::Lca, 10, 500);
+        assert_eq!(m.total_queries(), 160);
+        assert_eq!(m.engine(EngineKind::Rtx).unwrap().batches, 2);
+        assert!(m.engine(EngineKind::Xla).is_none());
+        let text = m.to_string();
+        assert!(text.contains("RTXRMQ") && text.contains("LCA"));
+    }
+
+    #[test]
+    fn throughput_positive_after_work() {
+        let mut m = Metrics::new();
+        m.record_batch(EngineKind::Hrmq, 1000, 10);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(m.throughput_qps() > 0.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! L3 coordinator — the serving system around the solvers, in the
+//! vLLM-router mold (DESIGN.md §3):
+//!
+//! - [`engine`]: uniform [`engine::Engine`] wrappers over RTXRMQ / LCA /
+//!   HRMQ / EXHAUSTIVE and the PJRT-backed XLA engine.
+//! - [`router`]: picks an engine per request from the batch's range-length
+//!   statistics using the cost models (the Fig. 10 regimes as a policy).
+//! - [`batcher`]: dynamic batching with bounded queues (backpressure).
+//! - [`server`]: the request loop (std threads + channels; the offline
+//!   environment has no tokio — documented substitution, DESIGN.md §0).
+//! - [`metrics`]: per-engine latency histograms and throughput counters.
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod router;
+pub mod server;

@@ -1,0 +1,213 @@
+//! Request router: picks the engine for a batch from its range-length
+//! statistics — operationalising the paper's Fig. 10/12 findings (RTXRMQ
+//! wins small ranges; LCA wins medium/large; EXHAUSTIVE is only ever
+//! competitive for tiny ranges on small arrays).
+//!
+//! Two policies:
+//! - [`Policy::Heuristic`] — the regime thresholds read directly off the
+//!   paper's results.
+//! - [`Policy::ModeledCost`] — asks the cost models (`crate::model`) for
+//!   a per-engine estimate and picks the cheapest available. This is the
+//!   default: the router literally runs the paper's performance model at
+//!   admission time.
+
+use super::engine::EngineKind;
+use crate::model::{CudaCostModel, LcaCostModel, RtCostModel};
+use crate::rmq::Query;
+use crate::rtcore::arch::{ArchProfile, LOVELACE_RTX6000ADA};
+use crate::workload::mean_range_len;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Policy {
+    ModeledCost,
+    Heuristic,
+    Fixed(EngineKind),
+}
+
+pub struct Router {
+    pub policy: Policy,
+    pub gpu: ArchProfile,
+    rt_model: RtCostModel,
+    lca_model: LcaCostModel,
+    cuda_model: CudaCostModel,
+}
+
+impl Router {
+    pub fn new(policy: Policy) -> Router {
+        Router {
+            policy,
+            gpu: LOVELACE_RTX6000ADA,
+            rt_model: RtCostModel::default(),
+            lca_model: LcaCostModel::default(),
+            cuda_model: CudaCostModel::default(),
+        }
+    }
+
+    /// Choose an engine for a batch against an array of length `n`.
+    /// `available` lists the engines actually built (XLA may be absent).
+    pub fn route(&self, n: usize, queries: &[Query], available: &[EngineKind]) -> EngineKind {
+        let mut choice = match self.policy {
+            Policy::Fixed(k) => k,
+            Policy::Heuristic => self.heuristic(n, queries),
+            Policy::ModeledCost => self.modeled(n, queries),
+        };
+        // The paper's EXHAUSTIVE is a GPU kernel; our GPU form of it is
+        // the AOT-compiled Pallas kernel behind the XLA engine — prefer
+        // it whenever an artifact variant fits this array.
+        if choice == EngineKind::Exhaustive && available.contains(&EngineKind::Xla) {
+            choice = EngineKind::Xla;
+        }
+        if available.contains(&choice) {
+            choice
+        } else {
+            // Deterministic fallback order.
+            [EngineKind::Lca, EngineKind::Rtx, EngineKind::Hrmq, EngineKind::Exhaustive]
+                .into_iter()
+                .find(|k| available.contains(k))
+                .unwrap_or(EngineKind::Exhaustive)
+        }
+    }
+
+    /// Paper-regime thresholds: the Small distribution has mean ≈ n^0.3,
+    /// Medium ≈ n^0.6 (§6.4). RTXRMQ wins the small regime once n is
+    /// large (Fig. 12 right column); LCA wins the rest.
+    fn heuristic(&self, n: usize, queries: &[Query]) -> EngineKind {
+        let mean = mean_range_len(queries);
+        let nf = n as f64;
+        if mean <= nf.powf(0.45).max(32.0) {
+            if n < (1 << 14) {
+                // Fig. 12: EXHAUSTIVE is surprisingly the fastest for
+                // small ranges on small problem sizes (~2^15).
+                EngineKind::Exhaustive
+            } else {
+                EngineKind::Rtx
+            }
+        } else {
+            EngineKind::Lca
+        }
+    }
+
+    /// Cost-model policy: pre-execution *forecasts* per engine (the
+    /// post-hoc models in `crate::model` convert measured work; routing
+    /// needs an estimate before executing anything). Forecast anchors are
+    /// the paper's Fig. 12 saturated endpoints on the reference GPU
+    /// (ns/RMQ at n = 1e8: RTX 1/2/5 for S/M/L, LCA 2.3/1.6/1.0), with
+    /// batch-saturation from Fig. 13 applied on top.
+    fn modeled(&self, n: usize, queries: &[Query]) -> EngineKind {
+        let q = queries.len() as u64;
+        let mean = mean_range_len(queries).max(1.0);
+        let nf = n as f64;
+        let bs = nf.sqrt().max(2.0);
+
+        // RTXRMQ: traversal work grows with how many block-min boxes the
+        // interior ray crosses — interpolate between the small-range and
+        // large-range anchors on that axis.
+        let span = (1.0 + mean / bs).log2() / (1.0 + nf / (2.0 * bs)).log2().max(1e-9);
+        let rtx_sat = 1.0 + 4.0 * span.clamp(0.0, 1.0);
+        let rtx_util = crate::model::rtcost::saturation(q, self.rt_model.half_sat);
+        let rtx_ns =
+            rtx_sat / rtx_util + self.rt_model.launch_overhead_ns / q.max(1) as f64;
+
+        // LCA: O(1) work; the n-dependence is the cache staircase and the
+        // small-range penalty the paper observes in Fig. 10 (small/medium
+        // ranges run *slower* than long ones at large n).
+        let range_factor = self.lca_model.range_factor(mean, n);
+        let lca_base = self.lca_model.ns_per_query((n as u64) * 20, q, &self.gpu);
+        let lca_ns = lca_base * range_factor;
+
+        // EXHAUSTIVE: scans `mean` elements per query.
+        let ex_ns = self.cuda_model.ns_per_query(mean, (n as u64) * 4, q, &self.gpu);
+
+        let mut best = (EngineKind::Rtx, rtx_ns);
+        for (k, v) in [(EngineKind::Lca, lca_ns), (EngineKind::Exhaustive, ex_ns)] {
+            if v < best.1 {
+                best = (k, v);
+            }
+        }
+        best.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_queries, RangeDist};
+
+    fn all_kinds() -> Vec<EngineKind> {
+        vec![EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive]
+    }
+
+    #[test]
+    fn deterministic_routing() {
+        let router = Router::new(Policy::ModeledCost);
+        let mut rng = Rng::new(70);
+        let n = 1 << 20;
+        let qs = gen_queries(n, 512, RangeDist::Medium, &mut rng);
+        let a = router.route(n, &qs, &all_kinds());
+        let b = router.route(n, &qs, &all_kinds());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn heuristic_matches_paper_regimes() {
+        let router = Router::new(Policy::Heuristic);
+        let mut rng = Rng::new(71);
+        let n = 1 << 22;
+        let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
+        let large = gen_queries(n, 256, RangeDist::Large, &mut rng);
+        assert_eq!(router.route(n, &small, &all_kinds()), EngineKind::Rtx);
+        assert_eq!(router.route(n, &large, &all_kinds()), EngineKind::Lca);
+    }
+
+    #[test]
+    fn heuristic_prefers_exhaustive_on_tiny_small() {
+        let router = Router::new(Policy::Heuristic);
+        let mut rng = Rng::new(72);
+        let n = 1 << 12;
+        let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
+        assert_eq!(router.route(n, &small, &all_kinds()), EngineKind::Exhaustive);
+    }
+
+    #[test]
+    fn modeled_cost_follows_fig12_shape() {
+        // At large n with a saturated batch (the paper uses q = 2^26):
+        // small ranges -> RTX, large ranges -> LCA — the headline
+        // crossover must be reproduced by the policy.
+        let router = Router::new(Policy::ModeledCost);
+        let mut rng = Rng::new(73);
+        let n = 1 << 26;
+        let blow_up = |qs: Vec<(u32, u32)>| -> Vec<(u32, u32)> {
+            qs.iter().cycle().take(1 << 23).copied().collect()
+        };
+        let small = blow_up(gen_queries(n, 1024, RangeDist::Small, &mut rng));
+        let large = blow_up(gen_queries(n, 1024, RangeDist::Large, &mut rng));
+        assert_eq!(router.route(n, &small, &all_kinds()), EngineKind::Rtx);
+        assert_eq!(router.route(n, &large, &all_kinds()), EngineKind::Lca);
+    }
+
+    #[test]
+    fn modeled_cost_prefers_lca_when_rtx_unsaturated() {
+        // Fig. 13: with small batches RTXRMQ cannot saturate its RT
+        // cores; the router must notice and route small batches to LCA
+        // even in the small-range regime.
+        let router = Router::new(Policy::ModeledCost);
+        let mut rng = Rng::new(74);
+        let n = 1 << 26;
+        let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
+        let got = router.route(n, &small, &all_kinds());
+        assert_ne!(got, EngineKind::Rtx, "unsaturated batch must not go to RT cores");
+    }
+
+    #[test]
+    fn fixed_policy_and_fallback() {
+        let router = Router::new(Policy::Fixed(EngineKind::Xla));
+        let qs = vec![(0u32, 1u32)];
+        // XLA requested but unavailable: deterministic fallback.
+        let got = router.route(100, &qs, &all_kinds());
+        assert_eq!(got, EngineKind::Lca);
+        // Available: honored.
+        let with_xla: Vec<EngineKind> = EngineKind::all().to_vec();
+        assert_eq!(router.route(100, &qs, &with_xla), EngineKind::Xla);
+    }
+}

@@ -1,0 +1,232 @@
+//! The serving loop: bounded request queue → dynamic batcher → router →
+//! engine → reply. One array ("model") per coordinator, engines built
+//! once at startup (the paper's build-once/query-many contract).
+
+use super::batcher::{next_batch, BatcherCfg, Request, Response};
+use super::engine::{EngineKind, EngineSet};
+use super::metrics::Metrics;
+use super::router::{Policy, Router};
+use crate::rmq::{validate_queries, Query};
+use crate::runtime::Runtime;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorCfg {
+    pub policy: Policy,
+    pub batcher: BatcherCfg,
+    /// Worker threads used by the engines for one fused batch.
+    pub engine_workers: usize,
+}
+
+impl Default for CoordinatorCfg {
+    fn default() -> Self {
+        CoordinatorCfg {
+            policy: Policy::ModeledCost,
+            batcher: BatcherCfg::default(),
+            engine_workers: crate::util::pool::default_workers(),
+        }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Option<SyncSender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+    next_id: AtomicU64,
+    n: usize,
+}
+
+impl Coordinator {
+    /// Build engines for `xs` and start the serving thread.
+    pub fn start(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: CoordinatorCfg) -> Coordinator {
+        let engines = Arc::new(EngineSet::build(xs, runtime));
+        let router = Router::new(cfg.policy);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, rx) = sync_channel::<Request>(cfg.batcher.queue_cap);
+        let m = metrics.clone();
+        let n = xs.len();
+        let batcher_cfg = cfg.batcher;
+        let workers = cfg.engine_workers;
+        let worker = std::thread::spawn(move || {
+            let available = engines.kinds();
+            while let Some(fused) = next_batch(&rx, &batcher_cfg) {
+                let kind = router.route(n, &fused.queries, &available);
+                let engine = engines.get(kind).expect("routed engine exists");
+                let t0 = std::time::Instant::now();
+                let answers = match engine.solve(&fused.queries, workers) {
+                    Ok(a) => a,
+                    Err(e) => {
+                        log::error!("engine {} failed: {e}", kind.name());
+                        // Fall back to the always-available exhaustive.
+                        engines
+                            .get(EngineKind::Exhaustive)
+                            .expect("exhaustive always built")
+                            .solve(&fused.queries, workers)
+                            .expect("exhaustive cannot fail")
+                    }
+                };
+                let latency = t0.elapsed().as_nanos() as u64;
+                {
+                    let mut mm = m.lock().unwrap();
+                    mm.record_batch(kind, fused.queries.len() as u64, latency);
+                }
+                let per_request = fused.split_answers(&answers);
+                for (req, ans) in fused.requests.iter().zip(per_request) {
+                    // A dropped client is not an error.
+                    let _ = req.reply.try_send(Response {
+                        id: req.id,
+                        answers: ans,
+                        engine: kind.name(),
+                        batch_latency_ns: latency,
+                    });
+                }
+            }
+        });
+        Coordinator { tx: Some(tx), worker: Some(worker), metrics, next_id: AtomicU64::new(0), n }
+    }
+
+    /// Validated blocking query: submit and wait for the answer.
+    pub fn query(&self, queries: Vec<Query>) -> Result<Response> {
+        validate_queries(self.n, &queries).map_err(|e| {
+            self.metrics.lock().unwrap().record_rejected();
+            anyhow!(e)
+        })?;
+        self.metrics.lock().unwrap().record_request();
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, queries, reply: reply_tx };
+        self.tx
+            .as_ref()
+            .expect("not shut down")
+            .send(req)
+            .map_err(|_| anyhow!("coordinator stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
+    }
+
+    /// Non-blocking submit; Err(queries) when the queue is full
+    /// (backpressure surfaced to the caller).
+    pub fn try_submit(
+        &self,
+        queries: Vec<Query>,
+        reply: SyncSender<Response>,
+    ) -> std::result::Result<u64, Vec<Query>> {
+        if validate_queries(self.n, &queries).is_err() {
+            self.metrics.lock().unwrap().record_rejected();
+            return Err(queries);
+        }
+        self.metrics.lock().unwrap().record_request();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        match self.tx.as_ref().expect("not shut down").try_send(Request { id, queries, reply }) {
+            Ok(()) => Ok(id),
+            Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r.queries),
+        }
+    }
+
+    /// Graceful shutdown: drain the queue, then join the worker.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::sparse_table::oracle_batch;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_queries, RangeDist};
+
+    fn coordinator(n: usize, policy: Policy) -> (Coordinator, Vec<f32>) {
+        let xs = Rng::new(80).uniform_f32_vec(n);
+        let c = Coordinator::start(
+            &xs,
+            None,
+            CoordinatorCfg { policy, ..Default::default() },
+        );
+        (c, xs)
+    }
+
+    #[test]
+    fn serves_correct_answers() {
+        let (c, xs) = coordinator(4096, Policy::ModeledCost);
+        let mut rng = Rng::new(81);
+        for dist in RangeDist::all() {
+            let qs = gen_queries(4096, 64, dist, &mut rng);
+            let resp = c.query(qs.clone()).unwrap();
+            assert_eq!(resp.answers, oracle_batch(&xs, &qs), "{dist:?}");
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn rejects_invalid_queries() {
+        let (c, _) = coordinator(128, Policy::Heuristic);
+        assert!(c.query(vec![(5, 4)]).is_err());
+        assert!(c.query(vec![(0, 128)]).is_err());
+        assert_eq!(c.metrics.lock().unwrap().rejected, 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_all_served() {
+        let (c, xs) = coordinator(2048, Policy::ModeledCost);
+        let c = Arc::new(c);
+        let xs = Arc::new(xs);
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let c = c.clone();
+            let xs = xs.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..10 {
+                    let qs = gen_queries(2048, 16, RangeDist::Small, &mut rng);
+                    let resp = c.query(qs.clone()).unwrap();
+                    assert_eq!(resp.answers, oracle_batch(&xs, &qs));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.requests, 40);
+        assert_eq!(m.total_queries(), 40 * 16);
+    }
+
+    #[test]
+    fn metrics_track_engines() {
+        let (c, _) = coordinator(1 << 15, Policy::Heuristic);
+        let mut rng = Rng::new(82);
+        // Small ranges on a large-enough array route to RTX.
+        let qs = gen_queries(1 << 15, 32, RangeDist::Small, &mut rng);
+        let resp = c.query(qs).unwrap();
+        assert_eq!(resp.engine, "RTXRMQ");
+        let m = c.metrics.lock().unwrap();
+        assert!(m.engine(crate::coordinator::engine::EngineKind::Rtx).is_some());
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let (c, _) = coordinator(256, Policy::Heuristic);
+        let resp = c.query(vec![(0, 255)]).unwrap();
+        assert_eq!(resp.answers.len(), 1);
+        c.shutdown(); // must not hang
+    }
+}

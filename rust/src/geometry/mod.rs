@@ -1,0 +1,130 @@
+//! Geometric reformulation of RMQ (paper §5): array elements become
+//! triangles whose X position is the element's *value* and whose (Y, Z)
+//! footprint encodes the element's *index*; a query `RMQ(l, r)` becomes a
+//! +X ray launched from `(−∞, l/n, r/n)` whose closest hit is the range
+//! minimum.
+//!
+//! - [`flat`] — Algorithm 1 (single normalized space, n ≤ 2^24).
+//! - [`blocks`] — Algorithms 5/6 (block-matrix layout for large inputs).
+//! - [`int2float`] — Algorithm 4 (exact monotone int→f32 transform).
+//! - [`precision`] — Eq. 2 validity + the OptiX limits used to filter
+//!   configurations in Figs. 10/11.
+
+pub mod blocks;
+pub mod flat;
+pub mod int2float;
+pub mod precision;
+
+/// 3D point, FP32 like OptiX device geometry (the paper's precision
+/// constraints come precisely from this being f32).
+pub type Vec3 = [f32; 3];
+
+/// One triangle of the scene; `prim` is the primitive id OptiX would
+/// report on hit (here: the array index / block-min id it encodes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Triangle {
+    pub v0: Vec3,
+    pub v1: Vec3,
+    pub v2: Vec3,
+    pub prim: u32,
+}
+
+impl Triangle {
+    /// Axis-aligned bounds (used by the BVH builders).
+    pub fn bounds(&self) -> ([f32; 3], [f32; 3]) {
+        let mut lo = self.v0;
+        let mut hi = self.v0;
+        for v in [self.v1, self.v2] {
+            for a in 0..3 {
+                lo[a] = lo[a].min(v[a]);
+                hi[a] = hi[a].max(v[a]);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// All three vertices share the X coordinate by construction (the
+    /// element's value plane).
+    pub fn x_plane(&self) -> f32 {
+        self.v0[0]
+    }
+}
+
+/// A query ray: origin + implicit direction (1, 0, 0). The paper launches
+/// every ray along +X (§5.2, Algorithm 2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Ray {
+    pub origin: Vec3,
+}
+
+impl Ray {
+    pub fn new(origin: Vec3) -> Ray {
+        Ray { origin }
+    }
+}
+
+/// Geometric hit test in the (Y, Z) plane replicating the OptiX border
+/// semantics the paper engineers around (§5.2): rays through the *bottom
+/// and right* borders do not count as hits, so triangles must cover
+/// `[0, i+1)` horizontally and `(i−1, n−1]` vertically. Our test is
+/// therefore **strict** on the y = l_i and z = r_i edges and closed on
+/// the hypotenuse side.
+#[inline]
+pub fn point_in_footprint(y: f32, z: f32, tri: &Triangle) -> bool {
+    // Vertices: v0 = (x, l, r) right-angle corner, v1 = (x, l, zmax),
+    // v2 = (x, ymin, r).
+    let (l, r) = (tri.v0[1], tri.v0[2]);
+    if !(y < l && z > r) {
+        return false;
+    }
+    // Hypotenuse half-plane from v1 (l, zmax) to v2 (ymin, r): inside is
+    // the side containing v0. cross = (v2-v1) × (p-v1) in 2D.
+    let (e_y, e_z) = (tri.v2[1] - tri.v1[1], tri.v2[2] - tri.v1[2]);
+    let (p_y, p_z) = (y - tri.v1[1], z - tri.v1[2]);
+    let cross_p = e_y * p_z - e_z * p_y;
+    let (q_y, q_z) = (tri.v0[1] - tri.v1[1], tri.v0[2] - tri.v1[2]);
+    let cross_v0 = e_y * q_z - e_z * q_y;
+    cross_p * cross_v0 >= 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tri(l: f32, r: f32) -> Triangle {
+        Triangle { v0: [0.5, l, r], v1: [0.5, l, 2.0], v2: [0.5, -1.0, r], prim: 0 }
+    }
+
+    #[test]
+    fn bounds_cover_vertices() {
+        let t = tri(0.5, 0.25);
+        let (lo, hi) = t.bounds();
+        assert_eq!(lo, [0.5, -1.0, 0.25]);
+        assert_eq!(hi, [0.5, 0.5, 2.0]);
+    }
+
+    #[test]
+    fn footprint_interior_and_borders() {
+        let t = tri(0.5, 0.25);
+        // strictly inside the covered rectangle
+        assert!(point_in_footprint(0.4, 0.5, &t));
+        // on the y = l border: excluded (right border rule)
+        assert!(!point_in_footprint(0.5, 0.5, &t));
+        // on the z = r border: excluded (bottom border rule)
+        assert!(!point_in_footprint(0.4, 0.25, &t));
+        // outside on either side
+        assert!(!point_in_footprint(0.6, 0.5, &t));
+        assert!(!point_in_footprint(0.4, 0.2, &t));
+    }
+
+    #[test]
+    fn hypotenuse_is_inclusive_and_outside_rejected() {
+        let t = tri(0.5, 0.25);
+        // Hypotenuse runs from (0.5, 2.0) to (-1.0, 0.25). A point well
+        // beyond it (large z, small y) must be out.
+        assert!(!point_in_footprint(-0.9, 1.99, &t));
+        // The query space [0,1]x[0,1] corner (0, 1): y<l? 0<0.5 ok,
+        // z>r ok, and inside the hypotenuse for this shape.
+        assert!(point_in_footprint(0.0, 1.0, &t));
+    }
+}

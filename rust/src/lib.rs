@@ -1,0 +1,25 @@
+//! RTXRMQ — reproduction of *Accelerating Range Minimum Queries with Ray
+//! Tracing Cores* (Meneses, Navarro, Ferrada, Quezada; CS.DC 2023) as a
+//! three-layer Rust + JAX + Pallas system.
+//!
+//! Layer map (see DESIGN.md):
+//! - **L3** — this crate: RT-core simulator substrate, RMQ solvers
+//!   (RTXRMQ, HRMQ, LCA, exhaustive), serving coordinator, cost/energy
+//!   models, bench harness.
+//! - **L2/L1** — `python/compile`: JAX block-RMQ graph calling Pallas
+//!   kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from Rust via
+//!   PJRT (`runtime`). Python never runs on the request path.
+
+pub mod bench_harness;
+pub mod bvh;
+pub mod coordinator;
+pub mod geometry;
+pub mod model;
+pub mod rmq;
+pub mod rtcore;
+pub mod runtime;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,171 @@
+//! `rtxrmq` — launcher CLI for the RTXRMQ reproduction.
+//!
+//! Subcommands:
+//!   solve      one-shot batch solve on a synthetic workload
+//!   serve      start the coordinator and drive a synthetic client load
+//!   memory     Table-2 style memory report for a given n
+//!   artifacts  list the AOT artifact variants (PJRT manifest)
+//!   info       architecture profiles used by the models
+
+use rtxrmq::coordinator::engine::{EngineKind, EngineSet};
+use rtxrmq::coordinator::router::Policy;
+use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::runtime::Runtime;
+use rtxrmq::util::cli::{Args, Help};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::util::stats::fmt_mb;
+use rtxrmq::workload::{gen_array, gen_queries, RangeDist};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("solve") => cmd_solve(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("memory") => cmd_memory(&args),
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("info") => cmd_info(),
+        _ => {
+            print_help();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "rtxrmq — reproduction of 'Accelerating Range Minimum Queries with Ray Tracing Cores'\n"
+    );
+    for h in [
+        Help::new("solve", "solve one batch")
+            .opt("n", "array size (default 2^16; accepts 2^k)")
+            .opt("q", "queries in the batch (default 4096)")
+            .opt("dist", "large|medium|small (default small)")
+            .opt("engine", "RTXRMQ|LCA|HRMQ|EXHAUSTIVE|XLA (default: route by cost model)"),
+        Help::new("serve", "run the coordinator under synthetic load")
+            .opt("n", "array size (default 2^16)")
+            .opt("requests", "number of requests (default 128)")
+            .opt("batch", "queries per request (default 1024)")
+            .opt("no-xla", "disable the PJRT/XLA engine"),
+        Help::new("memory", "data-structure memory report").opt("n", "array size"),
+        Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
+        Help::new("info", "print the GPU/CPU architecture profiles"),
+    ] {
+        println!("{}", h.render());
+    }
+    println!("benches: cargo bench --bench fig12_time_speedup (… fig10..fig17, table2, ablations)");
+}
+
+fn cmd_solve(args: &Args) -> i32 {
+    let n: usize = args.get_or("n", 1usize << 16).unwrap();
+    let q: usize = args.get_or("q", 4096usize).unwrap();
+    let dist = RangeDist::parse(&args.str_or("dist", "small")).unwrap_or(RangeDist::Small);
+    let xs = gen_array(n, 7);
+    let mut rng = Rng::new(8);
+    let queries = gen_queries(n, q, dist, &mut rng);
+
+    let runtime = Runtime::load(Path::new("artifacts")).ok().map(Arc::new);
+    let engines = EngineSet::build(&xs, runtime);
+    let kind = match args.opt("engine") {
+        Some(name) => EngineKind::parse(name).unwrap_or_else(|| {
+            eprintln!("unknown engine {name}");
+            std::process::exit(2);
+        }),
+        None => {
+            let router = rtxrmq::coordinator::router::Router::new(Policy::ModeledCost);
+            router.route(n, &queries, &engines.kinds())
+        }
+    };
+    let engine = engines.get(kind).expect("engine available");
+    let t0 = std::time::Instant::now();
+    let answers = engine.solve(&queries, rtxrmq::util::pool::default_workers()).unwrap();
+    let dt = t0.elapsed();
+    println!(
+        "{} answered {} {}-range queries over n={} in {:.2?} ({:.0} ns/RMQ local)",
+        kind.name(),
+        answers.len(),
+        dist.name(),
+        n,
+        dt,
+        dt.as_nanos() as f64 / answers.len() as f64
+    );
+    for (i, &(l, r)) in queries.iter().take(3).enumerate() {
+        println!("  RMQ({l},{r}) = {} (value {})", answers[i], xs[answers[i] as usize]);
+    }
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let n: usize = args.get_or("n", 1usize << 16).unwrap();
+    let requests: usize = args.get_or("requests", 128usize).unwrap();
+    let batch: usize = args.get_or("batch", 1024usize).unwrap();
+    let xs = gen_array(n, 7);
+    let runtime = if args.flag("no-xla") {
+        None
+    } else {
+        Runtime::load(Path::new("artifacts")).ok().map(Arc::new)
+    };
+    let c = Coordinator::start(&xs, runtime, CoordinatorCfg::default());
+    let mut rng = Rng::new(9);
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        let dist = [RangeDist::Small, RangeDist::Medium, RangeDist::Large][i % 3];
+        let qs = gen_queries(n, batch, dist, &mut rng);
+        c.query(qs).expect("serve");
+    }
+    let wall = t0.elapsed();
+    println!(
+        "served {requests} requests x {batch} queries in {wall:.2?} ({:.0} queries/s)",
+        (requests * batch) as f64 / wall.as_secs_f64()
+    );
+    println!("{}", c.metrics.lock().unwrap());
+    c.shutdown();
+    0
+}
+
+fn cmd_memory(args: &Args) -> i32 {
+    let n: usize = args.get_or("n", 1usize << 16).unwrap();
+    let xs = gen_array(n, 7);
+    let engines = EngineSet::build(&xs, None);
+    println!("data-structure memory at n = {n} (input {}):", fmt_mb((n * 4) as u64));
+    for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive] {
+        let e = engines.get(kind).unwrap();
+        println!("  {:<11} {}", kind.name(), fmt_mb(e.memory_bytes() as u64));
+    }
+    0
+}
+
+fn cmd_artifacts(args: &Args) -> i32 {
+    let dir = args.str_or("dir", "artifacts");
+    match Runtime::load(Path::new(&dir)) {
+        Ok(rt) => {
+            println!("PJRT artifacts in {dir}:");
+            for v in rt.variants() {
+                println!("  {:<28} kind={:?} n={} q={} bs={}", v.name, v.kind, v.n, v.q, v.bs);
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to load artifacts: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    println!("GPU architecture profiles (models' inputs):");
+    for p in rtxrmq::rtcore::arch::generations()
+        .into_iter()
+        .chain(rtxrmq::rtcore::arch::lovelace_skus())
+    {
+        println!(
+            "  {:<26} SMs={:<4} clock={:.2} GHz RTgen={:.0}x TDP={:.0} W L2={:.0} MiB",
+            p.name, p.sm_count, p.clock_ghz, p.rt_gen_factor, p.tdp_w, p.l2_mib
+        );
+    }
+    let cpu = rtxrmq::rtcore::arch::EPYC_9654_X2;
+    println!("  {:<26} cores={} TDP={:.0} W", cpu.name, cpu.cores, cpu.tdp_w);
+    0
+}

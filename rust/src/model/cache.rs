@@ -1,0 +1,88 @@
+//! GPU memory-hierarchy model: converts a working-set size into a
+//! relative access-latency multiplier. This is what produces the
+//! staircase the paper observes for LCA in Fig. 12 ("constant time
+//! switches to different levels at certain problem sizes due to the
+//! effect of caches L1, L2 and VRAM") and LCA's Fig. 13 dip when its
+//! structures stop fitting in the 96 MB L2.
+
+use crate::rtcore::ArchProfile;
+
+/// Relative latency multipliers per level (L1 = 1).
+#[derive(Clone, Copy, Debug)]
+pub struct CacheModel {
+    pub l1_total_bytes: u64,
+    pub l2_total_bytes: u64,
+    pub lat_l1: f64,
+    pub lat_l2: f64,
+    pub lat_vram: f64,
+}
+
+impl CacheModel {
+    /// Build from an architecture profile (128 KiB unified L1 per SM on
+    /// Ampere/Ada-class parts).
+    pub fn for_arch(p: &ArchProfile) -> CacheModel {
+        CacheModel {
+            l1_total_bytes: p.sm_count as u64 * 128 * 1024,
+            l2_total_bytes: (p.l2_mib * 1024.0 * 1024.0) as u64,
+            lat_l1: 1.0,
+            lat_vram: 9.0,
+            lat_l2: 3.0,
+        }
+    }
+
+    /// Smooth-step latency for a random-access working set of the given
+    /// size: fully below a level ⇒ that level's latency; across a
+    /// boundary ⇒ capacity-weighted mix (fraction of hits still served by
+    /// the smaller level).
+    pub fn access_latency(&self, working_set: u64) -> f64 {
+        let ws = working_set.max(1) as f64;
+        let l1 = self.l1_total_bytes as f64;
+        let l2 = self.l2_total_bytes as f64;
+        if ws <= l1 {
+            self.lat_l1
+        } else if ws <= l2 {
+            // hit fraction from L1 = l1/ws
+            let f = l1 / ws;
+            f * self.lat_l1 + (1.0 - f) * self.lat_l2
+        } else {
+            let f1 = l1 / ws;
+            let f2 = (l2 - l1).max(0.0) / ws;
+            f1 * self.lat_l1 + f2 * self.lat_l2 + (1.0 - f1 - f2) * self.lat_vram
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rtcore::arch::LOVELACE_RTX6000ADA;
+
+    #[test]
+    fn monotone_in_working_set() {
+        let m = CacheModel::for_arch(&LOVELACE_RTX6000ADA);
+        let mut prev = 0.0;
+        for ws in [1u64 << 10, 1 << 20, 1 << 24, 1 << 27, 1 << 30, 1 << 34] {
+            let lat = m.access_latency(ws);
+            assert!(lat >= prev, "latency must not decrease ({ws})");
+            prev = lat;
+        }
+    }
+
+    #[test]
+    fn staircase_levels() {
+        let m = CacheModel::for_arch(&LOVELACE_RTX6000ADA);
+        // Tiny set: L1 speed.
+        assert_eq!(m.access_latency(1 << 10), 1.0);
+        // Around 1 GiB: essentially VRAM.
+        assert!(m.access_latency(1 << 30) > 7.0);
+        // Mid-size (50 MB): between L1 and VRAM.
+        let mid = m.access_latency(50 << 20);
+        assert!(mid > 1.0 && mid < 7.0, "mid = {mid}");
+    }
+
+    #[test]
+    fn l2_capacity_from_profile() {
+        let m = CacheModel::for_arch(&LOVELACE_RTX6000ADA);
+        assert_eq!(m.l2_total_bytes, 96 * 1024 * 1024);
+    }
+}

@@ -1,0 +1,20 @@
+//! Performance and energy models.
+//!
+//! Methodology (DESIGN.md §0): the simulator *executes* the paper's exact
+//! workloads and **measures work** (BVH node visits, triangle tests,
+//! memory touches, scanned elements). These models convert measured work
+//! into modeled GPU/CPU time using public architecture parameters
+//! (`rtcore::arch`) plus **one scale calibration per approach family**,
+//! fixed once against a single reported endpoint of the paper (Fig. 12,
+//! n = 1e8, large ranges: RTXRMQ ≈ 5 ns/RMQ, HRMQ ≈ 12.5 ns/RMQ, LCA ≈
+//! 1 ns/RMQ). Everything else — crossovers, staircases, scaling ratios —
+//! *emerges* from the measured work and the architecture parameters; it
+//! is never fitted per-configuration.
+
+pub mod cache;
+pub mod energy;
+pub mod rtcost;
+
+pub use cache::CacheModel;
+pub use energy::EnergyModel;
+pub use rtcost::{CudaCostModel, HrmqCostModel, LcaCostModel, RtCostModel};

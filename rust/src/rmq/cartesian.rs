@@ -1,0 +1,258 @@
+//! Cartesian tree construction — the shared substrate of both CPU/GPU
+//! baselines (paper §2, §4): HRMQ encodes the tree as balanced
+//! parentheses, and the LCA baseline answers `RMQ(l, r)` as
+//! `LCA(node_l, node_r)` (the classical linear-time reduction).
+//!
+//! The tree of `X` has the (leftmost) minimum at the root; the left
+//! subtree is the Cartesian tree of the prefix before it, the right
+//! subtree that of the suffix after it. Built in O(n) with the rightmost-
+//! spine stack. Ties: an equal element does **not** pop an earlier equal
+//! (strictly-greater pops only), so the leftmost minimum is the ancestor
+//! — preserving the leftmost-min convention end to end.
+
+/// Sentinel for "no node".
+pub const NIL: u32 = u32::MAX;
+
+/// Array-backed Cartesian tree.
+pub struct CartesianTree {
+    pub parent: Vec<u32>,
+    pub left: Vec<u32>,
+    pub right: Vec<u32>,
+    pub root: u32,
+}
+
+impl CartesianTree {
+    /// O(n) stack build.
+    pub fn build(xs: &[f32]) -> CartesianTree {
+        let n = xs.len();
+        assert!(n > 0, "empty array");
+        let mut parent = vec![NIL; n];
+        let mut left = vec![NIL; n];
+        let mut right = vec![NIL; n];
+        // Rightmost spine, bottom (root) at index 0.
+        let mut stack: Vec<u32> = Vec::with_capacity(64);
+        for i in 0..n as u32 {
+            let mut last_popped = NIL;
+            // Pop strictly greater values: equal elements stay, making the
+            // earlier (leftmost) one the ancestor.
+            while let Some(&top) = stack.last() {
+                if xs[top as usize] > xs[i as usize] {
+                    last_popped = top;
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if last_popped != NIL {
+                // The popped chain becomes i's left subtree.
+                left[i as usize] = last_popped;
+                parent[last_popped as usize] = i;
+            }
+            if let Some(&top) = stack.last() {
+                right[top as usize] = i;
+                parent[i as usize] = top;
+            }
+            stack.push(i);
+        }
+        let root = stack[0];
+        CartesianTree { parent, left, right, root }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parent.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parent.is_empty()
+    }
+
+    /// Depth of every node (root = 0), computed iteratively in index order
+    /// is not possible (parents may be right of children), so an explicit
+    /// DFS is used.
+    pub fn depths(&self) -> Vec<u32> {
+        let n = self.len();
+        let mut depth = vec![0u32; n];
+        let mut stack = vec![self.root];
+        let mut visited = vec![false; n];
+        visited[self.root as usize] = true;
+        while let Some(v) = stack.pop() {
+            for &c in &[self.left[v as usize], self.right[v as usize]] {
+                if c != NIL {
+                    depth[c as usize] = depth[v as usize] + 1;
+                    visited[c as usize] = true;
+                    stack.push(c);
+                }
+            }
+        }
+        debug_assert!(visited.iter().all(|&v| v));
+        depth
+    }
+
+    /// Preorder numbering (1-based, as Schieber–Vishkin requires) and the
+    /// preorder-sorted node list. Iterative DFS visiting left before
+    /// right.
+    pub fn preorder(&self) -> (Vec<u32>, Vec<u32>) {
+        let n = self.len();
+        let mut pre = vec![0u32; n]; // node -> preorder number (1-based)
+        let mut order = Vec::with_capacity(n); // preorder position -> node
+        let mut stack = vec![self.root];
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            pre[v as usize] = order.len() as u32;
+            // Push right first so left is visited first.
+            if self.right[v as usize] != NIL {
+                stack.push(self.right[v as usize]);
+            }
+            if self.left[v as usize] != NIL {
+                stack.push(self.left[v as usize]);
+            }
+        }
+        (pre, order)
+    }
+
+    /// Subtree sizes, computed in reverse preorder (children before
+    /// parents).
+    pub fn subtree_sizes(&self, order: &[u32]) -> Vec<u32> {
+        let mut size = vec![1u32; self.len()];
+        for &v in order.iter().rev() {
+            let p = self.parent[v as usize];
+            if p != NIL {
+                size[p as usize] += size[v as usize];
+            }
+        }
+        size
+    }
+
+    /// Naive LCA by walking parents (test reference only; O(depth)).
+    pub fn lca_naive(&self, mut u: u32, mut v: u32, depth: &[u32]) -> u32 {
+        while depth[u as usize] > depth[v as usize] {
+            u = self.parent[u as usize];
+        }
+        while depth[v as usize] > depth[u as usize] {
+            v = self.parent[v as usize];
+        }
+        while u != v {
+            u = self.parent[u as usize];
+            v = self.parent[v as usize];
+        }
+        u
+    }
+
+    pub fn memory_bytes(&self) -> usize {
+        3 * self.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::naive_rmq;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn paper_example_root_is_min() {
+        // X = [9,2,7,8,4,1,3] -> min at 5
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        let t = CartesianTree::build(&xs);
+        assert_eq!(t.root, 5);
+        // In-order traversal must be 0..n (BST on positions).
+        let mut inorder = Vec::new();
+        fn walk(t: &CartesianTree, v: u32, out: &mut Vec<u32>) {
+            if v == NIL {
+                return;
+            }
+            walk(t, t.left[v as usize], out);
+            out.push(v);
+            walk(t, t.right[v as usize], out);
+        }
+        walk(&t, t.root, &mut inorder);
+        assert_eq!(inorder, (0..7).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn heap_property_and_tie_break() {
+        let xs = [1.0, 1.0, 1.0];
+        let t = CartesianTree::build(&xs);
+        assert_eq!(t.root, 0, "leftmost equal element is the root");
+        // parent value <= child value everywhere
+        for v in 0..3 {
+            let p = t.parent[v];
+            if p != NIL {
+                assert!(xs[p as usize] <= xs[v]);
+            }
+        }
+    }
+
+    #[test]
+    fn lca_answers_rmq() {
+        check("cartesian LCA == rmq", 100, |rng| {
+            let xs = gen::dup_array(rng, 1..=256, 8);
+            let t = CartesianTree::build(&xs);
+            let depth = t.depths();
+            for _ in 0..16 {
+                let (l, r) = gen::query(rng, xs.len());
+                let got = t.lca_naive(l as u32, r as u32, &depth) as usize;
+                let want = naive_rmq(&xs, l, r);
+                if got != want {
+                    return Err(format!("({l},{r}): lca {got} vs rmq {want} xs={xs:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn preorder_and_sizes_are_consistent() {
+        check("preorder intervals", 60, |rng| {
+            let xs = gen::f32_array(rng, 1..=256);
+            let t = CartesianTree::build(&xs);
+            let (pre, order) = t.preorder();
+            let size = t.subtree_sizes(&order);
+            // The root is first, preorder numbers are a permutation of 1..=n.
+            if order[0] != t.root {
+                return Err("root not first in preorder".into());
+            }
+            let mut seen = vec![false; xs.len() + 1];
+            for &p in &pre {
+                if seen[p as usize] {
+                    return Err("duplicate preorder number".into());
+                }
+                seen[p as usize] = true;
+            }
+            // Every child's preorder interval nests in its parent's.
+            for v in 0..xs.len() {
+                let p = t.parent[v];
+                if p != NIL {
+                    let (cv, cs) = (pre[v], size[v]);
+                    let (pv, ps) = (pre[p as usize], size[p as usize]);
+                    if !(pv < cv && cv + cs <= pv + ps) {
+                        return Err(format!("interval not nested at node {v}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sorted_array_is_a_right_path() {
+        let xs: Vec<f32> = (0..64).map(|i| i as f32).collect();
+        let t = CartesianTree::build(&xs);
+        assert_eq!(t.root, 0);
+        for i in 0..63u32 {
+            assert_eq!(t.right[i as usize], i + 1);
+            assert_eq!(t.left[i as usize], NIL);
+        }
+        let depth = t.depths();
+        assert_eq!(depth[63], 63);
+    }
+
+    #[test]
+    fn reverse_sorted_is_a_left_path() {
+        let xs: Vec<f32> = (0..64).map(|i| (64 - i) as f32).collect();
+        let t = CartesianTree::build(&xs);
+        assert_eq!(t.root, 63);
+        let depth = t.depths();
+        assert_eq!(depth[0], 63);
+    }
+}

@@ -1,0 +1,98 @@
+//! EXHAUSTIVE baseline (paper §6.1): "each thread handles one query and
+//! searches the minimum from left to right in the (l, r) range". This is
+//! the CPU form of the paper's reference CUDA kernel; the GPU form is the
+//! L1 Pallas kernel executed through the PJRT runtime
+//! (`coordinator::engines::XlaEngine`). No data structure is required
+//! (Table 2 lists it as structure-free).
+
+use super::RmqSolver;
+
+/// Brute-force scan solver.
+pub struct Exhaustive {
+    xs: Vec<f32>,
+}
+
+impl Exhaustive {
+    pub fn new(xs: &[f32]) -> Exhaustive {
+        assert!(!xs.is_empty(), "empty array");
+        Exhaustive { xs: xs.to_vec() }
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.xs
+    }
+}
+
+impl RmqSolver for Exhaustive {
+    fn name(&self) -> &'static str {
+        "EXHAUSTIVE"
+    }
+
+    #[inline]
+    fn rmq(&self, l: u32, r: u32) -> u32 {
+        let xs = &self.xs;
+        debug_assert!(l <= r && (r as usize) < xs.len());
+        let mut best = l as usize;
+        let mut best_v = xs[best];
+        // Strict `<` keeps the leftmost occurrence on ties.
+        for k in (l as usize + 1)..=(r as usize) {
+            let v = xs[k];
+            if v < best_v {
+                best = k;
+                best_v = v;
+            }
+        }
+        best as u32
+    }
+
+    fn memory_bytes(&self) -> usize {
+        0 // no auxiliary structure (the input is not counted, as in Table 2)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::sparse_table::SparseTable;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn paper_example() {
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        let ex = Exhaustive::new(&xs);
+        assert_eq!(ex.rmq(2, 6), 5);
+        assert_eq!(ex.rmq(0, 0), 0);
+    }
+
+    #[test]
+    fn ties_leftmost() {
+        let xs = [2.0, 1.0, 1.0, 1.0];
+        let ex = Exhaustive::new(&xs);
+        assert_eq!(ex.rmq(0, 3), 1);
+        assert_eq!(ex.rmq(2, 3), 2);
+    }
+
+    #[test]
+    fn batch_matches_oracle() {
+        check("exhaustive batch vs oracle", 60, |rng| {
+            let xs = gen::f32_array(rng, 1..=1024);
+            let queries = gen::queries(rng, xs.len(), 64)
+                .into_iter()
+                .map(|(l, r)| (l as u32, r as u32))
+                .collect::<Vec<_>>();
+            let ex = Exhaustive::new(&xs);
+            let st = SparseTable::new(&xs);
+            let got = ex.batch(&queries, 2);
+            let want = st.batch(&queries, 1);
+            if got != want {
+                return Err("batch mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn no_aux_memory() {
+        assert_eq!(Exhaustive::new(&[1.0]).memory_bytes(), 0);
+    }
+}

@@ -1,0 +1,270 @@
+//! LCA-based RMQ — the paper's GPU state-of-the-art baseline (Polak,
+//! Siwiec, Stobierski, IPDPS 2021), which answers RMQ through the dual
+//! problem: `RMQ(l, r) = LCA(node_l, node_r)` on the Cartesian tree.
+//! Polak et al. implement the Schieber–Vishkin *inline* LCA algorithm
+//! [SIAM J. Comput. 1988] with Euler-tour preprocessing; we implement the
+//! same O(n) preprocessing / O(1) inline query, batch-parallel over
+//! queries (their GPU grid maps to our worker pool; the GPU *timing* is
+//! produced by the cost model in `crate::model`).
+//!
+//! Schieber–Vishkin in brief: nodes get 1-based preorder numbers; each
+//! node's `inlabel` is the number with the most trailing zeros inside its
+//! preorder interval, which decomposes the tree into O(n/2^k) paths per
+//! level k; `ascendant` masks record which inlabel levels appear on each
+//! node's root path, and `head` maps an inlabel to the highest node of its
+//! path. Queries then run in O(1) with word-level bit tricks.
+
+use super::cartesian::{CartesianTree, NIL};
+use super::RmqSolver;
+
+/// Index of the most significant set bit.
+#[inline]
+fn msb(x: u32) -> u32 {
+    debug_assert!(x != 0);
+    31 - x.leading_zeros()
+}
+
+/// Index of the least significant set bit.
+#[inline]
+fn lsb(x: u32) -> u32 {
+    debug_assert!(x != 0);
+    x.trailing_zeros()
+}
+
+/// Schieber–Vishkin LCA structure over a Cartesian tree.
+pub struct LcaRmq {
+    parent: Vec<u32>,
+    depth: Vec<u32>,
+    inlabel: Vec<u32>,
+    ascendant: Vec<u32>,
+    /// head[inlabel] = node closest to the root having that inlabel.
+    head: Vec<u32>,
+}
+
+impl LcaRmq {
+    pub fn new(xs: &[f32]) -> LcaRmq {
+        let tree = CartesianTree::build(xs);
+        Self::from_tree(&tree)
+    }
+
+    pub fn from_tree(tree: &CartesianTree) -> LcaRmq {
+        let n = tree.len();
+        let depth = tree.depths();
+        let (pre, order) = tree.preorder();
+        let size = tree.subtree_sizes(&order);
+
+        // inlabel(v): i = pre(v), j = i + size(v) - 1. The number in
+        // [i, j] with the most trailing zeros is obtained by clearing the
+        // low bits of j below the highest bit where (i-1) and j differ.
+        let mut inlabel = vec![0u32; n];
+        for v in 0..n {
+            let i = pre[v];
+            let j = i + size[v] - 1;
+            inlabel[v] = if i == j {
+                i
+            } else {
+                let k = msb((i - 1) ^ j);
+                (j >> k) << k
+            };
+        }
+
+        // ascendant masks accumulate down the tree in preorder (the level
+        // of an inlabel is its number of trailing zeros).
+        let mut ascendant = vec![0u32; n];
+        for &v in &order {
+            let v = v as usize;
+            let bit = 1u32 << lsb(inlabel[v]);
+            let p = tree.parent[v];
+            ascendant[v] = if p == NIL { bit } else { ascendant[p as usize] | bit };
+        }
+
+        // head of each inlabel path: the node whose parent has a
+        // different inlabel (or the root).
+        let mut head = vec![NIL; n + 1];
+        for &v in &order {
+            let v = v as usize;
+            let p = tree.parent[v];
+            if p == NIL || inlabel[p as usize] != inlabel[v] {
+                head[inlabel[v] as usize] = v as u32;
+            }
+        }
+
+        LcaRmq { parent: tree.parent.clone(), depth, inlabel, ascendant, head }
+    }
+
+    /// Closest ancestor of `x` (inclusive) whose inlabel equals
+    /// `inlabel_z` (the LCA's inlabel), given `j = level(inlabel_z)`.
+    #[inline]
+    fn climb(&self, x: u32, inlabel_z: u32, j: u32) -> u32 {
+        let xi = x as usize;
+        if self.inlabel[xi] == inlabel_z {
+            return x;
+        }
+        // Highest inlabel level on x's root path strictly below level j.
+        let below = self.ascendant[xi] & ((1u32 << j) - 1);
+        debug_assert!(below != 0, "x must have a path level below the lca's");
+        let k = msb(below);
+        // inlabel of x's ancestor path at level k: clear inlabel(x)'s low
+        // bits below k, set bit k.
+        let inlabel_w = ((self.inlabel[xi] >> (k + 1)) << (k + 1)) | (1u32 << k);
+        let w = self.head[inlabel_w as usize];
+        debug_assert!(w != NIL);
+        self.parent[w as usize]
+    }
+
+    /// O(1) LCA query.
+    #[inline]
+    pub fn lca(&self, x: u32, y: u32) -> u32 {
+        let (ix, iy) = (self.inlabel[x as usize], self.inlabel[y as usize]);
+        if ix == iy {
+            // Same path: the shallower node is the ancestor.
+            return if self.depth[x as usize] <= self.depth[y as usize] { x } else { y };
+        }
+        // Lowest common inlabel level at or above where the labels differ.
+        let i = msb(ix ^ iy);
+        let common = self.ascendant[x as usize] & self.ascendant[y as usize];
+        let j = lsb(common & (u32::MAX << i));
+        let inlabel_z = ((ix >> (j + 1)) << (j + 1)) | (1u32 << j);
+        let xp = self.climb(x, inlabel_z, j);
+        let yp = self.climb(y, inlabel_z, j);
+        if self.depth[xp as usize] <= self.depth[yp as usize] {
+            xp
+        } else {
+            yp
+        }
+    }
+}
+
+impl RmqSolver for LcaRmq {
+    fn name(&self) -> &'static str {
+        "LCA"
+    }
+
+    #[inline]
+    fn rmq(&self, l: u32, r: u32) -> u32 {
+        // RMQ(l, r) = LCA of the two endpoint nodes in the Cartesian tree.
+        self.lca(l, r)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        (self.parent.len() + self.depth.len() + self.inlabel.len() + self.ascendant.len()) * 4
+            + self.head.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::sparse_table::SparseTable;
+    use crate::rmq::naive_rmq;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn paper_example() {
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        let s = LcaRmq::new(&xs);
+        assert_eq!(s.rmq(2, 6), 5);
+        assert_eq!(s.rmq(0, 6), 5);
+        assert_eq!(s.rmq(0, 3), 1);
+        assert_eq!(s.rmq(6, 6), 6);
+    }
+
+    #[test]
+    fn exhaustive_small_n() {
+        let mut state = 1234u64;
+        for n in 1..=40usize {
+            let xs: Vec<f32> = (0..n)
+                .map(|_| (crate::util::rng::splitmix64(&mut state) % 6) as f32)
+                .collect();
+            let s = LcaRmq::new(&xs);
+            for l in 0..n {
+                for r in l..n {
+                    assert_eq!(
+                        s.rmq(l as u32, r as u32) as usize,
+                        naive_rmq(&xs, l, r),
+                        "n={n} l={l} r={r} xs={xs:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lca_matches_naive_walk() {
+        check("SV lca vs parent walk", 80, |rng| {
+            let xs = gen::f32_array(rng, 2..=512);
+            let tree = CartesianTree::build(&xs);
+            let depth = tree.depths();
+            let s = LcaRmq::from_tree(&tree);
+            for _ in 0..32 {
+                let u = rng.range(0, xs.len() - 1) as u32;
+                let v = rng.range(0, xs.len() - 1) as u32;
+                let got = s.lca(u, v);
+                let want = tree.lca_naive(u, v, &depth);
+                if got != want {
+                    return Err(format!("lca({u},{v}) = {got}, want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_vs_oracle_large() {
+        check("SV rmq vs sparse table", 80, |rng| {
+            let xs = gen::f32_array(rng, 1..=8192);
+            let s = LcaRmq::new(&xs);
+            let st = SparseTable::new(&xs);
+            for _ in 0..48 {
+                let (l, r) = gen::query(rng, xs.len());
+                let (got, want) = (s.rmq(l as u32, r as u32), st.rmq(l as u32, r as u32));
+                if got != want {
+                    return Err(format!("({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_adversarial_paths() {
+        // Deep path-shaped trees stress the inlabel/ascendant machinery.
+        check("SV on sorted/reverse/sawtooth", 60, |rng| {
+            let xs = gen::adversarial_array(rng, 2..=2048);
+            let s = LcaRmq::new(&xs);
+            let st = SparseTable::new(&xs);
+            for _ in 0..32 {
+                let (l, r) = gen::query(rng, xs.len());
+                if s.rmq(l as u32, r as u32) != st.rmq(l as u32, r as u32) {
+                    return Err(format!("mismatch at ({l},{r})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn duplicates_leftmost() {
+        check("SV leftmost ties", 60, |rng| {
+            let xs = gen::dup_array(rng, 1..=1024, 2);
+            let s = LcaRmq::new(&xs);
+            for _ in 0..24 {
+                let (l, r) = gen::query(rng, xs.len());
+                let want = naive_rmq(&xs, l, r);
+                let got = s.rmq(l as u32, r as u32) as usize;
+                if got != want {
+                    return Err(format!("({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memory_is_linear_words() {
+        let xs = crate::util::rng::Rng::new(21).uniform_f32_vec(1 << 12);
+        let s = LcaRmq::new(&xs);
+        // 4 arrays of n u32 + head of (n+1) u32
+        assert_eq!(s.memory_bytes(), 4 * (1 << 12) * 4 + ((1 << 12) + 1) * 4);
+    }
+}

@@ -1,0 +1,98 @@
+//! Range-minimum-query solvers.
+//!
+//! The paper's problem statement (§2): given `X = [x_0 .. x_{n-1}]` and
+//! `l ≤ r < n`, `RMQ(l, r) = argmin_{l ≤ k ≤ r} x_k`, preferring the
+//! **leftmost** position on ties. Every solver in this module implements
+//! [`RmqSolver`] and is property-tested against the sparse-table oracle.
+//!
+//! Solvers (paper §6.1):
+//! - [`sparse_table::SparseTable`] — ⟨O(n log n), O(1)⟩ oracle (ground truth).
+//! - [`exhaustive::Exhaustive`] — the paper's EXHAUSTIVE baseline.
+//! - [`hrmq::Hrmq`] — succinct balanced-parentheses RMQ in the style of
+//!   Ferrada & Navarro (the paper's CPU state of the art, query-parallel).
+//! - [`lca::LcaRmq`] — Schieber–Vishkin inline LCA over the Cartesian tree
+//!   (the paper's GPU state of the art, Polak et al., batch-parallel).
+//! - [`rtx::RtxRmq`] — the paper's contribution: RMQ as ray/triangle
+//!   closest-hit queries over a BVH (RT-core simulator substrate).
+
+pub mod cartesian;
+pub mod exhaustive;
+pub mod hrmq;
+pub mod lca;
+pub mod rtx;
+pub mod sparse_table;
+
+use crate::util::pool;
+
+/// A query: inclusive (l, r) index pair.
+pub type Query = (u32, u32);
+
+/// Common interface for every RMQ approach.
+pub trait RmqSolver: Send + Sync {
+    /// Short identifier used in bench output ("RTXRMQ", "HRMQ", "LCA", ...).
+    fn name(&self) -> &'static str;
+
+    /// Answer one query; `l ≤ r < n`. Returns the index of the leftmost
+    /// minimum in `[l, r]`.
+    fn rmq(&self, l: u32, r: u32) -> u32;
+
+    /// Answer a batch of queries, parallelised over `workers` threads.
+    /// This is the paper's execution model: all approaches are evaluated
+    /// on *batches* of RMQs (§1, §6).
+    fn batch(&self, queries: &[Query], workers: usize) -> Vec<u32> {
+        let mut out = vec![0u32; queries.len()];
+        pool::for_each_chunk_mut(&mut out, workers, |off, slice| {
+            for (k, o) in slice.iter_mut().enumerate() {
+                let (l, r) = queries[off + k];
+                *o = self.rmq(l, r);
+            }
+        });
+        out
+    }
+
+    /// Bytes of auxiliary data structures (paper Table 2; excludes the
+    /// input array itself).
+    fn memory_bytes(&self) -> usize;
+}
+
+/// Validate queries against the array length (used by the coordinator's
+/// admission check).
+pub fn validate_queries(n: usize, queries: &[Query]) -> Result<(), String> {
+    for (i, &(l, r)) in queries.iter().enumerate() {
+        if l > r || (r as usize) >= n {
+            return Err(format!("query {i} = ({l},{r}) invalid for n={n}"));
+        }
+    }
+    Ok(())
+}
+
+/// Reference scan used in tests (independent of any solver).
+pub fn naive_rmq(xs: &[f32], l: usize, r: usize) -> usize {
+    let mut best = l;
+    for k in l + 1..=r {
+        if xs[k] < xs[best] {
+            best = k;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn naive_prefers_leftmost() {
+        let xs = [3.0, 1.0, 2.0, 1.0];
+        assert_eq!(naive_rmq(&xs, 0, 3), 1);
+        assert_eq!(naive_rmq(&xs, 2, 3), 3);
+        assert_eq!(naive_rmq(&xs, 2, 2), 2);
+    }
+
+    #[test]
+    fn validate_queries_rejects_bad() {
+        assert!(validate_queries(4, &[(0, 3)]).is_ok());
+        assert!(validate_queries(4, &[(2, 1)]).is_err());
+        assert!(validate_queries(4, &[(0, 4)]).is_err());
+    }
+}

@@ -1,0 +1,473 @@
+//! RTXRMQ — the paper's contribution (§5): RMQ solved as ray/triangle
+//! closest-hit queries.
+//!
+//! Two modes, as in the paper:
+//! - [`RtxMode::Flat`]: one normalized triangle space (§5.2, Algorithms
+//!   1–3). Precision-limited to n ≤ 2^24.
+//! - [`RtxMode::Blocks`]: the block-matrix extension (§5.3, Algorithms
+//!   5–6): the array is split into BS-sized blocks laid out on a √nb grid
+//!   of cells, with a second geometry for the block-minimums array; a
+//!   query becomes 1–3 ray casts whose results are combined with a
+//!   leftmost-preferring min.
+//!
+//! Also implements the paper's future-work item (iii): **dynamic RMQ** —
+//! point updates re-shape the affected triangles and *refit* the BVH
+//! instead of rebuilding (`update_value`).
+
+use super::{Query, RmqSolver};
+use crate::bvh::traverse::{closest_hit, closest_hit_from, Counters, Hit, TraversalStack};
+use crate::bvh::Builder;
+use crate::geometry::blocks::BlockLayout;
+use crate::geometry::precision::{best_block_size, config_valid, OptixLimits};
+use crate::geometry::{flat, Ray};
+use crate::rtcore::Scene;
+use crate::util::pool;
+
+/// Geometry organisation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RtxMode {
+    /// Single normalized space (paper §5.2). Valid for n ≤ 2^24.
+    Flat,
+    /// Block-matrix of cells with a block-minimums geometry (§5.3).
+    Blocks { block_size: usize },
+}
+
+/// Build-time options.
+#[derive(Clone, Copy, Debug)]
+pub struct RtxOptions {
+    pub mode: RtxMode,
+    pub builder: Builder,
+    pub leaf_size: usize,
+}
+
+impl Default for RtxOptions {
+    fn default() -> Self {
+        RtxOptions { mode: RtxMode::Flat, builder: Builder::BinnedSah, leaf_size: 16 }
+    }
+}
+
+/// The RTXRMQ solver.
+pub struct RtxRmq {
+    xs: Vec<f32>,
+    theta: f32,
+    scene: Scene,
+    opts: RtxOptions,
+    /// Blocks mode only.
+    layout: Option<BlockLayout>,
+    /// Blocks mode: global argmin index per block.
+    block_argmin: Vec<u32>,
+}
+
+impl RtxRmq {
+    /// Build with explicit options.
+    pub fn with_options(xs: &[f32], opts: RtxOptions) -> RtxRmq {
+        let n = xs.len();
+        assert!(n > 0, "empty array");
+        let theta = flat::ray_origin_x(xs);
+        match opts.mode {
+            RtxMode::Flat => {
+                assert!(n <= 1 << 24, "flat mode is precision-limited to n <= 2^24 (paper §5.2)");
+                let tris = flat::build_scene(xs);
+                let scene = Scene::new(tris, opts.builder, opts.leaf_size);
+                RtxRmq { xs: xs.to_vec(), theta, scene, opts, layout: None, block_argmin: vec![] }
+            }
+            RtxMode::Blocks { block_size } => {
+                let limits = OptixLimits::default();
+                if let Err(e) = config_valid(n, block_size, &limits) {
+                    panic!("invalid block config n={n} bs={block_size}: {e:?} (paper Eq. 2 / OptiX limits)");
+                }
+                let layout = BlockLayout::new(n, block_size);
+                let (tris, _mins, argmins) = layout.build_scene(xs);
+                let scene = Scene::new(tris, opts.builder, opts.leaf_size);
+                RtxRmq {
+                    xs: xs.to_vec(),
+                    theta,
+                    scene,
+                    opts,
+                    layout: Some(layout),
+                    block_argmin: argmins,
+                }
+            }
+        }
+    }
+
+    /// Build with the auto-tuned block size (√n-balanced, Eq.2-valid),
+    /// falling back to flat for small inputs — the configuration the
+    /// paper's 2D heat map projects to (§6.3).
+    pub fn new_auto(xs: &[f32]) -> RtxRmq {
+        let n = xs.len();
+        let limits = OptixLimits::default();
+        // Flat is competitive only while the whole array fits one
+        // normalized space comfortably; the paper switches to blocks for
+        // large n. We use blocks whenever a valid config exists and
+        // n > 2^16 (small scenes gain nothing from the block stage).
+        if n > (1 << 16) {
+            if let Some(bs) = best_block_size(n, &limits) {
+                return Self::with_options(
+                    xs,
+                    RtxOptions { mode: RtxMode::Blocks { block_size: bs }, ..Default::default() },
+                );
+            }
+        }
+        Self::with_options(xs, RtxOptions::default())
+    }
+
+    pub fn mode(&self) -> RtxMode {
+        self.opts.mode
+    }
+
+    pub fn scene(&self) -> &Scene {
+        &self.scene
+    }
+
+    /// Primitive count of the built geometry.
+    pub fn prim_count(&self) -> usize {
+        self.scene.tris.len()
+    }
+
+    /// One query with explicit traversal state and counters (hot path;
+    /// the trait's `rmq` wraps this).
+    pub fn rmq_counted(&self, l: u32, r: u32, ts: &mut TraversalStack, c: &mut Counters) -> u32 {
+        match self.layout {
+            None => self.rmq_flat(l, r, ts, c),
+            Some(layout) => self.rmq_blocks(&layout, l, r, ts, c),
+        }
+    }
+
+    fn rmq_flat(&self, l: u32, r: u32, ts: &mut TraversalStack, c: &mut Counters) -> u32 {
+        let ray = flat::ray_for_query(l, r, self.xs.len(), self.theta);
+        let hit = closest_hit(&self.scene.bvh, &self.scene.tris, &ray, ts, c)
+            .expect("in-range query must hit");
+        hit.prim
+    }
+
+    /// Algorithm 6.
+    fn rmq_blocks(
+        &self,
+        layout: &BlockLayout,
+        l: u32,
+        r: u32,
+        ts: &mut TraversalStack,
+        c: &mut Counters,
+    ) -> u32 {
+        let (l, r) = (l as usize, r as usize);
+        let bs = layout.bs;
+        let (bl, br) = (l / bs, r / bs);
+        let to_index = |hit: Hit| -> u32 {
+            let prim = hit.prim as usize;
+            if prim >= layout.n {
+                // Block-min primitive: map back to the global argmin.
+                self.block_argmin[prim - layout.n]
+            } else {
+                prim as u32
+            }
+        };
+        // Case #1: query within one block — a single ray.
+        if bl == br {
+            let ray = layout.ray_for_block_query(bl, l % bs, r % bs, self.theta);
+            let hit = closest_hit(&self.scene.bvh, &self.scene.tris, &ray, ts, c)
+                .expect("block sub-query must hit");
+            return to_index(hit);
+        }
+        // Case #2: left partial, right partial, plus covered blocks —
+        // with the paper's payload-min optimisation: the running best
+        // hit is carried into the later rays so they prune against it.
+        // Sub-rays run left to right, and `closest_hit_from` only
+        // replaces the carried hit on strictly smaller t (equal-t keeps
+        // the earlier prim), preserving the leftmost-min convention:
+        // candidate index order is left block < interior < right block.
+        let left_ray = layout.ray_for_block_query(bl, l % bs, layout.block_len(bl) - 1, self.theta);
+        let mut best = closest_hit_from(&self.scene.bvh, &self.scene.tris, &left_ray, ts, c, None);
+        if br - bl > 1 {
+            let mid_ray = layout.ray_for_blockmin_query(bl + 1, br - 1, self.theta);
+            best = closest_hit_from(&self.scene.bvh, &self.scene.tris, &mid_ray, ts, c, best);
+        }
+        let right_ray = layout.ray_for_block_query(br, 0, r % bs, self.theta);
+        best = closest_hit_from(&self.scene.bvh, &self.scene.tris, &right_ray, ts, c, best);
+        to_index(best.expect("left partial block always hits"))
+    }
+
+    /// Batch execution with counters (the bench-harness entry point).
+    pub fn batch_counted(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
+        let mut out = vec![0u32; queries.len()];
+        let worker_counters: Vec<std::sync::Mutex<Counters>> =
+            (0..workers.max(1)).map(|_| std::sync::Mutex::new(Counters::default())).collect();
+        let idx = std::sync::atomic::AtomicUsize::new(0);
+        pool::for_each_chunk_mut(&mut out, workers, |off, slice| {
+            let my = idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let mut ts = TraversalStack::new();
+            let mut c = Counters::default();
+            for (k, o) in slice.iter_mut().enumerate() {
+                let (l, r) = queries[off + k];
+                *o = self.rmq_counted(l, r, &mut ts, &mut c);
+            }
+            worker_counters[my % worker_counters.len()].lock().unwrap().add(&c);
+        });
+        let mut total = Counters::default();
+        for m in &worker_counters {
+            total.add(&m.lock().unwrap());
+        }
+        (out, total)
+    }
+
+    /// Dynamic RMQ (paper §7.iii): update one value, re-shape the
+    /// affected triangles, and refit the BVH in place (no rebuild).
+    pub fn update_value(&mut self, i: usize, x: f32) {
+        self.update_values(&[(i, x)]);
+    }
+
+    /// Batched dynamic update: apply every point update, re-shape only
+    /// the touched triangles, then refit **once** — the paper's
+    /// "update/rebuild functions used in a balanced way" (§7.iii).
+    pub fn update_values(&mut self, updates: &[(usize, f32)]) {
+        for &(i, x) in updates {
+            self.apply_update(i, x);
+        }
+        self.scene.bvh.refit(&self.scene.tris);
+    }
+
+    fn apply_update(&mut self, i: usize, x: f32) {
+        assert!(i < self.xs.len());
+        self.xs[i] = x;
+        // theta must stay strictly below all values.
+        self.theta = self.theta.min(x - 1.0);
+        match self.layout {
+            None => {
+                let n = self.xs.len();
+                self.scene.tris[i] = flat::triangle_for(x, i, n);
+            }
+            Some(layout) => {
+                self.scene.tris[i] = layout.triangle_for_element(x, i);
+                // Recompute the block's min and its block-min triangle.
+                let b = i / layout.bs;
+                let start = b * layout.bs;
+                let end = start + layout.block_len(b);
+                let mut arg = start;
+                for k in start + 1..end {
+                    if self.xs[k] < self.xs[arg] {
+                        arg = k;
+                    }
+                }
+                self.block_argmin[b] = arg as u32;
+                let mut t = layout.triangle_for_blockmin(self.xs[arg], b);
+                t.prim = (layout.n + b) as u32;
+                self.scene.tris[layout.n + b] = t;
+            }
+        }
+    }
+
+    /// Values slice (the solver answers by value as well as index —
+    /// paper §6.7's point about RTXRMQ answering both).
+    pub fn value_of(&self, idx: u32) -> f32 {
+        self.xs[idx as usize]
+    }
+}
+
+impl RmqSolver for RtxRmq {
+    fn name(&self) -> &'static str {
+        "RTXRMQ"
+    }
+
+    fn rmq(&self, l: u32, r: u32) -> u32 {
+        let mut ts = TraversalStack::new();
+        let mut c = Counters::default();
+        self.rmq_counted(l, r, &mut ts, &mut c)
+    }
+
+    fn batch(&self, queries: &[Query], workers: usize) -> Vec<u32> {
+        self.batch_counted(queries, workers).0
+    }
+
+    fn memory_bytes(&self) -> usize {
+        // The acceleration structure + triangles + block tables (the
+        // input copy is not counted, matching Table 2's convention).
+        self.scene.memory_bytes() + self.block_argmin.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::naive_rmq;
+    use crate::rmq::sparse_table::SparseTable;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn paper_example_flat() {
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        let s = RtxRmq::with_options(&xs, RtxOptions::default());
+        assert_eq!(s.rmq(2, 6), 5);
+        assert_eq!(s.rmq(0, 6), 5);
+        assert_eq!(s.rmq(3, 3), 3);
+    }
+
+    #[test]
+    fn paper_example_blocks() {
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        let s = RtxRmq::with_options(
+            &xs,
+            RtxOptions { mode: RtxMode::Blocks { block_size: 3 }, ..Default::default() },
+        );
+        for l in 0..7u32 {
+            for r in l..7u32 {
+                assert_eq!(
+                    s.rmq(l, r) as usize,
+                    naive_rmq(&xs, l as usize, r as usize),
+                    "({l},{r})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn flat_matches_oracle() {
+        check("rtx flat vs oracle", 80, |rng| {
+            let xs = gen::f32_array(rng, 1..=1024);
+            let s = RtxRmq::with_options(&xs, RtxOptions::default());
+            let st = SparseTable::new(&xs);
+            for _ in 0..24 {
+                let (l, r) = gen::query(rng, xs.len());
+                let (got, want) = (s.rmq(l as u32, r as u32), st.rmq(l as u32, r as u32));
+                if got != want {
+                    return Err(format!("({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocks_match_oracle_various_bs() {
+        check("rtx blocks vs oracle", 60, |rng| {
+            let xs = gen::f32_array(rng, 2..=2048);
+            let n = xs.len();
+            let bs = 1usize << rng.range(0, 7);
+            let s = RtxRmq::with_options(
+                &xs,
+                RtxOptions { mode: RtxMode::Blocks { block_size: bs }, ..Default::default() },
+            );
+            let st = SparseTable::new(&xs);
+            for _ in 0..24 {
+                let (l, r) = gen::query(rng, n);
+                let (got, want) = (s.rmq(l as u32, r as u32), st.rmq(l as u32, r as u32));
+                if got != want {
+                    return Err(format!("n={n} bs={bs} ({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocks_ties_leftmost_across_subqueries() {
+        check("rtx blocks leftmost ties", 60, |rng| {
+            let xs = gen::dup_array(rng, 4..=512, 2);
+            let bs = 1usize << rng.range(1, 5);
+            let s = RtxRmq::with_options(
+                &xs,
+                RtxOptions { mode: RtxMode::Blocks { block_size: bs }, ..Default::default() },
+            );
+            for _ in 0..24 {
+                let (l, r) = gen::query(rng, xs.len());
+                let want = naive_rmq(&xs, l, r);
+                let got = s.rmq(l as u32, r as u32) as usize;
+                if got != want {
+                    return Err(format!("bs={bs} ({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_mode_picks_blocks_for_large_flat_for_small() {
+        let mut rng = crate::util::rng::Rng::new(50);
+        let small = rng.uniform_f32_vec(1 << 10);
+        assert_eq!(RtxRmq::new_auto(&small).mode(), RtxMode::Flat);
+        let large = rng.uniform_f32_vec((1 << 16) + 1);
+        match RtxRmq::new_auto(&large).mode() {
+            RtxMode::Blocks { block_size } => assert!(block_size.is_power_of_two()),
+            m => panic!("expected blocks, got {m:?}"),
+        }
+    }
+
+    #[test]
+    fn batch_and_counters() {
+        let mut rng = crate::util::rng::Rng::new(51);
+        let xs = rng.uniform_f32_vec(600);
+        let s = RtxRmq::with_options(
+            &xs,
+            RtxOptions { mode: RtxMode::Blocks { block_size: 32 }, ..Default::default() },
+        );
+        let st = SparseTable::new(&xs);
+        let queries: Vec<(u32, u32)> = (0..128)
+            .map(|_| {
+                let l = rng.range(0, 599) as u32;
+                (l, rng.range(l as usize, 599) as u32)
+            })
+            .collect();
+        let (got, counters) = s.batch_counted(&queries, 3);
+        assert_eq!(got, st.batch(&queries, 1));
+        // 1-3 rays per query.
+        assert!(counters.rays >= 128 && counters.rays <= 3 * 128, "rays = {}", counters.rays);
+        assert!(counters.nodes_visited > 0);
+    }
+
+    #[test]
+    fn dynamic_update_refit() {
+        // Paper future-work iii: point updates + refit keep answers exact.
+        check("dynamic updates", 30, |rng| {
+            let mut xs = gen::f32_array(rng, 8..=256);
+            let n = xs.len();
+            let bs = 1usize << rng.range(1, 4);
+            let mut s = RtxRmq::with_options(
+                &xs,
+                RtxOptions { mode: RtxMode::Blocks { block_size: bs }, ..Default::default() },
+            );
+            for _ in 0..8 {
+                let i = rng.range(0, n - 1);
+                let v = rng.f32();
+                xs[i] = v;
+                s.update_value(i, v);
+                let (l, r) = gen::query(rng, n);
+                let want = naive_rmq(&xs, l, r);
+                let got = s.rmq(l as u32, r as u32) as usize;
+                if got != want {
+                    return Err(format!("after update[{i}]={v}: ({l},{r}) got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dynamic_update_flat_mode() {
+        let mut xs = vec![0.5f32, 0.4, 0.3, 0.2, 0.9, 0.8];
+        let mut s = RtxRmq::with_options(&xs, RtxOptions::default());
+        assert_eq!(s.rmq(0, 5), 3);
+        xs[4] = 0.01;
+        s.update_value(4, 0.01);
+        assert_eq!(s.rmq(0, 5), 4);
+        assert_eq!(s.value_of(4), 0.01);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid block config")]
+    fn rejects_invalid_block_config() {
+        // Way past Eq. 2: huge block size with many blocks.
+        let xs = vec![0.0f32; 1 << 20];
+        let _ = RtxRmq::with_options(
+            &xs,
+            RtxOptions { mode: RtxMode::Blocks { block_size: 1 << 19 }, ..Default::default() },
+        );
+    }
+
+    #[test]
+    fn memory_reported() {
+        let xs = crate::util::rng::Rng::new(52).uniform_f32_vec(1 << 10);
+        let s = RtxRmq::new_auto(&xs);
+        // BVH + triangles dominate; must exceed raw input size (Table 2's
+        // point about RTXRMQ's memory cost).
+        assert!(s.memory_bytes() > (1 << 10) * 4);
+    }
+}

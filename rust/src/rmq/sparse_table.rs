@@ -1,0 +1,178 @@
+//! Sparse-table RMQ — the ⟨O(n log n) space, O(1) query⟩ classic. Serves
+//! as the repo-wide correctness oracle and as the "block minimums" lookup
+//! structure variant of the paper's §5.3 (the alternative the authors
+//! compared against a second acceleration structure).
+
+use super::{Query, RmqSolver};
+
+/// Sparse table over f32 values with leftmost-min tie-break.
+pub struct SparseTable {
+    xs: Vec<f32>,
+    /// levels[k][i] = leftmost argmin of xs[i .. i + 2^(k+1)) (level 0 is
+    /// window size 2; windows of size 1 are the identity and not stored).
+    levels: Vec<Vec<u32>>,
+}
+
+impl SparseTable {
+    pub fn new(xs: &[f32]) -> SparseTable {
+        assert!(!xs.is_empty(), "empty array");
+        let n = xs.len();
+        let max_k = if n <= 1 { 0 } else { usize::BITS as usize - 1 - (n.leading_zeros() as usize) };
+        let mut levels: Vec<Vec<u32>> = Vec::with_capacity(max_k);
+        for k in 1..=max_k {
+            let width = 1usize << k;
+            let half = width / 2;
+            let count = n + 1 - width;
+            let level = {
+                let prev = levels.last();
+                let mut level = Vec::with_capacity(count);
+                for i in 0..count {
+                    let a = match prev {
+                        None => i as u32,
+                        Some(p) => p[i],
+                    };
+                    let b = match prev {
+                        None => (i + half) as u32,
+                        Some(p) => p[i + half],
+                    };
+                    // Left block strictly precedes right block, so <=
+                    // keeps the leftmost min.
+                    level.push(if xs[a as usize] <= xs[b as usize] { a } else { b });
+                }
+                level
+            };
+            levels.push(level);
+        }
+        SparseTable { xs: xs.to_vec(), levels }
+    }
+
+    /// The underlying values (used by solvers that need them).
+    pub fn values(&self) -> &[f32] {
+        &self.xs
+    }
+
+    #[inline]
+    fn query(&self, l: usize, r: usize) -> u32 {
+        debug_assert!(l <= r && r < self.xs.len());
+        if l == r {
+            return l as u32;
+        }
+        let span = r - l + 1;
+        let k = usize::BITS as usize - 1 - span.leading_zeros() as usize; // floor(log2)
+        if k == 0 {
+            // span == 1 handled above; unreachable
+            return l as u32;
+        }
+        let level = &self.levels[k - 1];
+        let a = level[l];
+        let b = level[r + 1 - (1 << k)];
+        // Equal values: the leftmost global min lies in the left window if
+        // the min value occurs there at all, and `a` is then exactly it.
+        if self.xs[a as usize] <= self.xs[b as usize] {
+            a
+        } else {
+            b
+        }
+    }
+}
+
+impl RmqSolver for SparseTable {
+    fn name(&self) -> &'static str {
+        "SPARSE"
+    }
+
+    fn rmq(&self, l: u32, r: u32) -> u32 {
+        self.query(l as usize, r as usize)
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.levels.iter().map(|l| l.len() * 4).sum::<usize>()
+    }
+}
+
+/// Convenience: answer a batch with a fresh sparse table (tests).
+pub fn oracle_batch(xs: &[f32], queries: &[Query]) -> Vec<u32> {
+    let st = SparseTable::new(xs);
+    queries.iter().map(|&(l, r)| st.rmq(l, r)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::naive_rmq;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn paper_example() {
+        // §2: X = [9,2,7,8,4,1,3], RMQ(2,6) = 5
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        let st = SparseTable::new(&xs);
+        assert_eq!(st.rmq(2, 6), 5);
+        assert_eq!(st.rmq(0, 6), 5);
+        assert_eq!(st.rmq(0, 3), 1);
+        assert_eq!(st.rmq(3, 3), 3);
+    }
+
+    #[test]
+    fn exhaustive_small_n() {
+        // Every (l, r) on every array of length 1..=32 with duplicates.
+        let mut state = 7u64;
+        for n in 1..=32usize {
+            let xs: Vec<f32> = (0..n)
+                .map(|_| (crate::util::rng::splitmix64(&mut state) % 5) as f32)
+                .collect();
+            let st = SparseTable::new(&xs);
+            for l in 0..n {
+                for r in l..n {
+                    assert_eq!(
+                        st.rmq(l as u32, r as u32) as usize,
+                        naive_rmq(&xs, l, r),
+                        "n={n} l={l} r={r} xs={xs:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_arrays() {
+        check("sparse table matches naive", 150, |rng| {
+            let xs = gen::f32_array(rng, 1..=2048);
+            let st = SparseTable::new(&xs);
+            for _ in 0..32 {
+                let (l, r) = gen::query(rng, xs.len());
+                let got = st.rmq(l as u32, r as u32) as usize;
+                let want = naive_rmq(&xs, l, r);
+                if got != want {
+                    return Err(format!("n={} ({l},{r}): got {got} want {want}", xs.len()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_duplicate_heavy() {
+        check("sparse table leftmost ties", 100, |rng| {
+            let xs = gen::dup_array(rng, 1..=512, 3);
+            let st = SparseTable::new(&xs);
+            for _ in 0..16 {
+                let (l, r) = gen::query(rng, xs.len());
+                let got = st.rmq(l as u32, r as u32) as usize;
+                let want = naive_rmq(&xs, l, r);
+                if got != want {
+                    return Err(format!("({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memory_is_n_log_n_words() {
+        let st = SparseTable::new(&vec![0.0f32; 1024]);
+        // levels k=1..=10, level k has n+1-2^k entries * 4 bytes
+        let expect: usize = (1..=10).map(|k| (1024 + 1 - (1 << k)) * 4).sum();
+        assert_eq!(st.memory_bytes(), expect);
+    }
+}

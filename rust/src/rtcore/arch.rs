@@ -1,0 +1,204 @@
+//! GPU architecture profiles for the cost/energy models and the scaling
+//! experiments (Figs. 14–15). Every number here is public: the paper's
+//! Table 1 (RTX 6000 Ada), the NVIDIA Turing/Ada whitepapers it cites for
+//! the per-generation RT throughput factors (§3: Turing ≈ 10× over
+//! software, Ada ≈ 4× over Turing ⇒ ~40× total; Ampere sits at ~2× over
+//! Turing per NVIDIA's Ampere material), and published SM counts/TDPs for
+//! the Lovelace SKUs of Fig. 15.
+
+/// Static description of one GPU (or CPU) used by the models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ArchProfile {
+    pub name: &'static str,
+    /// Streaming multiprocessors (= RT cores; one per SM on RTX parts).
+    pub sm_count: u32,
+    /// Boost clock in GHz.
+    pub clock_ghz: f64,
+    /// Relative per-RT-core ray-tracing throughput, Turing = 1.0
+    /// (generation factor from the whitepapers).
+    pub rt_gen_factor: f64,
+    /// Thermal design power in watts.
+    pub tdp_w: f64,
+    /// Idle/base power draw in watts (models' floor).
+    pub idle_w: f64,
+    /// Memory bandwidth GB/s.
+    pub mem_bw_gbs: f64,
+    /// L2 cache in MiB (drives the LCA staircase of Fig. 12).
+    pub l2_mib: f64,
+    /// CUDA cores (for the non-RT approaches' compute model).
+    pub cuda_cores: u32,
+}
+
+/// TITAN RTX — Turing, 2018 (Fig. 14).
+pub const TURING_TITAN_RTX: ArchProfile = ArchProfile {
+    name: "TITAN RTX (Turing)",
+    sm_count: 72,
+    clock_ghz: 1.77,
+    rt_gen_factor: 1.0,
+    tdp_w: 280.0,
+    idle_w: 15.0,
+    mem_bw_gbs: 672.0,
+    l2_mib: 6.0,
+    cuda_cores: 4608,
+};
+
+/// RTX 3090 Ti — Ampere, 2022 (Fig. 14).
+pub const AMPERE_3090TI: ArchProfile = ArchProfile {
+    name: "RTX 3090 Ti (Ampere)",
+    sm_count: 84,
+    clock_ghz: 1.86,
+    rt_gen_factor: 2.0,
+    tdp_w: 450.0,
+    idle_w: 20.0,
+    mem_bw_gbs: 1008.0,
+    l2_mib: 6.0,
+    cuda_cores: 10752,
+};
+
+/// RTX 6000 Ada — Lovelace, 2022 (paper Table 1; the main test GPU).
+pub const LOVELACE_RTX6000ADA: ArchProfile = ArchProfile {
+    name: "RTX 6000 Ada (Lovelace)",
+    sm_count: 142,
+    clock_ghz: 2.5,
+    rt_gen_factor: 4.0,
+    tdp_w: 300.0,
+    idle_w: 20.0,
+    mem_bw_gbs: 960.0,
+    l2_mib: 96.0,
+    cuda_cores: 18176,
+};
+
+/// RTX 4070 Ti / 4080 / 4090 — the Fig. 15 SM-scaling set.
+pub const ADA_4070TI: ArchProfile = ArchProfile {
+    name: "RTX 4070 Ti",
+    sm_count: 60,
+    clock_ghz: 2.61,
+    rt_gen_factor: 4.0,
+    tdp_w: 285.0,
+    idle_w: 12.0,
+    mem_bw_gbs: 504.0,
+    l2_mib: 48.0,
+    cuda_cores: 7680,
+};
+
+pub const ADA_4080: ArchProfile = ArchProfile {
+    name: "RTX 4080",
+    sm_count: 76,
+    clock_ghz: 2.51,
+    rt_gen_factor: 4.0,
+    tdp_w: 320.0,
+    idle_w: 13.0,
+    mem_bw_gbs: 717.0,
+    l2_mib: 64.0,
+    cuda_cores: 9728,
+};
+
+pub const ADA_4090: ArchProfile = ArchProfile {
+    name: "RTX 4090",
+    sm_count: 128,
+    clock_ghz: 2.52,
+    rt_gen_factor: 4.0,
+    tdp_w: 450.0,
+    idle_w: 15.0,
+    mem_bw_gbs: 1008.0,
+    l2_mib: 72.0,
+    cuda_cores: 16384,
+};
+
+/// Hypothetical next generation, continuing the observed trend (Fig. 14's
+/// "projected" series): Ada-level SMs grown ~20%, RT factor doubled again.
+pub const NEXT_GEN_PROJECTED: ArchProfile = ArchProfile {
+    name: "Next-gen (projected)",
+    sm_count: 170,
+    clock_ghz: 2.7,
+    rt_gen_factor: 8.0,
+    tdp_w: 350.0,
+    idle_w: 20.0,
+    mem_bw_gbs: 1400.0,
+    l2_mib: 128.0,
+    cuda_cores: 21760,
+};
+
+/// The paper's CPU host: 2× AMD EPYC 9654 (192 cores, §6.2 Table 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CpuProfile {
+    pub name: &'static str,
+    pub cores: u32,
+    pub clock_ghz: f64,
+    pub tdp_w: f64,
+    pub idle_w: f64,
+}
+
+pub const EPYC_9654_X2: CpuProfile = CpuProfile {
+    name: "2x AMD EPYC 9654 (192 cores)",
+    cores: 192,
+    clock_ghz: 2.4,
+    tdp_w: 720.0,
+    idle_w: 120.0,
+};
+
+/// Architectures of the Fig. 14 generational sweep, oldest first.
+pub fn generations() -> [ArchProfile; 4] {
+    [TURING_TITAN_RTX, AMPERE_3090TI, LOVELACE_RTX6000ADA, NEXT_GEN_PROJECTED]
+}
+
+/// SKUs of the Fig. 15 SM sweep (all Lovelace), ascending SM count.
+pub fn lovelace_skus() -> [ArchProfile; 4] {
+    [ADA_4070TI, ADA_4080, ADA_4090, LOVELACE_RTX6000ADA]
+}
+
+/// Effective RT throughput proxy: RT cores × clock × generation factor.
+/// Used by the cost model as the denominator for traversal work.
+pub fn rt_throughput(p: &ArchProfile) -> f64 {
+    p.sm_count as f64 * p.clock_ghz * p.rt_gen_factor
+}
+
+/// Effective CUDA compute proxy (for LCA / exhaustive models).
+pub fn cuda_throughput(p: &ArchProfile) -> f64 {
+    p.cuda_cores as f64 * p.clock_ghz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_values() {
+        // Match the paper's Table 1 for the main GPU.
+        let p = LOVELACE_RTX6000ADA;
+        assert_eq!(p.sm_count, 142);
+        assert_eq!(p.tdp_w, 300.0);
+        assert_eq!(p.mem_bw_gbs, 960.0);
+        assert_eq!(p.cuda_cores, 18176);
+        assert_eq!(p.l2_mib, 96.0);
+    }
+
+    #[test]
+    fn rt_throughput_grows_across_generations() {
+        let gens = generations();
+        for w in gens.windows(2) {
+            assert!(
+                rt_throughput(&w[0]) < rt_throughput(&w[1]),
+                "{} !< {}",
+                w[0].name,
+                w[1].name
+            );
+        }
+    }
+
+    #[test]
+    fn lovelace_skus_ordered_by_sms() {
+        let skus = lovelace_skus();
+        for w in skus.windows(2) {
+            assert!(w[0].sm_count < w[1].sm_count);
+        }
+        assert_eq!(skus[0].sm_count, 60);
+        assert_eq!(skus[3].sm_count, 142);
+    }
+
+    #[test]
+    fn cpu_profile_matches_paper() {
+        assert_eq!(EPYC_9654_X2.cores, 192);
+        assert_eq!(EPYC_9654_X2.tdp_w, 720.0);
+    }
+}

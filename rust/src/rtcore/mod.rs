@@ -1,0 +1,132 @@
+//! RT-core execution simulator.
+//!
+//! The paper runs ray batches on real RT cores (Turing/Ampere/Lovelace);
+//! this environment has none, so per DESIGN.md §0 we *execute* the exact
+//! same geometry/ray workload on the software BVH and *measure the work*
+//! (node visits, AABB tests, triangle tests). [`ArchProfile`] carries the
+//! public per-architecture parameters (SM count, clock, per-generation RT
+//! throughput factors from the Turing/Ada whitepapers the paper cites in
+//! §3) that `crate::model` uses to convert measured work into modeled
+//! GPU time for Figs. 12–17.
+
+pub mod arch;
+
+use crate::bvh::traverse::{closest_hit, Counters, Hit, TraversalStack};
+use crate::bvh::Bvh;
+use crate::geometry::{Ray, Triangle};
+use crate::util::pool;
+
+pub use arch::ArchProfile;
+
+/// Result of launching a ray batch on the simulator.
+pub struct LaunchResult {
+    pub hits: Vec<Option<Hit>>,
+    pub counters: Counters,
+    /// Wall-clock of the software simulation (not GPU time — see
+    /// `crate::model` for modeled RT-core time).
+    pub sim_wall_ns: u64,
+}
+
+/// A scene ready for ray launches: triangles + BVH.
+pub struct Scene {
+    pub tris: Vec<Triangle>,
+    pub bvh: Bvh,
+}
+
+impl Scene {
+    pub fn new(tris: Vec<Triangle>, builder: crate::bvh::Builder, leaf_size: usize) -> Scene {
+        let bvh = crate::bvh::build::build(&tris, builder, leaf_size);
+        Scene { tris, bvh }
+    }
+
+    /// Acceleration-structure memory (our in-memory form).
+    pub fn memory_bytes(&self) -> usize {
+        self.bvh.memory_bytes() + self.tris.len() * std::mem::size_of::<Triangle>()
+    }
+}
+
+/// Launch a grid of rays (the OptiX `optixLaunch` analogue). Rays are
+/// distributed over `workers` threads, mirroring the paper's statement
+/// that "many rays (queries) can be processed in parallel for the same
+/// geometry built once" (§5.2). Counters are summed across workers.
+pub fn launch(scene: &Scene, rays: &[Ray], workers: usize) -> LaunchResult {
+    let t0 = std::time::Instant::now();
+    let nrays = rays.len();
+    let mut hits: Vec<Option<Hit>> = vec![None; nrays];
+    let worker_counters: Vec<std::sync::Mutex<Counters>> =
+        (0..workers.max(1)).map(|_| std::sync::Mutex::new(Counters::default())).collect();
+    let counter_idx = std::sync::atomic::AtomicUsize::new(0);
+    pool::for_each_chunk_mut(&mut hits, workers, |off, slice| {
+        let my = counter_idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut ts = TraversalStack::new();
+        let mut c = Counters::default();
+        for (k, out) in slice.iter_mut().enumerate() {
+            *out = closest_hit(&scene.bvh, &scene.tris, &rays[off + k], &mut ts, &mut c);
+        }
+        worker_counters[my % worker_counters.len()].lock().unwrap().add(&c);
+    });
+    let mut counters = Counters::default();
+    for m in &worker_counters {
+        counters.add(&m.lock().unwrap());
+    }
+    LaunchResult { hits, counters, sim_wall_ns: t0.elapsed().as_nanos() as u64 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::Builder;
+    use crate::geometry::flat::{build_scene, ray_for_query, ray_origin_x};
+    use crate::rmq::naive_rmq;
+
+    #[test]
+    fn launch_matches_sequential() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let xs = rng.uniform_f32_vec(512);
+        let scene = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
+        let theta = ray_origin_x(&xs);
+        let rays: Vec<Ray> = (0..200)
+            .map(|_| {
+                let l = rng.range(0, 511);
+                let r = rng.range(l, 511);
+                ray_for_query(l as u32, r as u32, 512, theta)
+            })
+            .collect();
+        let par = launch(&scene, &rays, 4);
+        let seq = launch(&scene, &rays, 1);
+        assert_eq!(par.hits, seq.hits);
+        // Counters are identical regardless of partitioning (pure work).
+        assert_eq!(par.counters, seq.counters);
+        assert_eq!(par.counters.rays, 200);
+    }
+
+    #[test]
+    fn launch_answers_are_rmq() {
+        let mut rng = crate::util::rng::Rng::new(32);
+        let xs = rng.uniform_f32_vec(300);
+        let scene = Scene::new(build_scene(&xs), Builder::Lbvh, 4);
+        let theta = ray_origin_x(&xs);
+        let queries: Vec<(usize, usize)> = (0..64)
+            .map(|_| {
+                let l = rng.range(0, 299);
+                (l, rng.range(l, 299))
+            })
+            .collect();
+        let rays: Vec<Ray> = queries
+            .iter()
+            .map(|&(l, r)| ray_for_query(l as u32, r as u32, 300, theta))
+            .collect();
+        let res = launch(&scene, &rays, 2);
+        for (q, hit) in queries.iter().zip(&res.hits) {
+            let h = hit.expect("hit");
+            assert_eq!(h.prim as usize, naive_rmq(&xs, q.0, q.1));
+        }
+    }
+
+    #[test]
+    fn scene_memory_accounts_tris_and_nodes() {
+        let xs = crate::util::rng::Rng::new(33).uniform_f32_vec(128);
+        let scene = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
+        assert!(scene.memory_bytes() > 128 * std::mem::size_of::<Triangle>());
+    }
+}

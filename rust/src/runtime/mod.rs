@@ -1,0 +1,273 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! `manifest.json`) produced once by `python/compile/aot.py` and executes
+//! them from the Rust hot path. **Python never runs here**: the HLO text
+//! is parsed and compiled by the XLA CPU client at startup, and every
+//! request is served from the cached executables.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What a variant computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VariantKind {
+    /// (xs, ls, rs) -> (mins, args) by brute force.
+    Exhaustive,
+    /// (xs, ls, rs) -> (mins, args) via the Algorithm-6 block graph.
+    Block,
+    /// (xs) -> (block mins, block args) preprocessing.
+    BlockMin,
+}
+
+/// One AOT-compiled computation, as described by the manifest.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub kind: VariantKind,
+    pub n: usize,
+    pub q: usize,
+    pub bs: usize,
+    pub file: PathBuf,
+}
+
+/// Parse `manifest.json`.
+pub fn parse_manifest(dir: &Path) -> Result<Vec<Variant>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+    let root = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let format = root.get("format").and_then(|f| f.as_str()).unwrap_or("");
+    if format != "hlo-text" {
+        bail!("unsupported artifact format {format:?}");
+    }
+    let mut out = Vec::new();
+    for v in root.get("variants").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+        let name = v.get("name").and_then(|s| s.as_str()).unwrap_or("").to_string();
+        let kind = match v.get("kind").and_then(|s| s.as_str()) {
+            Some("exhaustive") => VariantKind::Exhaustive,
+            Some("block") => VariantKind::Block,
+            Some("blockmin") => VariantKind::BlockMin,
+            other => bail!("variant {name}: unknown kind {other:?}"),
+        };
+        let n = v.get("n").and_then(|x| x.as_usize()).context("variant n")?;
+        let q = v.get("q").and_then(|x| x.as_usize()).unwrap_or(0);
+        let bs = v.get("bs").and_then(|x| x.as_usize()).unwrap_or(0);
+        let file = dir.join(v.get("file").and_then(|s| s.as_str()).context("variant file")?);
+        out.push(Variant { name, kind, n, q, bs, file });
+    }
+    Ok(out)
+}
+
+/// A variant compiled onto the PJRT client, ready to execute.
+pub struct Loaded {
+    pub spec: Variant,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The runtime: one PJRT CPU client + all compiled variants.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    loaded: Vec<Loaded>,
+}
+
+// SAFETY: the `xla` crate wraps PJRT handles in `Rc` + raw pointers,
+// making them `!Send`/`!Sync` even though the underlying PJRT C API is
+// documented thread-safe (and the TFRT CPU client serialises internally).
+// `Runtime` only clones the `Rc`s during single-threaded `load()`; after
+// that all access goes through `&self` (compile-once, execute-many), so
+// sharing across the coordinator's threads is sound.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+/// A pre-padded input array bound to one artifact variant.
+pub struct PaddedArray {
+    literal: xla::Literal,
+    variant: String,
+}
+
+// SAFETY: same argument as `Runtime` — the literal is created once and
+// only read (by reference) afterwards; the coordinator serialises use.
+unsafe impl Send for PaddedArray {}
+unsafe impl Sync for PaddedArray {}
+
+/// Result of a batched RMQ execution.
+#[derive(Clone, Debug)]
+pub struct RmqOutput {
+    pub mins: Vec<f32>,
+    pub args: Vec<i32>,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir`, compiling each HLO module once.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let variants = parse_manifest(dir)?;
+        if variants.is_empty() {
+            bail!("manifest has no variants");
+        }
+        let mut loaded = Vec::with_capacity(variants.len());
+        for spec in variants {
+            let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                .map_err(|e| anyhow!("parse {}: {e:?}", spec.file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            loaded.push(Loaded { spec, exe });
+        }
+        Ok(Runtime { client, loaded })
+    }
+
+    pub fn variants(&self) -> impl Iterator<Item = &Variant> {
+        self.loaded.iter().map(|l| &l.spec)
+    }
+
+    /// Pick the smallest RMQ variant (exhaustive or block) whose static
+    /// array size can hold `n` values.
+    pub fn select_rmq_variant(&self, n: usize) -> Option<&Variant> {
+        self.loaded
+            .iter()
+            .map(|l| &l.spec)
+            .filter(|v| matches!(v.kind, VariantKind::Exhaustive | VariantKind::Block) && v.n >= n)
+            .min_by_key(|v| v.n)
+    }
+
+    fn find(&self, name: &str) -> Result<&Loaded> {
+        self.loaded
+            .iter()
+            .find(|l| l.spec.name == name)
+            .ok_or_else(|| anyhow!("no artifact variant named {name}"))
+    }
+
+    /// Pre-pad an input array into a reusable device literal for the
+    /// named variant (§Perf L3.3: the array literal is built once per
+    /// (engine, array) epoch instead of once per chunk).
+    pub fn prepare_array(&self, name: &str, xs: &[f32]) -> Result<PaddedArray> {
+        let l = self.find(name)?;
+        let v = &l.spec;
+        if xs.len() > v.n {
+            bail!("array of {} exceeds variant {} (n = {})", xs.len(), name, v.n);
+        }
+        // Pad the array with +inf: padded positions can never win a min,
+        // and padded blocks' minima are +inf.
+        let mut padded = xs.to_vec();
+        padded.resize(v.n, f32::INFINITY);
+        Ok(PaddedArray { literal: xla::Literal::vec1(&padded), variant: v.name.clone() })
+    }
+
+    /// Execute a batched RMQ on the named variant. `xs` is padded with
+    /// +inf to the variant's static n; queries are padded with (0, 0)
+    /// to its static q and the padding answers dropped.
+    pub fn exec_rmq(&self, name: &str, xs: &[f32], queries: &[(u32, u32)]) -> Result<RmqOutput> {
+        let arr = self.prepare_array(name, xs)?;
+        self.exec_rmq_prepadded(&arr, queries)
+    }
+
+    /// Chunk execution against a pre-padded array literal.
+    pub fn exec_rmq_prepadded(
+        &self,
+        arr: &PaddedArray,
+        queries: &[(u32, u32)],
+    ) -> Result<RmqOutput> {
+        let name = arr.variant.as_str();
+        let l = self.find(name)?;
+        let v = &l.spec;
+        if !matches!(v.kind, VariantKind::Exhaustive | VariantKind::Block) {
+            bail!("variant {name} is not an rmq computation");
+        }
+        if queries.len() > v.q {
+            bail!("batch of {} exceeds variant {} (q = {})", queries.len(), name, v.q);
+        }
+        let mut ls: Vec<i32> = queries.iter().map(|&(l, _)| l as i32).collect();
+        let mut rs: Vec<i32> = queries.iter().map(|&(_, r)| r as i32).collect();
+        ls.resize(v.q, 0);
+        rs.resize(v.q, 0);
+
+        let l_lit = xla::Literal::vec1(&ls);
+        let r_lit = xla::Literal::vec1(&rs);
+        let result = l
+            .exe
+            .execute::<&xla::Literal>(&[&arr.literal, &l_lit, &r_lit])
+            .map_err(|e| anyhow!("execute {}: {e:?}", name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", name))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple {}: {e:?}", name))?;
+        if parts.len() != 2 {
+            bail!("variant {name}: expected 2 outputs, got {}", parts.len());
+        }
+        let mut mins = parts[0].to_vec::<f32>().map_err(|e| anyhow!("mins {e:?}"))?;
+        let mut args = parts[1].to_vec::<i32>().map_err(|e| anyhow!("args {e:?}"))?;
+        mins.truncate(queries.len());
+        args.truncate(queries.len());
+        Ok(RmqOutput { mins, args })
+    }
+
+    /// Execute a block-minimums preprocessing variant.
+    pub fn exec_blockmin(&self, name: &str, xs: &[f32]) -> Result<RmqOutput> {
+        let l = self.find(name)?;
+        let v = &l.spec;
+        if v.kind != VariantKind::BlockMin {
+            bail!("variant {name} is not a blockmin computation");
+        }
+        if xs.len() > v.n {
+            bail!("array of {} exceeds variant {} (n = {})", xs.len(), name, v.n);
+        }
+        let mut padded = xs.to_vec();
+        padded.resize(v.n, f32::INFINITY);
+        let x_lit = xla::Literal::vec1(&padded);
+        let result = l
+            .exe
+            .execute::<xla::Literal>(&[x_lit])
+            .map_err(|e| anyhow!("execute {}: {e:?}", name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", name))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("tuple {}: {e:?}", name))?;
+        let mins = parts[0].to_vec::<f32>().map_err(|e| anyhow!("mins {e:?}"))?;
+        let args = parts[1].to_vec::<i32>().map_err(|e| anyhow!("args {e:?}"))?;
+        Ok(RmqOutput { mins, args })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("rtxrmq-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","variants":[
+                {"name":"a","kind":"exhaustive","n":1024,"q":64,"block_q":64,"block_n":256,"file":"a.hlo.txt"},
+                {"name":"b","kind":"block","n":4096,"q":64,"bs":64,"file":"b.hlo.txt"},
+                {"name":"c","kind":"blockmin","n":4096,"bs":64,"file":"c.hlo.txt"}
+            ]}"#,
+        )
+        .unwrap();
+        let vs = parse_manifest(&dir).unwrap();
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs[0].kind, VariantKind::Exhaustive);
+        assert_eq!(vs[1].bs, 64);
+        assert_eq!(vs[2].kind, VariantKind::BlockMin);
+        assert_eq!(vs[2].q, 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_unknown_kind() {
+        let dir = std::env::temp_dir().join(format!("rtxrmq-manifest-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"format":"hlo-text","variants":[{"name":"x","kind":"wat","n":1,"file":"x"}]}"#,
+        )
+        .unwrap();
+        assert!(parse_manifest(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

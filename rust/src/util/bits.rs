@@ -1,0 +1,193 @@
+//! Bit-level utilities shared by the succinct RMQ structures (HRMQ's
+//! balanced-parentheses excess blocks, ±1 RMQ lookup tables) and the
+//! Morton-code LBVH builder.
+
+/// Plain bit vector with O(1) access and rank support (one absolute count
+/// per 64-bit word — simple, cache-friendly, 1.5n bits total with counts).
+#[derive(Clone, Debug)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+    /// rank1 up to the start of each word (built by `build_rank`).
+    rank: Vec<u32>,
+}
+
+impl BitVec {
+    pub fn with_len(len: usize) -> BitVec {
+        BitVec { words: vec![0; len.div_ceil(64)], len, rank: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if v {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Build the rank directory; must be called before [`rank1`].
+    pub fn build_rank(&mut self) {
+        let mut acc = 0u32;
+        self.rank = Vec::with_capacity(self.words.len() + 1);
+        for &w in &self.words {
+            self.rank.push(acc);
+            acc += w.count_ones();
+        }
+        self.rank.push(acc);
+    }
+
+    /// Number of 1-bits in `[0, i)`.
+    #[inline]
+    pub fn rank1(&self, i: usize) -> usize {
+        debug_assert!(i <= self.len);
+        debug_assert!(!self.rank.is_empty(), "build_rank not called");
+        let (w, b) = (i / 64, i % 64);
+        let partial = if b == 0 { 0 } else { (self.words[w] & ((1u64 << b) - 1)).count_ones() };
+        self.rank[w] as usize + partial as usize
+    }
+
+    /// Number of 0-bits in `[0, i)`.
+    #[inline]
+    pub fn rank0(&self, i: usize) -> usize {
+        i - self.rank1(i)
+    }
+
+    /// Heap size of the structure in bytes (Table 2 accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.words.len() * 8 + self.rank.len() * 4
+    }
+}
+
+/// Select the position of the `k`-th (0-based) set bit within a word.
+/// Portable broadword implementation.
+#[inline]
+pub fn select_in_word(mut word: u64, mut k: u32) -> u32 {
+    // Clear the k lowest set bits, then count trailing zeros.
+    for _ in 0..k {
+        word &= word - 1;
+    }
+    debug_assert!(word != 0, "select out of range");
+    k = word.trailing_zeros();
+    k
+}
+
+/// Canonical bit-spread: insert two zero bits between each of the low 21
+/// bits of `v`. Used by the Morton-code LBVH builder, mirroring GPU BVH
+/// construction (Karras-style).
+#[inline]
+pub fn part1by2_canonical(v: u32) -> u64 {
+    let mut x = (v as u64) & 0x1F_FFFF;
+    x = (x | (x << 32)) & 0x001F_0000_0000_FFFF;
+    x = (x | (x << 16)) & 0x001F_0000_FF00_00FF;
+    x = (x | (x << 8)) & 0x100F_00F0_0F00_F00F;
+    x = (x | (x << 4)) & 0x10C3_0C30_C30C_30C3;
+    x = (x | (x << 2)) & 0x1249_2492_4924_9249;
+    x
+}
+
+/// Morton code via the canonical spread.
+#[inline]
+pub fn morton3_canonical(x: u32, y: u32, z: u32) -> u64 {
+    part1by2_canonical(x) | (part1by2_canonical(y) << 1) | (part1by2_canonical(z) << 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitvec_set_get() {
+        let mut b = BitVec::with_len(130);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(129, true);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(63) && !b.get(128));
+        b.set(64, false);
+        assert!(!b.get(64));
+    }
+
+    #[test]
+    fn rank_matches_naive() {
+        let mut b = BitVec::with_len(1000);
+        let mut naive = vec![false; 1000];
+        let mut state = 12345u64;
+        for i in 0..1000 {
+            let v = super::super::rng::splitmix64(&mut state) & 1 == 1;
+            b.set(i, v);
+            naive[i] = v;
+        }
+        b.build_rank();
+        let mut acc = 0;
+        for i in 0..=1000 {
+            assert_eq!(b.rank1(i), acc, "at {i}");
+            assert_eq!(b.rank0(i), i - acc);
+            if i < 1000 && naive[i] {
+                acc += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn select_in_word_matches_scan() {
+        let w: u64 = 0b1011_0110_0100;
+        let set_positions: Vec<u32> =
+            (0..64).filter(|&i| (w >> i) & 1 == 1).collect();
+        for (k, &pos) in set_positions.iter().enumerate() {
+            assert_eq!(select_in_word(w, k as u32), pos);
+        }
+    }
+
+    #[test]
+    fn morton_interleaves() {
+        // x=0b1, y=0b0, z=0b0 -> bit0
+        assert_eq!(morton3_canonical(1, 0, 0), 0b001);
+        assert_eq!(morton3_canonical(0, 1, 0), 0b010);
+        assert_eq!(morton3_canonical(0, 0, 1), 0b100);
+        // x=0b11 -> bits 0 and 3
+        assert_eq!(morton3_canonical(3, 0, 0), 0b1001);
+        // Full 21-bit round trip: de-interleave by scanning.
+        let (x, y, z) = (0x155555, 0xAAAA, 0x1F0F3);
+        let m = morton3_canonical(x, y, z);
+        let (mut dx, mut dy, mut dz) = (0u32, 0u32, 0u32);
+        for i in 0..21 {
+            dx |= (((m >> (3 * i)) & 1) as u32) << i;
+            dy |= (((m >> (3 * i + 1)) & 1) as u32) << i;
+            dz |= (((m >> (3 * i + 2)) & 1) as u32) << i;
+        }
+        assert_eq!((dx, dy, dz), (x, y, z));
+    }
+
+    #[test]
+    fn morton_orders_nearby_points_together() {
+        // Points close in 3D should mostly be close in Morton order:
+        // specifically the code is monotone along each axis.
+        assert!(morton3_canonical(1, 1, 1) < morton3_canonical(2, 2, 2));
+        assert!(morton3_canonical(0, 0, 0) < morton3_canonical(1, 0, 0));
+    }
+
+    #[test]
+    fn bitvec_memory_accounting() {
+        let mut b = BitVec::with_len(1 << 16);
+        b.build_rank();
+        // 1024 words * 8B + 1025 rank entries * 4B
+        assert_eq!(b.memory_bytes(), 1024 * 8 + 1025 * 4);
+    }
+}

@@ -1,0 +1,246 @@
+//! Minimal clap-free command-line parsing (the offline environment has no
+//! `clap`). Supports `binary <subcommand> [--key value] [--flag]` with
+//! typed accessors, defaults, and `--help` text generation.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Parsed command line: a subcommand, `--key value` options, bare `--flag`
+/// switches and positional arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Error produced by typed accessors.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("option --{0}={1} is not a valid {2}")]
+    Parse(String, String, &'static str),
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (not including argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // `--key=value` form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // `--key value` form when the next token is not an option;
+                // otherwise a bare flag.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.opts.insert(name.to_string(), v);
+                    }
+                    _ => out.flags.push(name.to_string()),
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Raw string option.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    /// Required string option.
+    pub fn str_req(&self, key: &str) -> Result<String, CliError> {
+        self.opt(key)
+            .map(|s| s.to_string())
+            .ok_or_else(|| CliError::Missing(key.to_string()))
+    }
+
+    /// Typed option with default. Accepts `2^k` and `_`-separated digits
+    /// for integer types via [`parse_scaled`].
+    pub fn get_or<T: FromCliStr>(&self, key: &str, default: T) -> Result<T, CliError> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => {
+                T::from_cli_str(s).ok_or_else(|| CliError::Parse(key.into(), s.into(), T::NAME))
+            }
+        }
+    }
+
+    /// Bare `--flag` presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// List of values from a comma-separated option, e.g. `--ns 2^10,2^12`.
+    pub fn list_or<T: FromCliStr>(&self, key: &str, default: &[T]) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.opt(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|part| {
+                    T::from_cli_str(part.trim())
+                        .ok_or_else(|| CliError::Parse(key.into(), part.into(), T::NAME))
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Parse integers allowing `2^k` power notation and `_` digit separators —
+/// convenient for paper-scale sizes (`--n 2^26`).
+pub fn parse_scaled(s: &str) -> Option<u64> {
+    let s = s.replace('_', "");
+    if let Some(exp) = s.strip_prefix("2^") {
+        let e: u32 = exp.parse().ok()?;
+        return 1u64.checked_shl(e);
+    }
+    if let Some(mantissa) = s.strip_suffix(['M', 'm']) {
+        let f: f64 = mantissa.parse().ok()?;
+        return Some((f * 1e6) as u64);
+    }
+    if let Some(mantissa) = s.strip_suffix(['K', 'k']) {
+        let f: f64 = mantissa.parse().ok()?;
+        return Some((f * 1e3) as u64);
+    }
+    s.parse().ok()
+}
+
+/// Conversion trait for typed CLI accessors.
+pub trait FromCliStr: Sized {
+    const NAME: &'static str;
+    fn from_cli_str(s: &str) -> Option<Self>;
+}
+
+macro_rules! impl_from_cli_int {
+    ($($t:ty),*) => {$(
+        impl FromCliStr for $t {
+            const NAME: &'static str = stringify!($t);
+            fn from_cli_str(s: &str) -> Option<Self> {
+                parse_scaled(s).and_then(|v| <$t>::try_from(v).ok())
+            }
+        }
+    )*};
+}
+impl_from_cli_int!(u64, u32, usize, i64);
+
+impl FromCliStr for f64 {
+    const NAME: &'static str = "f64";
+    fn from_cli_str(s: &str) -> Option<Self> {
+        s.parse().ok()
+    }
+}
+
+impl FromCliStr for String {
+    const NAME: &'static str = "string";
+    fn from_cli_str(s: &str) -> Option<Self> {
+        Some(s.to_string())
+    }
+}
+
+/// Help-text builder so every subcommand prints consistent usage.
+pub struct Help {
+    name: &'static str,
+    about: &'static str,
+    entries: Vec<(String, String)>,
+}
+
+impl Help {
+    pub fn new(name: &'static str, about: &'static str) -> Help {
+        Help { name, about, entries: Vec::new() }
+    }
+
+    pub fn opt(mut self, key: &str, desc: &str) -> Help {
+        self.entries.push((format!("--{key}"), desc.to_string()));
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let width = self.entries.iter().map(|(k, _)| k.len()).max().unwrap_or(0);
+        for (k, d) in &self.entries {
+            let _ = writeln!(s, "  {k:<width$}  {d}");
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["bench", "--n", "1024", "--dist=small", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert_eq!(a.get_or("n", 0usize).unwrap(), 1024);
+        assert_eq!(a.str_or("dist", "large"), "small");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn power_notation_and_suffixes() {
+        assert_eq!(parse_scaled("2^20"), Some(1 << 20));
+        assert_eq!(parse_scaled("10M"), Some(10_000_000));
+        assert_eq!(parse_scaled("64k"), Some(64_000));
+        assert_eq!(parse_scaled("1_000_000"), Some(1_000_000));
+        assert_eq!(parse_scaled("nope"), None);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.get_or("n", 0usize).is_err());
+        assert!(a.str_req("missing").is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = parse(&["x", "--ns", "2^10,2^12,100"]);
+        assert_eq!(a.list_or::<u64>("ns", &[]).unwrap(), vec![1024, 4096, 100]);
+        let b = parse(&["x"]);
+        assert_eq!(b.list_or::<u64>("ns", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse(&["run", "file1", "file2", "--k", "v"]);
+        assert_eq!(a.positional, vec!["file1", "file2"]);
+    }
+
+    #[test]
+    fn help_renders_all_entries() {
+        let h = Help::new("bench", "run benches").opt("n", "array size").opt("q", "queries");
+        let text = h.render();
+        assert!(text.contains("--n") && text.contains("--q") && text.contains("run benches"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny CSV writer used by the bench harness to emit the per-figure data
+//! series (one CSV per paper figure/table, see DESIGN.md §4).
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// CSV writer with a fixed header; panics if a row has the wrong arity
+/// (bench drivers are internal callers, so this is a programmer error).
+pub struct CsvWriter {
+    out: Box<dyn Write>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Write to a file, creating parent directories.
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> std::io::Result<CsvWriter> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let f = BufWriter::new(File::create(path)?);
+        Self::from_writer(Box::new(f), header)
+    }
+
+    /// Write to an arbitrary sink (tests use a Vec<u8>).
+    pub fn from_writer(mut out: Box<dyn Write>, header: &[&str]) -> std::io::Result<CsvWriter> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Write one row of already-formatted fields.
+    pub fn row(&mut self, fields: &[String]) -> std::io::Result<()> {
+        assert_eq!(fields.len(), self.columns, "csv row arity mismatch");
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.out, "{}", escaped.join(","))
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+fn escape(field: &str) -> String {
+    if field.contains([',', '"', '\n']) {
+        format!("\"{}\"", field.replace('"', "\"\""))
+    } else {
+        field.to_string()
+    }
+}
+
+/// Format a float for CSV (trim noise, keep precision for plotting).
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1e6 || x.abs() < 1e-3 {
+        format!("{x:.6e}")
+    } else {
+        format!("{x:.6}")
+    }
+}
+
+/// Macro-free convenience: build a row from heterogeneous displayables.
+#[macro_export]
+macro_rules! csv_row {
+    ($w:expr, $($v:expr),+ $(,)?) => {
+        $w.row(&[$(format!("{}", $v)),+])
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    /// A Write sink backed by shared memory so the test can inspect output.
+    #[derive(Clone)]
+    struct Sink(Arc<Mutex<Vec<u8>>>);
+    impl Write for Sink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn header_and_rows() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut w =
+            CsvWriter::from_writer(Box::new(Sink(buf.clone())), &["n", "ns_per_rmq"]).unwrap();
+        csv_row!(w, 1024, fnum(5.25)).unwrap();
+        csv_row!(w, 2048, fnum(6.5)).unwrap();
+        w.flush().unwrap();
+        let s = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        assert_eq!(s, "n,ns_per_rmq\n1024,5.250000\n2048,6.500000\n");
+    }
+
+    #[test]
+    fn escaping() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a,b"), "\"a,b\"");
+        assert_eq!(escape("q\"q"), "\"q\"\"q\"");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let mut w = CsvWriter::from_writer(Box::new(Sink(buf)), &["a", "b"]).unwrap();
+        w.row(&["only-one".into()]).unwrap();
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(5.25), "5.250000");
+        assert!(fnum(1e9).contains('e'));
+        assert!(fnum(1e-6).contains('e'));
+    }
+}

@@ -1,0 +1,14 @@
+//! Substrate utilities built from scratch for the offline environment
+//! (no rand / clap / rayon / serde / criterion / proptest — see DESIGN.md
+//! §0): PRNG + distributions, CLI parsing, scoped thread pool, statistics,
+//! JSON/CSV, bit utilities, timing, and a mini property-test harness.
+
+pub mod bits;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod timer;

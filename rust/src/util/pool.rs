@@ -1,0 +1,172 @@
+//! Scoped fork-join parallelism built on `crossbeam_utils::thread::scope`
+//! (the offline environment has no `rayon`). Batch engines use
+//! [`par_map_chunks`] / [`for_each_chunk_mut`] to parallelise over query
+//! batches the way the paper parallelises HRMQ with OpenMP (§6.1).
+
+use crossbeam_utils::thread;
+
+/// Number of workers to use: `RTXRMQ_THREADS` env override, else the
+/// machine's available parallelism.
+pub fn default_workers() -> usize {
+    if let Ok(v) = std::env::var("RTXRMQ_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Split `len` items into at most `workers` contiguous chunk ranges of
+/// near-equal size.
+pub fn chunk_ranges(len: usize, workers: usize) -> Vec<std::ops::Range<usize>> {
+    if len == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, len);
+    let base = len / workers;
+    let extra = len % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let size = base + usize::from(w < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// Apply `f` to each index chunk of `out` in parallel, giving each worker a
+/// disjoint `&mut [T]` slice plus the global offset of its chunk.
+///
+/// With one worker (this CI host) it degenerates to a plain loop with no
+/// thread spawn, so wall-clock baselines remain clean.
+pub fn for_each_chunk_mut<T: Send, F>(out: &mut [T], workers: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync + Send,
+{
+    let ranges = chunk_ranges(out.len(), workers);
+    if ranges.len() <= 1 {
+        if !out.is_empty() {
+            f(0, out);
+        }
+        return;
+    }
+    // Carve disjoint mutable slices.
+    let mut slices: Vec<(usize, &mut [T])> = Vec::with_capacity(ranges.len());
+    let mut rest = out;
+    let mut offset = 0;
+    for r in &ranges {
+        let (head, tail) = rest.split_at_mut(r.len());
+        slices.push((offset, head));
+        offset += r.len();
+        rest = tail;
+    }
+    let f = &f;
+    thread::scope(|s| {
+        for (off, slice) in slices {
+            s.spawn(move |_| f(off, slice));
+        }
+    })
+    .expect("worker panicked");
+}
+
+/// Parallel map over chunks: each worker maps its chunk of `items` with
+/// `f(global_index, &item)`; results are returned in input order.
+pub fn par_map_chunks<T: Sync, R: Send + Default + Clone, F>(
+    items: &[T],
+    workers: usize,
+    f: F,
+) -> Vec<R>
+where
+    F: Fn(usize, &T) -> R + Sync + Send,
+{
+    let mut out = vec![R::default(); items.len()];
+    for_each_chunk_mut(&mut out, workers, |off, slice| {
+        for (k, o) in slice.iter_mut().enumerate() {
+            *o = f(off + k, &items[off + k]);
+        }
+    });
+    out
+}
+
+/// Run `workers` copies of a worker function that pull whole pre-computed
+/// chunk ranges; used when per-worker state (e.g. a traversal stack) must
+/// be reused across items.
+pub fn run_chunked<F>(len: usize, workers: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync + Send,
+{
+    let ranges = chunk_ranges(len, workers);
+    if ranges.len() <= 1 {
+        if let Some(r) = ranges.into_iter().next() {
+            f(r);
+        }
+        return;
+    }
+    let f = &f;
+    thread::scope(|s| {
+        for r in ranges {
+            s.spawn(move |_| f(r));
+        }
+    })
+    .expect("worker panicked");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunks_cover_exactly() {
+        for len in [0usize, 1, 7, 100, 101] {
+            for w in [1usize, 2, 3, 8, 200] {
+                let ranges = chunk_ranges(len, w);
+                let total: usize = ranges.iter().map(|r| r.len()).sum();
+                assert_eq!(total, len, "len={len} w={w}");
+                let mut expect = 0;
+                for r in &ranges {
+                    assert_eq!(r.start, expect);
+                    assert!(!r.is_empty());
+                    expect = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_mut_writes_all() {
+        let mut v = vec![0usize; 1000];
+        for_each_chunk_mut(&mut v, 4, |off, slice| {
+            for (k, x) in slice.iter_mut().enumerate() {
+                *x = off + k;
+            }
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i));
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = par_map_chunks(&items, 3, |i, &x| x * 2 + i as u64);
+        for (i, &o) in out.iter().enumerate() {
+            assert_eq!(o, items[i] * 2 + i as u64);
+        }
+    }
+
+    #[test]
+    fn run_chunked_visits_every_index_once() {
+        let counter = AtomicUsize::new(0);
+        run_chunked(1003, 5, |r| {
+            counter.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1003);
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let mut v = vec![0u8; 16];
+        for_each_chunk_mut(&mut v, 1, |_, s| s.fill(7));
+        assert!(v.iter().all(|&x| x == 7));
+    }
+}

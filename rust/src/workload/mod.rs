@@ -1,0 +1,149 @@
+//! Workload generation — the paper's input and query distributions (§6,
+//! §6.4).
+//!
+//! Inputs: uniformly random f32 values in [0, 1). Queries: the start is
+//! uniform; the range *length* follows one of three distributions:
+//!
+//! - **Large**: uniform in [1, n] (mean span ≈ n/2).
+//! - **Medium**: LogNormal(µ = ln n^0.6, σ = 0.3) — mean ≈ 2^15 at n = 2^26.
+//! - **Small**: LogNormal(µ = ln n^0.3, σ = 0.3) — mean ≈ 2^8 at n = 2^26.
+
+use crate::rmq::Query;
+use crate::util::rng::Rng;
+
+/// The paper's three (l, r) range regimes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RangeDist {
+    Large,
+    Medium,
+    Small,
+}
+
+impl RangeDist {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RangeDist::Large => "large",
+            RangeDist::Medium => "medium",
+            RangeDist::Small => "small",
+        }
+    }
+
+    pub fn all() -> [RangeDist; 3] {
+        [RangeDist::Large, RangeDist::Medium, RangeDist::Small]
+    }
+
+    pub fn parse(s: &str) -> Option<RangeDist> {
+        match s.to_ascii_lowercase().as_str() {
+            "large" | "l" => Some(RangeDist::Large),
+            "medium" | "m" => Some(RangeDist::Medium),
+            "small" | "s" => Some(RangeDist::Small),
+            _ => None,
+        }
+    }
+
+    /// Draw one range length for an array of size n.
+    pub fn sample_len(&self, n: usize, rng: &mut Rng) -> usize {
+        let nf = n as f64;
+        let len = match self {
+            RangeDist::Large => rng.range_u64(1, n as u64) as f64,
+            RangeDist::Medium => rng.lognormal(nf.powf(0.6).ln(), 0.3),
+            RangeDist::Small => rng.lognormal(nf.powf(0.3).ln(), 0.3),
+        };
+        (len as usize).clamp(1, n)
+    }
+
+    /// Expected mean length (used by the router's classifier tests).
+    pub fn mean_len(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        match self {
+            RangeDist::Large => nf / 2.0,
+            // LogNormal mean = exp(µ + σ²/2)
+            RangeDist::Medium => (nf.powf(0.6).ln() + 0.045).exp(),
+            RangeDist::Small => (nf.powf(0.3).ln() + 0.045).exp(),
+        }
+    }
+}
+
+/// The paper's input arrays: uniform f32 in [0, 1).
+pub fn gen_array(n: usize, seed: u64) -> Vec<f32> {
+    Rng::new(seed).uniform_f32_vec(n)
+}
+
+/// A batch of queries under a range distribution.
+pub fn gen_queries(n: usize, count: usize, dist: RangeDist, rng: &mut Rng) -> Vec<Query> {
+    (0..count)
+        .map(|_| {
+            let len = dist.sample_len(n, rng);
+            let l = rng.range(0, n - len.min(n)) as u32;
+            let r = (l as usize + len - 1).min(n - 1) as u32;
+            (l, r)
+        })
+        .collect()
+}
+
+/// Mean range length of a batch (the router's classification feature).
+pub fn mean_range_len(queries: &[Query]) -> f64 {
+    if queries.is_empty() {
+        return 0.0;
+    }
+    queries.iter().map(|&(l, r)| (r - l + 1) as f64).sum::<f64>() / queries.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queries_are_valid() {
+        let mut rng = Rng::new(1);
+        for dist in RangeDist::all() {
+            for n in [1usize, 2, 100, 1 << 16] {
+                let qs = gen_queries(n, 200, dist, &mut rng);
+                assert!(crate::rmq::validate_queries(n, &qs).is_ok(), "{dist:?} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn distribution_means_are_ordered() {
+        let mut rng = Rng::new(2);
+        let n = 1 << 20;
+        let mean = |d: RangeDist, rng: &mut Rng| {
+            let qs = gen_queries(n, 4000, d, rng);
+            mean_range_len(&qs)
+        };
+        let large = mean(RangeDist::Large, &mut rng);
+        let medium = mean(RangeDist::Medium, &mut rng);
+        let small = mean(RangeDist::Small, &mut rng);
+        assert!(large > medium && medium > small, "{large} {medium} {small}");
+        // Paper reference points: at n = 2^26 medium ~ 2^15, small ~ 2^8.
+        // At n = 2^20: medium ~ n^0.6 = 2^12, small ~ n^0.3 = 2^6.
+        assert!((10.0..15.0).contains(&medium.log2()), "medium 2^{}", medium.log2());
+        assert!((4.5..8.0).contains(&small.log2()), "small 2^{}", small.log2());
+        assert!(large > n as f64 / 3.0);
+    }
+
+    #[test]
+    fn paper_reference_medium_at_2_26() {
+        // §6.4: "for n = 2^26 the mean sits at ~2^15".
+        let m = RangeDist::Medium.mean_len(1 << 26);
+        assert!((14.0..16.5).contains(&m.log2()), "2^{}", m.log2());
+        let s = RangeDist::Small.mean_len(1 << 26);
+        assert!((7.0..9.0).contains(&s.log2()), "2^{}", s.log2());
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(RangeDist::parse("small"), Some(RangeDist::Small));
+        assert_eq!(RangeDist::parse("M"), Some(RangeDist::Medium));
+        assert_eq!(RangeDist::parse("huge"), None);
+    }
+
+    #[test]
+    fn array_is_deterministic_unit_interval() {
+        let a = gen_array(1000, 7);
+        let b = gen_array(1000, 7);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+}

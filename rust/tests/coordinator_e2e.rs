@@ -1,0 +1,139 @@
+//! Full-stack integration: coordinator + router + batcher + all engines
+//! (including the PJRT/XLA engine over real artifacts) against the
+//! sparse-table oracle, under mixed concurrent load.
+
+use rtxrmq::coordinator::batcher::BatcherCfg;
+use rtxrmq::coordinator::router::Policy;
+use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::rmq::sparse_table::SparseTable;
+use rtxrmq::rmq::RmqSolver;
+use rtxrmq::runtime::Runtime;
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_array, gen_queries, RangeDist};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn artifacts() -> Arc<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Arc::new(Runtime::load(&dir).expect("run `make artifacts`"))
+}
+
+#[test]
+fn coordinator_with_xla_engine_serves_all_distributions() {
+    let n = 3500; // deliberately not a power of two, below artifact n
+    let xs = gen_array(n, 11);
+    let st = SparseTable::new(&xs);
+    let c = Coordinator::start(
+        &xs,
+        Some(artifacts()),
+        CoordinatorCfg { policy: Policy::ModeledCost, ..Default::default() },
+    );
+    let mut rng = Rng::new(12);
+    for dist in RangeDist::all() {
+        let qs = gen_queries(n, 100, dist, &mut rng);
+        let resp = c.query(qs.clone()).unwrap();
+        for (i, &(l, r)) in qs.iter().enumerate() {
+            assert_eq!(resp.answers[i], st.rmq(l, r), "{dist:?} ({l},{r}) via {}", resp.engine);
+        }
+    }
+    c.shutdown();
+}
+
+#[test]
+fn fixed_xla_policy_exercises_pjrt_path() {
+    let n = 4096;
+    let xs = gen_array(n, 13);
+    let st = SparseTable::new(&xs);
+    let c = Coordinator::start(
+        &xs,
+        Some(artifacts()),
+        CoordinatorCfg {
+            policy: Policy::Fixed(rtxrmq::coordinator::engine::EngineKind::Xla),
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(14);
+    let qs = gen_queries(n, 300, RangeDist::Medium, &mut rng); // > one artifact chunk
+    let resp = c.query(qs.clone()).unwrap();
+    assert_eq!(resp.engine, "XLA");
+    for (i, &(l, r)) in qs.iter().enumerate() {
+        assert_eq!(resp.answers[i], st.rmq(l, r), "({l},{r})");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn batching_under_concurrency_is_lossless() {
+    let n = 1 << 12;
+    let xs = gen_array(n, 15);
+    let st = SparseTable::new(&xs);
+    let c = Arc::new(Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::ModeledCost,
+            batcher: BatcherCfg {
+                max_batch_queries: 512,
+                max_wait: std::time::Duration::from_millis(3),
+                queue_cap: 64,
+            },
+            engine_workers: 2,
+        },
+    ));
+    let st = Arc::new(st);
+    let mut handles = Vec::new();
+    for t in 0..6u64 {
+        let c = c.clone();
+        let st = st.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(50 + t);
+            for _ in 0..20 {
+                let count = rng.range(1, 40);
+                let qs = gen_queries(n, count, RangeDist::Small, &mut rng);
+                let resp = c.query(qs.clone()).unwrap();
+                assert_eq!(resp.answers.len(), qs.len());
+                for (i, &(l, r)) in qs.iter().enumerate() {
+                    assert_eq!(resp.answers[i], st.rmq(l, r));
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.requests, 120);
+    // Batching must have fused at least some requests.
+    let batches: u64 = rtxrmq::coordinator::engine::EngineKind::all()
+        .iter()
+        .filter_map(|&k| m.engine(k))
+        .map(|e| e.batches)
+        .sum();
+    assert!(batches <= 120, "fused batches ({batches}) must not exceed requests");
+}
+
+#[test]
+fn dynamic_rmq_stays_consistent_under_serving() {
+    // Future-work (iii) end to end: updates interleaved with queries on
+    // the RTX engine directly (the coordinator's engines are immutable;
+    // dynamic mode is a solver-level feature).
+    let mut xs = gen_array(2048, 16);
+    let mut rtx = rtxrmq::rmq::rtx::RtxRmq::with_options(
+        &xs,
+        rtxrmq::rmq::rtx::RtxOptions {
+            mode: rtxrmq::rmq::rtx::RtxMode::Blocks { block_size: 64 },
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(17);
+    for round in 0..50 {
+        let i = rng.range(0, 2047);
+        let v = rng.f32();
+        xs[i] = v;
+        rtx.update_value(i, v);
+        let st = SparseTable::new(&xs);
+        let l = rng.range(0, 2047);
+        let r = rng.range(l, 2047);
+        assert_eq!(rtx.rmq(l as u32, r as u32), st.rmq(l as u32, r as u32), "round {round}");
+    }
+}

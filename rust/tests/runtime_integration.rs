@@ -1,0 +1,144 @@
+//! Cross-language integration: execute the AOT artifacts (lowered from
+//! the L2 JAX graphs calling L1 Pallas kernels) through the PJRT runtime
+//! and check the answers against the Rust sparse-table oracle.
+//!
+//! Requires `make artifacts` to have run (the Makefile's `test` target
+//! guarantees this).
+
+use rtxrmq::rmq::sparse_table::SparseTable;
+use rtxrmq::rmq::RmqSolver;
+use rtxrmq::runtime::{Runtime, VariantKind};
+use rtxrmq::util::rng::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Runtime {
+    Runtime::load(&artifacts_dir()).expect("run `make artifacts` before cargo test")
+}
+
+fn queries(rng: &mut Rng, n: usize, count: usize) -> Vec<(u32, u32)> {
+    (0..count)
+        .map(|_| {
+            let l = rng.range(0, n - 1);
+            let r = rng.range(l, n - 1);
+            (l as u32, r as u32)
+        })
+        .collect()
+}
+
+#[test]
+fn manifest_lists_expected_kinds() {
+    let rt = runtime();
+    let kinds: Vec<VariantKind> = rt.variants().map(|v| v.kind).collect();
+    assert!(kinds.contains(&VariantKind::Exhaustive));
+    assert!(kinds.contains(&VariantKind::Block));
+}
+
+#[test]
+fn exhaustive_artifact_matches_oracle() {
+    let rt = runtime();
+    let v = rt
+        .variants()
+        .find(|v| v.kind == VariantKind::Exhaustive)
+        .expect("exhaustive variant")
+        .clone();
+    let mut rng = Rng::new(0xA11CE);
+    let n = v.n; // exact fit
+    let xs = rng.uniform_f32_vec(n);
+    let qs = queries(&mut rng, n, v.q);
+    let out = rt.exec_rmq(&v.name, &xs, &qs).unwrap();
+    let st = SparseTable::new(&xs);
+    for (i, &(l, r)) in qs.iter().enumerate() {
+        let want = st.rmq(l, r);
+        assert_eq!(out.args[i] as u32, want, "query {i} = ({l},{r})");
+        assert_eq!(out.mins[i], xs[want as usize]);
+    }
+}
+
+#[test]
+fn block_artifact_matches_oracle_with_padding() {
+    let rt = runtime();
+    let v = rt
+        .variants()
+        .find(|v| v.kind == VariantKind::Block)
+        .expect("block variant")
+        .clone();
+    let mut rng = Rng::new(0xB0B);
+    // Deliberately smaller than the variant's static n: exercises +inf
+    // padding of both the array and the query batch.
+    let n = v.n - v.bs / 2 - 3;
+    let xs = rng.uniform_f32_vec(n);
+    let qs = queries(&mut rng, n, v.q / 2 + 1);
+    let out = rt.exec_rmq(&v.name, &xs, &qs).unwrap();
+    assert_eq!(out.args.len(), qs.len());
+    let st = SparseTable::new(&xs);
+    for (i, &(l, r)) in qs.iter().enumerate() {
+        let want = st.rmq(l, r);
+        assert_eq!(out.args[i] as u32, want, "query {i} = ({l},{r}) n={n}");
+    }
+}
+
+#[test]
+fn block_artifact_handles_duplicates_leftmost() {
+    let rt = runtime();
+    let v = rt.variants().find(|v| v.kind == VariantKind::Block).unwrap().clone();
+    let mut rng = Rng::new(0xD0D);
+    let n = v.n;
+    // Few distinct values -> heavy ties; kernel must stay leftmost.
+    let xs: Vec<f32> = (0..n).map(|_| rng.below(3) as f32).collect();
+    let qs = queries(&mut rng, n, v.q);
+    let out = rt.exec_rmq(&v.name, &xs, &qs).unwrap();
+    let st = SparseTable::new(&xs);
+    for (i, &(l, r)) in qs.iter().enumerate() {
+        assert_eq!(out.args[i] as u32, st.rmq(l, r), "query {i} = ({l},{r})");
+    }
+}
+
+#[test]
+fn blockmin_artifact_matches_scan() {
+    let rt = runtime();
+    let Some(v) = rt.variants().find(|v| v.kind == VariantKind::BlockMin).cloned() else {
+        // quick artifact sets may omit it
+        return;
+    };
+    let mut rng = Rng::new(0xE0E);
+    let xs = rng.uniform_f32_vec(v.n);
+    let out = rt.exec_blockmin(&v.name, &xs).unwrap();
+    let nb = v.n / v.bs;
+    assert_eq!(out.mins.len(), nb);
+    for b in 0..nb {
+        let block = &xs[b * v.bs..(b + 1) * v.bs];
+        let mut arg = 0usize;
+        for (k, &x) in block.iter().enumerate() {
+            if x < block[arg] {
+                arg = k;
+            }
+        }
+        assert_eq!(out.mins[b], block[arg], "block {b}");
+        assert_eq!(out.args[b] as usize, b * v.bs + arg, "block {b}");
+    }
+}
+
+#[test]
+fn oversize_inputs_are_rejected() {
+    let rt = runtime();
+    let v = rt.variants().find(|v| v.kind == VariantKind::Exhaustive).unwrap().clone();
+    let xs = vec![0.0f32; v.n + 1];
+    assert!(rt.exec_rmq(&v.name, &xs, &[(0, 0)]).is_err());
+    let xs = vec![0.0f32; 8];
+    let too_many = vec![(0u32, 1u32); v.q + 1];
+    assert!(rt.exec_rmq(&v.name, &xs, &too_many).is_err());
+}
+
+#[test]
+fn select_variant_prefers_smallest_fit() {
+    let rt = runtime();
+    let v = rt.select_rmq_variant(100).expect("some variant fits");
+    assert!(v.n >= 100);
+    let all_fit: Vec<usize> =
+        rt.variants().filter(|x| x.q > 0 && x.n >= 100).map(|x| x.n).collect();
+    assert_eq!(v.n, *all_fit.iter().min().unwrap());
+}
