@@ -40,7 +40,12 @@ fn main() {
     for builder in [Builder::BinnedSah, Builder::Lbvh] {
         let rtx = RtxRmq::with_options(
             &xs,
-            RtxOptions { mode: RtxMode::Blocks { block_size: bs }, builder, leaf_size: 4 },
+            RtxOptions {
+                mode: RtxMode::Blocks { block_size: bs },
+                builder,
+                leaf_size: 4,
+                ..Default::default()
+            },
         );
         let (_, c) = rtx.batch_counted(&queries, cfg.workers);
         let work = model.work_per_query(&c, queries.len() as u64);
@@ -65,7 +70,7 @@ fn main() {
         let nb = n.div_ceil(bs);
         let st = SparseTable::new(&xs); // stand-in for correct interior answers
         let mut c_lut = rtxrmq::bvh::traverse::Counters::default();
-        let mut ts = rtxrmq::bvh::traverse::TraversalStack::new();
+        let mut ts = rtxrmq::rmq::rtx::RtxScratch::new();
         for &(l, r) in &queries {
             let (bl, br) = (l as usize / bs, r as usize / bs);
             if bl == br {

@@ -10,6 +10,7 @@
 //! the saturation term, which the models carry explicitly (Fig. 13).
 
 pub mod runner;
+pub mod smoke;
 
 use crate::util::cli::Args;
 use std::path::PathBuf;

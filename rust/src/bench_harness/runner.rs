@@ -84,11 +84,12 @@ impl Suite {
         let work = self.rt_model.work_per_query(&c, queries.len() as u64);
         // Scale the sample's counters to the modeled batch (per-query
         // work is batch-independent).
+        let scale = batch as f64 / queries.len() as f64;
         let scaled = Counters {
-            nodes_visited: (c.nodes_visited as f64 / queries.len() as f64 * batch as f64) as u64,
-            aabb_tests: 0,
-            tri_tests: (c.tri_tests as f64 / queries.len() as f64 * batch as f64) as u64,
-            rays: (c.rays as f64 / queries.len() as f64 * batch as f64) as u64,
+            nodes_visited: (c.nodes_visited as f64 * scale) as u64,
+            aabb_tests: (c.aabb_tests as f64 * scale) as u64,
+            tri_tests: (c.tri_tests as f64 * scale) as u64,
+            rays: (c.rays as f64 * scale) as u64,
         };
         (self.rt_model.ns_per_query(&scaled, batch, gpu), work)
     }

@@ -1,0 +1,218 @@
+//! Smoke-mode perf grid: wall-clock ns/query plus traversal counters for
+//! **both acceleration layouts** over a small n × batch grid, written to
+//! `BENCH_rmq.json` so successive PRs have a perf trajectory to compare
+//! against (the acceptance point is n = 2^20, batch = 2^16, uniform
+//! queries).
+//!
+//! Unlike the figure benches (which model GPU time), this mode records
+//! the *local* wall clock of the software traversal — exactly the
+//! quantity the wide-SoA layout is meant to improve — and cross-checks
+//! that both layouts return identical answers on every grid point.
+
+use crate::bvh::traverse::Counters;
+use crate::bvh::AccelLayout;
+use crate::geometry::precision::{best_block_size, OptixLimits};
+use crate::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
+use crate::rmq::Query;
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::workload::gen_array;
+use std::path::Path;
+
+/// Grid configuration.
+#[derive(Clone, Debug)]
+pub struct SmokeCfg {
+    pub ns: Vec<usize>,
+    pub batches: Vec<usize>,
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for SmokeCfg {
+    fn default() -> Self {
+        SmokeCfg {
+            ns: vec![1 << 16, 1 << 18, 1 << 20],
+            batches: vec![1 << 12, 1 << 16],
+            workers: crate::util::pool::default_workers(),
+            seed: 0xBE9C,
+        }
+    }
+}
+
+/// One measured grid point.
+#[derive(Clone, Debug)]
+pub struct SmokePoint {
+    pub layout: AccelLayout,
+    pub n: usize,
+    pub batch: usize,
+    pub ns_per_query: f64,
+    pub counters: Counters,
+}
+
+/// Uniform queries: l uniform over [0, n), r uniform over [l, n).
+fn uniform_queries(n: usize, count: usize, rng: &mut Rng) -> Vec<Query> {
+    (0..count)
+        .map(|_| {
+            let l = rng.range(0, n - 1);
+            let r = rng.range(l, n - 1);
+            (l as u32, r as u32)
+        })
+        .collect()
+}
+
+/// Run the grid. Panics if the two layouts ever disagree on an answer
+/// (a smoke result over wrong answers would be meaningless).
+pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
+    let mut points = Vec::new();
+    for &n in &cfg.ns {
+        let xs = gen_array(n, cfg.seed);
+        let mode = if n > (1 << 16) {
+            match best_block_size(n, &OptixLimits::default()) {
+                Some(bs) => RtxMode::Blocks { block_size: bs },
+                None => RtxMode::Flat,
+            }
+        } else {
+            RtxMode::Flat
+        };
+        let solvers: Vec<(AccelLayout, RtxRmq)> = AccelLayout::all()
+            .into_iter()
+            .map(|layout| {
+                let opts = RtxOptions { mode, layout, ..Default::default() };
+                (layout, RtxRmq::with_options(&xs, opts))
+            })
+            .collect();
+        for &batch in &cfg.batches {
+            let mut rng = Rng::new(cfg.seed ^ (n as u64) ^ ((batch as u64) << 32));
+            let queries = uniform_queries(n, batch, &mut rng);
+            let mut reference: Option<Vec<u32>> = None;
+            for (layout, solver) in &solvers {
+                // Warm the structures (page-in, branch predictors) off
+                // the clock, then time one full batch.
+                let warm = queries.len().min(256);
+                std::hint::black_box(solver.batch_counted(&queries[..warm], cfg.workers));
+                let t0 = std::time::Instant::now();
+                let (answers, counters) = solver.batch_counted(&queries, cfg.workers);
+                let wall_ns = t0.elapsed().as_nanos() as f64;
+                match &reference {
+                    None => reference = Some(answers),
+                    Some(want) => assert_eq!(
+                        want, &answers,
+                        "layouts disagree at n={n} batch={batch}"
+                    ),
+                }
+                points.push(SmokePoint {
+                    layout: *layout,
+                    n,
+                    batch,
+                    ns_per_query: wall_ns / batch as f64,
+                    counters,
+                });
+            }
+        }
+    }
+    points
+}
+
+/// Speedup summary rows (wide vs binary) for each (n, batch) pair.
+pub fn speedups(points: &[SmokePoint]) -> Vec<(usize, usize, f64, f64, f64)> {
+    let mut out = Vec::new();
+    for p in points.iter().filter(|p| p.layout == AccelLayout::Binary) {
+        if let Some(w) = points
+            .iter()
+            .find(|w| w.layout == AccelLayout::Wide && w.n == p.n && w.batch == p.batch)
+        {
+            out.push((p.n, p.batch, p.ns_per_query, w.ns_per_query, p.ns_per_query / w.ns_per_query));
+        }
+    }
+    out
+}
+
+/// Serialize the grid (per-point counters + speedup summary) to JSON.
+pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
+    let point_rows: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("engine", Json::from("RTXRMQ")),
+                ("layout", Json::from(p.layout.name())),
+                ("n", Json::from(p.n)),
+                ("batch", Json::from(p.batch)),
+                ("ns_per_query", Json::from(p.ns_per_query)),
+                ("nodes_visited", Json::from(p.counters.nodes_visited)),
+                ("aabb_tests", Json::from(p.counters.aabb_tests)),
+                ("tri_tests", Json::from(p.counters.tri_tests)),
+                ("rays", Json::from(p.counters.rays)),
+            ])
+        })
+        .collect();
+    let speedup_rows: Vec<Json> = speedups(points)
+        .into_iter()
+        .map(|(n, batch, binary_ns, wide_ns, speedup)| {
+            obj(vec![
+                ("n", Json::from(n)),
+                ("batch", Json::from(batch)),
+                ("binary_ns_per_query", Json::from(binary_ns)),
+                ("wide_ns_per_query", Json::from(wide_ns)),
+                ("speedup_wide_vs_binary", Json::from(speedup)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", Json::from("rmq_smoke")),
+        ("engine", Json::from("RTXRMQ")),
+        ("seed", Json::from(cfg.seed)),
+        ("workers", Json::from(cfg.workers)),
+        ("points", Json::Arr(point_rows)),
+        ("speedups", Json::Arr(speedup_rows)),
+    ])
+}
+
+/// Write the JSON report (creating parent directories).
+pub fn write_json(path: &Path, json: &Json) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, json.to_string_compact() + "\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_grid_runs_and_serializes() {
+        let cfg = SmokeCfg { ns: vec![512], batches: vec![128], workers: 2, seed: 7 };
+        let points = run_smoke(&cfg);
+        // Two layouts × one n × one batch.
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.ns_per_query > 0.0));
+        assert!(points.iter().all(|p| p.counters.rays >= 128));
+        let sp = speedups(&points);
+        assert_eq!(sp.len(), 1);
+        let json = to_json(&cfg, &points);
+        let dir = std::env::temp_dir().join(format!("rtxrmq-smoke-{}", std::process::id()));
+        let path = dir.join("BENCH_rmq.json");
+        write_json(&path, &json).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let back = Json::parse(text.trim()).unwrap();
+        assert_eq!(back.get("bench").and_then(|b| b.as_str()), Some("rmq_smoke"));
+        let pts = back.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert_eq!(pts.len(), 2);
+        for p in pts {
+            assert!(p.get("ns_per_query").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert!(p.get("nodes_visited").and_then(|v| v.as_u64()).is_some());
+            assert!(p.get("aabb_tests").and_then(|v| v.as_u64()).is_some());
+            assert!(p.get("tri_tests").and_then(|v| v.as_u64()).is_some());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn uniform_queries_are_valid() {
+        let mut rng = Rng::new(3);
+        let qs = uniform_queries(1000, 500, &mut rng);
+        assert!(crate::rmq::validate_queries(1000, &qs).is_ok());
+    }
+}

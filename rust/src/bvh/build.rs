@@ -3,7 +3,11 @@
 //! family). Both produce the same flat [`Node`] layout, so traversal and
 //! the cost model are builder-agnostic — the Fig-ablation bench compares
 //! their traversal work on identical workloads.
+//!
+//! [`collapse_to_wide`] then folds either binary tree into the 4-wide
+//! SoA hot-path layout ([`crate::bvh::wide::WideBvh`]).
 
+use super::wide::{WideBvh, WideNode, WidePrim};
 use super::{Aabb, Builder, Bvh, Node};
 use crate::geometry::Triangle;
 use crate::util::bits::morton3_canonical;
@@ -149,6 +153,99 @@ fn build_sah(tris: &[Triangle], leaf_size: usize) -> Bvh {
         stack.push((li, start, mid));
     }
     Bvh { nodes, prim_order: order, builder: Builder::BinnedSah, leaf_size }
+}
+
+// ----------------------------------------------------- BVH2 → BVH4 --
+
+/// Expand a binary node into up to 4 subtree roots for one wide node:
+/// start from the node's two children and repeatedly replace the
+/// largest-surface-area internal candidate with its two children until
+/// four slots are filled or only leaves remain. A leaf root collapses to
+/// a single-lane node.
+fn expand_children(bvh: &Bvh, ni: u32) -> ([u32; 4], usize) {
+    let node = bvh.nodes[ni as usize];
+    if node.is_leaf() {
+        return ([ni, 0, 0, 0], 1);
+    }
+    let mut targets = [node.left, node.right, 0, 0];
+    let mut len = 2usize;
+    while len < 4 {
+        let mut pick: Option<usize> = None;
+        let mut best_area = f32::NEG_INFINITY;
+        for (i, &t) in targets.iter().enumerate().take(len) {
+            let n = &bvh.nodes[t as usize];
+            if !n.is_leaf() {
+                let a = n.aabb.surface_area();
+                if a > best_area {
+                    best_area = a;
+                    pick = Some(i);
+                }
+            }
+        }
+        match pick {
+            None => break,
+            Some(i) => {
+                let n = bvh.nodes[targets[i] as usize];
+                targets[i] = n.left;
+                targets[len] = n.right;
+                len += 1;
+            }
+        }
+    }
+    (targets, len)
+}
+
+/// Collapse a built binary BVH into the 4-wide SoA layout
+/// ([`crate::bvh::AccelLayout::Wide`]): every wide node covers up to four
+/// binary subtrees, with per-lane (y, z) intervals and `xmin` laid out
+/// for straight-line +X interval tests, and leaf lanes pointing at
+/// contiguous runs of compact [`WidePrim`] records. Children are emitted
+/// in DFS preorder so lane indices always point forward (refit relies on
+/// this). Works for both builders; the traversal result is hit-identical
+/// to the binary tree's.
+pub fn collapse_to_wide(bvh: &Bvh, tris: &[Triangle]) -> WideBvh {
+    assert!(!bvh.nodes.is_empty(), "empty bvh");
+    assert!(bvh.leaf_size <= u8::MAX as usize, "wide layout packs leaf counts in u8");
+    let mut nodes: Vec<WideNode> = Vec::with_capacity(bvh.nodes.len() / 2 + 1);
+    let mut prims: Vec<WidePrim> = Vec::with_capacity(bvh.prim_order.len());
+    nodes.push(WideNode::empty());
+    let (targets, tlen) = expand_children(bvh, 0);
+    let mut work: Vec<(usize, [u32; 4], usize)> = vec![(0, targets, tlen)];
+    while let Some((wi, targets, tlen)) = work.pop() {
+        for (k, &target) in targets.iter().enumerate().take(tlen) {
+            let b = bvh.nodes[target as usize];
+            {
+                let n = &mut nodes[wi];
+                n.ymin[k] = b.aabb.lo[1];
+                n.ymax[k] = b.aabb.hi[1];
+                n.zmin[k] = b.aabb.lo[2];
+                n.zmax[k] = b.aabb.hi[2];
+                n.xmin[k] = b.aabb.lo[0];
+            }
+            if b.is_leaf() {
+                let first = prims.len() as u32;
+                for j in b.first..b.first + b.count {
+                    let ti = bvh.prim_order[j as usize] as usize;
+                    let tri = &tris[ti];
+                    // Refit resolves records back through `prim`, which
+                    // both geometry modes keep equal to the triangle's
+                    // index in the scene array.
+                    debug_assert_eq!(tri.prim as usize, ti);
+                    prims.push(WidePrim::from_triangle(tri));
+                }
+                nodes[wi].child[k] = first;
+                nodes[wi].count[k] = b.count as u8;
+            } else {
+                let ci = nodes.len();
+                nodes.push(WideNode::empty());
+                nodes[wi].child[k] = ci as u32;
+                let (ct, cl) = expand_children(bvh, target);
+                work.push((ci, ct, cl));
+            }
+        }
+    }
+    debug_assert_eq!(prims.len(), bvh.prim_order.len());
+    WideBvh { nodes, prims, leaf_size: bvh.leaf_size }
 }
 
 /// In-place stable-ish partition; returns count of elements satisfying

@@ -5,11 +5,75 @@
 //! counters** (node visits / triangle tests — the quantities the cost
 //! model converts to RT-core time), and refit for the dynamic-RMQ
 //! future-work feature (§7.iii).
+//!
+//! # BVH layouts
+//!
+//! Two acceleration layouts sit behind [`AccelLayout`]:
+//!
+//! - **Binary (AoS)** — the [`Node`] array built directly by
+//!   [`build::build`]: one AABB plus child/leaf indices per node,
+//!   children tested one at a time by [`traverse::closest_hit`]. This is
+//!   the correctness oracle and the layout the cost model was calibrated
+//!   on; refit ([`Bvh::refit`]) supports dynamic RMQ.
+//! - **Wide (4-wide SoA)** — [`wide::WideBvh`], produced by collapsing a
+//!   built binary tree ([`build::collapse_to_wide`]). Each node holds
+//!   four child lanes as per-component arrays
+//!   (`ymin[4]/ymax[4]/zmin[4]/zmax[4]/xmin[4]` + packed child/leaf
+//!   metadata), exploiting the **+X specialization**: every query ray
+//!   travels along (1, 0, 0) from below the scene, so a box test is two
+//!   interval checks on (y, z) plus the entry distance `xmin − θ`, and
+//!   `xmax` can be dropped entirely. Leaves are compact
+//!   [`wide::WidePrim`] records scanned cache-linearly. Hits (prim id
+//!   and t, including leftmost tie-breaks and Algorithm-6 carried-hit
+//!   sub-rays) are identical between layouts; only the work *counters*
+//!   differ.
+//!
+//! **Counter semantics across layouts** (consumed by
+//! `crate::model::rtcost`): `nodes_visited` counts node pops in either
+//! layout — a wide pop replaces roughly three binary pops; `aabb_tests`
+//! counts per-child box tests — 1 for the binary root test plus 2 per
+//! binary internal node, exactly 4 per wide node (all lanes are tested
+//! branchlessly, empty lanes included, as wide hardware would);
+//! `tri_tests` and `rays` mean the same thing in both layouts. The cost
+//! model weighs both `nodes_visited` and `aabb_tests`, which is what
+//! makes modeled times comparable across layouts.
 
 pub mod build;
 pub mod traverse;
+pub mod wide;
 
 use crate::geometry::Triangle;
+
+/// Which acceleration-structure layout the query path traverses.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AccelLayout {
+    /// Binary AoS tree (correctness oracle / cost-model reference).
+    Binary,
+    /// 4-wide SoA tree specialized for +X point rays (hot-path default).
+    #[default]
+    Wide,
+}
+
+impl AccelLayout {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AccelLayout::Binary => "binary",
+            AccelLayout::Wide => "wide",
+        }
+    }
+
+    pub fn all() -> [AccelLayout; 2] {
+        [AccelLayout::Binary, AccelLayout::Wide]
+    }
+
+    pub fn parse(s: &str) -> Option<AccelLayout> {
+        match s.to_ascii_lowercase().as_str() {
+            "binary" | "bvh2" => Some(AccelLayout::Binary),
+            "wide" | "bvh4" | "soa" => Some(AccelLayout::Wide),
+            _ => None,
+        }
+    }
+}
 
 /// Axis-aligned bounding box.
 #[derive(Clone, Copy, Debug, PartialEq)]

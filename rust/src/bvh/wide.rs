@@ -1,0 +1,574 @@
+//! 4-wide structure-of-arrays BVH specialized for the paper's +X point
+//! rays — the hot-path acceleration layout (`AccelLayout::Wide`).
+//!
+//! Rationale (paper §5.2 attributes RTXRMQ's cost to "bounding box
+//! intersections between the ray and the internal nodes"): for a ray
+//! `(θ, y, z) + t·(1, 0, 0)` an AABB slab test degenerates to two
+//! interval checks on (y, z) plus an entry distance `xmin − θ`. A wide
+//! node stores those per-lane quantities as small fixed arrays
+//! (`ymin[4] / ymax[4] / zmin[4] / zmax[4] / xmin[4]`), so all four
+//! child tests run as straight-line, auto-vectorizable compares with no
+//! pointer chasing — the software analogue of how RT hardware amortizes
+//! box tests across wide, shallow trees (RT-HDIST et al.).
+//!
+//! Leaves are compact [`WidePrim`] records (`x_plane, y_lo, y_hi, z_lo,
+//! z_hi, prim` — 24 bytes, cache-linear) instead of full `Triangle`
+//! dereferences through a permutation array.
+//!
+//! The binary layout ([`super::Bvh`]) remains the correctness oracle and
+//! the cost-model reference; [`crate::bvh::build::collapse_to_wide`]
+//! folds a built binary tree into this layout, so both builders (SAH and
+//! LBVH) feed it. Hits are bit-identical between layouts (property-tested
+//! in `tests/layout_equivalence.rs`), including leftmost tie-breaks and
+//! the Algorithm-6 carried-hit sub-rays.
+
+use super::traverse::{Counters, Hit};
+use crate::geometry::{Ray, Triangle};
+
+/// Sentinel for an unused child lane.
+pub const INVALID_LANE: u32 = u32::MAX;
+
+/// One 4-wide node. Per-lane arrays hold the child AABB projections the
+/// +X specialization needs; `child[k]` is either an index into
+/// [`WideBvh::nodes`] (when `count[k] == 0`) or the first index of a
+/// contiguous run of `count[k]` records in [`WideBvh::prims`]
+/// (when `count[k] > 0`). Unused lanes have `child[k] == INVALID_LANE`
+/// and inverted bounds so every interval test fails.
+#[derive(Clone, Copy, Debug)]
+pub struct WideNode {
+    pub ymin: [f32; 4],
+    pub ymax: [f32; 4],
+    pub zmin: [f32; 4],
+    pub zmax: [f32; 4],
+    /// Lower x bound of the lane — `xmin − origin.x` is the ray entry
+    /// distance (clamped to 0). The +X specialization drops `xmax`: for
+    /// valid query rays θ lies strictly below every value plane, so no
+    /// subtree is ever entirely behind the origin; prims behind the
+    /// origin are rejected per-record by the `t < 0` test.
+    pub xmin: [f32; 4],
+    pub child: [u32; 4],
+    pub count: [u8; 4],
+}
+
+impl WideNode {
+    pub fn empty() -> WideNode {
+        WideNode {
+            ymin: [f32::INFINITY; 4],
+            ymax: [f32::NEG_INFINITY; 4],
+            zmin: [f32::INFINITY; 4],
+            zmax: [f32::NEG_INFINITY; 4],
+            xmin: [f32::INFINITY; 4],
+            child: [INVALID_LANE; 4],
+            count: [0; 4],
+        }
+    }
+}
+
+/// Compact per-leaf primitive record: the value plane, the open (y, z)
+/// footprint rectangle, and the primitive id to report. For every valid
+/// query origin the footprint test is exactly
+/// `y_lo < y < y_hi && z_lo < z < z_hi` (see the §Perf L3.1 note in
+/// `bvh::traverse` — the hypotenuse never cuts a query space).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WidePrim {
+    pub x_plane: f32,
+    pub y_lo: f32,
+    pub y_hi: f32,
+    pub z_lo: f32,
+    pub z_hi: f32,
+    pub prim: u32,
+}
+
+impl WidePrim {
+    /// Extract the record from a scene triangle (vertex layout per
+    /// `geometry::flat` / `geometry::blocks`: v0 = right-angle corner
+    /// (l, r), v1 = top, v2 = left).
+    #[inline]
+    pub fn from_triangle(tri: &Triangle) -> WidePrim {
+        WidePrim {
+            x_plane: tri.x_plane(),
+            y_lo: tri.v2[1],
+            y_hi: tri.v0[1],
+            z_lo: tri.v0[2],
+            z_hi: tri.v1[2],
+            prim: tri.prim,
+        }
+    }
+}
+
+/// The wide acceleration structure.
+pub struct WideBvh {
+    pub nodes: Vec<WideNode>,
+    pub prims: Vec<WidePrim>,
+    /// Max leaf size inherited from the collapsed binary tree.
+    pub leaf_size: usize,
+}
+
+/// Reusable wide-traversal stack (allocation-free hot loop — one per
+/// worker). BVH4 depth is roughly half the binary depth, so the stack
+/// stays small.
+pub struct WideStack {
+    stack: Vec<(u32, f32)>,
+}
+
+impl Default for WideStack {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl WideStack {
+    pub fn new() -> WideStack {
+        WideStack { stack: Vec::with_capacity(64) }
+    }
+}
+
+/// Cast one +X ray through the wide BVH (closest hit, leftmost-min tie
+/// break — identical semantics to `traverse::closest_hit`).
+pub fn closest_hit_wide(
+    wb: &WideBvh,
+    ray: &Ray,
+    ts: &mut WideStack,
+    counters: &mut Counters,
+) -> Option<Hit> {
+    closest_hit_wide_from(wb, ray, ts, counters, None)
+}
+
+/// The payload-min variant (paper §5.3): seed the traversal with the
+/// best hit of previous sub-rays of the same Algorithm-6 query. Matches
+/// `traverse::closest_hit_from` hit-for-hit: a carried hit always wins
+/// equal-t ties; new hits within one cast prefer the smallest prim id.
+pub fn closest_hit_wide_from(
+    wb: &WideBvh,
+    ray: &Ray,
+    ts: &mut WideStack,
+    counters: &mut Counters,
+    init_best: Option<Hit>,
+) -> Option<Hit> {
+    counters.rays += 1;
+    let [ox, oy, oz] = ray.origin;
+    let (mut best_t, mut best_prim, mut have) = match init_best {
+        Some(h) => (h.t, h.prim, true),
+        None => (f32::INFINITY, u32::MAX, false),
+    };
+    let mut carried = init_best.is_some();
+    ts.stack.clear();
+    ts.stack.push((0, 0.0));
+    while let Some((ni, entry)) = ts.stack.pop() {
+        // Prune: nothing under this node can beat the current hit
+        // (strictly-greater keeps equal-t candidates alive for the
+        // leftmost tie-break, as in the binary traversal).
+        if have && entry > best_t {
+            continue;
+        }
+        counters.nodes_visited += 1;
+        let node = &wb.nodes[ni as usize];
+        counters.aabb_tests += 4;
+
+        // Evaluate all four lanes as straight-line interval compares and
+        // insertion-sort the hits front-to-back (at most 4 entries).
+        let mut lane_t = [0.0f32; 4];
+        let mut lane_ref = [0u32; 4];
+        let mut lane_cnt = [0u8; 4];
+        let mut m = 0usize;
+        for k in 0..4 {
+            let child = node.child[k];
+            if child == INVALID_LANE {
+                continue;
+            }
+            let inside = oy >= node.ymin[k]
+                && oy <= node.ymax[k]
+                && oz >= node.zmin[k]
+                && oz <= node.zmax[k];
+            if !inside {
+                continue;
+            }
+            let t = (node.xmin[k] - ox).max(0.0);
+            if have && t > best_t {
+                continue;
+            }
+            let mut i = m;
+            while i > 0 && lane_t[i - 1] > t {
+                lane_t[i] = lane_t[i - 1];
+                lane_ref[i] = lane_ref[i - 1];
+                lane_cnt[i] = lane_cnt[i - 1];
+                i -= 1;
+            }
+            lane_t[i] = t;
+            lane_ref[i] = child;
+            lane_cnt[i] = node.count[k];
+            m += 1;
+        }
+
+        // Nearest-first: scan leaf lanes inline (tightening the carried
+        // bound before farther lanes are considered), defer internal
+        // lanes to the stack in far-to-near order.
+        let mut defer = [(0u32, 0.0f32); 4];
+        let mut d = 0usize;
+        for i in 0..m {
+            let cnt = lane_cnt[i] as usize;
+            if cnt == 0 {
+                defer[d] = (lane_ref[i], lane_t[i]);
+                d += 1;
+                continue;
+            }
+            if have && lane_t[i] > best_t {
+                continue;
+            }
+            let first = lane_ref[i] as usize;
+            for p in &wb.prims[first..first + cnt] {
+                counters.tri_tests += 1;
+                let t = p.x_plane - ox;
+                if t < 0.0 {
+                    continue; // behind the origin (t_min = 0)
+                }
+                if have && (t > best_t || (t == best_t && (carried || p.prim >= best_prim))) {
+                    continue;
+                }
+                if oy > p.y_lo && oy < p.y_hi && oz > p.z_lo && oz < p.z_hi {
+                    best_t = t;
+                    best_prim = p.prim;
+                    have = true;
+                    carried = false;
+                }
+            }
+        }
+        for i in (0..d).rev() {
+            ts.stack.push(defer[i]);
+        }
+    }
+    if have {
+        Some(Hit { t: best_t, prim: best_prim })
+    } else {
+        None
+    }
+}
+
+impl WideBvh {
+    /// Refit after triangle positions changed (dynamic RMQ, §7.iii):
+    /// re-extract every leaf record from its triangle, then recompute the
+    /// per-lane bounds bottom-up. Valid because child nodes always follow
+    /// their parent in `nodes` (collapse emits DFS preorder).
+    pub fn refit(&mut self, tris: &[Triangle]) {
+        for p in self.prims.iter_mut() {
+            *p = WidePrim::from_triangle(&tris[p.prim as usize]);
+        }
+        for i in (0..self.nodes.len()).rev() {
+            for k in 0..4 {
+                let child = self.nodes[i].child[k];
+                if child == INVALID_LANE {
+                    continue;
+                }
+                let cnt = self.nodes[i].count[k] as usize;
+                let (mut ymin, mut ymax) = (f32::INFINITY, f32::NEG_INFINITY);
+                let (mut zmin, mut zmax) = (f32::INFINITY, f32::NEG_INFINITY);
+                let mut xmin = f32::INFINITY;
+                if cnt > 0 {
+                    for p in &self.prims[child as usize..child as usize + cnt] {
+                        ymin = ymin.min(p.y_lo);
+                        ymax = ymax.max(p.y_hi);
+                        zmin = zmin.min(p.z_lo);
+                        zmax = zmax.max(p.z_hi);
+                        xmin = xmin.min(p.x_plane);
+                    }
+                } else {
+                    let c = self.nodes[child as usize];
+                    for j in 0..4 {
+                        if c.child[j] == INVALID_LANE {
+                            continue;
+                        }
+                        ymin = ymin.min(c.ymin[j]);
+                        ymax = ymax.max(c.ymax[j]);
+                        zmin = zmin.min(c.zmin[j]);
+                        zmax = zmax.max(c.zmax[j]);
+                        xmin = xmin.min(c.xmin[j]);
+                    }
+                }
+                let n = &mut self.nodes[i];
+                n.ymin[k] = ymin;
+                n.ymax[k] = ymax;
+                n.zmin[k] = zmin;
+                n.zmax[k] = zmax;
+                n.xmin[k] = xmin;
+            }
+        }
+    }
+
+    /// Heap bytes of the wide structure (Table-2 style accounting).
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<WideNode>()
+            + self.prims.len() * std::mem::size_of::<WidePrim>()
+    }
+
+    /// Structural invariants (tests + debug builds): every triangle in
+    /// exactly one leaf run, child lanes bound their contents, internal
+    /// lanes point forward (refit relies on it), all nodes reachable.
+    pub fn validate(&self, tris: &[Triangle]) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty wide bvh".into());
+        }
+        if self.prims.len() != tris.len() {
+            return Err(format!("{} prim records for {} triangles", self.prims.len(), tris.len()));
+        }
+        let mut seen = vec![false; tris.len()];
+        let mut visited = 0usize;
+        let mut stack = vec![0u32];
+        while let Some(ni) = stack.pop() {
+            visited += 1;
+            let node = &self.nodes[ni as usize];
+            for k in 0..4 {
+                let child = node.child[k];
+                if child == INVALID_LANE {
+                    continue;
+                }
+                let cnt = node.count[k] as usize;
+                if cnt > 0 {
+                    if cnt > self.leaf_size.max(1) {
+                        return Err(format!("leaf lane of {cnt} > leaf_size {}", self.leaf_size));
+                    }
+                    let first = child as usize;
+                    if first + cnt > self.prims.len() {
+                        return Err("leaf run out of range".into());
+                    }
+                    for p in &self.prims[first..first + cnt] {
+                        let id = p.prim as usize;
+                        if id >= tris.len() {
+                            return Err(format!("prim id {id} out of range"));
+                        }
+                        if seen[id] {
+                            return Err(format!("prim {id} in two leaves"));
+                        }
+                        seen[id] = true;
+                        if *p != WidePrim::from_triangle(&tris[id]) {
+                            return Err(format!("prim record {id} stale vs triangle"));
+                        }
+                        let eps = 1e-6f32;
+                        if p.y_lo < node.ymin[k] - eps
+                            || p.y_hi > node.ymax[k] + eps
+                            || p.z_lo < node.zmin[k] - eps
+                            || p.z_hi > node.zmax[k] + eps
+                            || p.x_plane < node.xmin[k] - eps
+                        {
+                            return Err(format!("prim {id} escapes lane bounds"));
+                        }
+                    }
+                } else {
+                    if child as usize <= ni as usize || child as usize >= self.nodes.len() {
+                        return Err("internal lane must point forward and in range".into());
+                    }
+                    stack.push(child);
+                }
+            }
+        }
+        if visited != self.nodes.len() {
+            return Err(format!("unreachable wide nodes: {visited} of {}", self.nodes.len()));
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("some prims not in any leaf".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::build::{build, collapse_to_wide};
+    use crate::bvh::traverse::{closest_hit, closest_hit_from, TraversalStack};
+    use crate::bvh::Builder;
+    use crate::geometry::flat::{build_scene, ray_for_query, ray_origin_x};
+    use crate::rmq::naive_rmq;
+    use crate::util::proptest::{check, gen};
+
+    #[test]
+    fn collapse_valid_structure_both_builders() {
+        check("wide structural invariants", 40, |rng| {
+            let xs = gen::f32_array(rng, 1..=600);
+            let tris = build_scene(&xs);
+            for builder in [Builder::BinnedSah, Builder::Lbvh] {
+                let bvh = build(&tris, builder, 4);
+                let wb = collapse_to_wide(&bvh, &tris);
+                wb.validate(&tris)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_triangle_collapses() {
+        let tris = build_scene(&[0.5]);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let wb = collapse_to_wide(&bvh, &tris);
+        assert_eq!(wb.nodes.len(), 1);
+        assert_eq!(wb.prims.len(), 1);
+        wb.validate(&tris).unwrap();
+        let ray = ray_for_query(0, 0, 1, ray_origin_x(&[0.5]));
+        let mut c = Counters::default();
+        let hit = closest_hit_wide(&wb, &ray, &mut WideStack::new(), &mut c).unwrap();
+        assert_eq!(hit.prim, 0);
+    }
+
+    #[test]
+    fn wide_hits_match_binary_and_oracle() {
+        check("wide == binary == rmq (sah+lbvh)", 60, |rng| {
+            let xs = gen::f32_array(rng, 1..=800);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let theta = ray_origin_x(&xs);
+            for builder in [Builder::BinnedSah, Builder::Lbvh] {
+                let bvh = build(&tris, builder, 4);
+                let wb = collapse_to_wide(&bvh, &tris);
+                let mut bs = TraversalStack::new();
+                let mut ws = WideStack::new();
+                let mut cb = Counters::default();
+                let mut cw = Counters::default();
+                for _ in 0..16 {
+                    let (l, r) = gen::query(rng, n);
+                    let ray = ray_for_query(l as u32, r as u32, n, theta);
+                    let bh = closest_hit(&bvh, &tris, &ray, &mut bs, &mut cb)
+                        .ok_or_else(|| format!("binary no hit for ({l},{r})"))?;
+                    let wh = closest_hit_wide(&wb, &ray, &mut ws, &mut cw)
+                        .ok_or_else(|| format!("wide no hit for ({l},{r})"))?;
+                    if bh != wh {
+                        return Err(format!("{builder:?} ({l},{r}): binary {bh:?} wide {wh:?}"));
+                    }
+                    let want = naive_rmq(&xs, l, r);
+                    if wh.prim as usize != want {
+                        return Err(format!("({l},{r}): wide {} want {want}", wh.prim));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wide_ties_resolve_leftmost() {
+        check("wide equal values leftmost", 60, |rng| {
+            let xs = gen::dup_array(rng, 1..=400, 2);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let bvh = build(&tris, Builder::BinnedSah, 4);
+            let wb = collapse_to_wide(&bvh, &tris);
+            let theta = ray_origin_x(&xs);
+            let mut ws = WideStack::new();
+            let mut c = Counters::default();
+            for _ in 0..16 {
+                let (l, r) = gen::query(rng, n);
+                let ray = ray_for_query(l as u32, r as u32, n, theta);
+                let hit = closest_hit_wide(&wb, &ray, &mut ws, &mut c).unwrap();
+                let want = naive_rmq(&xs, l, r);
+                if hit.prim as usize != want {
+                    return Err(format!("({l},{r}): got {} want {want}", hit.prim));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn carried_hits_match_binary() {
+        // The Algorithm-6 payload-min path: seed both traversals with the
+        // same prior hit and require identical final hits — including
+        // carried hits surviving equal-t ties.
+        check("wide carried-hit == binary", 40, |rng| {
+            let xs = gen::dup_array(rng, 2..=300, 3);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let bvh = build(&tris, Builder::BinnedSah, 4);
+            let wb = collapse_to_wide(&bvh, &tris);
+            let theta = ray_origin_x(&xs);
+            let mut bs = TraversalStack::new();
+            let mut ws = WideStack::new();
+            let mut cb = Counters::default();
+            let mut cw = Counters::default();
+            for _ in 0..12 {
+                let (l1, r1) = gen::query(rng, n);
+                let first = ray_for_query(l1 as u32, r1 as u32, n, theta);
+                let seed_b = closest_hit(&bvh, &tris, &first, &mut bs, &mut cb);
+                let seed_w = closest_hit_wide(&wb, &first, &mut ws, &mut cw);
+                if seed_b != seed_w {
+                    return Err(format!("seed mismatch: {seed_b:?} vs {seed_w:?}"));
+                }
+                let (l2, r2) = gen::query(rng, n);
+                let second = ray_for_query(l2 as u32, r2 as u32, n, theta);
+                let bh = closest_hit_from(&bvh, &tris, &second, &mut bs, &mut cb, seed_b);
+                let wh = closest_hit_wide_from(&wb, &second, &mut ws, &mut cw, seed_w);
+                if bh != wh {
+                    return Err(format!(
+                        "carried ({l1},{r1})→({l2},{r2}): binary {bh:?} wide {wh:?}"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn refit_tracks_value_updates() {
+        check("wide refit == rebuild answers", 30, |rng| {
+            let mut xs = gen::f32_array(rng, 8..=256);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let bvh = build(&tris, Builder::BinnedSah, 4);
+            let mut wb = collapse_to_wide(&bvh, &tris);
+            // Point updates re-shape triangles; refit instead of rebuild.
+            for _ in 0..4 {
+                let i = rng.range(0, n - 1);
+                xs[i] = rng.f32();
+            }
+            let tris = build_scene(&xs);
+            wb.refit(&tris);
+            wb.validate(&tris)?;
+            let theta = ray_origin_x(&xs);
+            let mut ws = WideStack::new();
+            let mut c = Counters::default();
+            for _ in 0..12 {
+                let (l, r) = gen::query(rng, n);
+                let ray = ray_for_query(l as u32, r as u32, n, theta);
+                let hit = closest_hit_wide(&wb, &ray, &mut ws, &mut c).unwrap();
+                let want = naive_rmq(&xs, l, r);
+                if hit.prim as usize != want {
+                    return Err(format!("after refit ({l},{r}): got {} want {want}", hit.prim));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wide_visits_fewer_nodes_than_binary() {
+        // The point of the layout: one wide pop replaces ~3 binary pops.
+        let xs = crate::util::rng::Rng::new(13).uniform_f32_vec(4096);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let wb = collapse_to_wide(&bvh, &tris);
+        let theta = ray_origin_x(&xs);
+        let mut cb = Counters::default();
+        let mut cw = Counters::default();
+        let mut bs = TraversalStack::new();
+        let mut ws = WideStack::new();
+        for i in 0..64u32 {
+            let ray = ray_for_query(i * 8, i * 8 + 500, 4096, theta);
+            closest_hit(&bvh, &tris, &ray, &mut bs, &mut cb).unwrap();
+            closest_hit_wide(&wb, &ray, &mut ws, &mut cw).unwrap();
+        }
+        assert!(
+            cw.nodes_visited * 3 < cb.nodes_visited * 2,
+            "wide {} vs binary {} node visits",
+            cw.nodes_visited,
+            cb.nodes_visited
+        );
+    }
+
+    #[test]
+    fn memory_is_denser_than_binary_nodes() {
+        let xs = crate::util::rng::Rng::new(14).uniform_f32_vec(1 << 12);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let wb = collapse_to_wide(&bvh, &tris);
+        // Wide node count must be well under the binary internal count.
+        assert!(wb.nodes.len() * 2 < bvh.nodes.len());
+        assert!(wb.memory_bytes() > 0);
+    }
+}

@@ -62,7 +62,7 @@ impl Coordinator {
                 let answers = match engine.solve(&fused.queries, workers) {
                     Ok(a) => a,
                     Err(e) => {
-                        log::error!("engine {} failed: {e}", kind.name());
+                        eprintln!("engine {} failed: {e}", kind.name());
                         // Fall back to the always-available exhaustive.
                         engines
                             .get(EngineKind::Exhaustive)

@@ -1,11 +1,12 @@
 //! `rtxrmq` — launcher CLI for the RTXRMQ reproduction.
 //!
 //! Subcommands:
-//!   solve      one-shot batch solve on a synthetic workload
-//!   serve      start the coordinator and drive a synthetic client load
-//!   memory     Table-2 style memory report for a given n
-//!   artifacts  list the AOT artifact variants (PJRT manifest)
-//!   info       architecture profiles used by the models
+//!   solve        one-shot batch solve on a synthetic workload
+//!   serve        start the coordinator and drive a synthetic client load
+//!   bench-smoke  n × batch wall-clock grid over both BVH layouts -> BENCH_rmq.json
+//!   memory       Table-2 style memory report for a given n
+//!   artifacts    list the AOT artifact variants (PJRT manifest)
+//!   info         architecture profiles used by the models
 
 use rtxrmq::coordinator::engine::{EngineKind, EngineSet};
 use rtxrmq::coordinator::router::Policy;
@@ -23,6 +24,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
+        Some("bench-smoke") => cmd_bench_smoke(&args),
         Some("memory") => cmd_memory(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") => cmd_info(),
@@ -49,6 +51,11 @@ fn print_help() {
             .opt("requests", "number of requests (default 128)")
             .opt("batch", "queries per request (default 1024)")
             .opt("no-xla", "disable the PJRT/XLA engine"),
+        Help::new("bench-smoke", "wall-clock ns/query grid over both BVH layouts")
+            .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
+            .opt("batches", "comma-separated batch sizes (default 2^12,2^16)")
+            .opt("seed", "workload seed")
+            .opt("out", "output JSON path (default BENCH_rmq.json)"),
         Help::new("memory", "data-structure memory report").opt("n", "array size"),
         Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
         Help::new("info", "print the GPU/CPU architecture profiles"),
@@ -123,6 +130,50 @@ fn cmd_serve(args: &Args) -> i32 {
     println!("{}", c.metrics.lock().unwrap());
     c.shutdown();
     0
+}
+
+fn cmd_bench_smoke(args: &Args) -> i32 {
+    use rtxrmq::bench_harness::smoke::{run_smoke, speedups, to_json, write_json, SmokeCfg};
+    let defaults = SmokeCfg::default();
+    let cfg = SmokeCfg {
+        ns: args.list_or("ns", &defaults.ns).unwrap(),
+        batches: args.list_or("batches", &defaults.batches).unwrap(),
+        workers: rtxrmq::util::pool::default_workers(),
+        seed: args.get_or("seed", defaults.seed).unwrap(),
+    };
+    let out = args.str_or("out", "BENCH_rmq.json");
+    let points = run_smoke(&cfg);
+    let mut rows = Vec::new();
+    for p in &points {
+        rows.push(vec![
+            p.layout.name().to_string(),
+            p.n.to_string(),
+            p.batch.to_string(),
+            format!("{:.1}", p.ns_per_query),
+            p.counters.nodes_visited.to_string(),
+            p.counters.tri_tests.to_string(),
+        ]);
+    }
+    rtxrmq::bench_harness::print_table(
+        "RTXRMQ layout smoke grid (local wall clock)",
+        &["layout", "n", "batch", "ns/query", "nodes_visited", "tri_tests"],
+        &rows,
+    );
+    for (n, batch, binary_ns, wide_ns, speedup) in speedups(&points) {
+        println!(
+            "n={n} batch={batch}: binary {binary_ns:.1} ns/q, wide {wide_ns:.1} ns/q -> {speedup:.2}x"
+        );
+    }
+    match write_json(std::path::Path::new(&out), &to_json(&cfg, &points)) {
+        Ok(()) => {
+            println!("wrote {out}");
+            0
+        }
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_memory(args: &Args) -> i32 {

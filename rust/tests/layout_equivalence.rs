@@ -1,0 +1,121 @@
+//! Cross-layout equivalence properties (the wide-SoA acceptance gate):
+//! wide-BVH hits — prim id AND t, including leftmost tie-breaks and the
+//! Algorithm-6 carried-hit sub-rays — must be identical to the binary
+//! BVH and to `naive_rmq`, across Flat/Blocks geometry, both builders,
+//! and after `update_value` refits.
+
+use rtxrmq::bvh::build::{build, collapse_to_wide};
+use rtxrmq::bvh::traverse::{closest_hit, closest_hit_from, Counters, TraversalStack};
+use rtxrmq::bvh::wide::{closest_hit_wide, closest_hit_wide_from, WideStack};
+use rtxrmq::bvh::{AccelLayout, Builder};
+use rtxrmq::geometry::flat::{build_scene, ray_for_query, ray_origin_x};
+use rtxrmq::rmq::naive_rmq;
+use rtxrmq::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
+use rtxrmq::rmq::{Query, RmqSolver};
+use rtxrmq::util::proptest::{check, gen};
+
+/// Raw traversal equivalence: the same rays through both layouts must
+/// produce the same `Hit` (t and prim), for fresh and carried casts,
+/// for both builders, on duplicate-heavy inputs (tie-break stress).
+#[test]
+fn raw_hits_identical_across_layouts() {
+    check("hit-for-hit wide == binary", 60, |rng| {
+        let xs = gen::dup_array(rng, 2..=600, 3);
+        let n = xs.len();
+        let tris = build_scene(&xs);
+        let theta = ray_origin_x(&xs);
+        for builder in [Builder::BinnedSah, Builder::Lbvh] {
+            let bvh = build(&tris, builder, 4);
+            let wb = collapse_to_wide(&bvh, &tris);
+            wb.validate(&tris)?;
+            let mut bs = TraversalStack::new();
+            let mut ws = WideStack::new();
+            let (mut cb, mut cw) = (Counters::default(), Counters::default());
+            for _ in 0..12 {
+                let (l1, r1) = gen::query(rng, n);
+                let ray = ray_for_query(l1 as u32, r1 as u32, n, theta);
+                let bh = closest_hit(&bvh, &tris, &ray, &mut bs, &mut cb);
+                let wh = closest_hit_wide(&wb, &ray, &mut ws, &mut cw);
+                if bh != wh {
+                    return Err(format!("{builder:?} ({l1},{r1}): {bh:?} != {wh:?}"));
+                }
+                let want = naive_rmq(&xs, l1, r1);
+                if wh.map(|h| h.prim as usize) != Some(want) {
+                    return Err(format!("({l1},{r1}): wide {wh:?} want {want}"));
+                }
+                // Carried-hit sub-ray (Algorithm 6's payload-min): seed
+                // the next cast with this hit on both sides.
+                let (l2, r2) = gen::query(rng, n);
+                let ray2 = ray_for_query(l2 as u32, r2 as u32, n, theta);
+                let bh2 = closest_hit_from(&bvh, &tris, &ray2, &mut bs, &mut cb, bh);
+                let wh2 = closest_hit_wide_from(&wb, &ray2, &mut ws, &mut cw, wh);
+                if bh2 != wh2 {
+                    return Err(format!(
+                        "{builder:?} carried ({l1},{r1})->({l2},{r2}): {bh2:?} != {wh2:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Solver-level equivalence over the full matrix: builders × modes ×
+/// layouts, against the naive oracle, before and after refits.
+#[test]
+fn solver_matrix_agrees_including_refits() {
+    check("solver matrix wide == binary == naive", 25, |rng| {
+        let mut xs = gen::dup_array(rng, 8..=512, 4);
+        let n = xs.len();
+        let bs = 1usize << rng.range(1, 5);
+        let queries: Vec<Query> = (0..32)
+            .map(|_| {
+                let (l, r) = gen::query(rng, n);
+                (l as u32, r as u32)
+            })
+            .collect();
+        for builder in [Builder::BinnedSah, Builder::Lbvh] {
+            for mode in [RtxMode::Flat, RtxMode::Blocks { block_size: bs }] {
+                let mut solvers: Vec<RtxRmq> = AccelLayout::all()
+                    .into_iter()
+                    .map(|layout| {
+                        RtxRmq::with_options(
+                            &xs,
+                            RtxOptions { mode, builder, layout, ..Default::default() },
+                        )
+                    })
+                    .collect();
+                let want: Vec<u32> = queries
+                    .iter()
+                    .map(|&(l, r)| naive_rmq(&xs, l as usize, r as usize) as u32)
+                    .collect();
+                for s in &solvers {
+                    let got = s.batch(&queries, 2);
+                    if got != want {
+                        return Err(format!("{builder:?}/{mode:?}: pre-refit mismatch"));
+                    }
+                }
+                // Dynamic updates: batch of point updates, one refit.
+                let updates: Vec<(usize, f32)> =
+                    (0..4).map(|_| (rng.range(0, n - 1), rng.f32())).collect();
+                for &(i, v) in &updates {
+                    xs[i] = v;
+                }
+                for s in solvers.iter_mut() {
+                    s.update_values(&updates);
+                }
+                let want: Vec<u32> = queries
+                    .iter()
+                    .map(|&(l, r)| naive_rmq(&xs, l as usize, r as usize) as u32)
+                    .collect();
+                for s in &solvers {
+                    let got = s.batch(&queries, 2);
+                    if got != want {
+                        return Err(format!("{builder:?}/{mode:?}: post-refit mismatch"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}

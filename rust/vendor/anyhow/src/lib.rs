@@ -1,0 +1,157 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate, covering
+//! exactly the API subset rtxrmq uses: [`Error`], [`Result`], the
+//! [`anyhow!`] / [`bail!`] macros, and the [`Context`] extension trait.
+//!
+//! The offline build environment has no crates.io access, so this path
+//! crate keeps the call sites source-compatible with the real `anyhow`;
+//! swapping back to the upstream crate is a one-line Cargo.toml change.
+
+use std::fmt;
+
+/// A boxed-free error: a message chain rendered eagerly into a string.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context, mirroring `anyhow::Error::context`.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket `From` legal.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Context-attachment extension for `Result` and `Option`.
+pub trait Context<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "boom"))
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 3;
+        let e = anyhow!("count = {}", n);
+        assert_eq!(e.to_string(), "count = 3");
+        let msg = String::from("owned");
+        let e = anyhow!(msg);
+        assert_eq!(e.to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns() {
+        fn f() -> Result<()> {
+            bail!("stop {}", 1);
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            io_err()?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("boom"));
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<()> = io_err().context("reading x");
+        let s = r.unwrap_err().to_string();
+        assert!(s.starts_with("reading x: "), "{s}");
+        let o: Option<u32> = None;
+        assert_eq!(o.context("missing field").unwrap_err().to_string(), "missing field");
+        let o: Option<u32> = Some(7);
+        assert_eq!(o.with_context(|| "unused").unwrap(), 7);
+    }
+}
