@@ -1,23 +1,30 @@
 //! Smoke-mode perf grid: wall-clock ns/query plus traversal counters for
-//! **both acceleration layouts** over a small n × batch grid, written to
-//! `BENCH_rmq.json` so successive PRs have a perf trajectory to compare
-//! against (the acceptance point is n = 2^20, batch = 2^16, uniform
-//! queries).
+//! **both acceleration layouts and the sharded engine** over a small
+//! n × batch grid, written to `BENCH_rmq.json` so successive PRs have a
+//! perf trajectory to compare against (the acceptance point is n = 2^20,
+//! batch = 2^16, uniform queries).
 //!
 //! Unlike the figure benches (which model GPU time), this mode records
 //! the *local* wall clock of the software traversal — exactly the
-//! quantity the wide-SoA layout is meant to improve — and cross-checks
-//! that both layouts return identical answers on every grid point.
+//! quantity the wide-SoA layout and the blocked decomposition are meant
+//! to improve — and cross-checks that every solver column returns
+//! identical answers on every grid point.
 
 use crate::bvh::traverse::Counters;
 use crate::bvh::AccelLayout;
 use crate::geometry::precision::{best_block_size, OptixLimits};
 use crate::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
+use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
 use crate::rmq::Query;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::workload::gen_array;
 use std::path::Path;
+
+/// Stable column labels for the grid's solver axis.
+pub const LABEL_BINARY: &str = "binary";
+pub const LABEL_WIDE: &str = "wide";
+pub const LABEL_SHARDED: &str = "sharded";
 
 /// Grid configuration.
 #[derive(Clone, Debug)]
@@ -26,6 +33,8 @@ pub struct SmokeCfg {
     pub batches: Vec<usize>,
     pub workers: usize,
     pub seed: u64,
+    /// Sharded column's block size; 0 = auto (√n).
+    pub shard_block: usize,
 }
 
 impl Default for SmokeCfg {
@@ -35,14 +44,16 @@ impl Default for SmokeCfg {
             batches: vec![1 << 12, 1 << 16],
             workers: crate::util::pool::default_workers(),
             seed: 0xBE9C,
+            shard_block: 0,
         }
     }
 }
 
-/// One measured grid point.
+/// One measured grid point. `layout` is the solver column: the two
+/// monolithic BVH layouts plus the two-level sharded engine.
 #[derive(Clone, Debug)]
 pub struct SmokePoint {
-    pub layout: AccelLayout,
+    pub layout: &'static str,
     pub n: usize,
     pub batch: usize,
     pub ns_per_query: f64,
@@ -60,8 +71,8 @@ fn uniform_queries(n: usize, count: usize, rng: &mut Rng) -> Vec<Query> {
         .collect()
 }
 
-/// Run the grid. Panics if the two layouts ever disagree on an answer
-/// (a smoke result over wrong answers would be meaningless).
+/// Run the grid. Panics if any two solver columns ever disagree on an
+/// answer (a smoke result over wrong answers would be meaningless).
 pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
     let mut points = Vec::new();
     for &n in &cfg.ns {
@@ -74,7 +85,11 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
         } else {
             RtxMode::Flat
         };
-        let solvers: Vec<(AccelLayout, RtxRmq)> = AccelLayout::all()
+        let sharded = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: cfg.shard_block, ..Default::default() },
+        );
+        let rtx: Vec<(AccelLayout, RtxRmq)> = AccelLayout::all()
             .into_iter()
             .map(|layout| {
                 let opts = RtxOptions { mode, layout, ..Default::default() };
@@ -85,43 +100,64 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
             let mut rng = Rng::new(cfg.seed ^ (n as u64) ^ ((batch as u64) << 32));
             let queries = uniform_queries(n, batch, &mut rng);
             let mut reference: Option<Vec<u32>> = None;
-            for (layout, solver) in &solvers {
-                // Warm the structures (page-in, branch predictors) off
-                // the clock, then time one full batch.
-                let warm = queries.len().min(256);
-                std::hint::black_box(solver.batch_counted(&queries[..warm], cfg.workers));
-                let t0 = std::time::Instant::now();
-                let (answers, counters) = solver.batch_counted(&queries, cfg.workers);
-                let wall_ns = t0.elapsed().as_nanos() as f64;
-                match &reference {
-                    None => reference = Some(answers),
-                    Some(want) => assert_eq!(
-                        want, &answers,
-                        "layouts disagree at n={n} batch={batch}"
-                    ),
-                }
-                points.push(SmokePoint {
-                    layout: *layout,
-                    n,
-                    batch,
-                    ns_per_query: wall_ns / batch as f64,
-                    counters,
-                });
+            let mut measure =
+                |label: &'static str,
+                 run: &dyn Fn(&[Query], usize) -> (Vec<u32>, Counters),
+                 points: &mut Vec<SmokePoint>| {
+                    // Warm the structures (page-in, branch predictors)
+                    // off the clock, then time one full batch.
+                    let warm = queries.len().min(256);
+                    std::hint::black_box(run(&queries[..warm], cfg.workers));
+                    let t0 = std::time::Instant::now();
+                    let (answers, counters) = run(&queries, cfg.workers);
+                    let wall_ns = t0.elapsed().as_nanos() as f64;
+                    match &reference {
+                        None => reference = Some(answers),
+                        Some(want) => assert_eq!(
+                            want, &answers,
+                            "{label} disagrees at n={n} batch={batch}"
+                        ),
+                    }
+                    points.push(SmokePoint {
+                        layout: label,
+                        n,
+                        batch,
+                        ns_per_query: wall_ns / batch as f64,
+                        counters,
+                    });
+                };
+            for (layout, solver) in &rtx {
+                let label = match layout {
+                    AccelLayout::Binary => LABEL_BINARY,
+                    AccelLayout::Wide => LABEL_WIDE,
+                };
+                measure(label, &|q, w| solver.batch_counted(q, w), &mut points);
             }
+            measure(LABEL_SHARDED, &|q, w| sharded.batch_counted(q, w), &mut points);
         }
     }
     points
 }
 
-/// Speedup summary rows (wide vs binary) for each (n, batch) pair.
-pub fn speedups(points: &[SmokePoint]) -> Vec<(usize, usize, f64, f64, f64)> {
+/// Speedup summary rows vs the binary baseline: one row per
+/// (n, batch, non-binary label).
+pub fn speedups(points: &[SmokePoint]) -> Vec<(usize, usize, &'static str, f64, f64, f64)> {
     let mut out = Vec::new();
-    for p in points.iter().filter(|p| p.layout == AccelLayout::Binary) {
-        if let Some(w) = points
-            .iter()
-            .find(|w| w.layout == AccelLayout::Wide && w.n == p.n && w.batch == p.batch)
-        {
-            out.push((p.n, p.batch, p.ns_per_query, w.ns_per_query, p.ns_per_query / w.ns_per_query));
+    for p in points.iter().filter(|p| p.layout == LABEL_BINARY) {
+        for label in [LABEL_WIDE, LABEL_SHARDED] {
+            if let Some(w) = points
+                .iter()
+                .find(|w| w.layout == label && w.n == p.n && w.batch == p.batch)
+            {
+                out.push((
+                    p.n,
+                    p.batch,
+                    label,
+                    p.ns_per_query,
+                    w.ns_per_query,
+                    p.ns_per_query / w.ns_per_query,
+                ));
+            }
         }
     }
     out
@@ -134,7 +170,7 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
         .map(|p| {
             obj(vec![
                 ("engine", Json::from("RTXRMQ")),
-                ("layout", Json::from(p.layout.name())),
+                ("layout", Json::from(p.layout)),
                 ("n", Json::from(p.n)),
                 ("batch", Json::from(p.batch)),
                 ("ns_per_query", Json::from(p.ns_per_query)),
@@ -147,13 +183,14 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
         .collect();
     let speedup_rows: Vec<Json> = speedups(points)
         .into_iter()
-        .map(|(n, batch, binary_ns, wide_ns, speedup)| {
+        .map(|(n, batch, label, binary_ns, ns, speedup)| {
             obj(vec![
                 ("n", Json::from(n)),
                 ("batch", Json::from(batch)),
+                ("layout", Json::from(label)),
                 ("binary_ns_per_query", Json::from(binary_ns)),
-                ("wide_ns_per_query", Json::from(wide_ns)),
-                ("speedup_wide_vs_binary", Json::from(speedup)),
+                ("ns_per_query", Json::from(ns)),
+                ("speedup_vs_binary", Json::from(speedup)),
             ])
         })
         .collect();
@@ -183,14 +220,23 @@ mod tests {
 
     #[test]
     fn tiny_grid_runs_and_serializes() {
-        let cfg = SmokeCfg { ns: vec![512], batches: vec![128], workers: 2, seed: 7 };
+        let cfg = SmokeCfg {
+            ns: vec![512],
+            batches: vec![128],
+            workers: 2,
+            seed: 7,
+            shard_block: 32,
+        };
         let points = run_smoke(&cfg);
-        // Two layouts × one n × one batch.
-        assert_eq!(points.len(), 2);
+        // Three solver columns × one n × one batch.
+        assert_eq!(points.len(), 3);
+        for label in [LABEL_BINARY, LABEL_WIDE, LABEL_SHARDED] {
+            assert!(points.iter().any(|p| p.layout == label), "{label} column missing");
+        }
         assert!(points.iter().all(|p| p.ns_per_query > 0.0));
         assert!(points.iter().all(|p| p.counters.rays >= 128));
         let sp = speedups(&points);
-        assert_eq!(sp.len(), 1);
+        assert_eq!(sp.len(), 2); // wide + sharded vs binary
         let json = to_json(&cfg, &points);
         let dir = std::env::temp_dir().join(format!("rtxrmq-smoke-{}", std::process::id()));
         let path = dir.join("BENCH_rmq.json");
@@ -199,7 +245,10 @@ mod tests {
         let back = Json::parse(text.trim()).unwrap();
         assert_eq!(back.get("bench").and_then(|b| b.as_str()), Some("rmq_smoke"));
         let pts = back.get("points").and_then(|p| p.as_arr()).unwrap();
-        assert_eq!(pts.len(), 2);
+        assert_eq!(pts.len(), 3);
+        assert!(pts
+            .iter()
+            .any(|p| p.get("layout").and_then(|l| l.as_str()) == Some(LABEL_SHARDED)));
         for p in pts {
             assert!(p.get("ns_per_query").and_then(|v| v.as_f64()).unwrap() > 0.0);
             assert!(p.get("nodes_visited").and_then(|v| v.as_u64()).is_some());

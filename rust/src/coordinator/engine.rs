@@ -7,6 +7,7 @@ use crate::rmq::exhaustive::Exhaustive;
 use crate::rmq::hrmq::Hrmq;
 use crate::rmq::lca::LcaRmq;
 use crate::rmq::rtx::RtxRmq;
+use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::runtime::Runtime;
 use anyhow::{anyhow, Result};
@@ -16,6 +17,7 @@ use std::sync::Arc;
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum EngineKind {
     Rtx,
+    Sharded,
     Lca,
     Hrmq,
     Exhaustive,
@@ -26,6 +28,7 @@ impl EngineKind {
     pub fn name(&self) -> &'static str {
         match self {
             EngineKind::Rtx => "RTXRMQ",
+            EngineKind::Sharded => "SHARDED",
             EngineKind::Lca => "LCA",
             EngineKind::Hrmq => "HRMQ",
             EngineKind::Exhaustive => "EXHAUSTIVE",
@@ -36,6 +39,7 @@ impl EngineKind {
     pub fn parse(s: &str) -> Option<EngineKind> {
         match s.to_ascii_uppercase().as_str() {
             "RTX" | "RTXRMQ" => Some(EngineKind::Rtx),
+            "SHARDED" | "SHARD" => Some(EngineKind::Sharded),
             "LCA" => Some(EngineKind::Lca),
             "HRMQ" => Some(EngineKind::Hrmq),
             "EXHAUSTIVE" | "EX" => Some(EngineKind::Exhaustive),
@@ -44,8 +48,15 @@ impl EngineKind {
         }
     }
 
-    pub fn all() -> [EngineKind; 5] {
-        [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive, EngineKind::Xla]
+    pub fn all() -> [EngineKind; 6] {
+        [
+            EngineKind::Rtx,
+            EngineKind::Sharded,
+            EngineKind::Lca,
+            EngineKind::Hrmq,
+            EngineKind::Exhaustive,
+            EngineKind::Xla,
+        ]
     }
 }
 
@@ -124,6 +135,13 @@ impl Engine for XlaEngine {
     }
 }
 
+/// Per-set build knobs (CLI-facing).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineCfg {
+    /// Block size of the sharded engine; 0 = auto (√n, power of two).
+    pub shard_block: usize,
+}
+
 /// All engines for one array. The XLA engine is optional (artifacts may
 /// not cover very large n).
 pub struct EngineSet {
@@ -132,11 +150,21 @@ pub struct EngineSet {
 }
 
 impl EngineSet {
-    /// Build every available engine for the array. `runtime` enables the
-    /// XLA engine when an artifact variant fits.
+    /// Build every available engine for the array with default knobs.
+    /// `runtime` enables the XLA engine when an artifact variant fits.
     pub fn build(xs: &[f32], runtime: Option<Arc<Runtime>>) -> EngineSet {
+        Self::build_with(xs, runtime, EngineCfg::default())
+    }
+
+    /// Build with explicit knobs (e.g. `--shard-block`).
+    pub fn build_with(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: EngineCfg) -> EngineSet {
+        let sharded = ShardedRmq::with_options(
+            xs,
+            ShardedOptions { block_size: cfg.shard_block, ..Default::default() },
+        );
         let mut engines: Vec<Box<dyn Engine>> = vec![
             Box::new(SolverEngine { kind: EngineKind::Rtx, solver: RtxRmq::new_auto(xs) }),
+            Box::new(SolverEngine { kind: EngineKind::Sharded, solver: sharded }),
             Box::new(SolverEngine { kind: EngineKind::Lca, solver: LcaRmq::new(xs) }),
             Box::new(SolverEngine { kind: EngineKind::Hrmq, solver: Hrmq::new(xs) }),
             Box::new(SolverEngine { kind: EngineKind::Exhaustive, solver: Exhaustive::new(xs) }),
@@ -172,7 +200,13 @@ mod tests {
         let set = EngineSet::build(&xs, None);
         let queries = gen_queries(2000, 128, RangeDist::Medium, &mut rng);
         let want = oracle_batch(&xs, &queries);
-        for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive] {
+        for kind in [
+            EngineKind::Rtx,
+            EngineKind::Sharded,
+            EngineKind::Lca,
+            EngineKind::Hrmq,
+            EngineKind::Exhaustive,
+        ] {
             let e = set.get(kind).expect("engine present");
             let got = e.solve(&queries, 2).unwrap();
             assert_eq!(got, want, "{}", kind.name());
@@ -192,7 +226,17 @@ mod tests {
         let xs = Rng::new(61).uniform_f32_vec(64);
         let set = EngineSet::build(&xs, None);
         assert!(set.get(EngineKind::Xla).is_none());
-        assert_eq!(set.kinds().len(), 4);
+        assert_eq!(set.kinds().len(), 5);
+    }
+
+    #[test]
+    fn shard_block_knob_reaches_engine() {
+        let xs = Rng::new(63).uniform_f32_vec(512);
+        let set = EngineSet::build_with(&xs, None, EngineCfg { shard_block: 32 });
+        let e = set.get(EngineKind::Sharded).expect("sharded built");
+        let queries = vec![(0u32, 511u32), (31, 32), (100, 100)];
+        assert_eq!(e.solve(&queries, 2).unwrap(), oracle_batch(&xs, &queries));
+        assert!(e.memory_bytes() > 0);
     }
 
     #[test]

@@ -46,16 +46,40 @@ impl Router {
     /// Choose an engine for a batch against an array of length `n`.
     /// `available` lists the engines actually built (XLA may be absent).
     pub fn route(&self, n: usize, queries: &[Query], available: &[EngineKind]) -> EngineKind {
+        // A fixed pin never inspects the batch — skip the O(batch) scan.
+        let mean = if matches!(self.policy, Policy::Fixed(_)) {
+            0.0
+        } else {
+            mean_range_len(queries)
+        };
         let mut choice = match self.policy {
             Policy::Fixed(k) => k,
-            Policy::Heuristic => self.heuristic(n, queries),
-            Policy::ModeledCost => self.modeled(n, queries),
+            Policy::Heuristic => self.heuristic(n, mean),
+            Policy::ModeledCost => self.modeled(n, queries.len() as u64, mean),
         };
         // The paper's EXHAUSTIVE is a GPU kernel; our GPU form of it is
         // the AOT-compiled Pallas kernel behind the XLA engine — prefer
         // it whenever an artifact variant fits this array.
         if choice == EngineKind::Exhaustive && available.contains(&EngineKind::Xla) {
             choice = EngineKind::Xla;
+        }
+        // The blocked decomposition converts any small/medium range into
+        // ≤2 partial-block probes plus one summary probe — all in the
+        // regime RTXRMQ wins by construction (Fig. 10) — so those batches
+        // go to the shards when they are built. Large ranges stay on the
+        // monolithic engines (Fig. 12's crossover: LCA owns that regime),
+        // tiny arrays keep their winner (Fig. 12: EXHAUSTIVE), and a
+        // `Policy::Fixed` pin is honored verbatim — never upgraded.
+        if !matches!(self.policy, Policy::Fixed(_))
+            && available.contains(&EngineKind::Sharded)
+            && matches!(choice, EngineKind::Rtx | EngineKind::Lca)
+            && n > (1 << 14)
+        {
+            // Small ≈ n^0.3 and Medium ≈ n^0.6 both fall under this
+            // cutoff; Large ≈ n/2 exceeds it for any serving-scale n.
+            if mean <= (n as f64).powf(0.65) {
+                choice = EngineKind::Sharded;
+            }
         }
         if available.contains(&choice) {
             choice
@@ -70,9 +94,9 @@ impl Router {
 
     /// Paper-regime thresholds: the Small distribution has mean ≈ n^0.3,
     /// Medium ≈ n^0.6 (§6.4). RTXRMQ wins the small regime once n is
-    /// large (Fig. 12 right column); LCA wins the rest.
-    fn heuristic(&self, n: usize, queries: &[Query]) -> EngineKind {
-        let mean = mean_range_len(queries);
+    /// large (Fig. 12 right column); LCA wins the rest. `mean` is the
+    /// batch's mean range length (computed once by `route`).
+    fn heuristic(&self, n: usize, mean: f64) -> EngineKind {
         let nf = n as f64;
         if mean <= nf.powf(0.45).max(32.0) {
             if n < (1 << 14) {
@@ -93,9 +117,8 @@ impl Router {
     /// the paper's Fig. 12 saturated endpoints on the reference GPU
     /// (ns/RMQ at n = 1e8: RTX 1/2/5 for S/M/L, LCA 2.3/1.6/1.0), with
     /// batch-saturation from Fig. 13 applied on top.
-    fn modeled(&self, n: usize, queries: &[Query]) -> EngineKind {
-        let q = queries.len() as u64;
-        let mean = mean_range_len(queries).max(1.0);
+    fn modeled(&self, n: usize, q: u64, mean: f64) -> EngineKind {
+        let mean = mean.max(1.0);
         let nf = n as f64;
         let bs = nf.sqrt().max(2.0);
 
@@ -197,6 +220,62 @@ mod tests {
         let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
         let got = router.route(n, &small, &all_kinds());
         assert_ne!(got, EngineKind::Rtx, "unsaturated batch must not go to RT cores");
+    }
+
+    #[test]
+    fn sharded_takes_small_and_medium_when_available() {
+        let mut with_sharded = all_kinds();
+        with_sharded.push(EngineKind::Sharded);
+        let mut rng = Rng::new(75);
+        let n = 1 << 22;
+        for policy in [Policy::Heuristic, Policy::ModeledCost] {
+            let router = Router::new(policy);
+            for dist in [RangeDist::Small, RangeDist::Medium] {
+                let qs: Vec<(u32, u32)> = gen_queries(n, 1024, dist, &mut rng)
+                    .iter()
+                    .cycle()
+                    .take(1 << 20)
+                    .copied()
+                    .collect();
+                assert_eq!(
+                    router.route(n, &qs, &with_sharded),
+                    EngineKind::Sharded,
+                    "{policy:?} {dist:?}"
+                );
+            }
+            // Large ranges stay off the shards.
+            let large = gen_queries(n, 1024, RangeDist::Large, &mut rng);
+            assert_ne!(router.route(n, &large, &with_sharded), EngineKind::Sharded, "{policy:?}");
+            // Without the sharded engine built, routing is unchanged.
+            let small = gen_queries(n, 1024, RangeDist::Small, &mut rng);
+            assert_ne!(router.route(n, &small, &all_kinds()), EngineKind::Sharded);
+        }
+    }
+
+    #[test]
+    fn fixed_policy_is_never_upgraded_to_sharded() {
+        // An explicit pin must be honored verbatim even in the regime
+        // the sharded upgrade targets.
+        let mut with_sharded = all_kinds();
+        with_sharded.push(EngineKind::Sharded);
+        let mut rng = Rng::new(77);
+        let n = 1 << 22;
+        let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
+        for pinned in [EngineKind::Rtx, EngineKind::Lca] {
+            let router = Router::new(Policy::Fixed(pinned));
+            assert_eq!(router.route(n, &small, &with_sharded), pinned);
+        }
+    }
+
+    #[test]
+    fn tiny_arrays_keep_their_winner() {
+        let mut with_sharded = all_kinds();
+        with_sharded.push(EngineKind::Sharded);
+        let router = Router::new(Policy::Heuristic);
+        let mut rng = Rng::new(76);
+        let n = 1 << 12;
+        let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
+        assert_eq!(router.route(n, &small, &with_sharded), EngineKind::Exhaustive);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! once at startup (the paper's build-once/query-many contract).
 
 use super::batcher::{next_batch, BatcherCfg, Request, Response};
-use super::engine::{EngineKind, EngineSet};
+use super::engine::{EngineCfg, EngineKind, EngineSet};
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
 use crate::rmq::{validate_queries, Query};
@@ -21,6 +21,8 @@ pub struct CoordinatorCfg {
     pub batcher: BatcherCfg,
     /// Worker threads used by the engines for one fused batch.
     pub engine_workers: usize,
+    /// Engine build knobs (e.g. the sharded engine's block size).
+    pub engines: EngineCfg,
 }
 
 impl Default for CoordinatorCfg {
@@ -29,6 +31,7 @@ impl Default for CoordinatorCfg {
             policy: Policy::ModeledCost,
             batcher: BatcherCfg::default(),
             engine_workers: crate::util::pool::default_workers(),
+            engines: EngineCfg::default(),
         }
     }
 }
@@ -45,7 +48,7 @@ pub struct Coordinator {
 impl Coordinator {
     /// Build engines for `xs` and start the serving thread.
     pub fn start(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: CoordinatorCfg) -> Coordinator {
-        let engines = Arc::new(EngineSet::build(xs, runtime));
+        let engines = Arc::new(EngineSet::build_with(xs, runtime, cfg.engines));
         let router = Router::new(cfg.policy);
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let (tx, rx) = sync_channel::<Request>(cfg.batcher.queue_cap);
@@ -214,12 +217,13 @@ mod tests {
     fn metrics_track_engines() {
         let (c, _) = coordinator(1 << 15, Policy::Heuristic);
         let mut rng = Rng::new(82);
-        // Small ranges on a large-enough array route to RTX.
+        // Small ranges on a large-enough array land in the RTX regime,
+        // which the router upgrades to the sharded engine when built.
         let qs = gen_queries(1 << 15, 32, RangeDist::Small, &mut rng);
         let resp = c.query(qs).unwrap();
-        assert_eq!(resp.engine, "RTXRMQ");
+        assert_eq!(resp.engine, "SHARDED");
         let m = c.metrics.lock().unwrap();
-        assert!(m.engine(crate::coordinator::engine::EngineKind::Rtx).is_some());
+        assert!(m.engine(crate::coordinator::engine::EngineKind::Sharded).is_some());
     }
 
     #[test]

@@ -8,7 +8,7 @@
 //!   artifacts    list the AOT artifact variants (PJRT manifest)
 //!   info         architecture profiles used by the models
 
-use rtxrmq::coordinator::engine::{EngineKind, EngineSet};
+use rtxrmq::coordinator::engine::{EngineCfg, EngineKind, EngineSet};
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
 use rtxrmq::runtime::Runtime;
@@ -45,16 +45,19 @@ fn print_help() {
             .opt("n", "array size (default 2^16; accepts 2^k)")
             .opt("q", "queries in the batch (default 4096)")
             .opt("dist", "large|medium|small (default small)")
-            .opt("engine", "RTXRMQ|LCA|HRMQ|EXHAUSTIVE|XLA (default: route by cost model)"),
+            .opt("engine", "RTXRMQ|SHARDED|LCA|HRMQ|EXHAUSTIVE|XLA (default: route by cost model)")
+            .opt("shard-block", "sharded engine block size (default: auto √n)"),
         Help::new("serve", "run the coordinator under synthetic load")
             .opt("n", "array size (default 2^16)")
             .opt("requests", "number of requests (default 128)")
             .opt("batch", "queries per request (default 1024)")
+            .opt("shard-block", "sharded engine block size (default: auto √n)")
             .opt("no-xla", "disable the PJRT/XLA engine"),
-        Help::new("bench-smoke", "wall-clock ns/query grid over both BVH layouts")
+        Help::new("bench-smoke", "wall-clock ns/query grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
             .opt("batches", "comma-separated batch sizes (default 2^12,2^16)")
             .opt("seed", "workload seed")
+            .opt("shard-block", "sharded column block size (default: auto √n)")
             .opt("out", "output JSON path (default BENCH_rmq.json)"),
         Help::new("memory", "data-structure memory report").opt("n", "array size"),
         Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
@@ -74,7 +77,8 @@ fn cmd_solve(args: &Args) -> i32 {
     let queries = gen_queries(n, q, dist, &mut rng);
 
     let runtime = Runtime::load(Path::new("artifacts")).ok().map(Arc::new);
-    let engines = EngineSet::build(&xs, runtime);
+    let shard_block: usize = args.get_or("shard-block", 0usize).unwrap();
+    let engines = EngineSet::build_with(&xs, runtime, EngineCfg { shard_block });
     let kind = match args.opt("engine") {
         Some(name) => EngineKind::parse(name).unwrap_or_else(|| {
             eprintln!("unknown engine {name}");
@@ -114,7 +118,12 @@ fn cmd_serve(args: &Args) -> i32 {
     } else {
         Runtime::load(Path::new("artifacts")).ok().map(Arc::new)
     };
-    let c = Coordinator::start(&xs, runtime, CoordinatorCfg::default());
+    let shard_block: usize = args.get_or("shard-block", 0usize).unwrap();
+    let c = Coordinator::start(
+        &xs,
+        runtime,
+        CoordinatorCfg { engines: EngineCfg { shard_block }, ..Default::default() },
+    );
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
     for i in 0..requests {
@@ -140,13 +149,14 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         batches: args.list_or("batches", &defaults.batches).unwrap(),
         workers: rtxrmq::util::pool::default_workers(),
         seed: args.get_or("seed", defaults.seed).unwrap(),
+        shard_block: args.get_or("shard-block", defaults.shard_block).unwrap(),
     };
     let out = args.str_or("out", "BENCH_rmq.json");
     let points = run_smoke(&cfg);
     let mut rows = Vec::new();
     for p in &points {
         rows.push(vec![
-            p.layout.name().to_string(),
+            p.layout.to_string(),
             p.n.to_string(),
             p.batch.to_string(),
             format!("{:.1}", p.ns_per_query),
@@ -155,13 +165,13 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         ]);
     }
     rtxrmq::bench_harness::print_table(
-        "RTXRMQ layout smoke grid (local wall clock)",
+        "RTXRMQ solver smoke grid (local wall clock)",
         &["layout", "n", "batch", "ns/query", "nodes_visited", "tri_tests"],
         &rows,
     );
-    for (n, batch, binary_ns, wide_ns, speedup) in speedups(&points) {
+    for (n, batch, label, binary_ns, ns, speedup) in speedups(&points) {
         println!(
-            "n={n} batch={batch}: binary {binary_ns:.1} ns/q, wide {wide_ns:.1} ns/q -> {speedup:.2}x"
+            "n={n} batch={batch}: binary {binary_ns:.1} ns/q, {label} {ns:.1} ns/q -> {speedup:.2}x"
         );
     }
     match write_json(std::path::Path::new(&out), &to_json(&cfg, &points)) {
@@ -181,7 +191,13 @@ fn cmd_memory(args: &Args) -> i32 {
     let xs = gen_array(n, 7);
     let engines = EngineSet::build(&xs, None);
     println!("data-structure memory at n = {n} (input {}):", fmt_mb((n * 4) as u64));
-    for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive] {
+    for kind in [
+        EngineKind::Rtx,
+        EngineKind::Sharded,
+        EngineKind::Lca,
+        EngineKind::Hrmq,
+        EngineKind::Exhaustive,
+    ] {
         let e = engines.get(kind).unwrap();
         println!("  {:<11} {}", kind.name(), fmt_mb(e.memory_bytes() as u64));
     }

@@ -14,12 +14,39 @@
 //!   (the paper's GPU state of the art, Polak et al., batch-parallel).
 //! - [`rtx::RtxRmq`] — the paper's contribution: RMQ as ray/triangle
 //!   closest-hit queries over a BVH (RT-core simulator substrate).
+//! - [`sharded::ShardedRmq`] — two-level blocked decomposition over
+//!   pluggable per-block solvers (see below).
+//!
+//! # Sharding & point updates (design note)
+//!
+//! The paper's central result (Fig. 10) is that RTXRMQ wins when query
+//! ranges are *small relative to n*. [`sharded::ShardedRmq`] turns that
+//! observation into an architecture: partition the array into `B`-sized
+//! blocks, give each block its own solver, and keep a summary solver
+//! over the per-block minima. Every query then decomposes into at most
+//! two partial-block probes plus one summary probe — all of them in the
+//! small-range regime *by construction*, independent of the original
+//! range length. Construction parallelises trivially over blocks
+//! (`util::pool`), and the summary array is `n/B` long, so both levels
+//! stay within the flat-geometry precision budget (§5.2, n ≤ 2^24).
+//!
+//! The same decomposition is what makes **mutable arrays** servable
+//! (ROADMAP north star; RT-HDIST shows RT structures tolerate
+//! incremental rebuilds): a point update touches exactly one block —
+//! re-shape its triangles, refit its BVH (the `bvh/wide.rs` refit path),
+//! rescan one block minimum, refit the summary. `update_batch` groups
+//! updates by block so each touched structure refits once per batch.
+//! Tie-breaks remain leftmost end to end: candidate index order is
+//! left partial < summary interior < right partial, later candidates
+//! must win *strictly*, the summary prefers the leftmost minimal block,
+//! and `block_argmin` stores the leftmost argmin within each block.
 
 pub mod cartesian;
 pub mod exhaustive;
 pub mod hrmq;
 pub mod lca;
 pub mod rtx;
+pub mod sharded;
 pub mod sparse_table;
 
 use crate::util::pool;

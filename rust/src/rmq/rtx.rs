@@ -81,6 +81,45 @@ impl RtxScratch {
     }
 }
 
+/// Shared chunked batch driver for scratch-carrying solvers (RTXRMQ and
+/// the sharded engine): workers process disjoint chunks with
+/// thread-local [`RtxScratch`] and [`Counters`]; the per-chunk counters
+/// come back through the pool and are summed here — no mutex or atomic
+/// in the loop. When `sort_queries` is set, each chunk is walked in
+/// left-endpoint order (answers land in their original slots; per-query
+/// work is unchanged — this only improves cache/traversal coherence).
+pub(crate) fn batch_counted_impl(
+    queries: &[Query],
+    workers: usize,
+    sort_queries: bool,
+    rmq: impl Fn(u32, u32, &mut RtxScratch, &mut Counters) -> u32 + Sync,
+) -> (Vec<u32>, Counters) {
+    let mut out = vec![0u32; queries.len()];
+    let per_worker: Vec<Counters> = pool::map_chunks_mut(&mut out, workers, |off, slice| {
+        let mut scratch = RtxScratch::new();
+        let mut c = Counters::default();
+        if sort_queries && slice.len() > 1 {
+            let mut order: Vec<u32> = (0..slice.len() as u32).collect();
+            order.sort_unstable_by_key(|&k| queries[off + k as usize].0);
+            for &k in &order {
+                let (l, r) = queries[off + k as usize];
+                slice[k as usize] = rmq(l, r, &mut scratch, &mut c);
+            }
+        } else {
+            for (k, o) in slice.iter_mut().enumerate() {
+                let (l, r) = queries[off + k];
+                *o = rmq(l, r, &mut scratch, &mut c);
+            }
+        }
+        c
+    });
+    let mut total = Counters::default();
+    for c in &per_worker {
+        total.add(c);
+    }
+    (out, total)
+}
+
 /// The RTXRMQ solver.
 pub struct RtxRmq {
     xs: Vec<f32>,
@@ -242,37 +281,12 @@ impl RtxRmq {
         to_index(best.expect("left partial block always hits"))
     }
 
-    /// Batch execution with counters (the bench-harness entry point).
-    /// Workers process disjoint chunks with thread-local scratch and
-    /// counters; the per-chunk counters come back through the pool and
-    /// are summed here — no mutex or atomic in the loop. When
-    /// `sort_queries` is set, each chunk is walked in left-endpoint
-    /// order (answers land in their original slots).
+    /// Batch execution with counters (the bench-harness entry point);
+    /// see [`batch_counted_impl`] for the worker/scratch/sort structure.
     pub fn batch_counted(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
-        let mut out = vec![0u32; queries.len()];
-        let per_worker: Vec<Counters> = pool::map_chunks_mut(&mut out, workers, |off, slice| {
-            let mut scratch = RtxScratch::new();
-            let mut c = Counters::default();
-            if self.opts.sort_queries && slice.len() > 1 {
-                let mut order: Vec<u32> = (0..slice.len() as u32).collect();
-                order.sort_unstable_by_key(|&k| queries[off + k as usize].0);
-                for &k in &order {
-                    let (l, r) = queries[off + k as usize];
-                    slice[k as usize] = self.rmq_counted(l, r, &mut scratch, &mut c);
-                }
-            } else {
-                for (k, o) in slice.iter_mut().enumerate() {
-                    let (l, r) = queries[off + k];
-                    *o = self.rmq_counted(l, r, &mut scratch, &mut c);
-                }
-            }
-            c
-        });
-        let mut total = Counters::default();
-        for c in &per_worker {
-            total.add(c);
-        }
-        (out, total)
+        batch_counted_impl(queries, workers, self.opts.sort_queries, |l, r, scratch, c| {
+            self.rmq_counted(l, r, scratch, c)
+        })
     }
 
     /// Dynamic RMQ (paper §7.iii): update one value, re-shape the

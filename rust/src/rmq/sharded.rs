@@ -1,0 +1,606 @@
+//! Two-level sharded RMQ — blocked decomposition that *manufactures* the
+//! paper's winning regime (Fig. 10: RTXRMQ dominates when ranges are
+//! small relative to the problem size).
+//!
+//! The array is partitioned into `B`-sized blocks, each backed by its own
+//! per-block solver (an RTXRMQ flat-geometry wide-BVH by default, the
+//! sparse table as the cheap oracle backend), plus a *summary* solver
+//! over the per-block minima. Any query `(l, r)` then decomposes into at
+//! most three probes, **all of them small-range by construction**:
+//!
+//! ```text
+//!   [ .. | l..    | full blocks ... | ..r | .. ]
+//!          ^left partial ^summary probe ^right partial
+//! ```
+//!
+//! Tie-breaks stay leftmost end to end: the left probe wins ties against
+//! the summary, which wins ties against the right probe (candidate index
+//! order is left < interior < right), the summary solver itself prefers
+//! the leftmost minimal *block*, and `block_argmin[b]` is the leftmost
+//! argmin inside block `b`.
+//!
+//! This is also the repo's first **mutable-array** subsystem:
+//! [`ShardedRmq::update_batch`] applies point updates by re-shaping the
+//! touched triangles of each affected block, refitting that block's BVH
+//! once (the refit path `bvh/wide.rs` property-tests), rescanning the
+//! block minimum, and refitting the summary — no global rebuild.
+//! Construction is parallelised over blocks via [`crate::util::pool`].
+
+use super::rtx::{RtxMode, RtxOptions, RtxRmq, RtxScratch};
+use super::sparse_table::SparseTable;
+use super::{Query, RmqSolver};
+use crate::bvh::traverse::Counters;
+use crate::bvh::AccelLayout;
+use crate::util::pool;
+use std::collections::BTreeMap;
+
+/// Which solver backs each block (and the summary).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ShardBackend {
+    /// RTXRMQ flat geometry per block (the paper's solver, in the regime
+    /// it wins). Updates refit in place.
+    #[default]
+    Rtx,
+    /// Sparse table per block (oracle backend; updates rebuild the
+    /// touched block — blocks are small, so this stays cheap).
+    Sparse,
+}
+
+impl ShardBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardBackend::Rtx => "rtx",
+            ShardBackend::Sparse => "sparse",
+        }
+    }
+}
+
+/// Build-time options.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedOptions {
+    /// Elements per block; 0 = auto (≈√n, power of two, clamped).
+    pub block_size: usize,
+    /// Acceleration layout of every per-block / summary BVH (Rtx backend).
+    pub layout: AccelLayout,
+    /// Per-block solver kind.
+    pub backend: ShardBackend,
+    /// Walk each worker chunk in left-endpoint order (same coherence
+    /// trade as [`RtxOptions::sort_queries`]).
+    pub sort_queries: bool,
+    /// Threads used to build blocks; 0 = `pool::default_workers()`.
+    pub build_workers: usize,
+}
+
+impl Default for ShardedOptions {
+    fn default() -> Self {
+        ShardedOptions {
+            block_size: 0,
+            layout: AccelLayout::Wide,
+            backend: ShardBackend::Rtx,
+            sort_queries: true,
+            build_workers: 0,
+        }
+    }
+}
+
+/// √n-balanced power-of-two block size (clamped so tiny arrays collapse
+/// to a single block and huge arrays keep per-block scenes cache-sized).
+pub fn auto_block_size(n: usize) -> usize {
+    let root = (n as f64).sqrt().round().max(1.0) as usize;
+    root.next_power_of_two().clamp(4, 1 << 12)
+}
+
+/// One block's solver. Local indices in `[0, block_len)`.
+enum BlockSolver {
+    Rtx(RtxRmq),
+    Sparse(SparseTable),
+}
+
+impl BlockSolver {
+    fn build(xs: &[f32], opts: &ShardedOptions) -> BlockSolver {
+        match opts.backend {
+            ShardBackend::Rtx => BlockSolver::Rtx(RtxRmq::with_options(
+                xs,
+                RtxOptions { mode: RtxMode::Flat, layout: opts.layout, ..Default::default() },
+            )),
+            ShardBackend::Sparse => BlockSolver::Sparse(SparseTable::new(xs)),
+        }
+    }
+
+    #[inline]
+    fn rmq_local(&self, l: u32, r: u32, scratch: &mut RtxScratch, c: &mut Counters) -> u32 {
+        match self {
+            BlockSolver::Rtx(s) => s.rmq_counted(l, r, scratch, c),
+            BlockSolver::Sparse(s) => s.rmq(l, r),
+        }
+    }
+
+    /// Apply local point updates. `fresh` is the block's full value slice
+    /// *after* the updates (rebuild source for the sparse backend).
+    fn update(&mut self, local: &[(usize, f32)], fresh: &[f32]) {
+        match self {
+            BlockSolver::Rtx(s) => s.update_values(local),
+            BlockSolver::Sparse(s) => *s = SparseTable::new(fresh),
+        }
+    }
+
+    fn memory_bytes(&self) -> usize {
+        match self {
+            BlockSolver::Rtx(s) => s.memory_bytes(),
+            BlockSolver::Sparse(s) => s.memory_bytes(),
+        }
+    }
+
+    /// Structural invariants of the acceleration structures (tests).
+    fn validate(&self) -> Result<(), String> {
+        if let BlockSolver::Rtx(s) = self {
+            let scene = s.scene();
+            scene.bvh.validate(&scene.tris)?;
+            if let Some(w) = &scene.wide {
+                w.validate(&scene.tris)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The two-level sharded solver.
+pub struct ShardedRmq {
+    xs: Vec<f32>,
+    /// Elements per block (last block may be shorter).
+    bs: usize,
+    /// Number of blocks.
+    nb: usize,
+    blocks: Vec<BlockSolver>,
+    /// Min value per block (the summary solver's input array).
+    block_min: Vec<f32>,
+    /// Leftmost *global* argmin index per block.
+    block_argmin: Vec<u32>,
+    /// Solver over `block_min`; `None` when there is a single block.
+    summary: Option<BlockSolver>,
+    opts: ShardedOptions,
+}
+
+impl ShardedRmq {
+    /// Build with auto-tuned block size and default backend/layout.
+    pub fn new_auto(xs: &[f32]) -> ShardedRmq {
+        Self::with_options(xs, ShardedOptions::default())
+    }
+
+    pub fn with_options(xs: &[f32], opts: ShardedOptions) -> ShardedRmq {
+        let n = xs.len();
+        assert!(n > 0, "empty array");
+        let bs = if opts.block_size == 0 { auto_block_size(n) } else { opts.block_size };
+        assert!(bs > 0, "block size must be positive");
+        assert!(
+            opts.backend != ShardBackend::Rtx || bs <= 1 << 24,
+            "shard block size {bs} exceeds the flat-geometry precision limit 2^24 \
+             (paper §5.2) — pick a smaller --shard-block or the sparse backend"
+        );
+        let nb = n.div_ceil(bs);
+        let workers =
+            if opts.build_workers == 0 { pool::default_workers() } else { opts.build_workers };
+
+        // Per-block solvers, built in parallel (each block is independent).
+        let mut slots: Vec<Option<BlockSolver>> = (0..nb).map(|_| None).collect();
+        pool::for_each_chunk_mut(&mut slots, workers, |off, slice| {
+            for (k, slot) in slice.iter_mut().enumerate() {
+                let b = off + k;
+                let start = b * bs;
+                let end = (start + bs).min(n);
+                *slot = Some(BlockSolver::build(&xs[start..end], &opts));
+            }
+        });
+        let blocks: Vec<BlockSolver> =
+            slots.into_iter().map(|s| s.expect("block built")).collect();
+
+        // Block minima + the summary solver above them.
+        let mut block_min = Vec::with_capacity(nb);
+        let mut block_argmin = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let start = b * bs;
+            let end = (start + bs).min(n);
+            let arg = super::naive_rmq(xs, start, end - 1);
+            block_min.push(xs[arg]);
+            block_argmin.push(arg as u32);
+        }
+        let summary = (nb > 1).then(|| BlockSolver::build(&block_min, &opts));
+
+        ShardedRmq { xs: xs.to_vec(), bs, nb, blocks, block_min, block_argmin, summary, opts }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.bs
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.nb
+    }
+
+    pub fn backend(&self) -> ShardBackend {
+        self.opts.backend
+    }
+
+    #[inline]
+    fn block_len(&self, b: usize) -> usize {
+        (self.xs.len() - b * self.bs).min(self.bs)
+    }
+
+    /// One query with explicit traversal state and counters (hot path).
+    /// At most three probes: ≤2 partial blocks + 1 summary range.
+    pub fn rmq_counted(&self, l: u32, r: u32, scratch: &mut RtxScratch, c: &mut Counters) -> u32 {
+        let (l, r) = (l as usize, r as usize);
+        debug_assert!(l <= r && r < self.xs.len());
+        let (bl, br) = (l / self.bs, r / self.bs);
+        let base_l = bl * self.bs;
+        if bl == br {
+            // Entirely inside one block: a single small-range probe.
+            let local =
+                self.blocks[bl].rmq_local((l - base_l) as u32, (r - base_l) as u32, scratch, c);
+            return (base_l + local as usize) as u32;
+        }
+        // Left partial block. Later candidates must beat it *strictly* —
+        // their indices are larger, so ties keep the leftmost.
+        let left_local = self.blocks[bl].rmq_local(
+            (l - base_l) as u32,
+            (self.block_len(bl) - 1) as u32,
+            scratch,
+            c,
+        );
+        let mut best = (base_l + left_local as usize) as u32;
+        // Fully covered interior blocks: one probe of the summary array.
+        if br - bl > 1 {
+            let summary = self.summary.as_ref().expect("nb > 1 has a summary");
+            let b = summary.rmq_local((bl + 1) as u32, (br - 1) as u32, scratch, c) as usize;
+            let cand = self.block_argmin[b];
+            if self.xs[cand as usize] < self.xs[best as usize] {
+                best = cand;
+            }
+        }
+        // Right partial block.
+        let base_r = br * self.bs;
+        let right_local = self.blocks[br].rmq_local(0, (r - base_r) as u32, scratch, c);
+        let cand = (base_r + right_local as usize) as u32;
+        if self.xs[cand as usize] < self.xs[best as usize] {
+            best = cand;
+        }
+        best
+    }
+
+    /// Batch execution with counters (bench-harness entry point); the
+    /// worker/scratch/sort structure is the shared
+    /// [`batch_counted_impl`](super::rtx) driver.
+    pub fn batch_counted(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
+        super::rtx::batch_counted_impl(
+            queries,
+            workers,
+            self.opts.sort_queries,
+            |l, r, scratch, c| self.rmq_counted(l, r, scratch, c),
+        )
+    }
+
+    /// Point update: rewrite one value, refit the owning block and the
+    /// summary. Prefer [`update_batch`](Self::update_batch) for more than
+    /// a handful of updates — it refits each touched block only once.
+    pub fn update(&mut self, i: usize, v: f32) {
+        self.update_batch(&[(i, v)]);
+    }
+
+    /// Batched point updates. Updates are grouped by block; each touched
+    /// block re-shapes its triangles and refits once, the block minimum
+    /// is rescanned, and the summary solver is refit once at the end.
+    /// Later updates to the same index win (applied in order).
+    pub fn update_batch(&mut self, updates: &[(usize, f32)]) {
+        if updates.is_empty() {
+            return;
+        }
+        let mut by_block: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
+        for &(i, v) in updates {
+            assert!(i < self.xs.len(), "update index {i} out of range");
+            self.xs[i] = v;
+            by_block.entry(i / self.bs).or_default().push((i % self.bs, v));
+        }
+        let mut summary_updates: Vec<(usize, f32)> = Vec::with_capacity(by_block.len());
+        for (b, local) in by_block {
+            let start = b * self.bs;
+            let end = start + self.block_len(b);
+            self.blocks[b].update(&local, &self.xs[start..end]);
+            let arg = super::naive_rmq(&self.xs, start, end - 1);
+            self.block_argmin[b] = arg as u32;
+            if self.block_min[b] != self.xs[arg] {
+                self.block_min[b] = self.xs[arg];
+                summary_updates.push((b, self.xs[arg]));
+            }
+        }
+        if !summary_updates.is_empty() {
+            if let Some(s) = &mut self.summary {
+                s.update(&summary_updates, &self.block_min);
+            }
+        }
+    }
+
+    /// Current value at an index (serving mutable arrays needs reads too).
+    pub fn value_of(&self, idx: u32) -> f32 {
+        self.xs[idx as usize]
+    }
+
+    /// Structural invariants of every block BVH and the summary BVH
+    /// (used by the update-path tests after refits).
+    pub fn validate(&self) -> Result<(), String> {
+        for (b, s) in self.blocks.iter().enumerate() {
+            s.validate().map_err(|e| format!("block {b}: {e}"))?;
+        }
+        if let Some(s) = &self.summary {
+            s.validate().map_err(|e| format!("summary: {e}"))?;
+        }
+        // The summary tables must mirror the value array.
+        for b in 0..self.nb {
+            let start = b * self.bs;
+            let end = start + self.block_len(b);
+            let arg = super::naive_rmq(&self.xs, start, end - 1);
+            if self.block_argmin[b] as usize != arg || self.block_min[b] != self.xs[arg] {
+                return Err(format!("block {b}: stale min table"));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl RmqSolver for ShardedRmq {
+    fn name(&self) -> &'static str {
+        "SHARDED"
+    }
+
+    fn rmq(&self, l: u32, r: u32) -> u32 {
+        let mut scratch = RtxScratch::new();
+        let mut c = Counters::default();
+        self.rmq_counted(l, r, &mut scratch, &mut c)
+    }
+
+    fn batch(&self, queries: &[Query], workers: usize) -> Vec<u32> {
+        self.batch_counted(queries, workers).0
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.blocks.iter().map(|b| b.memory_bytes()).sum::<usize>()
+            + self.summary.as_ref().map_or(0, |s| s.memory_bytes())
+            + self.block_min.len() * 4
+            + self.block_argmin.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::naive_rmq;
+    use crate::rmq::sparse_table::SparseTable;
+    use crate::util::proptest::{check, gen};
+    use crate::util::rng::Rng;
+
+    fn backends() -> [ShardedOptions; 3] {
+        [
+            ShardedOptions::default(),
+            ShardedOptions { layout: AccelLayout::Binary, ..Default::default() },
+            ShardedOptions { backend: ShardBackend::Sparse, ..Default::default() },
+        ]
+    }
+
+    #[test]
+    fn paper_example_all_backends() {
+        let xs = [9.0, 2.0, 7.0, 8.0, 4.0, 1.0, 3.0];
+        for base in backends() {
+            for bs in 1..=8usize {
+                let s = ShardedRmq::with_options(&xs, ShardedOptions { block_size: bs, ..base });
+                for l in 0..7u32 {
+                    for r in l..7u32 {
+                        assert_eq!(
+                            s.rmq(l, r) as usize,
+                            naive_rmq(&xs, l as usize, r as usize),
+                            "{:?} bs={bs} ({l},{r})",
+                            base.backend
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_block_size_is_sane() {
+        assert_eq!(auto_block_size(1), 4);
+        assert!(auto_block_size(1 << 12).is_power_of_two());
+        assert_eq!(auto_block_size(1 << 12), 64);
+        assert_eq!(auto_block_size(1 << 30), 1 << 12); // clamped
+        let s = ShardedRmq::new_auto(&[1.0, 0.5]);
+        assert_eq!(s.num_blocks(), 1);
+        assert_eq!(s.rmq(0, 1), 1);
+    }
+
+    #[test]
+    fn single_block_and_tiny_arrays() {
+        for base in backends() {
+            let one = ShardedRmq::with_options(&[0.3], ShardedOptions { block_size: 4, ..base });
+            assert_eq!(one.rmq(0, 0), 0);
+            assert_eq!(one.num_blocks(), 1);
+            let two = ShardedRmq::with_options(&[0.7, 0.7], base);
+            assert_eq!(two.rmq(0, 1), 0, "leftmost tie");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_random_block_sizes() {
+        check("sharded vs oracle", 40, |rng| {
+            let xs = gen::f32_array(rng, 1..=1500);
+            let n = xs.len();
+            let bs = 1usize << rng.range(0, 8);
+            let st = SparseTable::new(&xs);
+            for base in backends() {
+                let s = ShardedRmq::with_options(&xs, ShardedOptions { block_size: bs, ..base });
+                for _ in 0..16 {
+                    let (l, r) = gen::query(rng, n);
+                    let (got, want) = (s.rmq(l as u32, r as u32), st.rmq(l as u32, r as u32));
+                    if got != want {
+                        return Err(format!(
+                            "{:?} n={n} bs={bs} ({l},{r}): got {got} want {want}",
+                            base.backend
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn leftmost_ties_across_probe_kinds() {
+        // Duplicate-heavy arrays force ties between the left partial,
+        // summary, and right partial candidates.
+        check("sharded leftmost ties", 40, |rng| {
+            let xs = gen::dup_array(rng, 4..=600, 2);
+            let bs = 1usize << rng.range(1, 5);
+            let s = ShardedRmq::with_options(
+                &xs,
+                ShardedOptions { block_size: bs, ..Default::default() },
+            );
+            for _ in 0..24 {
+                let (l, r) = gen::query(rng, xs.len());
+                let want = naive_rmq(&xs, l, r);
+                let got = s.rmq(l as u32, r as u32) as usize;
+                if got != want {
+                    return Err(format!("bs={bs} ({l},{r}): got {got} want {want}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_counts_at_most_three_probes() {
+        let mut rng = Rng::new(90);
+        let xs = rng.uniform_f32_vec(1024);
+        let s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 32, ..Default::default() },
+        );
+        let queries: Vec<Query> = (0..256)
+            .map(|_| {
+                let l = rng.range(0, 1023);
+                (l as u32, rng.range(l, 1023) as u32)
+            })
+            .collect();
+        let st = SparseTable::new(&xs);
+        let (got, c) = s.batch_counted(&queries, 3);
+        assert_eq!(got, st.batch(&queries, 1));
+        assert!(c.rays >= 256 && c.rays <= 3 * 256, "rays = {}", c.rays);
+    }
+
+    #[test]
+    fn sorted_chunks_change_nothing() {
+        let mut rng = Rng::new(91);
+        let xs = rng.uniform_f32_vec(777);
+        let queries: Vec<Query> = (0..128)
+            .map(|_| {
+                let l = rng.range(0, 776);
+                (l as u32, rng.range(l, 776) as u32)
+            })
+            .collect();
+        let sorted = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, ..Default::default() },
+        );
+        let unsorted = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, sort_queries: false, ..Default::default() },
+        );
+        let (a, ca) = sorted.batch_counted(&queries, 3);
+        let (b, cb) = unsorted.batch_counted(&queries, 3);
+        assert_eq!(a, b);
+        assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn parallel_build_matches_serial_build() {
+        let xs = Rng::new(92).uniform_f32_vec(2048);
+        let par = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, build_workers: 4, ..Default::default() },
+        );
+        let ser = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, build_workers: 1, ..Default::default() },
+        );
+        let mut rng = Rng::new(93);
+        for _ in 0..200 {
+            let l = rng.range(0, 2047);
+            let r = rng.range(l, 2047);
+            assert_eq!(par.rmq(l as u32, r as u32), ser.rmq(l as u32, r as u32));
+        }
+    }
+
+    #[test]
+    fn updates_keep_answers_exact() {
+        check("sharded updates", 25, |rng| {
+            let xs = gen::f32_array(rng, 8..=512);
+            let n = xs.len();
+            let bs = 1usize << rng.range(1, 5);
+            for base in backends() {
+                let mut s =
+                    ShardedRmq::with_options(&xs, ShardedOptions { block_size: bs, ..base });
+                let mut local = xs.clone();
+                for _ in 0..6 {
+                    let batch: Vec<(usize, f32)> =
+                        (0..4).map(|_| (rng.range(0, n - 1), rng.f32())).collect();
+                    for &(i, v) in &batch {
+                        local[i] = v;
+                    }
+                    s.update_batch(&batch);
+                    for _ in 0..8 {
+                        let (l, r) = gen::query(rng, n);
+                        let want = naive_rmq(&local, l, r);
+                        let got = s.rmq(l as u32, r as u32) as usize;
+                        if got != want {
+                            return Err(format!(
+                                "{:?} bs={bs} post-update ({l},{r}): got {got} want {want}",
+                                base.backend
+                            ));
+                        }
+                    }
+                }
+                s.validate()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn duplicate_index_in_one_batch_last_wins() {
+        let xs = vec![0.5f32; 10];
+        let mut s =
+            ShardedRmq::with_options(&xs, ShardedOptions { block_size: 4, ..Default::default() });
+        s.update_batch(&[(3, 0.1), (3, 0.9), (7, 0.2)]);
+        assert_eq!(s.rmq(0, 9), 7);
+        assert_eq!(s.value_of(3), 0.9);
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn memory_accounts_blocks_and_summary() {
+        let xs = Rng::new(94).uniform_f32_vec(4096);
+        let s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, ..Default::default() },
+        );
+        assert_eq!(s.num_blocks(), 64);
+        // 64 block BVHs + summary BVH + two 64-entry tables.
+        assert!(s.memory_bytes() > 64 * 8);
+        let sparse = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions {
+                block_size: 64,
+                backend: ShardBackend::Sparse,
+                ..Default::default()
+            },
+        );
+        assert!(sparse.memory_bytes() < s.memory_bytes(), "sparse backend is smaller");
+    }
+}

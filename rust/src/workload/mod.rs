@@ -69,14 +69,64 @@ pub fn gen_array(n: usize, seed: u64) -> Vec<f32> {
     Rng::new(seed).uniform_f32_vec(n)
 }
 
+/// Place one query of the given length uniformly in `[0, n)`.
+///
+/// `len` is clamped to `[1, n]` first, so the boundary cases are exact
+/// rather than accidental: `len == n` pins `l = 0, r = n - 1` (the old
+/// expression `rng.range(0, n - len.min(n))` relied on the degenerate
+/// inclusive range `[0, 0]` and silently re-clamped `r`), and `n == 1`
+/// always yields `(0, 0)`.
+pub fn place_query(n: usize, len: usize, rng: &mut Rng) -> Query {
+    debug_assert!(n > 0, "empty array");
+    let len = len.clamp(1, n);
+    // Uniform over the n - len + 1 valid left endpoints.
+    let l = rng.range(0, n - len);
+    (l as u32, (l + len - 1) as u32)
+}
+
 /// A batch of queries under a range distribution.
 pub fn gen_queries(n: usize, count: usize, dist: RangeDist, rng: &mut Rng) -> Vec<Query> {
     (0..count)
         .map(|_| {
             let len = dist.sample_len(n, rng);
-            let l = rng.range(0, n - len.min(n)) as u32;
-            let r = (l as usize + len - 1).min(n - 1) as u32;
-            (l, r)
+            place_query(n, len, rng)
+        })
+        .collect()
+}
+
+/// A batch of point updates: uniform index, fresh uniform value in
+/// [0, 1) (the paper's input distribution) — the mutable-array workload
+/// the sharded engine's `update_batch` consumes.
+pub fn gen_updates(n: usize, count: usize, rng: &mut Rng) -> Vec<(usize, f32)> {
+    (0..count).map(|_| (rng.range(0, n - 1), rng.f32())).collect()
+}
+
+/// One operation of a mutable-array workload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Op {
+    Query(Query),
+    Update { i: u32, v: f32 },
+}
+
+/// Mixed query/update stream: each op is an update with probability
+/// `update_frac`, otherwise a query drawn from `dist`. This is the
+/// serving shape of the ROADMAP's mutable-array scenarios (paper §7.iii:
+/// "input arrays that change their values over time").
+pub fn gen_mixed(
+    n: usize,
+    count: usize,
+    update_frac: f64,
+    dist: RangeDist,
+    rng: &mut Rng,
+) -> Vec<Op> {
+    (0..count)
+        .map(|_| {
+            if rng.f64() < update_frac {
+                Op::Update { i: rng.range(0, n - 1) as u32, v: rng.f32() }
+            } else {
+                let len = dist.sample_len(n, rng);
+                Op::Query(place_query(n, len, rng))
+            }
         })
         .collect()
 }
@@ -130,6 +180,91 @@ mod tests {
         assert!((14.0..16.5).contains(&m.log2()), "2^{}", m.log2());
         let s = RangeDist::Small.mean_len(1 << 26);
         assert!((7.0..9.0).contains(&s.log2()), "2^{}", s.log2());
+    }
+
+    #[test]
+    fn place_query_pins_boundaries() {
+        let mut rng = Rng::new(5);
+        // len == n: the only valid placement is the full range.
+        for n in [1usize, 2, 7, 100] {
+            for _ in 0..20 {
+                assert_eq!(place_query(n, n, &mut rng), (0, n as u32 - 1));
+            }
+        }
+        // Oversized lengths clamp to the full range, zero clamps to 1.
+        assert_eq!(place_query(10, usize::MAX, &mut rng), (0, 9));
+        let (l, r) = place_query(10, 0, &mut rng);
+        assert_eq!(l, r);
+        // n == 1 always yields (0, 0) whatever the requested length.
+        for len in [0usize, 1, 2, 1000] {
+            assert_eq!(place_query(1, len, &mut rng), (0, 0));
+        }
+        // len == 1 covers every position, including both endpoints.
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..2000 {
+            let (l, r) = place_query(8, 1, &mut rng);
+            assert_eq!(l, r);
+            lo_seen |= l == 0;
+            hi_seen |= l == 7;
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn degenerate_n_queries_are_valid() {
+        // Regression for the old `rng.range(0, n - len.min(n))` boundary
+        // expression: n = 1 and full-length draws must stay in range for
+        // every distribution (Large samples len = n with probability
+        // 1/n, so small n hits it fast).
+        let mut rng = Rng::new(6);
+        for dist in RangeDist::all() {
+            for n in [1usize, 2, 3] {
+                let qs = gen_queries(n, 500, dist, &mut rng);
+                assert!(crate::rmq::validate_queries(n, &qs).is_ok(), "{dist:?} n={n}");
+                if n == 1 {
+                    assert!(qs.iter().all(|&q| q == (0, 0)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn updates_are_in_range_and_uniformish() {
+        let mut rng = Rng::new(10);
+        let ups = gen_updates(64, 2000, &mut rng);
+        assert_eq!(ups.len(), 2000);
+        let mut seen = [false; 64];
+        for &(i, v) in &ups {
+            assert!(i < 64);
+            assert!((0.0..1.0).contains(&v));
+            seen[i] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all indices hit");
+    }
+
+    #[test]
+    fn mixed_stream_respects_fraction_and_validity() {
+        let mut rng = Rng::new(11);
+        let n = 1000;
+        let ops = gen_mixed(n, 4000, 0.25, RangeDist::Small, &mut rng);
+        let updates = ops.iter().filter(|o| matches!(o, Op::Update { .. })).count();
+        let frac = updates as f64 / ops.len() as f64;
+        assert!((0.2..0.3).contains(&frac), "update fraction {frac}");
+        for op in &ops {
+            match *op {
+                Op::Query((l, r)) => assert!(l <= r && (r as usize) < n),
+                Op::Update { i, v } => {
+                    assert!((i as usize) < n && (0.0..1.0).contains(&v))
+                }
+            }
+        }
+        // Pure-query and pure-update endpoints.
+        assert!(gen_mixed(n, 50, 0.0, RangeDist::Large, &mut rng)
+            .iter()
+            .all(|o| matches!(o, Op::Query(_))));
+        assert!(gen_mixed(n, 50, 1.0, RangeDist::Large, &mut rng)
+            .iter()
+            .all(|o| matches!(o, Op::Update { .. })));
     }
 
     #[test]

@@ -11,6 +11,7 @@ use rtxrmq::bvh::{AccelLayout, Builder};
 use rtxrmq::geometry::flat::{build_scene, ray_for_query, ray_origin_x};
 use rtxrmq::rmq::naive_rmq;
 use rtxrmq::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
+use rtxrmq::rmq::sharded::{ShardBackend, ShardedOptions, ShardedRmq};
 use rtxrmq::rmq::{Query, RmqSolver};
 use rtxrmq::util::proptest::{check, gen};
 
@@ -115,6 +116,65 @@ fn solver_matrix_agrees_including_refits() {
                     }
                 }
             }
+        }
+        Ok(())
+    });
+}
+
+/// The same matrix discipline for the two-level sharded engine: every
+/// (layout × backend) shard configuration must agree with the naive
+/// oracle before and after batched-update refits, and the refitted
+/// per-block BVHs must keep their structural invariants.
+#[test]
+fn sharded_matrix_agrees_including_refits() {
+    check("sharded matrix agrees incl. refits", 20, |rng| {
+        let mut xs = gen::dup_array(rng, 8..=512, 4);
+        let n = xs.len();
+        let bs = 1usize << rng.range(1, 5);
+        let queries: Vec<Query> = (0..32)
+            .map(|_| {
+                let (l, r) = gen::query(rng, n);
+                (l as u32, r as u32)
+            })
+            .collect();
+        let configs = [
+            (AccelLayout::Wide, ShardBackend::Rtx),
+            (AccelLayout::Binary, ShardBackend::Rtx),
+            (AccelLayout::Wide, ShardBackend::Sparse),
+        ];
+        let mut solvers: Vec<ShardedRmq> = configs
+            .iter()
+            .map(|&(layout, backend)| {
+                ShardedRmq::with_options(
+                    &xs,
+                    ShardedOptions { block_size: bs, layout, backend, ..Default::default() },
+                )
+            })
+            .collect();
+        let want: Vec<u32> = queries
+            .iter()
+            .map(|&(l, r)| naive_rmq(&xs, l as usize, r as usize) as u32)
+            .collect();
+        for (s, cfg) in solvers.iter().zip(&configs) {
+            if s.batch(&queries, 2) != want {
+                return Err(format!("{cfg:?} bs={bs}: pre-refit mismatch"));
+            }
+        }
+        let updates: Vec<(usize, f32)> =
+            (0..5).map(|_| (rng.range(0, n - 1), rng.f32())).collect();
+        for &(i, v) in &updates {
+            xs[i] = v;
+        }
+        let want: Vec<u32> = queries
+            .iter()
+            .map(|&(l, r)| naive_rmq(&xs, l as usize, r as usize) as u32)
+            .collect();
+        for (s, cfg) in solvers.iter_mut().zip(&configs) {
+            s.update_batch(&updates);
+            if s.batch(&queries, 2) != want {
+                return Err(format!("{cfg:?} bs={bs}: post-refit mismatch"));
+            }
+            s.validate().map_err(|e| format!("{cfg:?} bs={bs}: {e}"))?;
         }
         Ok(())
     });
