@@ -9,16 +9,22 @@
 //! quantity the wide-SoA layout and the blocked decomposition are meant
 //! to improve — and cross-checks that every solver column returns
 //! identical answers on every grid point.
+//!
+//! With `--update-frac > 0` every grid point also times the write path
+//! (`upd_ns_per_op`): a batch of `batch × frac` point updates applied to
+//! each solver (triangle re-shape + refit), then rolled back off the
+//! clock so the read measurements stay comparable.
 
 use crate::bvh::traverse::Counters;
 use crate::bvh::AccelLayout;
+use crate::coordinator::engine::ShardBlock;
 use crate::geometry::precision::{best_block_size, OptixLimits};
 use crate::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
 use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
 use crate::rmq::Query;
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
-use crate::workload::gen_array;
+use crate::workload::{gen_array, gen_updates};
 use std::path::Path;
 
 /// Stable column labels for the grid's solver axis.
@@ -33,8 +39,11 @@ pub struct SmokeCfg {
     pub batches: Vec<usize>,
     pub workers: usize,
     pub seed: u64,
-    /// Sharded column's block size; 0 = auto (√n).
-    pub shard_block: usize,
+    /// Sharded column's block-size rule (`--shard-block`).
+    pub shard_block: ShardBlock,
+    /// Updates per grid point as a fraction of the batch size; 0
+    /// disables the write-path column.
+    pub update_frac: f64,
 }
 
 impl Default for SmokeCfg {
@@ -44,7 +53,8 @@ impl Default for SmokeCfg {
             batches: vec![1 << 12, 1 << 16],
             workers: crate::util::pool::default_workers(),
             seed: 0xBE9C,
-            shard_block: 0,
+            shard_block: ShardBlock::Sqrt,
+            update_frac: 0.0,
         }
     }
 }
@@ -57,6 +67,8 @@ pub struct SmokePoint {
     pub n: usize,
     pub batch: usize,
     pub ns_per_query: f64,
+    /// Wall-clock ns per applied point update (0 when not measured).
+    pub upd_ns_per_op: f64,
     pub counters: Counters,
 }
 
@@ -85,11 +97,11 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
         } else {
             RtxMode::Flat
         };
-        let sharded = ShardedRmq::with_options(
+        let mut sharded = ShardedRmq::with_options(
             &xs,
-            ShardedOptions { block_size: cfg.shard_block, ..Default::default() },
+            ShardedOptions { block_size: cfg.shard_block.resolve(n), ..Default::default() },
         );
-        let rtx: Vec<(AccelLayout, RtxRmq)> = AccelLayout::all()
+        let mut rtx: Vec<(AccelLayout, RtxRmq)> = AccelLayout::all()
             .into_iter()
             .map(|layout| {
                 let opts = RtxOptions { mode, layout, ..Default::default() };
@@ -123,6 +135,7 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                         n,
                         batch,
                         ns_per_query: wall_ns / batch as f64,
+                        upd_ns_per_op: 0.0,
                         counters,
                     });
                 };
@@ -134,6 +147,31 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                 measure(label, &|q, w| solver.batch_counted(q, w), &mut points);
             }
             measure(LABEL_SHARDED, &|q, w| sharded.batch_counted(q, w), &mut points);
+
+            // Write path: time one update batch per solver, then roll the
+            // values back off the clock so later grid points (and the
+            // cross-column answer check) still see the original array.
+            if cfg.update_frac > 0.0 {
+                let count = ((batch as f64 * cfg.update_frac) as usize).max(1);
+                let updates = gen_updates(n, count, &mut rng);
+                let rollback: Vec<(usize, f32)> =
+                    updates.iter().map(|&(i, _)| (i, xs[i])).collect();
+                // The grid point pushed one row per RTX layout plus the
+                // sharded row, in that order — mirror it structurally.
+                let base = points.len() - (rtx.len() + 1);
+                for (slot, (_, solver)) in rtx.iter_mut().enumerate() {
+                    let t0 = std::time::Instant::now();
+                    solver.update_values(&updates);
+                    points[base + slot].upd_ns_per_op =
+                        t0.elapsed().as_nanos() as f64 / count as f64;
+                    solver.update_values(&rollback);
+                }
+                let t0 = std::time::Instant::now();
+                sharded.update_batch_with(&updates, cfg.workers);
+                points[base + rtx.len()].upd_ns_per_op =
+                    t0.elapsed().as_nanos() as f64 / count as f64;
+                sharded.update_batch_with(&rollback, cfg.workers);
+            }
         }
     }
     points
@@ -174,6 +212,7 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
                 ("n", Json::from(p.n)),
                 ("batch", Json::from(p.batch)),
                 ("ns_per_query", Json::from(p.ns_per_query)),
+                ("upd_ns_per_op", Json::from(p.upd_ns_per_op)),
                 ("nodes_visited", Json::from(p.counters.nodes_visited)),
                 ("aabb_tests", Json::from(p.counters.aabb_tests)),
                 ("tri_tests", Json::from(p.counters.tri_tests)),
@@ -199,9 +238,50 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
         ("engine", Json::from("RTXRMQ")),
         ("seed", Json::from(cfg.seed)),
         ("workers", Json::from(cfg.workers)),
+        ("update_frac", Json::from(cfg.update_frac)),
         ("points", Json::Arr(point_rows)),
         ("speedups", Json::Arr(speedup_rows)),
     ])
+}
+
+/// Render the grid as a GitHub-flavoured markdown table (the bench CI
+/// job appends this to `$GITHUB_STEP_SUMMARY`).
+pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
+    let mut s = String::from("## rtxrmq bench-smoke\n\n");
+    s.push_str(&format!(
+        "seed `{:#x}`, {} workers, update fraction {}\n\n",
+        cfg.seed, cfg.workers, cfg.update_frac
+    ));
+    s.push_str("| solver | n | batch | ns/query | ns/update | speedup vs binary |\n");
+    s.push_str("|---|---:|---:|---:|---:|---:|\n");
+    let sp = speedups(points);
+    for p in points {
+        let speedup = if p.layout == LABEL_BINARY {
+            "1.00x".to_string()
+        } else {
+            sp.iter()
+                .find(|&&(n, b, label, ..)| n == p.n && b == p.batch && label == p.layout)
+                .map_or("-".to_string(), |&(.., s)| format!("{s:.2}x"))
+        };
+        let upd = if p.upd_ns_per_op > 0.0 {
+            format!("{:.1}", p.upd_ns_per_op)
+        } else {
+            "-".to_string()
+        };
+        s.push_str(&format!(
+            "| {} | {} | {} | {:.1} | {} | {} |\n",
+            p.layout, p.n, p.batch, p.ns_per_query, upd, speedup
+        ));
+    }
+    s
+}
+
+/// Append markdown to a summary file (creating it if needed) — the
+/// `$GITHUB_STEP_SUMMARY` contract is append-only.
+pub fn append_summary_md(path: &Path, md: &str) -> std::io::Result<()> {
+    use std::io::Write as _;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(md.as_bytes())
 }
 
 /// Write the JSON report (creating parent directories).
@@ -225,7 +305,8 @@ mod tests {
             batches: vec![128],
             workers: 2,
             seed: 7,
-            shard_block: 32,
+            shard_block: ShardBlock::Fixed(32),
+            update_frac: 0.0,
         };
         let points = run_smoke(&cfg);
         // Three solver columns × one n × one batch.
@@ -234,6 +315,7 @@ mod tests {
             assert!(points.iter().any(|p| p.layout == label), "{label} column missing");
         }
         assert!(points.iter().all(|p| p.ns_per_query > 0.0));
+        assert!(points.iter().all(|p| p.upd_ns_per_op == 0.0), "no write path measured");
         assert!(points.iter().all(|p| p.counters.rays >= 128));
         let sp = speedups(&points);
         assert_eq!(sp.len(), 2); // wide + sharded vs binary
@@ -251,10 +333,42 @@ mod tests {
             .any(|p| p.get("layout").and_then(|l| l.as_str()) == Some(LABEL_SHARDED)));
         for p in pts {
             assert!(p.get("ns_per_query").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert!(p.get("upd_ns_per_op").and_then(|v| v.as_f64()).is_some());
             assert!(p.get("nodes_visited").and_then(|v| v.as_u64()).is_some());
             assert!(p.get("aabb_tests").and_then(|v| v.as_u64()).is_some());
             assert!(p.get("tri_tests").and_then(|v| v.as_u64()).is_some());
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn update_frac_measures_write_path_without_skewing_reads() {
+        let cfg = SmokeCfg {
+            ns: vec![512],
+            batches: vec![128, 128],
+            workers: 2,
+            seed: 9,
+            shard_block: ShardBlock::Fixed(32),
+            update_frac: 0.25,
+        };
+        // Two identical batch sizes: the rollback must restore the array
+        // so both grid points agree with each other (run_smoke asserts
+        // cross-column agreement internally on each one).
+        let points = run_smoke(&cfg);
+        assert_eq!(points.len(), 6);
+        assert!(
+            points.iter().all(|p| p.upd_ns_per_op > 0.0),
+            "every column measures the write path"
+        );
+        let md = summary_md(&cfg, &points);
+        assert!(md.contains("ns/update") && md.contains("sharded"));
+        let dir = std::env::temp_dir().join(format!("rtxrmq-summary-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("summary.md");
+        append_summary_md(&path, &md).unwrap();
+        append_summary_md(&path, &md).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("## rtxrmq bench-smoke").count(), 2, "append, not truncate");
         std::fs::remove_dir_all(&dir).ok();
     }
 

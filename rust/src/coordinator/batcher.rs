@@ -3,28 +3,47 @@
 //! vLLM-router pattern adapted to RMQ batches).
 //!
 //! Semantics: requests are grouped FIFO; a group closes when it reaches
-//! `max_batch_queries` or `max_wait` elapses after its first request.
-//! Queries keep request order inside the fused batch, so answers can be
-//! split back losslessly.
+//! `max_batch_queries` ops or `max_wait` elapses after its first
+//! request. A request carries an ordered *op stream* (queries and point
+//! updates); the fused batch flattens the streams in arrival order into
+//! [`Segment`]s — maximal same-kind runs. Query segments keep request
+//! order, so answers can be split back losslessly; an update segment is
+//! a **fence**: the server applies it between the neighbouring query
+//! segments, so queries before it never see its values and queries
+//! after it always do.
 
 use crate::rmq::Query;
+use crate::workload::Op;
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
 
-/// One client request.
+/// One client request: an ordered stream of queries and updates.
 pub struct Request {
     pub id: u64,
-    pub queries: Vec<Query>,
+    pub ops: Vec<Op>,
     /// Where to deliver the response.
     pub reply: SyncSender<Response>,
+}
+
+impl Request {
+    /// A read-only request (the common case).
+    pub fn queries(id: u64, queries: Vec<Query>, reply: SyncSender<Response>) -> Request {
+        Request { id, ops: queries.into_iter().map(Op::Query).collect(), reply }
+    }
 }
 
 /// Answer for one request.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
+    /// One answer per *query* op, in op order.
     pub answers: Vec<u32>,
-    /// Engine that served the fused batch.
+    /// Point updates applied on behalf of this request.
+    pub updates_applied: usize,
+    /// Engine that served the fused batch's *last* query segment (the
+    /// mutable engine's name for update-only batches). Batch-level: a
+    /// mixed fused batch can span engines across a fence — the
+    /// per-segment truth lives in the coordinator metrics.
     pub engine: &'static str,
     /// End-to-end latency of the fused batch (ns).
     pub batch_latency_ns: u64,
@@ -33,7 +52,7 @@ pub struct Response {
 /// Batching configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherCfg {
-    /// Close a group at this many queries.
+    /// Close a group at this many ops.
     pub max_batch_queries: usize,
     /// ... or when this much time passed since the group opened.
     pub max_wait: Duration,
@@ -52,32 +71,69 @@ impl Default for BatcherCfg {
     }
 }
 
-/// A closed group of requests to run as one engine batch.
+/// A maximal run of same-kind ops inside a fused batch. Query segments
+/// are solved as one engine batch; update segments are applied between
+/// them (the fence).
+#[derive(Clone, Debug)]
+pub enum Segment {
+    Queries(Vec<Query>),
+    Updates(Vec<(usize, f32)>),
+}
+
+/// A closed group of requests to run as one fused batch.
 pub struct FusedBatch {
     pub requests: Vec<Request>,
-    pub queries: Vec<Query>,
-    /// Per-request query counts, for splitting answers back.
-    pub splits: Vec<usize>,
+    /// The flattened op streams as alternating query/update segments.
+    pub segments: Vec<Segment>,
+    /// Per-request query-op counts, for splitting answers back.
+    pub query_splits: Vec<usize>,
+    /// Per-request update-op counts (reported in each response).
+    pub update_splits: Vec<usize>,
 }
 
 impl FusedBatch {
     fn from_requests(requests: Vec<Request>) -> FusedBatch {
-        let mut queries = Vec::new();
-        let mut splits = Vec::with_capacity(requests.len());
+        let mut segments: Vec<Segment> = Vec::new();
+        let mut query_splits = Vec::with_capacity(requests.len());
+        let mut update_splits = Vec::with_capacity(requests.len());
         for r in &requests {
-            splits.push(r.queries.len());
-            queries.extend_from_slice(&r.queries);
+            let (mut nq, mut nu) = (0usize, 0usize);
+            for op in &r.ops {
+                match *op {
+                    Op::Query(q) => {
+                        nq += 1;
+                        match segments.last_mut() {
+                            Some(Segment::Queries(qs)) => qs.push(q),
+                            _ => segments.push(Segment::Queries(vec![q])),
+                        }
+                    }
+                    Op::Update { i, v } => {
+                        nu += 1;
+                        match segments.last_mut() {
+                            Some(Segment::Updates(us)) => us.push((i as usize, v)),
+                            _ => segments.push(Segment::Updates(vec![(i as usize, v)])),
+                        }
+                    }
+                }
+            }
+            query_splits.push(nq);
+            update_splits.push(nu);
         }
-        FusedBatch { requests, queries, splits }
+        FusedBatch { requests, segments, query_splits, update_splits }
     }
 
-    /// Split a flat answer vector back per request (answer slices align
-    /// with `splits`).
+    /// Total query ops across the fused batch.
+    pub fn total_queries(&self) -> usize {
+        self.query_splits.iter().sum()
+    }
+
+    /// Split a flat answer vector (one entry per query op, in stream
+    /// order) back per request.
     pub fn split_answers(&self, answers: &[u32]) -> Vec<Vec<u32>> {
-        debug_assert_eq!(answers.len(), self.queries.len());
-        let mut out = Vec::with_capacity(self.splits.len());
+        debug_assert_eq!(answers.len(), self.total_queries());
+        let mut out = Vec::with_capacity(self.query_splits.len());
         let mut off = 0;
-        for &len in &self.splits {
+        for &len in &self.query_splits {
             out.push(answers[off..off + len].to_vec());
             off += len;
         }
@@ -90,7 +146,7 @@ impl FusedBatch {
 pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherCfg) -> Option<FusedBatch> {
     // Block for the first request of the group.
     let first = rx.recv().ok()?;
-    let mut total = first.queries.len();
+    let mut total = first.ops.len();
     let mut group = vec![first];
     let opened = Instant::now();
     while total < cfg.max_batch_queries {
@@ -100,7 +156,7 @@ pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherCfg) -> Option<FusedBatch
         }
         match rx.recv_timeout(left) {
             Ok(req) => {
-                total += req.queries.len();
+                total += req.ops.len();
                 group.push(req);
             }
             Err(RecvTimeoutError::Timeout) => break,
@@ -117,7 +173,12 @@ mod tests {
 
     fn req(id: u64, queries: Vec<Query>) -> (Request, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::sync_channel(1);
-        (Request { id, queries, reply: tx }, rx)
+        (Request::queries(id, queries, tx), rx)
+    }
+
+    fn mixed(id: u64, ops: Vec<Op>) -> (Request, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::sync_channel(1);
+        (Request { id, ops, reply: tx }, rx)
     }
 
     #[test]
@@ -125,25 +186,70 @@ mod tests {
         let (r1, _k1) = req(1, vec![(0, 1), (2, 3)]);
         let (r2, _k2) = req(2, vec![(4, 5)]);
         let fused = FusedBatch::from_requests(vec![r1, r2]);
-        assert_eq!(fused.queries, vec![(0, 1), (2, 3), (4, 5)]);
+        // Query-only requests fuse into one segment.
+        assert_eq!(fused.segments.len(), 1);
+        match &fused.segments[0] {
+            Segment::Queries(qs) => assert_eq!(qs, &vec![(0, 1), (2, 3), (4, 5)]),
+            s => panic!("expected query segment, got {s:?}"),
+        }
         let split = fused.split_answers(&[10, 20, 30]);
         assert_eq!(split, vec![vec![10, 20], vec![30]]);
+        assert_eq!(fused.update_splits, vec![0, 0]);
+    }
+
+    #[test]
+    fn updates_fence_query_runs_into_segments() {
+        let (r1, _k1) = mixed(
+            1,
+            vec![
+                Op::Query((0, 1)),
+                Op::Update { i: 3, v: 0.5 },
+                Op::Update { i: 4, v: 0.25 },
+                Op::Query((2, 3)),
+            ],
+        );
+        let (r2, _k2) = mixed(2, vec![Op::Query((4, 5)), Op::Update { i: 0, v: 0.1 }]);
+        let fused = FusedBatch::from_requests(vec![r1, r2]);
+        // q | uu | q q | u — the trailing query run merges across the
+        // request boundary (r2 arrived later, so seeing r1's updates is
+        // exactly arrival-order consistency).
+        assert_eq!(fused.segments.len(), 4);
+        match (&fused.segments[0], &fused.segments[1], &fused.segments[2], &fused.segments[3]) {
+            (
+                Segment::Queries(a),
+                Segment::Updates(u1),
+                Segment::Queries(b),
+                Segment::Updates(u2),
+            ) => {
+                assert_eq!(a, &vec![(0, 1)]);
+                assert_eq!(u1, &vec![(3, 0.5), (4, 0.25)]);
+                assert_eq!(b, &vec![(2, 3), (4, 5)]);
+                assert_eq!(u2, &vec![(0, 0.1)]);
+            }
+            s => panic!("unexpected segment shape {s:?}"),
+        }
+        assert_eq!(fused.query_splits, vec![2, 1]);
+        assert_eq!(fused.update_splits, vec![2, 1]);
+        assert_eq!(fused.total_queries(), 3);
+        let split = fused.split_answers(&[7, 8, 9]);
+        assert_eq!(split, vec![vec![7, 8], vec![9]]);
     }
 
     #[test]
     fn next_batch_closes_on_size() {
         let (tx, rx) = mpsc::sync_channel::<Request>(16);
-        let cfg = BatcherCfg { max_batch_queries: 3, max_wait: Duration::from_secs(5), queue_cap: 16 };
+        let cfg =
+            BatcherCfg { max_batch_queries: 3, max_wait: Duration::from_secs(5), queue_cap: 16 };
         for id in 0..4 {
             let (r, _keep) = req(id, vec![(0, 0), (1, 1)]);
             std::mem::forget(_keep); // keep reply channel alive
             tx.send(r).unwrap();
         }
         let b = next_batch(&rx, &cfg).unwrap();
-        // First request has 2 >= ... group closes at >= 3 queries: two
-        // requests (4 queries) since the check happens before pulling.
+        // First request has 2 >= ... group closes at >= 3 ops: two
+        // requests (4 ops) since the check happens before pulling.
         assert_eq!(b.requests.len(), 2);
-        assert_eq!(b.queries.len(), 4);
+        assert_eq!(b.total_queries(), 4);
         // Remaining two requests form the next group.
         let b2 = next_batch(&rx, &cfg).unwrap();
         assert_eq!(b2.requests.len(), 2);
@@ -179,18 +285,53 @@ mod tests {
             let mut expected: Vec<Vec<u32>> = Vec::new();
             let mut counter = 0u32;
             for id in 0..rng.range(1, 8) {
-                let qn = rng.range(0, 10);
-                let qs: Vec<Query> = (0..qn).map(|k| (k as u32, k as u32 + 1)).collect();
-                let (r, _keep) = req(id as u64, qs);
+                // Random mixed stream; updates get no answer slot.
+                let on = rng.range(0, 10);
+                let mut ops = Vec::with_capacity(on);
+                let mut answers = Vec::new();
+                for k in 0..on {
+                    if rng.f64() < 0.3 {
+                        ops.push(Op::Update { i: k as u32, v: 0.5 });
+                    } else {
+                        ops.push(Op::Query((k as u32, k as u32 + 1)));
+                        counter += 1;
+                        answers.push(counter);
+                    }
+                }
+                let (r, _keep) = mixed(id as u64, ops);
                 std::mem::forget(_keep);
-                let answers: Vec<u32> = (0..qn).map(|_| {
-                    counter += 1;
-                    counter
-                }).collect();
                 expected.push(answers);
                 requests.push(r);
             }
             let fused = FusedBatch::from_requests(requests);
+            // Segments must partition the op stream: alternating kinds,
+            // never empty, counts adding up.
+            let mut prev_is_query: Option<bool> = None;
+            let (mut nq, mut nu) = (0usize, 0usize);
+            for seg in &fused.segments {
+                let is_query = matches!(seg, Segment::Queries(_));
+                if prev_is_query == Some(is_query) {
+                    return Err("adjacent segments of the same kind".into());
+                }
+                prev_is_query = Some(is_query);
+                match seg {
+                    Segment::Queries(qs) => {
+                        if qs.is_empty() {
+                            return Err("empty query segment".into());
+                        }
+                        nq += qs.len();
+                    }
+                    Segment::Updates(us) => {
+                        if us.is_empty() {
+                            return Err("empty update segment".into());
+                        }
+                        nu += us.len();
+                    }
+                }
+            }
+            if nq != fused.total_queries() || nu != fused.update_splits.iter().sum::<usize>() {
+                return Err("segment counts disagree with splits".into());
+            }
             let flat: Vec<u32> = expected.iter().flatten().copied().collect();
             if fused.split_answers(&flat) != expected {
                 return Err("split mismatch".into());

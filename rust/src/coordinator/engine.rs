@@ -3,6 +3,7 @@
 //! queries", §5.2 — the same build-once/query-many contract holds for all
 //! engines).
 
+use crate::model::rtcost::{RtCostModel, ShardWorkload};
 use crate::rmq::exhaustive::Exhaustive;
 use crate::rmq::hrmq::Hrmq;
 use crate::rmq::lca::LcaRmq;
@@ -10,8 +11,10 @@ use crate::rmq::rtx::RtxRmq;
 use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::runtime::Runtime;
+use crate::workload::RangeDist;
 use anyhow::{anyhow, Result};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, RwLock};
 
 /// Engine identifiers (stable names used by the router, CLI and metrics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -67,6 +70,16 @@ pub trait Engine: Send + Sync {
     fn solve(&self, queries: &[Query], workers: usize) -> Result<Vec<u32>>;
     /// Auxiliary structure bytes (Table 2).
     fn memory_bytes(&self) -> usize;
+    /// Whether this engine can apply point updates in place (the
+    /// mutable serving path routes update batches to such engines).
+    fn supports_updates(&self) -> bool {
+        false
+    }
+    /// Apply a batch of point updates. Only engines reporting
+    /// [`supports_updates`](Self::supports_updates) implement this.
+    fn update_batch(&self, _updates: &[(usize, f32)], _workers: usize) -> Result<()> {
+        Err(anyhow!("engine {} is immutable", self.kind().name()))
+    }
 }
 
 /// Blanket engine over any RmqSolver.
@@ -135,11 +148,82 @@ impl Engine for XlaEngine {
     }
 }
 
+/// The sharded engine is the set's only engine with a write path:
+/// queries share the read lock, an update batch takes the write lock,
+/// so readers never observe a half-applied batch (the lock *is* the
+/// fence at the engine level; op-stream ordering is the server's job).
+struct ShardedEngine {
+    inner: RwLock<ShardedRmq>,
+}
+
+impl Engine for ShardedEngine {
+    fn kind(&self) -> EngineKind {
+        EngineKind::Sharded
+    }
+
+    fn solve(&self, queries: &[Query], workers: usize) -> Result<Vec<u32>> {
+        Ok(self.inner.read().expect("sharded lock").batch(queries, workers))
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.inner.read().expect("sharded lock").memory_bytes()
+    }
+
+    fn supports_updates(&self) -> bool {
+        true
+    }
+
+    fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<()> {
+        self.inner.write().expect("sharded lock").update_batch_with(updates, workers);
+        Ok(())
+    }
+}
+
+/// How the sharded engine's block size is chosen (CLI `--shard-block`).
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum ShardBlock {
+    /// The √n power-of-two default (`rmq::sharded::auto_block_size`).
+    #[default]
+    Sqrt,
+    /// Explicit block size.
+    Fixed(usize),
+    /// `--shard-block auto`: minimise the modeled cost per op from
+    /// [`RtCostModel`] — probe work at the expected range distribution
+    /// plus amortised refit work at the expected update rate.
+    Auto { dist: RangeDist, update_frac: f64 },
+}
+
+impl ShardBlock {
+    /// Parse a `--shard-block` value: `auto`, an explicit size (scaled
+    /// notation allowed), or `0` for the √n default.
+    pub fn parse(s: &str, dist: RangeDist, update_frac: f64) -> Option<ShardBlock> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Some(ShardBlock::Auto { dist, update_frac });
+        }
+        match crate::util::cli::parse_scaled(s)? as usize {
+            0 => Some(ShardBlock::Sqrt),
+            b => Some(ShardBlock::Fixed(b)),
+        }
+    }
+
+    /// Resolve to a concrete `ShardedOptions::block_size` (0 = √n auto).
+    pub fn resolve(&self, n: usize) -> usize {
+        match *self {
+            ShardBlock::Sqrt => 0,
+            ShardBlock::Fixed(b) => b,
+            ShardBlock::Auto { dist, update_frac } => RtCostModel::default().tune_shard_block(
+                n,
+                &ShardWorkload { mean_range: dist.mean_len(n), update_frac },
+            ),
+        }
+    }
+}
+
 /// Per-set build knobs (CLI-facing).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EngineCfg {
-    /// Block size of the sharded engine; 0 = auto (√n, power of two).
-    pub shard_block: usize,
+    /// Block-size rule of the sharded engine.
+    pub shard_block: ShardBlock,
 }
 
 /// All engines for one array. The XLA engine is optional (artifacts may
@@ -147,6 +231,11 @@ pub struct EngineCfg {
 pub struct EngineSet {
     pub n: usize,
     engines: Vec<Box<dyn Engine>>,
+    /// Set once any update batch has been applied. From then on only the
+    /// mutable engine's view matches the served values — the static
+    /// engines were built from the original array and are stale by
+    /// definition (the router pins query segments accordingly).
+    mutated: AtomicBool,
 }
 
 impl EngineSet {
@@ -160,11 +249,14 @@ impl EngineSet {
     pub fn build_with(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: EngineCfg) -> EngineSet {
         let sharded = ShardedRmq::with_options(
             xs,
-            ShardedOptions { block_size: cfg.shard_block, ..Default::default() },
+            ShardedOptions {
+                block_size: cfg.shard_block.resolve(xs.len()),
+                ..Default::default()
+            },
         );
         let mut engines: Vec<Box<dyn Engine>> = vec![
             Box::new(SolverEngine { kind: EngineKind::Rtx, solver: RtxRmq::new_auto(xs) }),
-            Box::new(SolverEngine { kind: EngineKind::Sharded, solver: sharded }),
+            Box::new(ShardedEngine { inner: RwLock::new(sharded) }),
             Box::new(SolverEngine { kind: EngineKind::Lca, solver: LcaRmq::new(xs) }),
             Box::new(SolverEngine { kind: EngineKind::Hrmq, solver: Hrmq::new(xs) }),
             Box::new(SolverEngine { kind: EngineKind::Exhaustive, solver: Exhaustive::new(xs) }),
@@ -174,7 +266,7 @@ impl EngineSet {
                 engines.push(Box::new(x));
             }
         }
-        EngineSet { n: xs.len(), engines }
+        EngineSet { n: xs.len(), engines, mutated: AtomicBool::new(false) }
     }
 
     pub fn get(&self, kind: EngineKind) -> Option<&dyn Engine> {
@@ -183,6 +275,24 @@ impl EngineSet {
 
     pub fn kinds(&self) -> Vec<EngineKind> {
         self.engines.iter().map(|e| e.kind()).collect()
+    }
+
+    /// Whether any update batch has been applied to this set.
+    pub fn mutated(&self) -> bool {
+        self.mutated.load(Ordering::Acquire)
+    }
+
+    /// Route an update batch to the first engine with a write path and
+    /// mark the set mutated. Returns the engine that applied it.
+    pub fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<EngineKind> {
+        let engine = self
+            .engines
+            .iter()
+            .find(|e| e.supports_updates())
+            .ok_or_else(|| anyhow!("no mutable engine built"))?;
+        engine.update_batch(updates, workers)?;
+        self.mutated.store(true, Ordering::Release);
+        Ok(engine.kind())
     }
 }
 
@@ -232,11 +342,70 @@ mod tests {
     #[test]
     fn shard_block_knob_reaches_engine() {
         let xs = Rng::new(63).uniform_f32_vec(512);
-        let set = EngineSet::build_with(&xs, None, EngineCfg { shard_block: 32 });
+        let set =
+            EngineSet::build_with(&xs, None, EngineCfg { shard_block: ShardBlock::Fixed(32) });
         let e = set.get(EngineKind::Sharded).expect("sharded built");
         let queries = vec![(0u32, 511u32), (31, 32), (100, 100)];
         assert_eq!(e.solve(&queries, 2).unwrap(), oracle_batch(&xs, &queries));
         assert!(e.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn shard_block_parses_and_resolves() {
+        let dist = RangeDist::Small;
+        assert_eq!(ShardBlock::parse("64", dist, 0.0), Some(ShardBlock::Fixed(64)));
+        assert_eq!(ShardBlock::parse("2^8", dist, 0.0), Some(ShardBlock::Fixed(256)));
+        assert_eq!(ShardBlock::parse("0", dist, 0.0), Some(ShardBlock::Sqrt));
+        assert_eq!(ShardBlock::parse("nope", dist, 0.0), None);
+        assert_eq!(
+            ShardBlock::parse("AUTO", dist, 0.25),
+            Some(ShardBlock::Auto { dist, update_frac: 0.25 })
+        );
+        assert_eq!(ShardBlock::Sqrt.resolve(1 << 16), 0);
+        assert_eq!(ShardBlock::Fixed(128).resolve(1 << 16), 128);
+        let auto = ShardBlock::Auto { dist, update_frac: 0.1 }.resolve(1 << 16);
+        assert!(auto.is_power_of_two() && (4..=1 << 12).contains(&auto), "auto = {auto}");
+    }
+
+    #[test]
+    fn auto_shard_block_builds_and_answers() {
+        let xs = Rng::new(65).uniform_f32_vec(2048);
+        let set = EngineSet::build_with(
+            &xs,
+            None,
+            EngineCfg {
+                shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.1 },
+            },
+        );
+        let e = set.get(EngineKind::Sharded).expect("sharded built");
+        let queries = vec![(0u32, 2047u32), (100, 140), (2047, 2047)];
+        assert_eq!(e.solve(&queries, 2).unwrap(), oracle_batch(&xs, &queries));
+    }
+
+    #[test]
+    fn update_batch_goes_to_the_sharded_engine_only() {
+        let mut xs = Rng::new(64).uniform_f32_vec(512);
+        let set =
+            EngineSet::build_with(&xs, None, EngineCfg { shard_block: ShardBlock::Fixed(32) });
+        assert!(!set.mutated());
+        // Static engines refuse the write path.
+        for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive] {
+            let e = set.get(kind).unwrap();
+            assert!(!e.supports_updates());
+            assert!(e.update_batch(&[(0, 0.5)], 1).is_err(), "{}", kind.name());
+        }
+        assert!(!set.mutated(), "refused updates must not mark the set mutated");
+        // The set routes the batch to the sharded engine and flips the flag.
+        let updates = vec![(3usize, -1.0f32), (31, -0.5), (32, -0.25), (511, -2.0)];
+        let applied = set.update_batch(&updates, 2).unwrap();
+        assert_eq!(applied, EngineKind::Sharded);
+        assert!(set.mutated());
+        for &(i, v) in &updates {
+            xs[i] = v;
+        }
+        let queries = vec![(0u32, 511u32), (4, 40), (32, 511)];
+        let got = set.get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries));
     }
 
     #[test]

@@ -18,6 +18,11 @@ pub struct Metrics {
     per_engine: HashMap<EngineKind, EngineMetrics>,
     pub requests: u64,
     pub rejected: u64,
+    /// Write path: fenced update batches applied by the mutable engine.
+    pub update_batches: u64,
+    /// Write path: total point updates applied.
+    pub updates: u64,
+    pub update_latency: LatencyHistogram,
     pub started: Option<std::time::Instant>,
 }
 
@@ -39,6 +44,12 @@ impl Metrics {
 
     pub fn record_rejected(&mut self) {
         self.rejected += 1;
+    }
+
+    pub fn record_update_batch(&mut self, updates: u64, latency_ns: u64) {
+        self.update_batches += 1;
+        self.updates += updates;
+        self.update_latency.record(latency_ns);
     }
 
     pub fn engine(&self, kind: EngineKind) -> Option<&EngineMetrics> {
@@ -90,6 +101,18 @@ impl fmt::Display for Metrics {
                 fmt_ns(e.batch_latency.mean_ns()),
             )?;
         }
+        if self.update_batches > 0 {
+            writeln!(
+                f,
+                "  {:<10} batches={:<6} points={:<9} batch p50={} p99={} mean={}",
+                "updates",
+                self.update_batches,
+                self.updates,
+                fmt_ns(self.update_latency.quantile_ns(0.5) as f64),
+                fmt_ns(self.update_latency.quantile_ns(0.99) as f64),
+                fmt_ns(self.update_latency.mean_ns()),
+            )?;
+        }
         Ok(())
     }
 }
@@ -110,6 +133,18 @@ mod tests {
         assert!(m.engine(EngineKind::Xla).is_none());
         let text = m.to_string();
         assert!(text.contains("RTXRMQ") && text.contains("LCA"));
+    }
+
+    #[test]
+    fn records_update_batches_separately() {
+        let mut m = Metrics::new();
+        m.record_update_batch(16, 2_000);
+        m.record_update_batch(4, 1_000);
+        assert_eq!(m.update_batches, 2);
+        assert_eq!(m.updates, 20);
+        // The write path never inflates query throughput.
+        assert_eq!(m.total_queries(), 0);
+        assert!(m.to_string().contains("updates"));
     }
 
     #[test]

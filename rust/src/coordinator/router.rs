@@ -43,6 +43,25 @@ impl Router {
         }
     }
 
+    /// Serving-loop entry point: like [`route`](Self::route), but aware
+    /// of the mutable serving path. Once the array has been mutated,
+    /// only the sharded engine still matches the served values — every
+    /// static engine was built from the original array and is stale by
+    /// definition — so query segments are pinned there, overriding even
+    /// a `Policy::Fixed` pin (correctness beats policy).
+    pub fn route_serving(
+        &self,
+        n: usize,
+        queries: &[Query],
+        available: &[EngineKind],
+        mutated: bool,
+    ) -> EngineKind {
+        if mutated && available.contains(&EngineKind::Sharded) {
+            return EngineKind::Sharded;
+        }
+        self.route(n, queries, available)
+    }
+
     /// Choose an engine for a batch against an array of length `n`.
     /// `available` lists the engines actually built (XLA may be absent).
     pub fn route(&self, n: usize, queries: &[Query], available: &[EngineKind]) -> EngineKind {
@@ -276,6 +295,43 @@ mod tests {
         let n = 1 << 12;
         let small = gen_queries(n, 256, RangeDist::Small, &mut rng);
         assert_eq!(router.route(n, &small, &with_sharded), EngineKind::Exhaustive);
+    }
+
+    #[test]
+    fn mutated_arrays_pin_every_policy_to_sharded() {
+        // Post-update, the static engines are stale: whatever the policy
+        // or distribution, query segments must go to the shards.
+        let mut with_sharded = all_kinds();
+        with_sharded.push(EngineKind::Sharded);
+        let mut rng = Rng::new(78);
+        let n = 1 << 20;
+        for policy in [
+            Policy::Heuristic,
+            Policy::ModeledCost,
+            Policy::Fixed(EngineKind::Lca),
+            Policy::Fixed(EngineKind::Rtx),
+        ] {
+            let router = Router::new(policy);
+            for dist in RangeDist::all() {
+                let qs = gen_queries(n, 128, dist, &mut rng);
+                assert_eq!(
+                    router.route_serving(n, &qs, &with_sharded, true),
+                    EngineKind::Sharded,
+                    "{policy:?} {dist:?}"
+                );
+                // Unmutated serving routes exactly like `route`.
+                assert_eq!(
+                    router.route_serving(n, &qs, &with_sharded, false),
+                    router.route(n, &qs, &with_sharded),
+                    "{policy:?} {dist:?}"
+                );
+            }
+        }
+        // Without a sharded engine there is nothing fresh to pin to;
+        // fall through to the normal policy (callers always build it).
+        let router = Router::new(Policy::Heuristic);
+        let qs = gen_queries(n, 64, RangeDist::Large, &mut rng);
+        assert_eq!(router.route_serving(n, &qs, &all_kinds(), true), EngineKind::Lca);
     }
 
     #[test]

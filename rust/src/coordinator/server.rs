@@ -1,13 +1,16 @@
 //! The serving loop: bounded request queue → dynamic batcher → router →
 //! engine → reply. One array ("model") per coordinator, engines built
-//! once at startup (the paper's build-once/query-many contract).
+//! once at startup (the paper's build-once/query-many contract — now
+//! with a write path: update segments mutate the sharded engine in
+//! place between the query segments that fence them).
 
-use super::batcher::{next_batch, BatcherCfg, Request, Response};
+use super::batcher::{next_batch, BatcherCfg, Request, Response, Segment};
 use super::engine::{EngineCfg, EngineKind, EngineSet};
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
-use crate::rmq::{validate_queries, Query};
+use crate::rmq::Query;
 use crate::runtime::Runtime;
+use crate::workload::{validate_ops, Op};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
@@ -59,33 +62,78 @@ impl Coordinator {
         let worker = std::thread::spawn(move || {
             let available = engines.kinds();
             while let Some(fused) = next_batch(&rx, &batcher_cfg) {
-                let kind = router.route(n, &fused.queries, &available);
-                let engine = engines.get(kind).expect("routed engine exists");
                 let t0 = std::time::Instant::now();
-                let answers = match engine.solve(&fused.queries, workers) {
-                    Ok(a) => a,
-                    Err(e) => {
-                        eprintln!("engine {} failed: {e}", kind.name());
-                        // Fall back to the always-available exhaustive.
-                        engines
-                            .get(EngineKind::Exhaustive)
-                            .expect("exhaustive always built")
-                            .solve(&fused.queries, workers)
-                            .expect("exhaustive cannot fail")
+                let mut answers: Vec<u32> = Vec::with_capacity(fused.total_queries());
+                let mut query_engine: Option<&'static str> = None;
+                let mut update_engine: Option<&'static str> = None;
+                let mut updates_ok = true;
+                // Segments execute strictly in stream order on this one
+                // thread — that *is* the fence: an update segment is
+                // visible to every later query segment and to none
+                // earlier.
+                for seg in &fused.segments {
+                    match seg {
+                        Segment::Queries(qs) => {
+                            let kind =
+                                router.route_serving(n, qs, &available, engines.mutated());
+                            let engine = engines.get(kind).expect("routed engine exists");
+                            let ts = std::time::Instant::now();
+                            let got = match engine.solve(qs, workers) {
+                                Ok(a) => a,
+                                Err(e) => {
+                                    // Only the XLA engine can fail, and it is
+                                    // never routed to once mutated — so the
+                                    // exhaustive fallback still sees the
+                                    // array it was built from.
+                                    eprintln!("engine {} failed: {e}", kind.name());
+                                    engines
+                                        .get(EngineKind::Exhaustive)
+                                        .expect("exhaustive always built")
+                                        .solve(qs, workers)
+                                        .expect("exhaustive cannot fail")
+                                }
+                            };
+                            let seg_ns = ts.elapsed().as_nanos() as u64;
+                            m.lock().unwrap().record_batch(kind, qs.len() as u64, seg_ns);
+                            // Last segment wins: once an update fences the
+                            // batch, later segments are the current truth.
+                            query_engine = Some(kind.name());
+                            answers.extend_from_slice(&got);
+                        }
+                        Segment::Updates(ups) => {
+                            let ts = std::time::Instant::now();
+                            match engines.update_batch(ups, workers) {
+                                Ok(kind) => {
+                                    update_engine.get_or_insert(kind.name());
+                                    m.lock().unwrap().record_update_batch(
+                                        ups.len() as u64,
+                                        ts.elapsed().as_nanos() as u64,
+                                    );
+                                }
+                                // Admission validated the indices; this
+                                // only fires when no mutable engine is
+                                // built, which `build_with` precludes.
+                                Err(e) => {
+                                    eprintln!("update batch dropped: {e}");
+                                    updates_ok = false;
+                                }
+                            }
+                        }
                     }
-                };
-                let latency = t0.elapsed().as_nanos() as u64;
-                {
-                    let mut mm = m.lock().unwrap();
-                    mm.record_batch(kind, fused.queries.len() as u64, latency);
                 }
+                let latency = t0.elapsed().as_nanos() as u64;
                 let per_request = fused.split_answers(&answers);
-                for (req, ans) in fused.requests.iter().zip(per_request) {
-                    // A dropped client is not an error.
+                let engine_name = query_engine.or(update_engine).unwrap_or("NONE");
+                for ((req, ans), &ups) in
+                    fused.requests.iter().zip(per_request).zip(&fused.update_splits)
+                {
+                    // A dropped client is not an error. A dropped update
+                    // segment must not be reported as applied.
                     let _ = req.reply.try_send(Response {
                         id: req.id,
                         answers: ans,
-                        engine: kind.name(),
+                        updates_applied: if updates_ok { ups } else { 0 },
+                        engine: engine_name,
                         batch_latency_ns: latency,
                     });
                 }
@@ -96,14 +144,22 @@ impl Coordinator {
 
     /// Validated blocking query: submit and wait for the answer.
     pub fn query(&self, queries: Vec<Query>) -> Result<Response> {
-        validate_queries(self.n, &queries).map_err(|e| {
+        self.submit_mixed(queries.into_iter().map(Op::Query).collect())
+    }
+
+    /// Validated blocking mixed request: queries and point updates
+    /// execute in op order with fencing — an update is visible to every
+    /// later query in the stream (and in any later request) and to no
+    /// earlier one. Returns one answer per query op, in op order.
+    pub fn submit_mixed(&self, ops: Vec<Op>) -> Result<Response> {
+        validate_ops(self.n, &ops).map_err(|e| {
             self.metrics.lock().unwrap().record_rejected();
             anyhow!(e)
         })?;
         self.metrics.lock().unwrap().record_request();
         let (reply_tx, reply_rx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, queries, reply: reply_tx };
+        let req = Request { id, ops, reply: reply_tx };
         self.tx
             .as_ref()
             .expect("not shut down")
@@ -119,15 +175,26 @@ impl Coordinator {
         queries: Vec<Query>,
         reply: SyncSender<Response>,
     ) -> std::result::Result<u64, Vec<Query>> {
-        if validate_queries(self.n, &queries).is_err() {
+        let unwrap_queries = |ops: Vec<Op>| {
+            ops.into_iter()
+                .filter_map(|op| match op {
+                    Op::Query(q) => Some(q),
+                    Op::Update { .. } => None,
+                })
+                .collect()
+        };
+        if crate::rmq::validate_queries(self.n, &queries).is_err() {
             self.metrics.lock().unwrap().record_rejected();
             return Err(queries);
         }
         self.metrics.lock().unwrap().record_request();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        match self.tx.as_ref().expect("not shut down").try_send(Request { id, queries, reply }) {
+        let req = Request::queries(id, queries, reply);
+        match self.tx.as_ref().expect("not shut down").try_send(req) {
             Ok(()) => Ok(id),
-            Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => Err(r.queries),
+            Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => {
+                Err(unwrap_queries(r.ops))
+            }
         }
     }
 
@@ -224,6 +291,58 @@ mod tests {
         assert_eq!(resp.engine, "SHARDED");
         let m = c.metrics.lock().unwrap();
         assert!(m.engine(crate::coordinator::engine::EngineKind::Sharded).is_some());
+    }
+
+    #[test]
+    fn mixed_request_fences_updates_within_the_stream() {
+        // All-equal array: the leftmost-tie answer moves exactly when an
+        // update lands, so visibility mistakes are unmissable.
+        let xs = vec![0.5f32; 256];
+        let c = Coordinator::start(&xs, None, CoordinatorCfg::default());
+        let ops = vec![
+            Op::Query((0, 255)),
+            Op::Update { i: 7, v: 0.1 },
+            Op::Query((0, 255)),
+            Op::Update { i: 3, v: 0.05 },
+            Op::Query((0, 255)),
+        ];
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, vec![0, 7, 3], "each chunk sees exactly the prior updates");
+        assert_eq!(resp.updates_applied, 2);
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.update_batches, 2);
+        assert_eq!(m.updates, 2);
+        drop(m);
+        c.shutdown();
+    }
+
+    #[test]
+    fn mutation_pins_later_plain_queries_to_sharded() {
+        let (c, mut xs) = coordinator(512, Policy::Heuristic);
+        // Small array: read-only requests route off the shards.
+        let before = c.query(vec![(0, 511)]).unwrap();
+        assert_ne!(before.engine, "SHARDED");
+        // A mutating request flips the set; every later query — even a
+        // plain read-only one — must see the new value and the shards.
+        let upd = c
+            .submit_mixed(vec![Op::Update { i: 300, v: -1.0 }, Op::Query((0, 511))])
+            .unwrap();
+        assert_eq!(upd.answers, vec![300]);
+        assert_eq!(upd.engine, "SHARDED");
+        xs[300] = -1.0;
+        let after = c.query(vec![(0, 511), (0, 299)]).unwrap();
+        assert_eq!(after.engine, "SHARDED");
+        assert_eq!(after.answers, oracle_batch(&xs, &[(0, 511), (0, 299)]));
+        assert_eq!(after.updates_applied, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn rejects_invalid_update_ops() {
+        let (c, _) = coordinator(128, Policy::Heuristic);
+        assert!(c.submit_mixed(vec![Op::Update { i: 128, v: 0.0 }]).is_err());
+        assert_eq!(c.metrics.lock().unwrap().rejected, 1);
+        c.shutdown();
     }
 
     #[test]

@@ -8,14 +8,15 @@
 //!   artifacts    list the AOT artifact variants (PJRT manifest)
 //!   info         architecture profiles used by the models
 
-use rtxrmq::coordinator::engine::{EngineCfg, EngineKind, EngineSet};
+use rtxrmq::coordinator::engine::{EngineCfg, EngineKind, EngineSet, ShardBlock};
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::rmq::naive_rmq;
 use rtxrmq::runtime::Runtime;
 use rtxrmq::util::cli::{Args, Help};
 use rtxrmq::util::rng::Rng;
 use rtxrmq::util::stats::fmt_mb;
-use rtxrmq::workload::{gen_array, gen_queries, RangeDist};
+use rtxrmq::workload::{gen_array, gen_mixed, gen_queries, Op, RangeDist};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -46,18 +47,24 @@ fn print_help() {
             .opt("q", "queries in the batch (default 4096)")
             .opt("dist", "large|medium|small (default small)")
             .opt("engine", "RTXRMQ|SHARDED|LCA|HRMQ|EXHAUSTIVE|XLA (default: route by cost model)")
-            .opt("shard-block", "sharded engine block size (default: auto √n)"),
+            .opt("shard-block", "block size or 'auto' = cost-model tuner (default √n)"),
         Help::new("serve", "run the coordinator under synthetic load")
             .opt("n", "array size (default 2^16)")
             .opt("requests", "number of requests (default 128)")
-            .opt("batch", "queries per request (default 1024)")
-            .opt("shard-block", "sharded engine block size (default: auto √n)")
+            .opt("batch", "ops per request (default 1024)")
+            .opt("mixed", "serve a mixed query+update op stream (gen_mixed)")
+            .opt("update-frac", "update fraction of the mixed stream (default 0.1)")
+            .opt("dist", "range distribution of the mixed stream (default small)")
+            .opt("shard-block", "block size or 'auto' = cost-model tuner (default √n)")
             .opt("no-xla", "disable the PJRT/XLA engine"),
         Help::new("bench-smoke", "wall-clock ns/query grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
             .opt("batches", "comma-separated batch sizes (default 2^12,2^16)")
             .opt("seed", "workload seed")
-            .opt("shard-block", "sharded column block size (default: auto √n)")
+            .opt("shard-block", "sharded column block size, or 'auto' (default √n)")
+            .opt("dist", "expected range dist fed to the 'auto' tuner (default small)")
+            .opt("update-frac", "also time updates: batch×frac points per grid cell (default 0)")
+            .opt("summary-md", "append a markdown summary table to this file")
             .opt("out", "output JSON path (default BENCH_rmq.json)"),
         Help::new("memory", "data-structure memory report").opt("n", "array size"),
         Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
@@ -66,6 +73,18 @@ fn print_help() {
         println!("{}", h.render());
     }
     println!("benches: cargo bench --bench fig12_time_speedup (… fig10..fig17, table2, ablations)");
+}
+
+/// Parse `--shard-block` (`auto` | size | absent → √n default). The
+/// `dist`/`update_frac` expectations parameterise the auto-tuner.
+fn shard_block_arg(args: &Args, dist: RangeDist, update_frac: f64) -> ShardBlock {
+    match args.opt("shard-block") {
+        None => ShardBlock::Sqrt,
+        Some(s) => ShardBlock::parse(s, dist, update_frac).unwrap_or_else(|| {
+            eprintln!("invalid --shard-block {s} (expected a size or 'auto')");
+            std::process::exit(2);
+        }),
+    }
 }
 
 fn cmd_solve(args: &Args) -> i32 {
@@ -77,7 +96,7 @@ fn cmd_solve(args: &Args) -> i32 {
     let queries = gen_queries(n, q, dist, &mut rng);
 
     let runtime = Runtime::load(Path::new("artifacts")).ok().map(Arc::new);
-    let shard_block: usize = args.get_or("shard-block", 0usize).unwrap();
+    let shard_block = shard_block_arg(args, dist, 0.0);
     let engines = EngineSet::build_with(&xs, runtime, EngineCfg { shard_block });
     let kind = match args.opt("engine") {
         Some(name) => EngineKind::parse(name).unwrap_or_else(|| {
@@ -112,13 +131,16 @@ fn cmd_serve(args: &Args) -> i32 {
     let n: usize = args.get_or("n", 1usize << 16).unwrap();
     let requests: usize = args.get_or("requests", 128usize).unwrap();
     let batch: usize = args.get_or("batch", 1024usize).unwrap();
+    let mixed = args.flag("mixed");
+    let update_frac: f64 = args.get_or("update-frac", 0.1f64).unwrap();
+    let dist = RangeDist::parse(&args.str_or("dist", "small")).unwrap_or(RangeDist::Small);
     let xs = gen_array(n, 7);
     let runtime = if args.flag("no-xla") {
         None
     } else {
         Runtime::load(Path::new("artifacts")).ok().map(Arc::new)
     };
-    let shard_block: usize = args.get_or("shard-block", 0usize).unwrap();
+    let shard_block = shard_block_arg(args, dist, if mixed { update_frac } else { 0.0 });
     let c = Coordinator::start(
         &xs,
         runtime,
@@ -126,30 +148,68 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
-    for i in 0..requests {
-        let dist = [RangeDist::Small, RangeDist::Medium, RangeDist::Large][i % 3];
-        let qs = gen_queries(n, batch, dist, &mut rng);
-        c.query(qs).expect("serve");
+    if mixed {
+        // Mixed query+update stream: every request is a fenced op batch;
+        // a rolling oracle array spot-checks a few answers per request.
+        let mut oracle = xs.clone();
+        let mut total_updates = 0usize;
+        for _ in 0..requests {
+            let ops = gen_mixed(n, batch, update_frac, dist, &mut rng);
+            let resp = c.submit_mixed(ops.clone()).expect("serve");
+            total_updates += resp.updates_applied;
+            let mut checked = 0;
+            let mut k = 0;
+            for op in &ops {
+                match *op {
+                    Op::Query((l, r)) => {
+                        if checked < 4 {
+                            let want = naive_rmq(&oracle, l as usize, r as usize) as u32;
+                            assert_eq!(resp.answers[k], want, "({l},{r}) via {}", resp.engine);
+                            checked += 1;
+                        }
+                        k += 1;
+                    }
+                    Op::Update { i, v } => oracle[i as usize] = v,
+                }
+            }
+        }
+        let wall = t0.elapsed();
+        println!(
+            "served {requests} mixed requests x {batch} ops ({total_updates} updates) \
+             in {wall:.2?} ({:.0} ops/s, fenced, spot-checked)",
+            (requests * batch) as f64 / wall.as_secs_f64()
+        );
+    } else {
+        for i in 0..requests {
+            let dist = [RangeDist::Small, RangeDist::Medium, RangeDist::Large][i % 3];
+            let qs = gen_queries(n, batch, dist, &mut rng);
+            c.query(qs).expect("serve");
+        }
+        let wall = t0.elapsed();
+        println!(
+            "served {requests} requests x {batch} queries in {wall:.2?} ({:.0} queries/s)",
+            (requests * batch) as f64 / wall.as_secs_f64()
+        );
     }
-    let wall = t0.elapsed();
-    println!(
-        "served {requests} requests x {batch} queries in {wall:.2?} ({:.0} queries/s)",
-        (requests * batch) as f64 / wall.as_secs_f64()
-    );
     println!("{}", c.metrics.lock().unwrap());
     c.shutdown();
     0
 }
 
 fn cmd_bench_smoke(args: &Args) -> i32 {
-    use rtxrmq::bench_harness::smoke::{run_smoke, speedups, to_json, write_json, SmokeCfg};
+    use rtxrmq::bench_harness::smoke::{
+        append_summary_md, run_smoke, speedups, summary_md, to_json, write_json, SmokeCfg,
+    };
     let defaults = SmokeCfg::default();
+    let update_frac: f64 = args.get_or("update-frac", defaults.update_frac).unwrap();
+    let dist = RangeDist::parse(&args.str_or("dist", "small")).unwrap_or(RangeDist::Small);
     let cfg = SmokeCfg {
         ns: args.list_or("ns", &defaults.ns).unwrap(),
         batches: args.list_or("batches", &defaults.batches).unwrap(),
         workers: rtxrmq::util::pool::default_workers(),
         seed: args.get_or("seed", defaults.seed).unwrap(),
-        shard_block: args.get_or("shard-block", defaults.shard_block).unwrap(),
+        shard_block: shard_block_arg(args, dist, update_frac),
+        update_frac,
     };
     let out = args.str_or("out", "BENCH_rmq.json");
     let points = run_smoke(&cfg);
@@ -160,19 +220,26 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             p.n.to_string(),
             p.batch.to_string(),
             format!("{:.1}", p.ns_per_query),
+            if p.upd_ns_per_op > 0.0 { format!("{:.1}", p.upd_ns_per_op) } else { "-".into() },
             p.counters.nodes_visited.to_string(),
             p.counters.tri_tests.to_string(),
         ]);
     }
     rtxrmq::bench_harness::print_table(
         "RTXRMQ solver smoke grid (local wall clock)",
-        &["layout", "n", "batch", "ns/query", "nodes_visited", "tri_tests"],
+        &["layout", "n", "batch", "ns/query", "ns/update", "nodes_visited", "tri_tests"],
         &rows,
     );
     for (n, batch, label, binary_ns, ns, speedup) in speedups(&points) {
         println!(
             "n={n} batch={batch}: binary {binary_ns:.1} ns/q, {label} {ns:.1} ns/q -> {speedup:.2}x"
         );
+    }
+    if let Some(md_path) = args.opt("summary-md") {
+        if let Err(e) = append_summary_md(std::path::Path::new(md_path), &summary_md(&cfg, &points))
+        {
+            eprintln!("failed to append summary to {md_path}: {e}");
+        }
     }
     match write_json(std::path::Path::new(&out), &to_json(&cfg, &points)) {
         Ok(()) => {

@@ -17,4 +17,4 @@ pub mod rtcost;
 
 pub use cache::CacheModel;
 pub use energy::EnergyModel;
-pub use rtcost::{CudaCostModel, HrmqCostModel, LcaCostModel, RtCostModel};
+pub use rtcost::{CudaCostModel, HrmqCostModel, LcaCostModel, RtCostModel, ShardWorkload};

@@ -35,11 +35,46 @@
 //! incremental rebuilds): a point update touches exactly one block —
 //! re-shape its triangles, refit its BVH (the `bvh/wide.rs` refit path),
 //! rescan one block minimum, refit the summary. `update_batch` groups
-//! updates by block so each touched structure refits once per batch.
+//! updates by block so each touched structure refits once per batch,
+//! and the per-block refits run **in parallel** over `util::pool` (they
+//! are independent; only the summary refit joins, so the result is
+//! bit-identical for any worker count).
 //! Tie-breaks remain leftmost end to end: candidate index order is
 //! left partial < summary interior < right partial, later candidates
 //! must win *strictly*, the summary prefers the leftmost minimal block,
 //! and `block_argmin` stores the leftmost argmin within each block.
+//!
+//! # Mutable serving (design note)
+//!
+//! The coordinator serves *mixed op streams* (`workload::Op`: queries
+//! and point updates, `workload::gen_mixed` is the synthetic source)
+//! end to end:
+//!
+//! - **Fencing semantics.** The batcher flattens requests in arrival
+//!   order and cuts the op stream into maximal same-kind *segments*
+//!   (`coordinator::batcher::Segment`). The single serving thread
+//!   executes segments strictly in stream order, so an update segment
+//!   is a fence: its values are visible to every later query segment
+//!   (including queries of later-arriving requests fused into the same
+//!   batch) and to none earlier. At the engine level the sharded
+//!   solver sits behind a `RwLock` — queries share the read lock, an
+//!   update batch takes the write lock — so a reader can never observe
+//!   a half-applied batch. Differential tests pin this against a naive
+//!   array + rescan oracle (`tests/mixed_stream.rs`).
+//! - **Staleness routing.** Updates mutate only the sharded engine;
+//!   the static engines (RTX monolith, LCA, HRMQ, EXHAUSTIVE, XLA)
+//!   keep the build-time array. Once the first update lands, the
+//!   router pins every query segment to the shards
+//!   (`Router::route_serving`), overriding even a `Policy::Fixed` pin
+//!   — correctness beats policy.
+//! - **Auto-tuned block size.** `--shard-block auto` replaces the √n
+//!   rule with the argmin of `RtCostModel::shard_cost_per_op(n, B)`:
+//!   expected probe work at the expected range distribution
+//!   (`min(span, 2)` partial-block probes of `O(log B)` work plus a
+//!   summary probe of `O(log n/B)` once the span passes two blocks)
+//!   plus the update fraction times the amortised refit work
+//!   (`Θ(B)` block refit + `Θ(n/B)` summary refit). The candidate set
+//!   contains the √n default, so the tuned size never models worse.
 
 pub mod cartesian;
 pub mod exhaustive;

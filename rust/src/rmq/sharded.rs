@@ -286,11 +286,21 @@ impl ShardedRmq {
         self.update_batch(&[(i, v)]);
     }
 
-    /// Batched point updates. Updates are grouped by block; each touched
-    /// block re-shapes its triangles and refits once, the block minimum
-    /// is rescanned, and the summary solver is refit once at the end.
-    /// Later updates to the same index win (applied in order).
+    /// Batched point updates with the default worker pool; see
+    /// [`update_batch_with`](Self::update_batch_with).
     pub fn update_batch(&mut self, updates: &[(usize, f32)]) {
+        self.update_batch_with(updates, pool::default_workers());
+    }
+
+    /// Batched point updates with explicit parallelism. Updates are
+    /// grouped by block; each touched block re-shapes its triangles,
+    /// refits its BVH once and rescans its minimum — that per-block work
+    /// is independent across blocks and runs in parallel over `workers`
+    /// (the write-path twin of the parallel build). The summary refit is
+    /// the single join point, applied sequentially at the end, so the
+    /// result is bit-identical for any worker count. Later updates to
+    /// the same index win (applied in order).
+    pub fn update_batch_with(&mut self, updates: &[(usize, f32)], workers: usize) {
         if updates.is_empty() {
             return;
         }
@@ -300,16 +310,43 @@ impl ShardedRmq {
             self.xs[i] = v;
             by_block.entry(i / self.bs).or_default().push((i % self.bs, v));
         }
-        let mut summary_updates: Vec<(usize, f32)> = Vec::with_capacity(by_block.len());
-        for (b, local) in by_block {
-            let start = b * self.bs;
-            let end = start + self.block_len(b);
-            self.blocks[b].update(&local, &self.xs[start..end]);
-            let arg = super::naive_rmq(&self.xs, start, end - 1);
-            self.block_argmin[b] = arg as u32;
-            if self.block_min[b] != self.xs[arg] {
-                self.block_min[b] = self.xs[arg];
-                summary_updates.push((b, self.xs[arg]));
+        let fresh_argmins: Vec<Vec<(usize, u32)>> = {
+            // Carve disjoint `&mut` views of the touched blocks (ids
+            // arrive sorted from the BTreeMap, so a split_at_mut walk
+            // suffices).
+            let mut jobs: Vec<(usize, Vec<(usize, f32)>, &mut BlockSolver)> =
+                Vec::with_capacity(by_block.len());
+            let mut rest: &mut [BlockSolver] = &mut self.blocks;
+            let mut consumed = 0usize;
+            for (b, local) in by_block {
+                let (_, tail) = rest.split_at_mut(b - consumed);
+                let (head, tail) = tail.split_at_mut(1);
+                jobs.push((b, local, &mut head[0]));
+                consumed = b + 1;
+                rest = tail;
+            }
+            let xs = &self.xs;
+            let (bs, n) = (self.bs, self.xs.len());
+            pool::map_chunks_mut(&mut jobs, workers, |_, slice| {
+                let mut out = Vec::with_capacity(slice.len());
+                for (b, local, solver) in slice.iter_mut() {
+                    let start = *b * bs;
+                    let end = (start + bs).min(n);
+                    solver.update(local, &xs[start..end]);
+                    out.push((*b, super::naive_rmq(xs, start, end - 1) as u32));
+                }
+                out
+            })
+        };
+        // Join point: fold fresh block minima into the summary tables and
+        // refit the summary solver once (block order, deterministic).
+        let mut summary_updates: Vec<(usize, f32)> = Vec::new();
+        for (b, arg) in fresh_argmins.into_iter().flatten() {
+            self.block_argmin[b] = arg;
+            let v = self.xs[arg as usize];
+            if self.block_min[b] != v {
+                self.block_min[b] = v;
+                summary_updates.push((b, v));
             }
         }
         if !summary_updates.is_empty() {
@@ -570,6 +607,57 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parallel_update_batch_matches_sequential() {
+        // The per-block refits are independent; the summary join is
+        // sequential — any worker count must produce the same structure.
+        check("parallel updates", 20, |rng| {
+            let xs = gen::f32_array(rng, 64..=2048);
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 6);
+            let opts = ShardedOptions { block_size: bs, ..Default::default() };
+            let mut par = ShardedRmq::with_options(&xs, opts);
+            let mut ser = ShardedRmq::with_options(&xs, opts);
+            for _ in 0..4 {
+                let count = rng.range(1, 64);
+                let batch: Vec<(usize, f32)> =
+                    (0..count).map(|_| (rng.range(0, n - 1), rng.f32())).collect();
+                par.update_batch_with(&batch, 4);
+                ser.update_batch_with(&batch, 1);
+                for _ in 0..12 {
+                    let (l, r) = gen::query(rng, n);
+                    let (a, b) = (par.rmq(l as u32, r as u32), ser.rmq(l as u32, r as u32));
+                    if a != b {
+                        return Err(format!("bs={bs} ({l},{r}): par {a} != ser {b}"));
+                    }
+                }
+            }
+            par.validate()?;
+            ser.validate()
+        });
+    }
+
+    #[test]
+    fn bulk_load_touches_every_block_in_parallel() {
+        // A full-array rewrite (the "bulk load" shape the ROADMAP calls
+        // out) touches every block at once.
+        let xs = Rng::new(95).uniform_f32_vec(1024);
+        let mut s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 32, ..Default::default() },
+        );
+        let mut rng = Rng::new(96);
+        let fresh: Vec<f32> = rng.uniform_f32_vec(1024);
+        let batch: Vec<(usize, f32)> = fresh.iter().copied().enumerate().collect();
+        s.update_batch_with(&batch, 4);
+        s.validate().unwrap();
+        for _ in 0..100 {
+            let l = rng.range(0, 1023);
+            let r = rng.range(l, 1023);
+            assert_eq!(s.rmq(l as u32, r as u32) as usize, naive_rmq(&fresh, l, r));
+        }
     }
 
     #[test]

@@ -108,6 +108,43 @@ pub enum Op {
     Update { i: u32, v: f32 },
 }
 
+impl Op {
+    pub fn is_query(&self) -> bool {
+        matches!(self, Op::Query(_))
+    }
+
+    pub fn is_update(&self) -> bool {
+        matches!(self, Op::Update { .. })
+    }
+}
+
+/// Validate a mixed op stream against the array length — the
+/// coordinator's admission check for the mutable serving path (the
+/// query-only counterpart is [`crate::rmq::validate_queries`]).
+pub fn validate_ops(n: usize, ops: &[Op]) -> Result<(), String> {
+    for (k, op) in ops.iter().enumerate() {
+        match *op {
+            Op::Query((l, r)) => {
+                if l > r || (r as usize) >= n {
+                    return Err(format!("op {k}: query ({l},{r}) invalid for n={n}"));
+                }
+            }
+            Op::Update { i, v } => {
+                if (i as usize) >= n {
+                    return Err(format!("op {k}: update index {i} out of range for n={n}"));
+                }
+                // NaN/inf would silently corrupt every later `<`
+                // comparison (min tables, tie-breaks) — reject at
+                // admission like an out-of-range index.
+                if !v.is_finite() {
+                    return Err(format!("op {k}: update value {v} is not finite"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Mixed query/update stream: each op is an update with probability
 /// `update_frac`, otherwise a query drawn from `dist`. This is the
 /// serving shape of the ROADMAP's mutable-array scenarios (paper §7.iii:
@@ -265,6 +302,19 @@ mod tests {
         assert!(gen_mixed(n, 50, 1.0, RangeDist::Large, &mut rng)
             .iter()
             .all(|o| matches!(o, Op::Update { .. })));
+    }
+
+    #[test]
+    fn validate_ops_accepts_and_rejects() {
+        assert!(validate_ops(8, &[Op::Query((0, 7)), Op::Update { i: 7, v: 0.5 }]).is_ok());
+        assert!(validate_ops(8, &[Op::Query((5, 4))]).is_err());
+        assert!(validate_ops(8, &[Op::Query((0, 8))]).is_err());
+        assert!(validate_ops(8, &[Op::Update { i: 8, v: 0.5 }]).is_err());
+        assert!(validate_ops(8, &[Op::Update { i: 0, v: f32::NAN }]).is_err());
+        assert!(validate_ops(8, &[Op::Update { i: 0, v: f32::INFINITY }]).is_err());
+        assert!(validate_ops(8, &[]).is_ok());
+        assert!(Op::Query((0, 1)).is_query() && !Op::Query((0, 1)).is_update());
+        assert!(Op::Update { i: 0, v: 0.0 }.is_update());
     }
 
     #[test]

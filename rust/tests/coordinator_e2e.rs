@@ -130,9 +130,9 @@ fn batching_under_concurrency_is_lossless() {
 
 #[test]
 fn dynamic_rmq_stays_consistent_under_serving() {
-    // Future-work (iii) end to end: updates interleaved with queries on
-    // the RTX engine directly (the coordinator's engines are immutable;
-    // dynamic mode is a solver-level feature).
+    // Future-work (iii) at the solver level: updates interleaved with
+    // queries on the RTX engine directly (the coordinator-level mixed
+    // op-stream path is covered by `tests/mixed_stream.rs`).
     let mut xs = gen_array(2048, 16);
     let mut rtx = rtxrmq::rmq::rtx::RtxRmq::with_options(
         &xs,

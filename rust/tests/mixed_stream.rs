@@ -1,0 +1,199 @@
+//! Mixed query+update streams through the full coordinator stack,
+//! differentially tested against a naive array + rescan oracle.
+//!
+//! The consistency contract under test (the fence): updates between two
+//! query chunks must be visible to the later chunk and invisible to the
+//! earlier one — exactly the answers a sequential re-solve of the op
+//! stream produces, leftmost ties included.
+
+use rtxrmq::coordinator::engine::{EngineCfg, ShardBlock};
+use rtxrmq::coordinator::router::Policy;
+use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::rmq::naive_rmq;
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_array, gen_mixed, Op, RangeDist};
+
+/// The oracle: apply the op stream to a plain array, answering queries
+/// by rescan — the sequential semantics the coordinator must reproduce.
+fn oracle_run(xs: &mut [f32], ops: &[Op]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for op in ops {
+        match *op {
+            Op::Query((l, r)) => out.push(naive_rmq(xs, l as usize, r as usize) as u32),
+            Op::Update { i, v } => xs[i as usize] = v,
+        }
+    }
+    out
+}
+
+fn coordinator(xs: &[f32], shard_block: ShardBlock) -> Coordinator {
+    Coordinator::start(
+        xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::ModeledCost,
+            engines: EngineCfg { shard_block },
+            ..Default::default()
+        },
+    )
+}
+
+#[test]
+fn gen_mixed_streams_match_oracle_hit_for_hit() {
+    let n = 1 << 12;
+    let xs = gen_array(n, 21);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(64));
+    let mut rng = Rng::new(22);
+    for round in 0..10 {
+        let ops = gen_mixed(n, 96, 0.3, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops.clone()).unwrap();
+        assert_eq!(resp.answers, want, "round {round}");
+        assert_eq!(resp.updates_applied, ops.iter().filter(|o| o.is_update()).count());
+    }
+    c.shutdown();
+}
+
+#[test]
+fn duplicate_heavy_streams_keep_leftmost_ties() {
+    // Quantised values force constant ties between the left partial,
+    // summary and right partial probes — and between pre- and
+    // post-update values.
+    let n = 1 << 11;
+    let xs: Vec<f32> = gen_array(n, 23).iter().map(|v| (v * 4.0).floor() / 4.0).collect();
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(32));
+    let mut rng = Rng::new(24);
+    for round in 0..8 {
+        // Updates drawn from the same quantised palette keep ties alive.
+        let ops: Vec<Op> = gen_mixed(n, 80, 0.4, RangeDist::Medium, &mut rng)
+            .into_iter()
+            .map(|op| match op {
+                Op::Update { i, v } => Op::Update { i, v: (v * 4.0).floor() / 4.0 },
+                q => q,
+            })
+            .collect();
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "round {round}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn update_bursts_straddling_block_seams() {
+    // Bursts land exactly on the block seams (last index of block b,
+    // first of b+1), fenced between query chunks whose ranges straddle
+    // the same seams — the decomposition's worst case.
+    let n = 1024usize;
+    let bs = 64usize;
+    let xs = gen_array(n, 25);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(bs));
+    let mut rng = Rng::new(26);
+    for round in 0..6 {
+        let mut ops = Vec::new();
+        for b in 1..(n / bs) {
+            let seam = b * bs;
+            ops.push(Op::Query(((seam - 5) as u32, (seam + 5) as u32)));
+            ops.push(Op::Update { i: (seam - 1) as u32, v: rng.f32() });
+            ops.push(Op::Update { i: seam as u32, v: rng.f32() });
+            ops.push(Op::Query(((seam - 5) as u32, (seam + 5) as u32)));
+            ops.push(Op::Query((0, (n - 1) as u32)));
+        }
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "round {round}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn back_to_back_batches_touching_the_same_block() {
+    // Consecutive requests hammer one block (refit-after-refit on the
+    // same BVH) with full-range reads fencing each burst.
+    let n = 512usize;
+    let xs = gen_array(n, 27);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(64));
+    let mut rng = Rng::new(28);
+    for round in 0..12 {
+        let block = 3usize; // always the same block
+        let mut ops = Vec::new();
+        for _ in 0..6 {
+            let i = block * 64 + rng.range(0, 63);
+            ops.push(Op::Update { i: i as u32, v: rng.f32() });
+        }
+        ops.push(Op::Query((0, (n - 1) as u32)));
+        ops.push(Op::Query(((block * 64) as u32, (block * 64 + 63) as u32)));
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "round {round}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn auto_tuned_shard_block_serves_mixed_streams() {
+    // `--shard-block auto` end to end: the tuner picks the block size,
+    // the stream still matches the oracle hit for hit.
+    let n = 1 << 12;
+    let xs = gen_array(n, 29);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.25 });
+    let mut rng = Rng::new(30);
+    for round in 0..6 {
+        let ops = gen_mixed(n, 128, 0.25, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "round {round}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn concurrent_mixed_clients_in_disjoint_regions() {
+    // Four clients each own a disjoint quarter of the array and confine
+    // both their queries and updates to it. Each client's stream is then
+    // sequentially consistent in isolation (other clients never touch
+    // its region), so its answers must match its private oracle even
+    // though the coordinator interleaves and fuses across clients.
+    let n = 1 << 12;
+    let region = n / 4;
+    let xs = gen_array(n, 31);
+    let c = std::sync::Arc::new(coordinator(&xs, ShardBlock::Fixed(64)));
+    let xs = std::sync::Arc::new(xs);
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let c = c.clone();
+        let xs = xs.clone();
+        handles.push(std::thread::spawn(move || {
+            let lo = t * region;
+            let mut oracle: Vec<f32> = xs.as_ref().clone();
+            let mut rng = Rng::new(200 + t as u64);
+            for round in 0..10 {
+                let mut ops = Vec::new();
+                for _ in 0..40 {
+                    if rng.f64() < 0.3 {
+                        let i = lo + rng.range(0, region - 1);
+                        ops.push(Op::Update { i: i as u32, v: rng.f32() });
+                    } else {
+                        let l = lo + rng.range(0, region - 1);
+                        let r = rng.range(l, lo + region - 1);
+                        ops.push(Op::Query((l as u32, r as u32)));
+                    }
+                }
+                let want = oracle_run(&mut oracle, &ops);
+                let resp = c.submit_mixed(ops).unwrap();
+                assert_eq!(resp.answers, want, "client {t} round {round}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = c.metrics.lock().unwrap();
+    assert_eq!(m.requests, 40);
+    assert!(m.updates > 0, "streams contained updates");
+}
