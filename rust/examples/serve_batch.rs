@@ -56,7 +56,7 @@ fn main() {
                 queue_cap: 128,
             },
             engine_workers: rtxrmq::util::pool::default_workers(),
-            engines: Default::default(),
+            ..Default::default()
         },
     ));
     println!("engines built in {:.2?} (n = {n})", t_build.elapsed());

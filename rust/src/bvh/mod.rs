@@ -171,6 +171,16 @@ pub enum Builder {
     Lbvh,
 }
 
+/// Topology links for point refits ([`Bvh::refit_prims`]): parent index
+/// per node plus the owning leaf per primitive. Kept outside [`Bvh`] so
+/// only the dynamic-update path pays for them.
+pub struct RefitLinks {
+    /// `parent[i]` = parent node of `i` (`parent[0] == 0`: the root).
+    pub parent: Vec<u32>,
+    /// `leaf_of_prim[p]` = leaf node whose range contains primitive `p`.
+    pub leaf_of_prim: Vec<u32>,
+}
+
 /// The acceleration structure.
 pub struct Bvh {
     pub nodes: Vec<Node>,
@@ -198,6 +208,57 @@ impl Bvh {
                 self.nodes[node.left as usize].aabb.union(&self.nodes[node.right as usize].aabb)
             };
             self.nodes[i].aabb = aabb;
+        }
+    }
+
+    /// Topology links enabling point refits ([`Bvh::refit_prims`]).
+    /// Built once per structure — refits never change topology, so the
+    /// links stay valid for the structure's lifetime.
+    pub fn refit_links(&self) -> RefitLinks {
+        let mut parent = vec![0u32; self.nodes.len()];
+        let mut leaf_of_prim = vec![0u32; self.prim_order.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            if n.is_leaf() {
+                for k in n.first..n.first + n.count {
+                    leaf_of_prim[self.prim_order[k as usize] as usize] = i as u32;
+                }
+            } else {
+                parent[n.left as usize] = i as u32;
+                parent[n.right as usize] = i as u32;
+            }
+        }
+        RefitLinks { parent, leaf_of_prim }
+    }
+
+    /// Point refit: recompute only the leaf-to-root bound paths of the
+    /// given primitives after their triangles changed — Θ(k·depth)
+    /// against the full sweep's Θ(n). Each path walks bottom-up, so an
+    /// ancestor shared by several paths is recomputed once per path;
+    /// the recomputation is idempotent and its *last* evaluation sees
+    /// every child subtree already final, so the result is identical to
+    /// [`refit`](Self::refit) provided `prims` covers every changed
+    /// triangle.
+    pub fn refit_prims(&mut self, tris: &[Triangle], prims: &[u32], links: &RefitLinks) {
+        for &p in prims {
+            let mut i = links.leaf_of_prim[p as usize] as usize;
+            loop {
+                let node = self.nodes[i];
+                let aabb = if node.is_leaf() {
+                    let mut bb = Aabb::EMPTY;
+                    for k in node.first..node.first + node.count {
+                        bb = bb
+                            .union(&Aabb::from_triangle(&tris[self.prim_order[k as usize] as usize]));
+                    }
+                    bb
+                } else {
+                    self.nodes[node.left as usize].aabb.union(&self.nodes[node.right as usize].aabb)
+                };
+                self.nodes[i].aabb = aabb;
+                if i == 0 {
+                    break;
+                }
+                i = links.parent[i] as usize;
+            }
         }
     }
 

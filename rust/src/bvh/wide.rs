@@ -96,6 +96,19 @@ impl WidePrim {
     }
 }
 
+/// Topology links for point refits ([`WideBvh::refit_prims`]). Kept
+/// outside [`WideBvh`] so only the dynamic-update path pays for them.
+pub struct WideRefitLinks {
+    /// `parent[i]` = node whose internal lane points at node `i`
+    /// (`parent[0] == 0`: the root).
+    pub parent: Vec<u32>,
+    /// `node_of_slot[s]` = node whose leaf-lane run contains prims
+    /// slot `s`.
+    pub node_of_slot: Vec<u32>,
+    /// `slot_of_prim[p]` = prims slot holding primitive id `p`.
+    pub slot_of_prim: Vec<u32>,
+}
+
 /// The wide acceleration structure.
 pub struct WideBvh {
     pub nodes: Vec<WideNode>,
@@ -254,42 +267,102 @@ impl WideBvh {
             *p = WidePrim::from_triangle(&tris[p.prim as usize]);
         }
         for i in (0..self.nodes.len()).rev() {
+            self.refit_lanes(i);
+        }
+    }
+
+    /// Recompute all four lane bounds of node `i` from its current
+    /// children (leaf runs read `prims`; internal lanes aggregate the
+    /// child node's lanes). Shared by the full bottom-up sweep and the
+    /// point-refit path walk.
+    fn refit_lanes(&mut self, i: usize) {
+        for k in 0..4 {
+            let child = self.nodes[i].child[k];
+            if child == INVALID_LANE {
+                continue;
+            }
+            let cnt = self.nodes[i].count[k] as usize;
+            let (mut ymin, mut ymax) = (f32::INFINITY, f32::NEG_INFINITY);
+            let (mut zmin, mut zmax) = (f32::INFINITY, f32::NEG_INFINITY);
+            let mut xmin = f32::INFINITY;
+            if cnt > 0 {
+                for p in &self.prims[child as usize..child as usize + cnt] {
+                    ymin = ymin.min(p.y_lo);
+                    ymax = ymax.max(p.y_hi);
+                    zmin = zmin.min(p.z_lo);
+                    zmax = zmax.max(p.z_hi);
+                    xmin = xmin.min(p.x_plane);
+                }
+            } else {
+                let c = self.nodes[child as usize];
+                for j in 0..4 {
+                    if c.child[j] == INVALID_LANE {
+                        continue;
+                    }
+                    ymin = ymin.min(c.ymin[j]);
+                    ymax = ymax.max(c.ymax[j]);
+                    zmin = zmin.min(c.zmin[j]);
+                    zmax = zmax.max(c.zmax[j]);
+                    xmin = xmin.min(c.xmin[j]);
+                }
+            }
+            let n = &mut self.nodes[i];
+            n.ymin[k] = ymin;
+            n.ymax[k] = ymax;
+            n.zmin[k] = zmin;
+            n.zmax[k] = zmax;
+            n.xmin[k] = xmin;
+        }
+    }
+
+    /// Topology links enabling point refits ([`WideBvh::refit_prims`]).
+    /// Built once per structure; refits never change topology, so the
+    /// links stay valid for the structure's lifetime.
+    pub fn refit_links(&self) -> WideRefitLinks {
+        let mut parent = vec![0u32; self.nodes.len()];
+        let mut node_of_slot = vec![0u32; self.prims.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
             for k in 0..4 {
-                let child = self.nodes[i].child[k];
-                if child == INVALID_LANE {
+                let c = n.child[k];
+                if c == INVALID_LANE {
                     continue;
                 }
-                let cnt = self.nodes[i].count[k] as usize;
-                let (mut ymin, mut ymax) = (f32::INFINITY, f32::NEG_INFINITY);
-                let (mut zmin, mut zmax) = (f32::INFINITY, f32::NEG_INFINITY);
-                let mut xmin = f32::INFINITY;
+                let cnt = n.count[k] as usize;
                 if cnt > 0 {
-                    for p in &self.prims[child as usize..child as usize + cnt] {
-                        ymin = ymin.min(p.y_lo);
-                        ymax = ymax.max(p.y_hi);
-                        zmin = zmin.min(p.z_lo);
-                        zmax = zmax.max(p.z_hi);
-                        xmin = xmin.min(p.x_plane);
+                    for s in c as usize..c as usize + cnt {
+                        node_of_slot[s] = i as u32;
                     }
                 } else {
-                    let c = self.nodes[child as usize];
-                    for j in 0..4 {
-                        if c.child[j] == INVALID_LANE {
-                            continue;
-                        }
-                        ymin = ymin.min(c.ymin[j]);
-                        ymax = ymax.max(c.ymax[j]);
-                        zmin = zmin.min(c.zmin[j]);
-                        zmax = zmax.max(c.zmax[j]);
-                        xmin = xmin.min(c.xmin[j]);
-                    }
+                    parent[c as usize] = i as u32;
                 }
-                let n = &mut self.nodes[i];
-                n.ymin[k] = ymin;
-                n.ymax[k] = ymax;
-                n.zmin[k] = zmin;
-                n.zmax[k] = zmax;
-                n.xmin[k] = xmin;
+            }
+        }
+        // Prim ids are dense 0..prims.len() in both geometry modes, so a
+        // plain inverse permutation maps triangle index -> prims slot.
+        let mut slot_of_prim = vec![0u32; self.prims.len()];
+        for (s, p) in self.prims.iter().enumerate() {
+            slot_of_prim[p.prim as usize] = s as u32;
+        }
+        WideRefitLinks { parent, node_of_slot, slot_of_prim }
+    }
+
+    /// Point refit: re-extract only the given primitives' records and
+    /// recompute the node lanes on their leaf-to-root paths — Θ(k·depth)
+    /// against the full sweep's Θ(n). Same idempotent-path argument as
+    /// [`crate::bvh::Bvh::refit_prims`]: equivalent to
+    /// [`refit`](Self::refit) provided `prims` covers every changed
+    /// triangle.
+    pub fn refit_prims(&mut self, tris: &[Triangle], prims: &[u32], links: &WideRefitLinks) {
+        for &p in prims {
+            let slot = links.slot_of_prim[p as usize] as usize;
+            self.prims[slot] = WidePrim::from_triangle(&tris[p as usize]);
+            let mut i = links.node_of_slot[slot] as usize;
+            loop {
+                self.refit_lanes(i);
+                if i == 0 {
+                    break;
+                }
+                i = links.parent[i] as usize;
             }
         }
     }

@@ -45,6 +45,11 @@ pub struct Response {
     /// mixed fused batch can span engines across a fence — the
     /// per-segment truth lives in the coordinator metrics.
     pub engine: &'static str,
+    /// Version of the engine epoch that served the last query segment
+    /// (query segments pin their epoch, so a background rebuild
+    /// completing mid-batch shows up here exactly from the first
+    /// segment that routed against it).
+    pub epoch: u64,
     /// End-to-end latency of the fused batch (ns).
     pub batch_latency_ns: u64,
 }

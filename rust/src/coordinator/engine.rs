@@ -1,8 +1,37 @@
-//! Engine layer: every RMQ approach behind one interface, built once per
-//! array ("the geometric model is ready to answer any number of RMQ
-//! queries", §5.2 — the same build-once/query-many contract holds for all
-//! engines).
+//! Engine layer: every RMQ approach behind one interface, plus the
+//! **epoch lifecycle** that keeps the set servable under mutation.
+//!
+//! The paper's contract is build-once/query-many ("the geometric model
+//! is ready to answer any number of RMQ queries", §5.2). Mutable
+//! serving breaks it: point updates land in the sharded engine in
+//! place, and every *static* engine (RTX wide-BVH, LCA, HRMQ,
+//! EXHAUSTIVE, XLA) silently keeps the array it was built from. Instead
+//! of a sticky "mutated" flag that pins traffic to the shards forever,
+//! engines now live in **epochs**:
+//!
+//! - [`EngineEpoch`] — one immutable generation: `version`, the engine
+//!   set, and `built_from_seq`, the applied-update sequence number its
+//!   static engines were built from. The epoch is *fresh* while that
+//!   equals the mutable engine's live sequence; queries on a fresh
+//!   epoch route freely (Fig. 12's crossover stays reachable), queries
+//!   on a stale one are pinned to the always-current sharded engine.
+//! - [`ShardedEngine`] — the single mutable engine, shared across
+//!   epochs by `Arc`. Its update sequence number is bumped under the
+//!   same write lock that applies the batch, so a read-locked
+//!   [`snapshot`](ShardedEngine::snapshot) (values + seq) is consistent
+//!   by construction.
+//! - [`EpochState`] — the lifecycle manager. The serving thread feeds a
+//!   [`WorkloadObserver`] and calls [`plan`](EpochState::plan) after
+//!   each fused batch; once the decayed update rate drops below
+//!   [`RtCostModel::rebuild_worthwhile`]'s threshold (or the
+//!   workload-fed tuner drifts ≥ `reshard_drift` from the live block
+//!   size under `--shard-block auto`), a [`BuildJob`] goes to the
+//!   background builder ([`spawn_builder`]), which reconstructs from a
+//!   snapshot and publishes the new epoch with an atomic `Arc` swap —
+//!   in-flight query segments finish on the epoch they pinned, later
+//!   segments route against the new one.
 
+use super::metrics::Metrics;
 use crate::model::rtcost::{RtCostModel, ShardWorkload};
 use crate::rmq::exhaustive::Exhaustive;
 use crate::rmq::hrmq::Hrmq;
@@ -11,10 +40,14 @@ use crate::rmq::rtx::RtxRmq;
 use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::runtime::Runtime;
+use crate::workload::observer::WorkloadObserver;
 use crate::workload::RangeDist;
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, SyncSender};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// Engine identifiers (stable names used by the router, CLI and metrics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -71,7 +104,8 @@ pub trait Engine: Send + Sync {
     /// Auxiliary structure bytes (Table 2).
     fn memory_bytes(&self) -> usize;
     /// Whether this engine can apply point updates in place (the
-    /// mutable serving path routes update batches to such engines).
+    /// mutable serving path routes update batches to such engines, and
+    /// the router treats them as fresh in every epoch).
     fn supports_updates(&self) -> bool {
         false
     }
@@ -148,12 +182,71 @@ impl Engine for XlaEngine {
     }
 }
 
-/// The sharded engine is the set's only engine with a write path:
-/// queries share the read lock, an update batch takes the write lock,
-/// so readers never observe a half-applied batch (the lock *is* the
-/// fence at the engine level; op-stream ordering is the server's job).
-struct ShardedEngine {
-    inner: RwLock<ShardedRmq>,
+/// The sharded solver plus its applied-update **sequence number**,
+/// guarded by one lock: queries share the read lock, an update batch
+/// takes the write lock and bumps the seq before releasing it, so
+/// readers never observe a half-applied batch and a read-locked
+/// (values, seq) snapshot is consistent by construction.
+struct VersionedSharded {
+    rmq: ShardedRmq,
+    seq: u64,
+}
+
+/// The set's only mutable engine — always current, shared across epochs
+/// by `Arc` (the lifecycle rebuilds *static* engines around it).
+pub struct ShardedEngine {
+    inner: RwLock<VersionedSharded>,
+}
+
+impl ShardedEngine {
+    pub fn new(rmq: ShardedRmq) -> ShardedEngine {
+        ShardedEngine { inner: RwLock::new(VersionedSharded { rmq, seq: 0 }) }
+    }
+
+    /// Applied-update sequence number (one per update batch). This is
+    /// the number the serving thread publishes to decide epoch
+    /// freshness: an epoch with `built_from_seq == seq()` serves the
+    /// exact values its static engines were built from.
+    pub fn seq(&self) -> u64 {
+        self.inner.read().expect("sharded lock").seq
+    }
+
+    /// Live block size (the re-shard drift comparison's denominator).
+    pub fn block_size(&self) -> usize {
+        self.inner.read().expect("sharded lock").rmq.block_size()
+    }
+
+    /// Consistent (values, applied-seq) snapshot — the rebuild source
+    /// for background static-engine builds.
+    pub fn snapshot(&self) -> (Vec<f32>, u64) {
+        let g = self.inner.read().expect("sharded lock");
+        (g.rmq.values().to_vec(), g.seq)
+    }
+
+    /// Online re-shard: build a replacement at `block_size` from a
+    /// snapshot **outside** any lock (serving continues meanwhile),
+    /// then swap it in iff no update batch landed in between — a moved
+    /// seq means the replacement is stale, so it is dropped and the
+    /// lifecycle retries once traffic is quiet again. Returns whether
+    /// the swap happened.
+    pub fn reshard(&self, block_size: usize) -> bool {
+        let (xs, opts, expect) = {
+            let g = self.inner.read().expect("sharded lock");
+            (g.rmq.values().to_vec(), g.rmq.options(), g.seq)
+        };
+        let fresh = ShardedRmq::reshard_from(&xs, opts, block_size);
+        self.install(fresh, expect)
+    }
+
+    /// Swap in a replacement iff the seq still equals `expect_seq`.
+    pub(crate) fn install(&self, rmq: ShardedRmq, expect_seq: u64) -> bool {
+        let mut g = self.inner.write().expect("sharded lock");
+        if g.seq != expect_seq {
+            return false;
+        }
+        g.rmq = rmq;
+        true
+    }
 }
 
 impl Engine for ShardedEngine {
@@ -162,11 +255,11 @@ impl Engine for ShardedEngine {
     }
 
     fn solve(&self, queries: &[Query], workers: usize) -> Result<Vec<u32>> {
-        Ok(self.inner.read().expect("sharded lock").batch(queries, workers))
+        Ok(self.inner.read().expect("sharded lock").rmq.batch(queries, workers))
     }
 
     fn memory_bytes(&self) -> usize {
-        self.inner.read().expect("sharded lock").memory_bytes()
+        self.inner.read().expect("sharded lock").rmq.memory_bytes()
     }
 
     fn supports_updates(&self) -> bool {
@@ -174,7 +267,9 @@ impl Engine for ShardedEngine {
     }
 
     fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<()> {
-        self.inner.write().expect("sharded lock").update_batch_with(updates, workers);
+        let mut g = self.inner.write().expect("sharded lock");
+        g.rmq.update_batch_with(updates, workers);
+        g.seq += 1;
         Ok(())
     }
 }
@@ -188,8 +283,10 @@ pub enum ShardBlock {
     /// Explicit block size.
     Fixed(usize),
     /// `--shard-block auto`: minimise the modeled cost per op from
-    /// [`RtCostModel`] — probe work at the expected range distribution
-    /// plus amortised refit work at the expected update rate.
+    /// [`RtCostModel`]. The CLI `dist`/`update_frac` priors only seed
+    /// the *initial* build; under the serving lifecycle the tuner is
+    /// re-run against observed traffic and drifting engines re-shard in
+    /// the background ([`EpochState::plan`]).
     Auto { dist: RangeDist, update_frac: f64 },
 }
 
@@ -226,47 +323,52 @@ pub struct EngineCfg {
     pub shard_block: ShardBlock,
 }
 
-/// All engines for one array. The XLA engine is optional (artifacts may
-/// not cover very large n).
+/// Build the static engines for an array (everything except the sharded
+/// engine, which outlives epochs). `runtime` enables the XLA engine
+/// when an artifact variant fits.
+fn build_static_engines(xs: &[f32], runtime: Option<Arc<Runtime>>) -> Vec<Arc<dyn Engine>> {
+    let mut engines: Vec<Arc<dyn Engine>> = vec![
+        Arc::new(SolverEngine { kind: EngineKind::Rtx, solver: RtxRmq::new_auto(xs) }),
+        Arc::new(SolverEngine { kind: EngineKind::Lca, solver: LcaRmq::new(xs) }),
+        Arc::new(SolverEngine { kind: EngineKind::Hrmq, solver: Hrmq::new(xs) }),
+        Arc::new(SolverEngine { kind: EngineKind::Exhaustive, solver: Exhaustive::new(xs) }),
+    ];
+    if let Some(rt) = runtime {
+        if let Ok(x) = XlaEngine::new(rt, xs) {
+            engines.push(Arc::new(x));
+        }
+    }
+    engines
+}
+
+fn build_sharded(xs: &[f32], cfg: EngineCfg) -> Arc<ShardedEngine> {
+    Arc::new(ShardedEngine::new(ShardedRmq::with_options(
+        xs,
+        ShardedOptions { block_size: cfg.shard_block.resolve(xs.len()), ..Default::default() },
+    )))
+}
+
+/// All engines for one array — the one-shot (`solve`/`memory`) surface.
+/// The serving path wraps the same engines in [`EngineEpoch`]s instead.
+/// The XLA engine is optional (artifacts may not cover very large n).
 pub struct EngineSet {
     pub n: usize,
-    engines: Vec<Box<dyn Engine>>,
-    /// Set once any update batch has been applied. From then on only the
-    /// mutable engine's view matches the served values — the static
-    /// engines were built from the original array and are stale by
-    /// definition (the router pins query segments accordingly).
-    mutated: AtomicBool,
+    engines: Vec<Arc<dyn Engine>>,
 }
 
 impl EngineSet {
     /// Build every available engine for the array with default knobs.
-    /// `runtime` enables the XLA engine when an artifact variant fits.
     pub fn build(xs: &[f32], runtime: Option<Arc<Runtime>>) -> EngineSet {
         Self::build_with(xs, runtime, EngineCfg::default())
     }
 
     /// Build with explicit knobs (e.g. `--shard-block`).
     pub fn build_with(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: EngineCfg) -> EngineSet {
-        let sharded = ShardedRmq::with_options(
-            xs,
-            ShardedOptions {
-                block_size: cfg.shard_block.resolve(xs.len()),
-                ..Default::default()
-            },
-        );
-        let mut engines: Vec<Box<dyn Engine>> = vec![
-            Box::new(SolverEngine { kind: EngineKind::Rtx, solver: RtxRmq::new_auto(xs) }),
-            Box::new(ShardedEngine { inner: RwLock::new(sharded) }),
-            Box::new(SolverEngine { kind: EngineKind::Lca, solver: LcaRmq::new(xs) }),
-            Box::new(SolverEngine { kind: EngineKind::Hrmq, solver: Hrmq::new(xs) }),
-            Box::new(SolverEngine { kind: EngineKind::Exhaustive, solver: Exhaustive::new(xs) }),
-        ];
-        if let Some(rt) = runtime {
-            if let Ok(x) = XlaEngine::new(rt, xs) {
-                engines.push(Box::new(x));
-            }
-        }
-        EngineSet { n: xs.len(), engines, mutated: AtomicBool::new(false) }
+        let sharded = build_sharded(xs, cfg);
+        let mut engines = build_static_engines(xs, runtime);
+        let sharded_dyn: Arc<dyn Engine> = sharded;
+        engines.insert(1, sharded_dyn);
+        EngineSet { n: xs.len(), engines }
     }
 
     pub fn get(&self, kind: EngineKind) -> Option<&dyn Engine> {
@@ -276,24 +378,312 @@ impl EngineSet {
     pub fn kinds(&self) -> Vec<EngineKind> {
         self.engines.iter().map(|e| e.kind()).collect()
     }
+}
 
-    /// Whether any update batch has been applied to this set.
-    pub fn mutated(&self) -> bool {
-        self.mutated.load(Ordering::Acquire)
+// ------------------------------------------------- epoch lifecycle --
+
+/// Whether the background lifecycle may rebuild stale static engines
+/// and re-shard online (`serve --rebuild auto|off`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum RebuildMode {
+    #[default]
+    Auto,
+    Off,
+}
+
+impl RebuildMode {
+    pub fn parse(s: &str) -> Option<RebuildMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Some(RebuildMode::Auto),
+            "off" => Some(RebuildMode::Off),
+            _ => None,
+        }
+    }
+}
+
+/// Lifecycle knobs (CLI-facing).
+#[derive(Clone, Copy, Debug)]
+pub struct LifecycleCfg {
+    pub rebuild: RebuildMode,
+    /// Re-shard when the workload-fed tuner's block size drifts at
+    /// least this factor from the live one (either direction). Applies
+    /// only under `--shard-block auto` — an explicit pin stays pinned.
+    pub reshard_drift: f64,
+    /// Observer half-life in observed segments
+    /// (`workload::observer::WorkloadObserver`).
+    pub observer_half_life: f64,
+}
+
+impl Default for LifecycleCfg {
+    fn default() -> Self {
+        LifecycleCfg { rebuild: RebuildMode::Auto, reshard_drift: 2.0, observer_half_life: 8.0 }
+    }
+}
+
+/// One immutable engine generation. Query segments pin the epoch (an
+/// `Arc` clone) for their duration, so a background publish never pulls
+/// engines out from under an in-flight segment.
+pub struct EngineEpoch {
+    pub version: u64,
+    /// Applied-update sequence number the static engines were built
+    /// from. The epoch is *fresh* while this equals the mutable
+    /// engine's live seq ([`EpochState::is_fresh`]).
+    pub built_from_seq: u64,
+    pub n: usize,
+    engines: Vec<Arc<dyn Engine>>,
+    kinds: Vec<EngineKind>,
+}
+
+impl EngineEpoch {
+    fn new(version: u64, built_from_seq: u64, n: usize, engines: Vec<Arc<dyn Engine>>) -> Self {
+        let kinds = engines.iter().map(|e| e.kind()).collect();
+        EngineEpoch { version, built_from_seq, n, engines, kinds }
     }
 
-    /// Route an update batch to the first engine with a write path and
-    /// mark the set mutated. Returns the engine that applied it.
+    pub fn get(&self, kind: EngineKind) -> Option<&dyn Engine> {
+        self.engines.iter().find(|e| e.kind() == kind).map(|e| e.as_ref())
+    }
+
+    pub fn kinds(&self) -> &[EngineKind] {
+        &self.kinds
+    }
+}
+
+/// Background work the lifecycle can schedule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BuildJob {
+    /// Rebuild every static engine from a snapshot and publish a fresh
+    /// epoch.
+    Statics,
+    /// Re-shard the mutable engine to the given block size.
+    Reshard(usize),
+}
+
+/// The lifecycle manager: current epoch, the shared mutable engine, the
+/// traffic observer, and the trigger logic. Shared (`Arc`) between the
+/// serving thread, the background builder and the coordinator handle.
+pub struct EpochState {
+    pub n: usize,
+    current: RwLock<Arc<EngineEpoch>>,
+    sharded: Arc<ShardedEngine>,
+    runtime: Option<Arc<Runtime>>,
+    engine_cfg: EngineCfg,
+    pub cfg: LifecycleCfg,
+    cost: RtCostModel,
+    /// Decayed view of served traffic, fed per segment by the serving
+    /// thread.
+    pub observer: Mutex<WorkloadObserver>,
+    version: AtomicU64,
+    rebuilds: AtomicU64,
+    reshards: AtomicU64,
+    /// At most one background job in flight (claimed by
+    /// [`plan`](Self::plan), released when the builder finishes).
+    pending: AtomicBool,
+    /// Re-shard backoff: a failed install (an update batch landed
+    /// mid-build) skips this many `plan` calls before retrying,
+    /// doubling per consecutive failure — a sustained update stream
+    /// with persistent tuner drift must not livelock the builder on
+    /// full rebuilds that can never install.
+    reshard_cooldown: AtomicU64,
+    reshard_failures: AtomicU64,
+}
+
+impl EpochState {
+    /// Build the initial epoch (version 0, seq 0) and the manager.
+    pub fn bootstrap(
+        xs: &[f32],
+        runtime: Option<Arc<Runtime>>,
+        engine_cfg: EngineCfg,
+        cfg: LifecycleCfg,
+    ) -> Arc<EpochState> {
+        let sharded = build_sharded(xs, engine_cfg);
+        let mut engines = build_static_engines(xs, runtime.clone());
+        let sharded_dyn: Arc<dyn Engine> = sharded.clone();
+        engines.insert(1, sharded_dyn);
+        let epoch = Arc::new(EngineEpoch::new(0, 0, xs.len(), engines));
+        Arc::new(EpochState {
+            n: xs.len(),
+            current: RwLock::new(epoch),
+            sharded,
+            runtime,
+            engine_cfg,
+            cfg,
+            cost: RtCostModel::default(),
+            observer: Mutex::new(WorkloadObserver::new(cfg.observer_half_life)),
+            version: AtomicU64::new(0),
+            rebuilds: AtomicU64::new(0),
+            reshards: AtomicU64::new(0),
+            pending: AtomicBool::new(false),
+            reshard_cooldown: AtomicU64::new(0),
+            reshard_failures: AtomicU64::new(0),
+        })
+    }
+
+    /// The current epoch (an `Arc` clone — callers pin it per segment).
+    pub fn current(&self) -> Arc<EngineEpoch> {
+        self.current.read().expect("epoch lock").clone()
+    }
+
+    /// The published applied-update sequence number.
+    pub fn applied_seq(&self) -> u64 {
+        self.sharded.seq()
+    }
+
+    /// Whether an epoch's static engines match the served values.
+    pub fn is_fresh(&self, epoch: &EngineEpoch) -> bool {
+        epoch.built_from_seq == self.applied_seq()
+    }
+
+    pub fn epoch_version(&self) -> u64 {
+        self.version.load(Ordering::Acquire)
+    }
+
+    pub fn rebuilds(&self) -> u64 {
+        self.rebuilds.load(Ordering::Acquire)
+    }
+
+    pub fn reshards(&self) -> u64 {
+        self.reshards.load(Ordering::Acquire)
+    }
+
+    pub fn shard_block_live(&self) -> usize {
+        self.sharded.block_size()
+    }
+
+    /// Route an update batch to the mutable engine (bumps the seq, so
+    /// every epoch built before it immediately reads as stale).
     pub fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<EngineKind> {
-        let engine = self
-            .engines
-            .iter()
-            .find(|e| e.supports_updates())
-            .ok_or_else(|| anyhow!("no mutable engine built"))?;
-        engine.update_batch(updates, workers)?;
-        self.mutated.store(true, Ordering::Release);
-        Ok(engine.kind())
+        self.sharded.update_batch(updates, workers)?;
+        Ok(EngineKind::Sharded)
     }
+
+    /// Trigger logic, run by the serving thread after each fused batch
+    /// (cheap: one observer snapshot + O(log n) tuner sweep). Claims
+    /// the single pending slot when work is due; the caller forwards
+    /// the job to the builder thread.
+    pub fn plan(&self) -> Option<BuildJob> {
+        if self.cfg.rebuild == RebuildMode::Off {
+            return None;
+        }
+        if self.pending.load(Ordering::Acquire) {
+            return None;
+        }
+        let obs = self.observer.lock().expect("observer lock").snapshot();
+        if obs.ops == 0 {
+            return None;
+        }
+        // Static rebuild first: restoring routing freedom outranks a
+        // block-size adjustment, and a stale epoch means recent
+        // updates — exactly when a re-shard install would abort
+        // anyway. Fires once the epoch is stale and the observed
+        // update rate has dropped below the cost model's threshold.
+        let epoch = self.current();
+        if !self.is_fresh(&epoch)
+            && self.cost.rebuild_worthwhile(self.n, self.shard_block_live(), &obs)
+        {
+            return self.claim(BuildJob::Statics);
+        }
+        // Online re-shard: only when the block rule is the auto-tuner,
+        // and only once any post-abort cooldown has elapsed.
+        if matches!(self.engine_cfg.shard_block, ShardBlock::Auto { .. }) {
+            if self.reshard_cooldown.load(Ordering::Acquire) > 0 {
+                self.reshard_cooldown.fetch_sub(1, Ordering::AcqRel);
+                return None;
+            }
+            let live = self.shard_block_live().max(1);
+            let tuned = self.cost.tune_shard_block_observed(self.n, &obs).max(1);
+            let drift = (tuned as f64 / live as f64).max(live as f64 / tuned as f64);
+            if drift >= self.cfg.reshard_drift {
+                return self.claim(BuildJob::Reshard(tuned));
+            }
+        }
+        None
+    }
+
+    fn claim(&self, job: BuildJob) -> Option<BuildJob> {
+        self.pending
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .ok()
+            .map(|_| job)
+    }
+
+    /// Release the pending slot without running the job (send failure).
+    pub fn clear_pending(&self) {
+        self.pending.store(false, Ordering::Release);
+    }
+
+    /// Execute one job — the builder thread's body. Rebuild latency and
+    /// counters land in `metrics`; the epoch publish is an `Arc` swap
+    /// under a short write lock.
+    pub fn run_job(&self, job: BuildJob, metrics: &Mutex<Metrics>) {
+        match job {
+            BuildJob::Statics => {
+                let t0 = Instant::now();
+                let (xs, seq) = self.sharded.snapshot();
+                let mut engines = build_static_engines(&xs, self.runtime.clone());
+                let sharded_dyn: Arc<dyn Engine> = self.sharded.clone();
+                engines.insert(1, sharded_dyn);
+                let version = self.version.fetch_add(1, Ordering::AcqRel) + 1;
+                let epoch = Arc::new(EngineEpoch::new(version, seq, self.n, engines));
+                *self.current.write().expect("epoch lock") = epoch;
+                // Metrics before the counter: the counter is the
+                // "rebuild done" signal pollers watch, and they expect
+                // the recorded metrics to be visible once it trips.
+                metrics
+                    .lock()
+                    .expect("metrics lock")
+                    .record_rebuild(version, t0.elapsed().as_nanos() as u64);
+                self.rebuilds.fetch_add(1, Ordering::AcqRel);
+            }
+            BuildJob::Reshard(block_size) => {
+                if self.sharded.reshard(block_size) {
+                    // Publish a version bump so the swap is observable;
+                    // the statics are untouched — the sharded engine is
+                    // shared by Arc, so the current epoch already serves
+                    // the new decomposition.
+                    let version = self.version.fetch_add(1, Ordering::AcqRel) + 1;
+                    let cur = self.current();
+                    *self.current.write().expect("epoch lock") = Arc::new(EngineEpoch::new(
+                        version,
+                        cur.built_from_seq,
+                        self.n,
+                        cur.engines.clone(),
+                    ));
+                    metrics
+                        .lock()
+                        .expect("metrics lock")
+                        .record_reshard(version, self.sharded.block_size());
+                    self.reshard_failures.store(0, Ordering::Release);
+                    self.reshards.fetch_add(1, Ordering::AcqRel);
+                } else {
+                    // Aborted: an update batch landed mid-build. Back
+                    // off exponentially (in plan() calls) before the
+                    // next attempt so sustained updates with persistent
+                    // drift cannot livelock the builder.
+                    let failures = self.reshard_failures.fetch_add(1, Ordering::AcqRel);
+                    self.reshard_cooldown.store(1u64 << failures.min(8), Ordering::Release);
+                }
+            }
+        }
+        self.pending.store(false, Ordering::Release);
+    }
+}
+
+/// Spawn the background builder: a dedicated thread draining lifecycle
+/// jobs (the builds themselves parallelise over `util::pool` inside the
+/// engine constructors, e.g. the sharded per-block build). Dropping
+/// every sender stops the thread after the queue drains.
+pub fn spawn_builder(
+    state: Arc<EpochState>,
+    metrics: Arc<Mutex<Metrics>>,
+) -> (SyncSender<BuildJob>, JoinHandle<()>) {
+    let (tx, rx) = sync_channel::<BuildJob>(2);
+    let handle = std::thread::spawn(move || {
+        while let Ok(job) = rx.recv() {
+            state.run_job(job, &metrics);
+        }
+    });
+    (tx, handle)
 }
 
 #[cfg(test)]
@@ -383,29 +773,253 @@ mod tests {
     }
 
     #[test]
-    fn update_batch_goes_to_the_sharded_engine_only() {
+    fn updates_flow_through_the_epoch_state() {
         let mut xs = Rng::new(64).uniform_f32_vec(512);
-        let set =
-            EngineSet::build_with(&xs, None, EngineCfg { shard_block: ShardBlock::Fixed(32) });
-        assert!(!set.mutated());
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(32) },
+            LifecycleCfg::default(),
+        );
+        let epoch = state.current();
+        assert_eq!(epoch.version, 0);
+        assert_eq!(epoch.built_from_seq, 0);
+        assert!(state.is_fresh(&epoch));
         // Static engines refuse the write path.
         for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive] {
-            let e = set.get(kind).unwrap();
+            let e = epoch.get(kind).unwrap();
             assert!(!e.supports_updates());
             assert!(e.update_batch(&[(0, 0.5)], 1).is_err(), "{}", kind.name());
         }
-        assert!(!set.mutated(), "refused updates must not mark the set mutated");
-        // The set routes the batch to the sharded engine and flips the flag.
+        assert!(state.is_fresh(&epoch), "refused updates must not bump the seq");
+        // An applied batch bumps the seq: the epoch reads as stale.
         let updates = vec![(3usize, -1.0f32), (31, -0.5), (32, -0.25), (511, -2.0)];
-        let applied = set.update_batch(&updates, 2).unwrap();
-        assert_eq!(applied, EngineKind::Sharded);
-        assert!(set.mutated());
+        assert_eq!(state.update_batch(&updates, 2).unwrap(), EngineKind::Sharded);
+        assert_eq!(state.applied_seq(), 1);
+        assert!(!state.is_fresh(&epoch));
         for &(i, v) in &updates {
             xs[i] = v;
         }
         let queries = vec![(0u32, 511u32), (4, 40), (32, 511)];
-        let got = set.get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        let got = epoch.get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
         assert_eq!(got, oracle_batch(&xs, &queries));
+    }
+
+    #[test]
+    fn statics_rebuild_publishes_a_fresh_epoch() {
+        let mut xs = Rng::new(66).uniform_f32_vec(1024);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            LifecycleCfg::default(),
+        );
+        let updates = vec![(100usize, -0.5f32), (900, -0.25)];
+        state.update_batch(&updates, 2).unwrap();
+        for &(i, v) in &updates {
+            xs[i] = v;
+        }
+        let old = state.current();
+        assert!(!state.is_fresh(&old));
+        let metrics = Mutex::new(Metrics::new());
+        state.run_job(BuildJob::Statics, &metrics);
+        let fresh = state.current();
+        assert_eq!(fresh.version, 1);
+        assert_eq!(fresh.built_from_seq, 1);
+        assert!(state.is_fresh(&fresh));
+        assert!(!state.is_fresh(&old), "the old epoch stays stale");
+        assert_eq!(state.rebuilds(), 1);
+        assert_eq!(metrics.lock().unwrap().rebuilds, 1);
+        // The rebuilt statics serve the *updated* values.
+        let queries = vec![(0u32, 1023u32), (50, 150), (850, 950)];
+        let want = oracle_batch(&xs, &queries);
+        for kind in [EngineKind::Rtx, EngineKind::Lca, EngineKind::Exhaustive] {
+            let got = fresh.get(kind).unwrap().solve(&queries, 2).unwrap();
+            assert_eq!(got, want, "{}", kind.name());
+        }
+        // The old epoch's statics still answer from the old array — the
+        // in-flight-segment contract.
+        let stale_got = old.get(EngineKind::Lca).unwrap().solve(&[(100, 100)], 1).unwrap();
+        assert_eq!(stale_got, vec![100]);
+    }
+
+    #[test]
+    fn reshard_swaps_and_aborts_on_seq_movement() {
+        let xs = Rng::new(67).uniform_f32_vec(2048);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            LifecycleCfg::default(),
+        );
+        assert_eq!(state.shard_block_live(), 64);
+        let metrics = Mutex::new(Metrics::new());
+        state.run_job(BuildJob::Reshard(16), &metrics);
+        assert_eq!(state.shard_block_live(), 16);
+        assert_eq!(state.reshards(), 1);
+        assert_eq!(state.epoch_version(), 1);
+        let queries = vec![(0u32, 2047u32), (60, 70), (1000, 1100)];
+        let got = state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries));
+        // A replacement built from a stale snapshot must not install.
+        let replacement = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 128, ..Default::default() },
+        );
+        state.update_batch(&[(0, -1.0)], 1).unwrap();
+        assert!(!state.sharded.install(replacement, 0), "stale install must abort");
+        assert_eq!(state.shard_block_live(), 16, "block size unchanged after abort");
+    }
+
+    #[test]
+    fn plan_fires_statics_rebuild_only_after_quiet_period() {
+        let n = 1usize << 14;
+        let xs = Rng::new(68).uniform_f32_vec(n);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(128) },
+            LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
+        );
+        let mut rng = Rng::new(69);
+        let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
+        // Fresh + no traffic: nothing to do.
+        assert_eq!(state.plan(), None);
+        // Stale but busy: the threshold holds the rebuild back.
+        state.update_batch(&[(5, -0.5)], 1).unwrap();
+        for _ in 0..4 {
+            let mut o = state.observer.lock().unwrap();
+            o.observe_queries(&qs);
+            o.observe_updates(64);
+        }
+        assert_eq!(state.plan(), None, "busy traffic must not trigger a rebuild");
+        // Quiet period: decay until the threshold trips.
+        let mut fired = None;
+        for k in 0..500 {
+            state.observer.lock().unwrap().observe_queries(&qs);
+            if let Some(job) = state.plan() {
+                fired = Some((k, job));
+                break;
+            }
+        }
+        let (k, job) = fired.expect("quiet period must trigger a rebuild");
+        assert_eq!(job, BuildJob::Statics);
+        assert!(k > 0, "not on the first quiet segment (frac still high)");
+        // The pending slot is claimed: no double-scheduling.
+        assert_eq!(state.plan(), None);
+        state.clear_pending();
+        assert!(state.plan().is_some(), "cleared slot can re-claim");
+    }
+
+    #[test]
+    fn plan_fires_reshard_on_observed_drift() {
+        let n = 1usize << 14;
+        let xs = Rng::new(70).uniform_f32_vec(n);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg {
+                shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+            },
+            LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
+        );
+        let initial = state.shard_block_live();
+        assert!(initial >= 4);
+        // Offer pure large-range traffic: the observed-optimal block
+        // size collapses far below the prior-tuned one.
+        let mut rng = Rng::new(71);
+        let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
+        let mut fired = None;
+        for _ in 0..50 {
+            state.observer.lock().unwrap().observe_queries(&large);
+            if let Some(job) = state.plan() {
+                fired = Some(job);
+                break;
+            }
+        }
+        match fired.expect("distribution shift must trigger a re-shard") {
+            BuildJob::Reshard(bs) => {
+                let drift = (bs as f64 / initial as f64).max(initial as f64 / bs as f64);
+                assert!(drift >= 2.0, "initial {initial} tuned {bs}");
+                // Run it: the swap happens (no updates landed) and the
+                // engine still answers correctly.
+                let metrics = Mutex::new(Metrics::new());
+                state.run_job(BuildJob::Reshard(bs), &metrics);
+                assert_eq!(state.shard_block_live(), bs);
+                assert_eq!(state.reshards(), 1);
+                let queries = vec![(0u32, (n - 1) as u32), (77, 4000)];
+                let got =
+                    state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+                assert_eq!(got, oracle_batch(&xs, &queries));
+            }
+            j => panic!("expected a re-shard, got {j:?}"),
+        }
+    }
+
+    #[test]
+    fn reshard_cooldown_gates_retries_after_aborted_installs() {
+        let n = 1usize << 14;
+        let xs = Rng::new(75).uniform_f32_vec(n);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg {
+                shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+            },
+            LifecycleCfg::default(),
+        );
+        // Offer drifted traffic, as in plan_fires_reshard_on_observed_drift.
+        let mut rng = Rng::new(76);
+        let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
+        state.observer.lock().unwrap().observe_queries(&large);
+        // Simulate two aborted installs' worth of backoff.
+        state.reshard_failures.store(1, Ordering::Release);
+        state.reshard_cooldown.store(2, Ordering::Release);
+        assert_eq!(state.plan(), None, "cooldown tick 1 skips the re-shard");
+        assert_eq!(state.plan(), None, "cooldown tick 2 skips the re-shard");
+        match state.plan() {
+            Some(BuildJob::Reshard(_)) => {}
+            j => panic!("cooldown elapsed: expected a re-shard, got {j:?}"),
+        }
+    }
+
+    #[test]
+    fn rebuild_off_never_plans() {
+        let n = 1usize << 12;
+        let xs = Rng::new(72).uniform_f32_vec(n);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg::default(),
+            LifecycleCfg { rebuild: RebuildMode::Off, ..Default::default() },
+        );
+        state.update_batch(&[(1, -1.0)], 1).unwrap();
+        let mut rng = Rng::new(73);
+        let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
+        for _ in 0..100 {
+            state.observer.lock().unwrap().observe_queries(&qs);
+            assert_eq!(state.plan(), None);
+        }
+    }
+
+    #[test]
+    fn builder_thread_drains_jobs_and_stops() {
+        let xs = Rng::new(74).uniform_f32_vec(1024);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            LifecycleCfg::default(),
+        );
+        state.update_batch(&[(7, -0.5)], 1).unwrap();
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (tx, handle) = spawn_builder(state.clone(), metrics.clone());
+        tx.send(BuildJob::Statics).unwrap();
+        drop(tx);
+        handle.join().unwrap();
+        assert_eq!(state.rebuilds(), 1);
+        assert!(state.is_fresh(&state.current()));
+        assert_eq!(metrics.lock().unwrap().epoch_version, 1);
     }
 
     #[test]

@@ -1,8 +1,12 @@
 //! Serving metrics: per-engine latency histograms, query/batch counts,
-//! and a human-readable snapshot for the CLI and the E2E example.
+//! epoch-lifecycle counters, and a human-readable snapshot for the CLI
+//! and the E2E example. Empty sections (no updates applied, no
+//! lifecycle events, no observed traffic) are suppressed from the
+//! snapshot so pure-query runs print no dead histogram lines.
 
 use super::engine::EngineKind;
 use crate::util::stats::{fmt_ns, LatencyHistogram};
+use crate::workload::observer::ObservedWorkload;
 use std::collections::HashMap;
 use std::fmt;
 
@@ -23,6 +27,19 @@ pub struct Metrics {
     /// Write path: total point updates applied.
     pub updates: u64,
     pub update_latency: LatencyHistogram,
+    /// Lifecycle: latest published epoch version.
+    pub epoch_version: u64,
+    /// Lifecycle: background static rebuilds completed.
+    pub rebuilds: u64,
+    /// Lifecycle: online re-shards completed.
+    pub reshards: u64,
+    /// Lifecycle: wall-clock of completed static rebuilds.
+    pub rebuild_latency: LatencyHistogram,
+    /// Live sharded block size (0 until the serving loop records one).
+    pub shard_block: usize,
+    /// Decayed traffic observation (`workload::observer`), refreshed by
+    /// the serving loop after every fused batch.
+    pub observed: Option<ObservedWorkload>,
     pub started: Option<std::time::Instant>,
 }
 
@@ -50,6 +67,28 @@ impl Metrics {
         self.update_batches += 1;
         self.updates += updates;
         self.update_latency.record(latency_ns);
+    }
+
+    /// A background static rebuild published epoch `version`.
+    pub fn record_rebuild(&mut self, version: u64, latency_ns: u64) {
+        self.rebuilds += 1;
+        self.epoch_version = self.epoch_version.max(version);
+        self.rebuild_latency.record(latency_ns);
+    }
+
+    /// A background re-shard published epoch `version` at `block`.
+    pub fn record_reshard(&mut self, version: u64, block: usize) {
+        self.reshards += 1;
+        self.epoch_version = self.epoch_version.max(version);
+        self.shard_block = block;
+    }
+
+    /// The serving loop's per-batch refresh of the decayed traffic view
+    /// and live lifecycle observables.
+    pub fn record_observed(&mut self, obs: ObservedWorkload, epoch_version: u64, block: usize) {
+        self.observed = Some(obs);
+        self.epoch_version = self.epoch_version.max(epoch_version);
+        self.shard_block = block;
     }
 
     pub fn engine(&self, kind: EngineKind) -> Option<&EngineMetrics> {
@@ -101,7 +140,8 @@ impl fmt::Display for Metrics {
                 fmt_ns(e.batch_latency.mean_ns()),
             )?;
         }
-        if self.update_batches > 0 {
+        // Pure-query runs print no empty update histogram line.
+        if self.update_batches > 0 && self.updates > 0 {
             writeln!(
                 f,
                 "  {:<10} batches={:<6} points={:<9} batch p50={} p99={} mean={}",
@@ -112,6 +152,28 @@ impl fmt::Display for Metrics {
                 fmt_ns(self.update_latency.quantile_ns(0.99) as f64),
                 fmt_ns(self.update_latency.mean_ns()),
             )?;
+        }
+        // Lifecycle line only once something happened.
+        if self.epoch_version > 0 || self.rebuilds > 0 || self.reshards > 0 {
+            write!(
+                f,
+                "  {:<10} epoch={} rebuilds={} reshards={} shard_block={}",
+                "lifecycle", self.epoch_version, self.rebuilds, self.reshards, self.shard_block,
+            )?;
+            if self.rebuilds > 0 {
+                write!(f, " rebuild p50={}", fmt_ns(self.rebuild_latency.quantile_ns(0.5) as f64))?;
+            }
+            writeln!(f)?;
+        }
+        // Decayed traffic view, suppressed until traffic was observed.
+        if let Some(o) = &self.observed {
+            if o.ops > 0 {
+                writeln!(
+                    f,
+                    "  {:<10} ops={} mean_range={:.1} mean_batch={:.1} update_frac={:.4}",
+                    "observed", o.ops, o.mean_range, o.mean_batch, o.update_frac,
+                )?;
+            }
         }
         Ok(())
     }
@@ -145,6 +207,45 @@ mod tests {
         // The write path never inflates query throughput.
         assert_eq!(m.total_queries(), 0);
         assert!(m.to_string().contains("updates"));
+    }
+
+    #[test]
+    fn pure_query_snapshot_has_no_update_or_lifecycle_lines() {
+        let mut m = Metrics::new();
+        m.record_request();
+        m.record_batch(EngineKind::Lca, 64, 1_000);
+        let text = m.to_string();
+        assert!(!text.contains("updates"), "{text}");
+        assert!(!text.contains("lifecycle"), "{text}");
+        assert!(!text.contains("observed"), "{text}");
+    }
+
+    #[test]
+    fn lifecycle_and_observed_lines_appear_when_recorded() {
+        let mut m = Metrics::new();
+        m.record_rebuild(1, 5_000_000);
+        m.record_reshard(2, 256);
+        let obs = ObservedWorkload {
+            mean_range: 42.5,
+            mean_batch: 128.0,
+            update_frac: 0.125,
+            ops: 1000,
+            ..Default::default()
+        };
+        m.record_observed(obs, 2, 256);
+        assert_eq!(m.epoch_version, 2);
+        assert_eq!(m.rebuilds, 1);
+        assert_eq!(m.reshards, 1);
+        assert_eq!(m.shard_block, 256);
+        let text = m.to_string();
+        assert!(text.contains("lifecycle"), "{text}");
+        assert!(text.contains("epoch=2 rebuilds=1 reshards=1 shard_block=256"), "{text}");
+        assert!(text.contains("observed"), "{text}");
+        assert!(text.contains("update_frac=0.1250"), "{text}");
+        // An empty observation stays suppressed.
+        let mut quiet = Metrics::new();
+        quiet.record_observed(ObservedWorkload::default(), 0, 64);
+        assert!(!quiet.to_string().contains("observed"));
     }
 
     #[test]

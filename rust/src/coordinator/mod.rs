@@ -2,13 +2,17 @@
 //! vLLM-router mold (DESIGN.md §3):
 //!
 //! - [`engine`]: uniform [`engine::Engine`] wrappers over RTXRMQ / LCA /
-//!   HRMQ / EXHAUSTIVE and the PJRT-backed XLA engine.
+//!   HRMQ / EXHAUSTIVE and the PJRT-backed XLA engine — organised into
+//!   versioned **epochs** with a background rebuild/re-shard lifecycle
+//!   ([`engine::EpochState`]) so static engines recover from mutation.
 //! - [`router`]: picks an engine per request from the batch's range-length
-//!   statistics using the cost models (the Fig. 10 regimes as a policy).
+//!   statistics using the cost models (the Fig. 10 regimes as a policy),
+//!   within the current epoch's freshness ([`router::Router::route_epoch`]).
 //! - [`batcher`]: dynamic batching with bounded queues (backpressure).
 //! - [`server`]: the request loop (std threads + channels; the offline
 //!   environment has no tokio — documented substitution, DESIGN.md §0).
-//! - [`metrics`]: per-engine latency histograms and throughput counters.
+//! - [`metrics`]: per-engine latency histograms, throughput counters,
+//!   lifecycle counters and the decayed traffic observation.
 
 pub mod batcher;
 pub mod engine;

@@ -43,20 +43,27 @@ impl Router {
         }
     }
 
-    /// Serving-loop entry point: like [`route`](Self::route), but aware
-    /// of the mutable serving path. Once the array has been mutated,
-    /// only the sharded engine still matches the served values — every
-    /// static engine was built from the original array and is stale by
-    /// definition — so query segments are pinned there, overriding even
-    /// a `Policy::Fixed` pin (correctness beats policy).
-    pub fn route_serving(
+    /// Serving-loop entry point: route within one engine epoch.
+    /// `fresh` is the epoch's freshness (`built_from_seq` equals the
+    /// published applied-update sequence — `EpochState::is_fresh`).
+    ///
+    /// On a stale epoch only engines that track updates in place still
+    /// match the served values, so availability collapses to the
+    /// sharded engine — a uniform *availability* rule, not a policy
+    /// override. This replaced the old sticky `mutated` flag and its
+    /// explicit `Policy::Fixed` special case: a pin chooses among fresh
+    /// engines like every other policy, and the moment the background
+    /// rebuild publishes a fresh epoch the pin (and the Fig. 12
+    /// crossover routing) is honored again instead of being lost for
+    /// the rest of the process lifetime.
+    pub fn route_epoch(
         &self,
         n: usize,
         queries: &[Query],
         available: &[EngineKind],
-        mutated: bool,
+        fresh: bool,
     ) -> EngineKind {
-        if mutated && available.contains(&EngineKind::Sharded) {
+        if !fresh && available.contains(&EngineKind::Sharded) {
             return EngineKind::Sharded;
         }
         self.route(n, queries, available)
@@ -298,9 +305,12 @@ mod tests {
     }
 
     #[test]
-    fn mutated_arrays_pin_every_policy_to_sharded() {
-        // Post-update, the static engines are stale: whatever the policy
-        // or distribution, query segments must go to the shards.
+    fn stale_epochs_pin_every_policy_to_sharded() {
+        // On a stale epoch only the in-place-updated engine matches the
+        // served values: whatever the policy or distribution, query
+        // segments must go to the shards. On a fresh epoch, routing is
+        // exactly `route` — including for `Policy::Fixed`, which needs
+        // no special staleness override any more.
         let mut with_sharded = all_kinds();
         with_sharded.push(EngineKind::Sharded);
         let mut rng = Rng::new(78);
@@ -315,23 +325,28 @@ mod tests {
             for dist in RangeDist::all() {
                 let qs = gen_queries(n, 128, dist, &mut rng);
                 assert_eq!(
-                    router.route_serving(n, &qs, &with_sharded, true),
+                    router.route_epoch(n, &qs, &with_sharded, false),
                     EngineKind::Sharded,
                     "{policy:?} {dist:?}"
                 );
-                // Unmutated serving routes exactly like `route`.
+                // A fresh epoch routes exactly like `route` — the
+                // rebuilt statics are usable again.
                 assert_eq!(
-                    router.route_serving(n, &qs, &with_sharded, false),
+                    router.route_epoch(n, &qs, &with_sharded, true),
                     router.route(n, &qs, &with_sharded),
                     "{policy:?} {dist:?}"
                 );
             }
         }
+        // A fresh epoch re-enables a Fixed pin verbatim.
+        let router = Router::new(Policy::Fixed(EngineKind::Lca));
+        let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
+        assert_eq!(router.route_epoch(n, &qs, &with_sharded, true), EngineKind::Lca);
         // Without a sharded engine there is nothing fresh to pin to;
         // fall through to the normal policy (callers always build it).
         let router = Router::new(Policy::Heuristic);
         let qs = gen_queries(n, 64, RangeDist::Large, &mut rng);
-        assert_eq!(router.route_serving(n, &qs, &all_kinds(), true), EngineKind::Lca);
+        assert_eq!(router.route_epoch(n, &qs, &all_kinds(), false), EngineKind::Lca);
     }
 
     #[test]

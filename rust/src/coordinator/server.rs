@@ -1,11 +1,15 @@
 //! The serving loop: bounded request queue → dynamic batcher → router →
-//! engine → reply. One array ("model") per coordinator, engines built
-//! once at startup (the paper's build-once/query-many contract — now
-//! with a write path: update segments mutate the sharded engine in
-//! place between the query segments that fence them).
+//! engine epoch → reply. One array ("model") per coordinator. Engines
+//! live in **epochs** (`coordinator::engine`): query segments pin the
+//! current epoch for their duration and route against its freshness,
+//! update segments mutate the shared sharded engine and bump the
+//! published applied-update sequence, and a background builder rebuilds
+//! stale static engines / re-shards once the observed traffic says it
+//! is worthwhile — so the Fig. 12 crossover routing comes back after a
+//! burst of updates instead of being lost forever.
 
 use super::batcher::{next_batch, BatcherCfg, Request, Response, Segment};
-use super::engine::{EngineCfg, EngineKind, EngineSet};
+use super::engine::{spawn_builder, BuildJob, EngineCfg, EngineKind, EpochState, LifecycleCfg};
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
 use crate::rmq::Query;
@@ -26,6 +30,8 @@ pub struct CoordinatorCfg {
     pub engine_workers: usize,
     /// Engine build knobs (e.g. the sharded engine's block size).
     pub engines: EngineCfg,
+    /// Epoch-lifecycle knobs (`serve --rebuild`, `--reshard-drift`).
+    pub lifecycle: LifecycleCfg,
 }
 
 impl Default for CoordinatorCfg {
@@ -35,6 +41,7 @@ impl Default for CoordinatorCfg {
             batcher: BatcherCfg::default(),
             engine_workers: crate::util::pool::default_workers(),
             engines: EngineCfg::default(),
+            lifecycle: LifecycleCfg::default(),
         }
     }
 }
@@ -43,30 +50,42 @@ impl Default for CoordinatorCfg {
 pub struct Coordinator {
     tx: Option<SyncSender<Request>>,
     worker: Option<JoinHandle<()>>,
+    job_tx: Option<SyncSender<BuildJob>>,
+    builder: Option<JoinHandle<()>>,
     pub metrics: Arc<Mutex<Metrics>>,
+    /// Observable lifecycle state (epoch version, rebuild/re-shard
+    /// counters, live block size).
+    pub lifecycle: Arc<EpochState>,
     next_id: AtomicU64,
     n: usize,
 }
 
 impl Coordinator {
-    /// Build engines for `xs` and start the serving thread.
+    /// Build the initial epoch for `xs`, start the background builder
+    /// and the serving thread.
     pub fn start(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: CoordinatorCfg) -> Coordinator {
-        let engines = Arc::new(EngineSet::build_with(xs, runtime, cfg.engines));
+        let state = EpochState::bootstrap(xs, runtime, cfg.engines, cfg.lifecycle);
         let router = Router::new(cfg.policy);
         let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let (job_tx, builder) = spawn_builder(state.clone(), metrics.clone());
         let (tx, rx) = sync_channel::<Request>(cfg.batcher.queue_cap);
         let m = metrics.clone();
+        let st = state.clone();
+        let jt = job_tx.clone();
         let n = xs.len();
         let batcher_cfg = cfg.batcher;
         let workers = cfg.engine_workers;
         let worker = std::thread::spawn(move || {
-            let available = engines.kinds();
             while let Some(fused) = next_batch(&rx, &batcher_cfg) {
                 let t0 = std::time::Instant::now();
                 let mut answers: Vec<u32> = Vec::with_capacity(fused.total_queries());
                 let mut query_engine: Option<&'static str> = None;
                 let mut update_engine: Option<&'static str> = None;
                 let mut updates_ok = true;
+                // Published-epoch version (not the raw counter, which
+                // briefly runs ahead mid-publish): keeps response epochs
+                // monotone across update-only batches.
+                let mut epoch_seen = st.current().version;
                 // Segments execute strictly in stream order on this one
                 // thread — that *is* the fence: an update segment is
                 // visible to every later query segment and to none
@@ -74,19 +93,25 @@ impl Coordinator {
                 for seg in &fused.segments {
                     match seg {
                         Segment::Queries(qs) => {
-                            let kind =
-                                router.route_serving(n, qs, &available, engines.mutated());
-                            let engine = engines.get(kind).expect("routed engine exists");
+                            // Pin this segment to the epoch current at its
+                            // start: the Arc keeps a mid-segment background
+                            // swap from freeing engines under us; the next
+                            // segment re-loads and routes freely against
+                            // whatever epoch is current by then.
+                            let epoch = st.current();
+                            let fresh = st.is_fresh(&epoch);
+                            let kind = router.route_epoch(n, qs, epoch.kinds(), fresh);
+                            let engine = epoch.get(kind).expect("routed engine exists");
                             let ts = std::time::Instant::now();
                             let got = match engine.solve(qs, workers) {
                                 Ok(a) => a,
                                 Err(e) => {
-                                    // Only the XLA engine can fail, and it is
-                                    // never routed to once mutated — so the
-                                    // exhaustive fallback still sees the
-                                    // array it was built from.
+                                    // Only the XLA engine can fail, and a
+                                    // stale epoch never routes to it — so
+                                    // the exhaustive fallback still sees
+                                    // the array its epoch was built from.
                                     eprintln!("engine {} failed: {e}", kind.name());
-                                    engines
+                                    epoch
                                         .get(EngineKind::Exhaustive)
                                         .expect("exhaustive always built")
                                         .solve(qs, workers)
@@ -95,6 +120,8 @@ impl Coordinator {
                             };
                             let seg_ns = ts.elapsed().as_nanos() as u64;
                             m.lock().unwrap().record_batch(kind, qs.len() as u64, seg_ns);
+                            st.observer.lock().unwrap().observe_queries(qs);
+                            epoch_seen = epoch.version;
                             // Last segment wins: once an update fences the
                             // batch, later segments are the current truth.
                             query_engine = Some(kind.name());
@@ -102,7 +129,7 @@ impl Coordinator {
                         }
                         Segment::Updates(ups) => {
                             let ts = std::time::Instant::now();
-                            match engines.update_batch(ups, workers) {
+                            match st.update_batch(ups, workers) {
                                 Ok(kind) => {
                                     update_engine.get_or_insert(kind.name());
                                     m.lock().unwrap().record_update_batch(
@@ -112,13 +139,30 @@ impl Coordinator {
                                 }
                                 // Admission validated the indices; this
                                 // only fires when no mutable engine is
-                                // built, which `build_with` precludes.
+                                // built, which bootstrap precludes.
                                 Err(e) => {
                                     eprintln!("update batch dropped: {e}");
                                     updates_ok = false;
                                 }
                             }
+                            st.observer.lock().unwrap().observe_updates(ups.len());
                         }
+                    }
+                }
+                // Refresh the metrics' decayed-traffic view, then let the
+                // lifecycle plan background work off it (rebuild once the
+                // update rate is quiet, re-shard on tuner drift).
+                {
+                    let obs = st.observer.lock().unwrap().snapshot();
+                    m.lock().unwrap().record_observed(
+                        obs,
+                        st.epoch_version(),
+                        st.shard_block_live(),
+                    );
+                }
+                if let Some(job) = st.plan() {
+                    if jt.try_send(job).is_err() {
+                        st.clear_pending();
                     }
                 }
                 let latency = t0.elapsed().as_nanos() as u64;
@@ -134,12 +178,22 @@ impl Coordinator {
                         answers: ans,
                         updates_applied: if updates_ok { ups } else { 0 },
                         engine: engine_name,
+                        epoch: epoch_seen,
                         batch_latency_ns: latency,
                     });
                 }
             }
         });
-        Coordinator { tx: Some(tx), worker: Some(worker), metrics, next_id: AtomicU64::new(0), n }
+        Coordinator {
+            tx: Some(tx),
+            worker: Some(worker),
+            job_tx: Some(job_tx),
+            builder: Some(builder),
+            metrics,
+            lifecycle: state,
+            next_id: AtomicU64::new(0),
+            n,
+        }
     }
 
     /// Validated blocking query: submit and wait for the answer.
@@ -198,27 +252,34 @@ impl Coordinator {
         }
     }
 
-    /// Graceful shutdown: drain the queue, then join the worker.
+    /// Graceful shutdown: drain the request queue, join the serving
+    /// thread, then drain the lifecycle queue and join the builder.
     pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
         drop(self.tx.take());
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+        drop(self.job_tx.take());
+        if let Some(b) = self.builder.take() {
+            let _ = b.join();
         }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::engine::RebuildMode;
     use crate::rmq::sparse_table::oracle_batch;
     use crate::util::rng::Rng;
     use crate::workload::{gen_queries, RangeDist};
@@ -241,6 +302,7 @@ mod tests {
             let qs = gen_queries(4096, 64, dist, &mut rng);
             let resp = c.query(qs.clone()).unwrap();
             assert_eq!(resp.answers, oracle_batch(&xs, &qs), "{dist:?}");
+            assert_eq!(resp.epoch, 0, "no lifecycle events on a read-only run");
         }
         c.shutdown();
     }
@@ -291,6 +353,10 @@ mod tests {
         assert_eq!(resp.engine, "SHARDED");
         let m = c.metrics.lock().unwrap();
         assert!(m.engine(crate::coordinator::engine::EngineKind::Sharded).is_some());
+        // The serving loop refreshes the decayed-traffic view.
+        let obs = m.observed.expect("observed traffic recorded");
+        assert_eq!(obs.ops, 32);
+        assert!(m.shard_block > 0);
     }
 
     #[test]
@@ -317,13 +383,25 @@ mod tests {
     }
 
     #[test]
-    fn mutation_pins_later_plain_queries_to_sharded() {
-        let (c, mut xs) = coordinator(512, Policy::Heuristic);
+    fn stale_epoch_pins_later_plain_queries_to_sharded() {
+        // With the lifecycle off, no background rebuild can refresh the
+        // statics: after the first update every query — even a plain
+        // read-only one — must route to the always-current shards.
+        let mut xs = Rng::new(80).uniform_f32_vec(512);
+        let c = Coordinator::start(
+            &xs,
+            None,
+            CoordinatorCfg {
+                policy: Policy::Heuristic,
+                lifecycle: LifecycleCfg { rebuild: RebuildMode::Off, ..Default::default() },
+                ..Default::default()
+            },
+        );
         // Small array: read-only requests route off the shards.
         let before = c.query(vec![(0, 511)]).unwrap();
         assert_ne!(before.engine, "SHARDED");
-        // A mutating request flips the set; every later query — even a
-        // plain read-only one — must see the new value and the shards.
+        // A mutating request bumps the seq; every later query sees the
+        // new value and the shards.
         let upd = c
             .submit_mixed(vec![Op::Update { i: 300, v: -1.0 }, Op::Query((0, 511))])
             .unwrap();
@@ -334,6 +412,8 @@ mod tests {
         assert_eq!(after.engine, "SHARDED");
         assert_eq!(after.answers, oracle_batch(&xs, &[(0, 511), (0, 299)]));
         assert_eq!(after.updates_applied, 0);
+        assert_eq!(c.lifecycle.rebuilds(), 0, "--rebuild off never rebuilds");
+        assert_eq!(c.lifecycle.epoch_version(), 0);
         c.shutdown();
     }
 
@@ -350,6 +430,6 @@ mod tests {
         let (c, _) = coordinator(256, Policy::Heuristic);
         let resp = c.query(vec![(0, 255)]).unwrap();
         assert_eq!(resp.answers.len(), 1);
-        c.shutdown(); // must not hang
+        c.shutdown(); // must not hang (serving thread + builder thread)
     }
 }

@@ -8,7 +8,9 @@
 //!   artifacts    list the AOT artifact variants (PJRT manifest)
 //!   info         architecture profiles used by the models
 
-use rtxrmq::coordinator::engine::{EngineCfg, EngineKind, EngineSet, ShardBlock};
+use rtxrmq::coordinator::engine::{
+    EngineCfg, EngineKind, EngineSet, LifecycleCfg, RebuildMode, ShardBlock,
+};
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
 use rtxrmq::rmq::naive_rmq;
@@ -55,7 +57,11 @@ fn print_help() {
             .opt("mixed", "serve a mixed query+update op stream (gen_mixed)")
             .opt("update-frac", "update fraction of the mixed stream (default 0.1)")
             .opt("dist", "range distribution of the mixed stream (default small)")
-            .opt("shard-block", "block size or 'auto' = cost-model tuner (default √n)")
+            .opt("shard-block", "block size or 'auto' = workload-fed tuner (default √n)")
+            .opt("rebuild", "epoch lifecycle: auto = background rebuild/re-shard, off (default auto)")
+            .opt("reshard-drift", "re-shard when the tuned block drifts this factor (default 2.0)")
+            .opt("quiet-tail", "append this many pure-query requests (rebuild trigger window)")
+            .opt("expect-rebuild", "exit non-zero unless a background rebuild occurred")
             .opt("no-xla", "disable the PJRT/XLA engine"),
         Help::new("bench-smoke", "wall-clock ns/query grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
@@ -134,6 +140,12 @@ fn cmd_serve(args: &Args) -> i32 {
     let mixed = args.flag("mixed");
     let update_frac: f64 = args.get_or("update-frac", 0.1f64).unwrap();
     let dist = RangeDist::parse(&args.str_or("dist", "small")).unwrap_or(RangeDist::Small);
+    let rebuild = RebuildMode::parse(&args.str_or("rebuild", "auto")).unwrap_or_else(|| {
+        eprintln!("invalid --rebuild (expected auto|off)");
+        std::process::exit(2);
+    });
+    let reshard_drift: f64 = args.get_or("reshard-drift", 2.0f64).unwrap();
+    let quiet_tail: usize = args.get_or("quiet-tail", 0usize).unwrap();
     let xs = gen_array(n, 7);
     let runtime = if args.flag("no-xla") {
         None
@@ -144,14 +156,18 @@ fn cmd_serve(args: &Args) -> i32 {
     let c = Coordinator::start(
         &xs,
         runtime,
-        CoordinatorCfg { engines: EngineCfg { shard_block }, ..Default::default() },
+        CoordinatorCfg {
+            engines: EngineCfg { shard_block },
+            lifecycle: LifecycleCfg { rebuild, reshard_drift, ..Default::default() },
+            ..Default::default()
+        },
     );
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
+    // The rolling oracle tracks applied updates (mixed mode); a few
+    // answers per request are spot-checked against it.
+    let mut oracle = xs.clone();
     if mixed {
-        // Mixed query+update stream: every request is a fenced op batch;
-        // a rolling oracle array spot-checks a few answers per request.
-        let mut oracle = xs.clone();
         let mut total_updates = 0usize;
         for _ in 0..requests {
             let ops = gen_mixed(n, batch, update_frac, dist, &mut rng);
@@ -190,6 +206,40 @@ fn cmd_serve(args: &Args) -> i32 {
             "served {requests} requests x {batch} queries in {wall:.2?} ({:.0} queries/s)",
             (requests * batch) as f64 / wall.as_secs_f64()
         );
+    }
+    if quiet_tail > 0 {
+        // Quiet period: pure-query requests that let the observer's
+        // decayed update rate fall below the rebuild threshold, so the
+        // background builder can refresh the static engines.
+        for _ in 0..quiet_tail {
+            let qs = gen_queries(n, batch, dist, &mut rng);
+            let resp = c.query(qs.clone()).expect("quiet tail");
+            for (k, &(l, r)) in qs.iter().take(2).enumerate() {
+                assert_eq!(
+                    resp.answers[k],
+                    naive_rmq(&oracle, l as usize, r as usize) as u32,
+                    "({l},{r}) via {}",
+                    resp.engine
+                );
+            }
+        }
+        println!("quiet tail: {quiet_tail} pure-query requests served");
+    }
+    if args.flag("expect-rebuild") {
+        // The claim happens on the serving thread; the build may still
+        // be in flight on the builder — give it a moment to land.
+        let t1 = std::time::Instant::now();
+        while c.metrics.lock().unwrap().rebuilds == 0
+            && t1.elapsed() < std::time::Duration::from_secs(5)
+        {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+        }
+        if c.metrics.lock().unwrap().rebuilds == 0 {
+            eprintln!("--expect-rebuild: no background rebuild occurred");
+            println!("{}", c.metrics.lock().unwrap());
+            c.shutdown();
+            return 1;
+        }
     }
     println!("{}", c.metrics.lock().unwrap());
     c.shutdown();

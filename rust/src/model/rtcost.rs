@@ -10,6 +10,7 @@
 use super::cache::CacheModel;
 use crate::bvh::traverse::Counters;
 use crate::rtcore::arch::{self, ArchProfile, CpuProfile};
+use crate::workload::observer::ObservedWorkload;
 
 /// Saturation of a parallel machine by batch size: throughput fraction
 /// `batch / (batch + half_sat)`. Fig. 13's shapes: LCA/HRMQ/EXHAUSTIVE
@@ -61,6 +62,14 @@ pub struct RtCostModel {
     pub half_sat: f64,
     /// Fixed per-launch overhead in ns (amortised over the batch).
     pub launch_overhead_ns: f64,
+    /// Modeled work units per element for rebuilding the full static
+    /// engine set from a snapshot (`rebuild_cost`). The builds are
+    /// linear streaming passes (Cartesian tree + SV arrays for LCA, a
+    /// SAH sweep over n triangles for RTXRMQ, succinct tables for HRMQ)
+    /// that run on the *background* builder thread without stalling the
+    /// serving loop, so the charge is the throughput they steal from
+    /// query workers — a small per-element constant, not a latency.
+    pub c_rebuild_per_elem: f64,
 }
 
 impl Default for RtCostModel {
@@ -73,6 +82,7 @@ impl Default for RtCostModel {
             ns_per_unit_ref: 0.0159,
             half_sat: (1u64 << 21) as f64,
             launch_overhead_ns: 15_000.0,
+            c_rebuild_per_elem: 0.01,
         }
     }
 }
@@ -118,19 +128,33 @@ impl RtCostModel {
     /// (Θ(B): the rescan reads every element, the refit walks every
     /// leaf) and pays one summary refit (Θ(n/B)) in the worst case of a
     /// batch whose updates each touch a distinct block; larger batches
-    /// only amortise this further, so the model is conservative.
+    /// only amortise this further, and the summary *point-refit* path
+    /// (`rmq::sharded`: batches moving a single block minimum re-shape
+    /// one triangle and refit its ancestor path) makes the `n/B` term an
+    /// upper bound realised only by multi-block batches — so the model
+    /// is conservative.
     pub fn shard_cost_per_op(&self, n: usize, bs: usize, w: &ShardWorkload) -> f64 {
         let nf = (n.max(1)) as f64;
         let b = (bs.max(1)) as f64;
         let nb = (nf / b).max(1.0);
-        let m = w.mean_range.max(1.0).min(nf);
-        let span = 1.0 + (m - 1.0) / b;
-        let partial_probes = span.min(2.0);
-        let summary_prob = (span - 2.0).clamp(0.0, 1.0);
-        let query = partial_probes * self.probe_work(b) + summary_prob * self.probe_work(nb);
+        let query = self.shard_query_work(n, bs, w.mean_range);
         let update = b + nb;
         let u = w.update_frac.clamp(0.0, 1.0);
         (1.0 - u) * query + u * update
+    }
+
+    /// The query side of [`shard_cost_per_op`](Self::shard_cost_per_op):
+    /// modeled work of one query of length `range` through the two-level
+    /// decomposition at block size `bs`.
+    pub fn shard_query_work(&self, n: usize, bs: usize, range: f64) -> f64 {
+        let nf = (n.max(1)) as f64;
+        let b = (bs.max(1)) as f64;
+        let nb = (nf / b).max(1.0);
+        let m = range.max(1.0).min(nf);
+        let span = 1.0 + (m - 1.0) / b;
+        let partial_probes = span.min(2.0);
+        let summary_prob = (span - 2.0).clamp(0.0, 1.0);
+        partial_probes * self.probe_work(b) + summary_prob * self.probe_work(nb)
     }
 
     /// Pick the power-of-two shard block size minimising
@@ -154,6 +178,86 @@ impl RtCostModel {
             b <<= 1;
         }
         best.1
+    }
+
+    /// `--shard-block auto`, fed by live traffic: minimise the expected
+    /// cost per op over the *observed* decayed range-length histogram
+    /// (`workload::observer`) plus the observed update fraction's
+    /// amortised refit work — the CLI's `--dist`/`--update-frac` priors
+    /// only seed the initial build; once traffic flows, this is the
+    /// tuner the lifecycle manager compares against the live block
+    /// size. Integrating the histogram (geometric bucket centres)
+    /// rather than collapsing it to a mean matters because the probe
+    /// cascade's cost is non-linear in the range length (the summary
+    /// probe only appears once a query spans more than two blocks).
+    /// Falls back to the scalar tuner while the histogram is empty.
+    pub fn tune_shard_block_observed(&self, n: usize, w: &ObservedWorkload) -> usize {
+        let mass: f64 = w.range_hist.iter().sum();
+        if mass <= 0.0 {
+            return self.tune_shard_block(
+                n,
+                &ShardWorkload { mean_range: w.mean_range, update_frac: w.update_frac },
+            );
+        }
+        let u = w.update_frac.clamp(0.0, 1.0);
+        let cap = n.max(1).next_power_of_two().clamp(4, 1 << 12);
+        let mut best = (f64::INFINITY, 4usize);
+        let mut bs = 4usize;
+        loop {
+            let b = bs as f64;
+            let nb = ((n.max(1)) as f64 / b).max(1.0);
+            let mut query = 0.0;
+            for (k, &wk) in w.range_hist.iter().enumerate() {
+                if wk > 0.0 {
+                    // Bucket k holds lengths in [2^k, 2^{k+1}); integrate
+                    // at the geometric centre.
+                    query += wk * self.shard_query_work(n, bs, (1u64 << k) as f64 * 1.5);
+                }
+            }
+            query /= mass;
+            let cost = (1.0 - u) * query + u * (b + nb);
+            if cost < best.0 {
+                best = (cost, bs);
+            }
+            if bs >= cap {
+                break;
+            }
+            bs <<= 1;
+        }
+        best.1
+    }
+
+    /// One-time modeled cost of rebuilding the full static engine set
+    /// from an `n`-element snapshot (see
+    /// [`c_rebuild_per_elem`](Self::c_rebuild_per_elem)).
+    pub fn rebuild_cost(&self, n: usize) -> f64 {
+        self.c_rebuild_per_elem * n as f64
+    }
+
+    /// Should the lifecycle rebuild the stale static engines now?
+    ///
+    /// The rebuilt statics serve queries until the next update batch
+    /// makes them stale again: with observed per-op update fraction
+    /// `u`, that is an expected `(1 − u)/u` query ops (geometric). Each
+    /// such query saves roughly the sharded probe cascade at the live
+    /// block size minus LCA's ~12 dependent reads — the routing freedom
+    /// the rebuild buys back. Worthwhile once the expected saving
+    /// covers [`rebuild_cost`](Self::rebuild_cost); a (decayed-to-)zero
+    /// update rate is always worthwhile, since the epoch then stays
+    /// fresh indefinitely. This is the "update rate dropped below a
+    /// cost-model threshold" trigger: solving for `u` gives the
+    /// threshold `u* = g / (g + c·n)` with per-query gain `g`.
+    pub fn rebuild_worthwhile(&self, n: usize, live_block: usize, w: &ObservedWorkload) -> bool {
+        let u = w.update_frac.clamp(0.0, 1.0);
+        if u <= f64::EPSILON {
+            return true;
+        }
+        let gain = (self.shard_query_work(n, live_block.max(1), w.mean_range) - 12.0).max(0.0);
+        if gain <= 0.0 {
+            return false;
+        }
+        let expected_queries = (1.0 - u) / u;
+        expected_queries * gain >= self.rebuild_cost(n)
     }
 }
 
@@ -426,6 +530,79 @@ mod tests {
         let w = ShardWorkload { mean_range: 256.0, update_frac: 0.0 };
         let tuned = m.tune_shard_block(1 << 20, &w);
         assert!(tuned >= 256, "tuned {tuned}");
+    }
+
+    fn observed(mean_range: f64, update_frac: f64, bucket: usize, mass: f64) -> ObservedWorkload {
+        let mut hist = [0.0; crate::workload::observer::RANGE_BUCKETS];
+        hist[bucket] = mass;
+        ObservedWorkload { mean_range, mean_batch: 64.0, update_frac, range_hist: hist, ops: 100 }
+    }
+
+    #[test]
+    fn observed_tuner_matches_scalar_tuner_on_concentrated_mass() {
+        // All histogram mass in one bucket ~ a scalar mean at the bucket
+        // centre: both tuners must agree.
+        let m = RtCostModel::default();
+        for n in [1usize << 14, 1 << 18] {
+            for (bucket, u) in [(4usize, 0.0), (8, 0.1), (12, 0.3)] {
+                let centre = (1u64 << bucket) as f64 * 1.5;
+                let via_hist = m.tune_shard_block_observed(n, &observed(centre, u, bucket, 10.0));
+                let via_mean =
+                    m.tune_shard_block(n, &ShardWorkload { mean_range: centre, update_frac: u });
+                assert_eq!(via_hist, via_mean, "n={n} bucket={bucket} u={u}");
+            }
+        }
+    }
+
+    #[test]
+    fn observed_tuner_falls_back_to_scalar_on_empty_histogram() {
+        let m = RtCostModel::default();
+        let w = ObservedWorkload { mean_range: 256.0, ..Default::default() };
+        assert_eq!(
+            m.tune_shard_block_observed(1 << 18, &w),
+            m.tune_shard_block(1 << 18, &ShardWorkload { mean_range: 256.0, update_frac: 0.0 })
+        );
+    }
+
+    #[test]
+    fn observed_distribution_shift_drifts_the_tuned_block() {
+        // The re-shard trigger's premise: a small-range read-heavy mix
+        // and a large-range read-only mix must tune to block sizes at
+        // least 2x apart (the default --reshard-drift threshold).
+        let m = RtCostModel::default();
+        let n = 1usize << 16;
+        let small = m.tune_shard_block_observed(n, &observed(24.0, 0.2, 4, 10.0));
+        let large = m.tune_shard_block_observed(n, &observed(32768.0, 0.0, 15, 10.0));
+        let drift = (small as f64 / large as f64).max(large as f64 / small as f64);
+        assert!(drift >= 2.0, "small {small} large {large}");
+    }
+
+    #[test]
+    fn rebuild_worthwhile_is_a_threshold_in_the_update_rate() {
+        let m = RtCostModel::default();
+        let n = 1usize << 16;
+        let bs = 256usize;
+        // Zero update rate: always worthwhile.
+        assert!(m.rebuild_worthwhile(n, bs, &observed(24.0, 0.0, 4, 10.0)));
+        // Busy mixed traffic: not worthwhile.
+        assert!(!m.rebuild_worthwhile(n, bs, &observed(24.0, 0.3, 4, 10.0)));
+        // Monotone: sweeping u downward, once worthwhile it stays so.
+        let mut flipped = false;
+        for k in (0..=40).rev() {
+            let u = k as f64 / 40.0;
+            let w = m.rebuild_worthwhile(n, bs, &observed(24.0, u, 4, 10.0));
+            if flipped && !w {
+                panic!("non-monotone threshold at u={u}");
+            }
+            if w {
+                flipped = true;
+            }
+        }
+        assert!(flipped, "never worthwhile at any rate");
+        // Bigger arrays cost more to rebuild -> stricter threshold.
+        let u_mid = 0.02;
+        assert!(m.rebuild_worthwhile(1 << 12, 64, &observed(24.0, u_mid, 4, 10.0)));
+        assert!(!m.rebuild_worthwhile(1 << 24, 4096, &observed(24.0, u_mid, 4, 10.0)));
     }
 
     #[test]

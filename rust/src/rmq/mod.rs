@@ -61,20 +61,65 @@
 //!   update batch takes the write lock — so a reader can never observe
 //!   a half-applied batch. Differential tests pin this against a naive
 //!   array + rescan oracle (`tests/mixed_stream.rs`).
-//! - **Staleness routing.** Updates mutate only the sharded engine;
-//!   the static engines (RTX monolith, LCA, HRMQ, EXHAUSTIVE, XLA)
-//!   keep the build-time array. Once the first update lands, the
-//!   router pins every query segment to the shards
-//!   (`Router::route_serving`), overriding even a `Policy::Fixed` pin
-//!   — correctness beats policy.
 //! - **Auto-tuned block size.** `--shard-block auto` replaces the √n
 //!   rule with the argmin of `RtCostModel::shard_cost_per_op(n, B)`:
 //!   expected probe work at the expected range distribution
 //!   (`min(span, 2)` partial-block probes of `O(log B)` work plus a
 //!   summary probe of `O(log n/B)` once the span passes two blocks)
 //!   plus the update fraction times the amortised refit work
-//!   (`Θ(B)` block refit + `Θ(n/B)` summary refit). The candidate set
-//!   contains the √n default, so the tuned size never models worse.
+//!   (`Θ(B)` block refit + `Θ(n/B)` summary refit — and the summary
+//!   term is point-refit away for single-min batches, see below). The
+//!   candidate set contains the √n default, so the tuned size never
+//!   models worse. The CLI `--dist`/`--update-frac` only seed the
+//!   *initial* build; under serving, the tuner re-runs against
+//!   observed traffic (next note).
+//!
+//! # Epoch lifecycle (design note)
+//!
+//! Updates mutate only the sharded engine; every static engine (RTX
+//! wide-BVH, LCA, HRMQ, EXHAUSTIVE, XLA) keeps the array it was built
+//! from. Engines therefore live in **epochs**
+//! (`coordinator::engine::EngineEpoch`) with these invariants:
+//!
+//! - An epoch is immutable: `version`, its engine set, and
+//!   `built_from_seq` — the applied-update sequence number its static
+//!   engines were built from. The sharded engine is shared across
+//!   epochs by `Arc` and is *always current*: its seq is bumped under
+//!   the same write lock that applies the batch, so a read-locked
+//!   (values, seq) snapshot is consistent by construction.
+//! - **Freshness, not history, routes queries.** A query segment pins
+//!   the current epoch (`Arc` clone) and asks
+//!   `Router::route_epoch(…, fresh)` where `fresh ⇔ built_from_seq ==
+//!   live seq`. Stale ⇒ availability collapses to the sharded engine;
+//!   fresh ⇒ every policy routes normally. This is why `Policy::Fixed`
+//!   no longer needs a staleness *override*: staleness is an
+//!   availability rule applied uniformly before any policy runs, and —
+//!   unlike the old sticky `mutated` flag, which out-pinned a Fixed
+//!   policy forever — it clears the moment a rebuilt epoch is
+//!   published, at which point the pin is honored verbatim again.
+//! - **Rebuild trigger.** The serving thread feeds a decayed traffic
+//!   observer (`workload::observer`) per segment and calls
+//!   `EpochState::plan` per fused batch. Once the epoch is stale *and*
+//!   the observed update rate drops below
+//!   `RtCostModel::rebuild_worthwhile`'s threshold (expected queries
+//!   before the next staleness, times the per-query routing gain,
+//!   must cover the modeled rebuild cost), a background builder
+//!   snapshots the sharded engine, rebuilds the statics, and publishes
+//!   the new epoch with an atomic swap. In-flight segments finish on
+//!   the epoch they pinned; later segments route freely again (the
+//!   Fig. 12 crossover comes back).
+//! - **Re-shard trigger.** Under `--shard-block auto`, `plan` also
+//!   re-runs the tuner against the observed range-length histogram;
+//!   when the tuned block size drifts ≥ `--reshard-drift` (default 2×)
+//!   from the live one, the builder re-shards from a snapshot and
+//!   swaps the new decomposition in iff no update batch landed in
+//!   between (a moved seq aborts the swap; `plan` retries when quiet).
+//! - **Summary point-refit.** An update batch that changes exactly one
+//!   block minimum re-shapes that one summary triangle and refits its
+//!   leaf-to-root path (`RtxRmq::update_values_point`) instead of
+//!   sweeping the whole summary structure — the Θ(n/B) per-batch term
+//!   the cost model charges becomes an upper bound realised only by
+//!   multi-block batches.
 
 pub mod cartesian;
 pub mod exhaustive;

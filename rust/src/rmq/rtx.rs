@@ -130,6 +130,10 @@ pub struct RtxRmq {
     layout: Option<BlockLayout>,
     /// Blocks mode: global argmin index per block.
     block_argmin: Vec<u32>,
+    /// Topology links for path refits, built lazily on the first
+    /// [`update_values_point`](Self::update_values_point) call (refits
+    /// never change topology, so they stay valid forever).
+    refit_links: Option<crate::rtcore::SceneRefitLinks>,
 }
 
 impl RtxRmq {
@@ -143,7 +147,15 @@ impl RtxRmq {
                 assert!(n <= 1 << 24, "flat mode is precision-limited to n <= 2^24 (paper §5.2)");
                 let tris = flat::build_scene(xs);
                 let scene = Scene::with_layout(tris, opts.builder, opts.leaf_size, opts.layout);
-                RtxRmq { xs: xs.to_vec(), theta, scene, opts, layout: None, block_argmin: vec![] }
+                RtxRmq {
+                    xs: xs.to_vec(),
+                    theta,
+                    scene,
+                    opts,
+                    layout: None,
+                    block_argmin: vec![],
+                    refit_links: None,
+                }
             }
             RtxMode::Blocks { block_size } => {
                 let limits = OptixLimits::default();
@@ -160,6 +172,7 @@ impl RtxRmq {
                     opts,
                     layout: Some(layout),
                     block_argmin: argmins,
+                    refit_links: None,
                 }
             }
         }
@@ -304,6 +317,36 @@ impl RtxRmq {
             self.apply_update(i, x);
         }
         self.scene.refit();
+    }
+
+    /// Batched dynamic update via **path refit**: re-shape the touched
+    /// triangles, then recompute only their leaf-to-root bound paths in
+    /// both acceleration layouts — Θ(k·log n) against the full sweep's
+    /// Θ(n). This is the fast path the sharded engine's summary solver
+    /// takes when a batch moves a single block minimum. Falls back to
+    /// the full refit when the batch touches enough of the scene that
+    /// per-path walks would cost more (same result either way).
+    pub fn update_values_point(&mut self, updates: &[(usize, f32)]) {
+        let mut touched: Vec<u32> = Vec::with_capacity(updates.len() * 2);
+        for &(i, x) in updates {
+            self.apply_update(i, x);
+            touched.push(i as u32);
+            if let Some(layout) = self.layout {
+                // Blocks mode re-shapes the owning block-min triangle too.
+                touched.push((layout.n + i / layout.bs) as u32);
+            }
+        }
+        touched.sort_unstable();
+        touched.dedup();
+        if touched.len() * 16 > self.scene.tris.len() {
+            self.scene.refit();
+            return;
+        }
+        if self.refit_links.is_none() {
+            self.refit_links = Some(self.scene.refit_links());
+        }
+        let links = self.refit_links.as_ref().expect("just built");
+        self.scene.refit_prims(&touched, links);
     }
 
     fn apply_update(&mut self, i: usize, x: f32) {
@@ -609,6 +652,49 @@ mod tests {
                             "{layout:?} after update[{i}]={v}: ({l},{r}) got {got} want {want}"
                         ));
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn point_update_refit_matches_full_refit() {
+        // `update_values_point` (path refit) and `update_values` (full
+        // bottom-up sweep) must stay answer-identical on both geometry
+        // modes — the refit-vs-rebuild pin for the sharded summary's
+        // single-min fast path.
+        check("point vs full update refit", 25, |rng| {
+            let mut xs = gen::f32_array(rng, 8..=400);
+            let n = xs.len();
+            for mode in [RtxMode::Flat, RtxMode::Blocks { block_size: 8 }] {
+                let opts = RtxOptions { mode, ..Default::default() };
+                let mut point = RtxRmq::with_options(&xs, opts);
+                let mut full = RtxRmq::with_options(&xs, opts);
+                for _ in 0..6 {
+                    let batch: Vec<(usize, f32)> =
+                        (0..2).map(|_| (rng.range(0, n - 1), rng.f32())).collect();
+                    for &(i, v) in &batch {
+                        xs[i] = v;
+                    }
+                    point.update_values_point(&batch);
+                    full.update_values(&batch);
+                    for _ in 0..10 {
+                        let (l, r) = gen::query(rng, n);
+                        let want = naive_rmq(&xs, l, r);
+                        let (a, b) =
+                            (point.rmq(l as u32, r as u32), full.rmq(l as u32, r as u32));
+                        if a as usize != want || b as usize != want {
+                            return Err(format!(
+                                "{mode:?} ({l},{r}): point {a} full {b} want {want}"
+                            ));
+                        }
+                    }
+                }
+                let scene = point.scene();
+                scene.bvh.validate(&scene.tris)?;
+                if let Some(w) = &scene.wide {
+                    w.validate(&scene.tris)?;
                 }
             }
             Ok(())

@@ -124,6 +124,17 @@ impl BlockSolver {
         }
     }
 
+    /// Point-update fast path for sparse batches: the Rtx backend
+    /// re-shapes the touched triangles and refits only their ancestor
+    /// paths (Θ(k·log n) vs the full sweep's Θ(n)); the sparse backend
+    /// has no refit path and rebuilds as before.
+    fn update_point(&mut self, local: &[(usize, f32)], fresh: &[f32]) {
+        match self {
+            BlockSolver::Rtx(s) => s.update_values_point(local),
+            BlockSolver::Sparse(s) => *s = SparseTable::new(fresh),
+        }
+    }
+
     fn memory_bytes(&self) -> usize {
         match self {
             BlockSolver::Rtx(s) => s.memory_bytes(),
@@ -351,9 +362,49 @@ impl ShardedRmq {
         }
         if !summary_updates.is_empty() {
             if let Some(s) = &mut self.summary {
-                s.update(&summary_updates, &self.block_min);
+                if summary_updates.len() == 1 {
+                    // Exactly one block minimum moved (the common case for
+                    // sparse batches): re-shape that one summary triangle
+                    // and refit its ancestor path instead of sweeping the
+                    // whole summary structure — this removes the Θ(n/B)
+                    // per-batch term the cost model charges updates.
+                    s.update_point(&summary_updates, &self.block_min);
+                } else {
+                    s.update(&summary_updates, &self.block_min);
+                }
             }
         }
+    }
+
+    /// The served values — the snapshot source for background rebuilds
+    /// of static engines (`coordinator::engine`): the sharded engine is
+    /// the only structure that tracks updates in place, so its value
+    /// array *is* the current truth.
+    pub fn values(&self) -> &[f32] {
+        &self.xs
+    }
+
+    /// Build-time options in effect (re-shard construction preserves
+    /// backend/layout and swaps only the block size).
+    pub fn options(&self) -> ShardedOptions {
+        self.opts
+    }
+
+    /// The single re-shard construction path: rebuild the decomposition
+    /// from a (values, options) snapshot at a new block size, preserving
+    /// every other option. `coordinator::engine::ShardedEngine::reshard`
+    /// calls this with a snapshot taken under its read lock so the
+    /// (long) build runs without holding the lock, then installs the
+    /// result seq-checked; [`reshard`](Self::reshard) is the owned-solver
+    /// convenience over the same path.
+    pub fn reshard_from(values: &[f32], opts: ShardedOptions, block_size: usize) -> ShardedRmq {
+        Self::with_options(values, ShardedOptions { block_size, ..opts })
+    }
+
+    /// Re-shard an owned solver to a new block size (see
+    /// [`reshard_from`](Self::reshard_from)).
+    pub fn reshard(&self, block_size: usize) -> ShardedRmq {
+        Self::reshard_from(&self.xs, self.opts, block_size)
     }
 
     /// Current value at an index (serving mutable arrays needs reads too).
@@ -658,6 +709,87 @@ mod tests {
             let r = rng.range(l, 1023);
             assert_eq!(s.rmq(l as u32, r as u32) as usize, naive_rmq(&fresh, l, r));
         }
+    }
+
+    #[test]
+    fn single_min_point_refit_equals_rebuild() {
+        // The summary point-refit path (batches that move exactly one
+        // block minimum) must leave the solver answer-identical to a
+        // from-scratch rebuild — the refit-vs-rebuild pin.
+        check("summary point refit vs rebuild", 20, |rng| {
+            let xs = gen::f32_array(rng, 64..=1024);
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 5);
+            for base in backends() {
+                let opts = ShardedOptions { block_size: bs, ..base };
+                let mut s = ShardedRmq::with_options(&xs, opts);
+                let mut local = xs.clone();
+                for _ in 0..6 {
+                    // All updates land in one block and strictly lower its
+                    // minimum, so exactly one summary entry changes.
+                    let b = rng.range(0, n.div_ceil(bs) - 1);
+                    let start = b * bs;
+                    let end = (start + bs).min(n);
+                    let cur = local[naive_rmq(&local, start, end - 1)];
+                    let batch: Vec<(usize, f32)> = (0..2)
+                        .map(|_| (rng.range(start, end - 1), cur * rng.f32() * 0.9))
+                        .collect();
+                    for &(i, v) in &batch {
+                        local[i] = v;
+                    }
+                    s.update_batch(&batch);
+                    let rebuilt = ShardedRmq::with_options(&local, opts);
+                    for _ in 0..10 {
+                        let (l, r) = gen::query(rng, n);
+                        let want = naive_rmq(&local, l, r);
+                        let (got, fresh) =
+                            (s.rmq(l as u32, r as u32) as usize, rebuilt.rmq(l as u32, r as u32) as usize);
+                        if got != want || fresh != want {
+                            return Err(format!(
+                                "{:?} bs={bs} ({l},{r}): refit {got} rebuild {fresh} want {want}",
+                                base.backend
+                            ));
+                        }
+                    }
+                }
+                s.validate()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn snapshot_and_reshard_preserve_values_and_answers() {
+        let mut rng = Rng::new(97);
+        let xs = rng.uniform_f32_vec(1024);
+        let mut s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, ..Default::default() },
+        );
+        let batch: Vec<(usize, f32)> = (0..32).map(|_| (rng.range(0, 1023), rng.f32())).collect();
+        s.update_batch(&batch);
+        let mut local = xs.clone();
+        for &(i, v) in &batch {
+            local[i] = v;
+        }
+        // The snapshot is the served truth.
+        assert_eq!(s.values(), &local[..]);
+        assert_eq!(s.options().block_size, 64);
+        // Re-sharding from the snapshot keeps answers hit-identical.
+        let resharded = s.reshard(16);
+        assert_eq!(resharded.block_size(), 16);
+        assert_eq!(resharded.backend(), s.backend());
+        assert_eq!(resharded.values(), s.values());
+        for _ in 0..200 {
+            let l = rng.range(0, 1023);
+            let r = rng.range(l, 1023);
+            assert_eq!(
+                resharded.rmq(l as u32, r as u32) as usize,
+                naive_rmq(&local, l, r),
+                "({l},{r})"
+            );
+        }
+        resharded.validate().unwrap();
     }
 
     #[test]

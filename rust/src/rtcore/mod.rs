@@ -37,6 +37,12 @@ pub struct LaunchResult {
     pub sim_wall_ns: u64,
 }
 
+/// Topology links for [`Scene::refit_prims`] (one per built layout).
+pub struct SceneRefitLinks {
+    bin: crate::bvh::RefitLinks,
+    wide: Option<crate::bvh::wide::WideRefitLinks>,
+}
+
 /// A scene ready for ray launches: triangles + acceleration structures.
 pub struct Scene {
     pub tris: Vec<Triangle>,
@@ -81,6 +87,26 @@ impl Scene {
         self.bvh.refit(&self.tris);
         if let Some(w) = &mut self.wide {
             w.refit(&self.tris);
+        }
+    }
+
+    /// Topology links for [`Scene::refit_prims`], covering every built
+    /// layout. Build once; topology never changes across refits.
+    pub fn refit_links(&self) -> SceneRefitLinks {
+        SceneRefitLinks {
+            bin: self.bvh.refit_links(),
+            wide: self.wide.as_ref().map(|w| w.refit_links()),
+        }
+    }
+
+    /// Point refit of both layouts: recompute only the leaf-to-root
+    /// bound paths of the listed primitives (Θ(k·depth) vs the full
+    /// sweep's Θ(n)) — see [`Bvh::refit_prims`]. `prims` must cover
+    /// every triangle changed since the last refit.
+    pub fn refit_prims(&mut self, prims: &[u32], links: &SceneRefitLinks) {
+        self.bvh.refit_prims(&self.tris, prims, &links.bin);
+        if let Some(w) = &mut self.wide {
+            w.refit_prims(&self.tris, prims, links.wide.as_ref().expect("links from this scene"));
         }
     }
 
@@ -230,5 +256,43 @@ mod tests {
         let ray = ray_for_query(0, 255, 256, ray_origin_x(&xs));
         let res = launch(&scene, &[ray], 1);
         assert_eq!(res.hits[0].unwrap().prim, 17);
+    }
+
+    #[test]
+    fn point_refit_matches_full_refit_on_both_layouts() {
+        // A path refit of exactly the changed prims must leave the
+        // structures hit-identical to a full bottom-up sweep.
+        let mut rng = crate::util::rng::Rng::new(35);
+        let mut xs = rng.uniform_f32_vec(400);
+        let mut point = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
+        let mut full = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
+        let links = point.refit_links();
+        let theta = ray_origin_x(&xs);
+        for round in 0..10 {
+            let touched: Vec<u32> = (0..3).map(|_| rng.range(0, 399) as u32).collect();
+            for &i in &touched {
+                // Values stay in [0, 1) so theta remains valid.
+                xs[i as usize] = rng.f32();
+            }
+            let tris = build_scene(&xs);
+            for &i in &touched {
+                point.tris[i as usize] = tris[i as usize];
+                full.tris[i as usize] = tris[i as usize];
+            }
+            point.refit_prims(&touched, &links);
+            full.refit();
+            point.bvh.validate(&point.tris).unwrap();
+            point.wide.as_ref().unwrap().validate(&point.tris).unwrap();
+            let rays: Vec<Ray> = (0..64)
+                .map(|_| {
+                    let l = rng.range(0, 399);
+                    let r = rng.range(l, 399);
+                    ray_for_query(l as u32, r as u32, 400, theta)
+                })
+                .collect();
+            let hp = launch(&point, &rays, 2);
+            let hf = launch(&full, &rays, 2);
+            assert_eq!(hp.hits, hf.hits, "round {round}");
+        }
     }
 }

@@ -8,6 +8,8 @@
 //! - **Medium**: LogNormal(µ = ln n^0.6, σ = 0.3) — mean ≈ 2^15 at n = 2^26.
 //! - **Small**: LogNormal(µ = ln n^0.3, σ = 0.3) — mean ≈ 2^8 at n = 2^26.
 
+pub mod observer;
+
 use crate::rmq::Query;
 use crate::util::rng::Rng;
 

@@ -1,0 +1,206 @@
+//! Workload observer: decayed statistics of the *served* traffic.
+//!
+//! The serving thread feeds every executed segment into one observer —
+//! query segments contribute their batch size and per-query range
+//! lengths, update segments their point count. All statistics decay
+//! exponentially per observation (EWMA with a configurable half-life in
+//! segments), so the snapshot tracks what the traffic looks like *now*:
+//! a quiet period drives the decayed update fraction toward zero, which
+//! is exactly the signal the engine lifecycle waits for before
+//! rebuilding static engines (`coordinator::engine`), and a shift in
+//! the range-length histogram is what re-triggers the shard-block tuner
+//! (`RtCostModel::tune_shard_block_observed`) — observed traffic
+//! replacing the CLI's `--dist`/`--update-frac` priors.
+
+use crate::rmq::Query;
+
+/// Log₂ buckets of the decayed range-length histogram (lengths are
+/// `u32`-indexed, so 33 buckets cover every possible range).
+pub const RANGE_BUCKETS: usize = 33;
+
+/// One decayed snapshot of the observed workload.
+#[derive(Clone, Copy, Debug)]
+pub struct ObservedWorkload {
+    /// Decayed mean query range length (0 until a query is seen).
+    pub mean_range: f64,
+    /// Decayed mean query-segment size (0 until a query is seen).
+    pub mean_batch: f64,
+    /// Decayed fraction of ops that are point updates.
+    pub update_frac: f64,
+    /// Decayed range-length mass per log₂ bucket: `range_hist[k]` holds
+    /// queries with length in `[2^k, 2^{k+1})`.
+    pub range_hist: [f64; RANGE_BUCKETS],
+    /// Total (undecayed) ops ever observed — 0 means "no traffic yet",
+    /// and consumers skip tuning decisions entirely.
+    pub ops: u64,
+}
+
+impl Default for ObservedWorkload {
+    fn default() -> Self {
+        ObservedWorkload {
+            mean_range: 0.0,
+            mean_batch: 0.0,
+            update_frac: 0.0,
+            range_hist: [0.0; RANGE_BUCKETS],
+            ops: 0,
+        }
+    }
+}
+
+/// Maintains the decayed counters. One per coordinator, fed from the
+/// serving thread (cheap: O(batch) adds per segment, no allocation).
+pub struct WorkloadObserver {
+    /// Per-observation decay factor, `0.5^(1/half_life)`.
+    alpha: f64,
+    /// Decayed op counters: query ops, update ops, summed range length.
+    dq: f64,
+    du: f64,
+    dlen: f64,
+    /// Decayed query-segment size mass and segment count.
+    dbatch: f64,
+    dsegs: f64,
+    hist: [f64; RANGE_BUCKETS],
+    ops: u64,
+}
+
+impl WorkloadObserver {
+    /// `half_life`: observations (segments) after which old traffic
+    /// carries half its weight.
+    pub fn new(half_life: f64) -> WorkloadObserver {
+        WorkloadObserver {
+            alpha: 0.5f64.powf(1.0 / half_life.max(1.0)),
+            dq: 0.0,
+            du: 0.0,
+            dlen: 0.0,
+            dbatch: 0.0,
+            dsegs: 0.0,
+            hist: [0.0; RANGE_BUCKETS],
+            ops: 0,
+        }
+    }
+
+    fn decay(&mut self) {
+        self.dq *= self.alpha;
+        self.du *= self.alpha;
+        self.dlen *= self.alpha;
+        self.dbatch *= self.alpha;
+        self.dsegs *= self.alpha;
+        for h in self.hist.iter_mut() {
+            *h *= self.alpha;
+        }
+    }
+
+    /// Feed one executed query segment.
+    pub fn observe_queries(&mut self, queries: &[Query]) {
+        if queries.is_empty() {
+            return;
+        }
+        self.decay();
+        for &(l, r) in queries {
+            let len = (r - l + 1) as u64;
+            self.dlen += len as f64;
+            self.hist[(len.ilog2() as usize).min(RANGE_BUCKETS - 1)] += 1.0;
+        }
+        self.dq += queries.len() as f64;
+        self.dbatch += queries.len() as f64;
+        self.dsegs += 1.0;
+        self.ops += queries.len() as u64;
+    }
+
+    /// Feed one executed update segment.
+    pub fn observe_updates(&mut self, count: usize) {
+        if count == 0 {
+            return;
+        }
+        self.decay();
+        self.du += count as f64;
+        self.ops += count as u64;
+    }
+
+    pub fn snapshot(&self) -> ObservedWorkload {
+        let mass = self.dq + self.du;
+        ObservedWorkload {
+            mean_range: if self.dq > 0.0 { self.dlen / self.dq } else { 0.0 },
+            mean_batch: if self.dsegs > 0.0 { self.dbatch / self.dsegs } else { 0.0 },
+            update_frac: if mass > 0.0 { self.du / mass } else { 0.0 },
+            range_hist: self.hist,
+            ops: self.ops,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_observer_snapshots_zero() {
+        let o = WorkloadObserver::new(8.0);
+        let s = o.snapshot();
+        assert_eq!(s.ops, 0);
+        assert_eq!(s.mean_range, 0.0);
+        assert_eq!(s.update_frac, 0.0);
+        assert!(s.range_hist.iter().all(|&h| h == 0.0));
+    }
+
+    #[test]
+    fn means_and_fraction_track_traffic() {
+        let mut o = WorkloadObserver::new(8.0);
+        o.observe_queries(&[(0, 15), (10, 25)]); // lengths 16, 16
+        o.observe_updates(2);
+        let s = o.snapshot();
+        assert_eq!(s.ops, 4);
+        assert!((s.mean_range - 16.0).abs() < 1e-9);
+        assert!((s.mean_batch - 2.0).abs() < 1e-9);
+        // 2 updates vs 2 (slightly decayed) queries: frac a bit over 0.5.
+        assert!((0.45..0.6).contains(&s.update_frac), "{}", s.update_frac);
+        // Length-16 queries land in bucket 4.
+        assert!(s.range_hist[4] > 0.0);
+        assert_eq!(s.range_hist[5], 0.0);
+    }
+
+    #[test]
+    fn quiet_period_decays_update_fraction_to_zero() {
+        let mut o = WorkloadObserver::new(4.0);
+        for _ in 0..10 {
+            o.observe_queries(&[(0, 7); 8]);
+            o.observe_updates(8);
+        }
+        let busy = o.snapshot().update_frac;
+        assert!(busy > 0.3, "busy frac {busy}");
+        for _ in 0..40 {
+            o.observe_queries(&[(0, 7); 8]);
+        }
+        let quiet = o.snapshot().update_frac;
+        assert!(quiet < 0.01, "quiet frac {quiet}");
+        // Half-life math: 40 quiet segments at half-life 4 is 10 halvings.
+        assert!(quiet < busy / 500.0, "busy {busy} quiet {quiet}");
+    }
+
+    #[test]
+    fn histogram_mass_follows_distribution_shift() {
+        let mut o = WorkloadObserver::new(4.0);
+        for _ in 0..20 {
+            o.observe_queries(&[(0, 15); 16]); // length 16: bucket 4
+        }
+        let small = o.snapshot();
+        let small_peak = small.range_hist[4];
+        assert!(small_peak > 0.0);
+        for _ in 0..40 {
+            o.observe_queries(&[(0, 4095); 16]); // length 4096: bucket 12
+        }
+        let shifted = o.snapshot();
+        assert!(shifted.range_hist[12] > shifted.range_hist[4] * 100.0);
+        assert!(shifted.mean_range > 4000.0, "{}", shifted.mean_range);
+    }
+
+    #[test]
+    fn degenerate_lengths_bucket_safely() {
+        let mut o = WorkloadObserver::new(8.0);
+        o.observe_queries(&[(5, 5), (0, u32::MAX - 1)]);
+        let s = o.snapshot();
+        assert!(s.range_hist[0] > 0.0); // length 1 -> bucket 0
+        assert!(s.range_hist[31] > 0.0); // length 2^32 - 1 -> bucket 31
+        assert_eq!(s.ops, 2);
+    }
+}

@@ -93,7 +93,7 @@ fn batching_under_concurrency_is_lossless() {
                 queue_cap: 64,
             },
             engine_workers: 2,
-            engines: Default::default(),
+            ..Default::default()
         },
     ));
     let st = Arc::new(st);

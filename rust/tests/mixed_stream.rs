@@ -6,12 +6,12 @@
 //! earlier one — exactly the answers a sequential re-solve of the op
 //! stream produces, leftmost ties included.
 
-use rtxrmq::coordinator::engine::{EngineCfg, ShardBlock};
+use rtxrmq::coordinator::engine::{EngineCfg, LifecycleCfg, ShardBlock};
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
 use rtxrmq::rmq::naive_rmq;
 use rtxrmq::util::rng::Rng;
-use rtxrmq::workload::{gen_array, gen_mixed, Op, RangeDist};
+use rtxrmq::workload::{gen_array, gen_mixed, gen_queries, Op, RangeDist};
 
 /// The oracle: apply the op stream to a plain array, answering queries
 /// by rescan — the sequential semantics the coordinator must reproduce.
@@ -148,6 +148,214 @@ fn auto_tuned_shard_block_serves_mixed_streams() {
         let want = oracle_run(&mut oracle, &ops);
         let resp = c.submit_mixed(ops).unwrap();
         assert_eq!(resp.answers, want, "round {round}");
+    }
+    c.shutdown();
+}
+
+#[test]
+fn quiet_period_rebuild_reroutes_large_ranges_to_lca() {
+    // The lifecycle's headline differential: a mixed stream makes the
+    // static engines stale (large-range batches degrade to the shards);
+    // after a quiet period the background builder rebuilds them from a
+    // snapshot, the router's freshness check clears, and a large-range
+    // batch lands on the rebuilt LCA engine — with every answer,
+    // including those served while the epoch swap was in flight,
+    // matching the sequential oracle.
+    let n = 1usize << 15;
+    let xs = gen_array(n, 41);
+    let mut oracle = xs.clone();
+    let c = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::Heuristic,
+            engines: EngineCfg { shard_block: ShardBlock::Sqrt },
+            lifecycle: LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(42);
+    // Busy mixed phase: updates keep the epoch stale and the observed
+    // update rate above the rebuild threshold.
+    for round in 0..6 {
+        let ops = gen_mixed(n, 64, 0.3, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "mixed round {round}");
+    }
+    assert_eq!(c.lifecycle.epoch_version(), 0, "busy traffic must not rebuild");
+    // Stale epoch: even a large-range batch is pinned to the shards.
+    let large = gen_queries(n, 64, RangeDist::Large, &mut rng);
+    let resp = c.submit_mixed(large.iter().copied().map(Op::Query).collect()).unwrap();
+    assert_eq!(resp.engine, "SHARDED", "stale epoch pins large ranges to the shards");
+    for (k, &(l, r)) in large.iter().enumerate() {
+        assert_eq!(resp.answers[k], naive_rmq(&oracle, l as usize, r as usize) as u32);
+    }
+    // Quiet period: pure queries decay the observed update rate until
+    // the cost model schedules a background rebuild.
+    let mut fired = false;
+    for round in 0..600 {
+        let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
+        let resp = c.query(qs.clone()).unwrap();
+        for (k, &(l, r)) in qs.iter().enumerate() {
+            assert_eq!(
+                resp.answers[k],
+                naive_rmq(&oracle, l as usize, r as usize) as u32,
+                "quiet round {round} ({l},{r}) via {}",
+                resp.engine
+            );
+        }
+        if c.lifecycle.rebuilds() >= 1 {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "quiet period must trigger a background rebuild");
+    assert!(c.metrics.lock().unwrap().rebuilds >= 1);
+    // Fresh epoch: the crossover routing is back — large ranges go to
+    // the rebuilt LCA (not the shards), hit-for-hit with the oracle.
+    let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
+    let resp = c.query(large.clone()).unwrap();
+    assert_eq!(resp.engine, "LCA", "rebuilt statics serve large ranges again");
+    assert!(resp.epoch >= 1, "served by a rebuilt epoch");
+    for (k, &(l, r)) in large.iter().enumerate() {
+        assert_eq!(
+            resp.answers[k],
+            naive_rmq(&oracle, l as usize, r as usize) as u32,
+            "post-rebuild ({l},{r})"
+        );
+    }
+    c.shutdown();
+}
+
+#[test]
+fn rebuild_mid_stream_pins_segments_to_their_epochs() {
+    // Background rebuilds complete at arbitrary points while four
+    // clients stream ops. The contract for any swap timing: in-flight
+    // segments finish on the epoch they pinned, later segments use the
+    // new one (response epochs are monotone per client), and every
+    // answer is bit-identical to each client's sequential oracle.
+    let n = 1usize << 14;
+    let region = n / 4;
+    let xs = gen_array(n, 43);
+    let c = std::sync::Arc::new(Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::ModeledCost,
+            engines: EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            lifecycle: LifecycleCfg { observer_half_life: 2.0, ..Default::default() },
+            ..Default::default()
+        },
+    ));
+    let xs = std::sync::Arc::new(xs);
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let c = c.clone();
+        let xs = xs.clone();
+        handles.push(std::thread::spawn(move || {
+            let lo = t * region;
+            let mut oracle: Vec<f32> = xs.as_ref().clone();
+            let mut rng = Rng::new(300 + t as u64);
+            let mut last_epoch = 0u64;
+            for round in 0..28 {
+                // First rounds mutate; the rest are a quiet query phase
+                // during which rebuilds fire mid-stream.
+                let update_frac = if round < 3 { 0.3 } else { 0.0 };
+                let mut ops = Vec::new();
+                for _ in 0..32 {
+                    if rng.f64() < update_frac {
+                        let i = lo + rng.range(0, region - 1);
+                        ops.push(Op::Update { i: i as u32, v: rng.f32() });
+                    } else {
+                        let l = lo + rng.range(0, region - 1);
+                        let r = rng.range(l, lo + region - 1);
+                        ops.push(Op::Query((l as u32, r as u32)));
+                    }
+                }
+                let want = oracle_run(&mut oracle, &ops);
+                let resp = c.submit_mixed(ops).unwrap();
+                assert_eq!(resp.answers, want, "client {t} round {round}");
+                assert!(
+                    resp.epoch >= last_epoch,
+                    "client {t}: epoch went backwards ({} < {last_epoch})",
+                    resp.epoch
+                );
+                last_epoch = resp.epoch;
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // Drive the quiet period on from the main thread until at least one
+    // rebuild has certainly landed (it usually fires mid-stream above).
+    let mut rng = Rng::new(310);
+    let mut fired = c.lifecycle.rebuilds() >= 1;
+    for _ in 0..600 {
+        if fired {
+            break;
+        }
+        let qs = gen_queries(n, 32, RangeDist::Small, &mut rng);
+        c.query(qs).unwrap();
+        fired = c.lifecycle.rebuilds() >= 1;
+    }
+    assert!(fired, "no rebuild for any swap timing");
+    // Later segments use the new epoch.
+    let resp = c.query(vec![(0, (n - 1) as u32)]).unwrap();
+    assert!(resp.epoch >= 1, "post-rebuild responses carry the new epoch");
+    assert!(c.metrics.lock().unwrap().updates > 0);
+}
+
+#[test]
+fn reshard_trigger_fires_when_the_offered_distribution_shifts() {
+    // `--shard-block auto` under serving must tune from *observed*
+    // traffic: the CLI prior says small ranges with updates, the
+    // offered load is pure large ranges — the workload-fed tuner drifts
+    // >= 2x from the live block size, the lifecycle re-shards in the
+    // background, and answers stay exact throughout.
+    let n = 1usize << 15;
+    let xs = gen_array(n, 44);
+    let c = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::Heuristic,
+            engines: EngineCfg {
+                shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.2 },
+            },
+            lifecycle: LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let initial = c.lifecycle.shard_block_live();
+    assert!(initial >= 4);
+    let mut rng = Rng::new(45);
+    let mut fired = false;
+    for _ in 0..200 {
+        let qs = gen_queries(n, 64, RangeDist::Large, &mut rng);
+        let resp = c.query(qs.clone()).unwrap();
+        // Spot-check (the array never mutates in this test).
+        for (k, &(l, r)) in qs.iter().take(2).enumerate() {
+            assert_eq!(resp.answers[k], naive_rmq(&xs, l as usize, r as usize) as u32);
+        }
+        if c.lifecycle.reshards() >= 1 {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "shifted distribution must trigger a background re-shard");
+    let live = c.lifecycle.shard_block_live();
+    let drift = (live as f64 / initial as f64).max(initial as f64 / live as f64);
+    assert!(drift >= 2.0, "initial {initial} live {live}");
+    assert_eq!(c.metrics.lock().unwrap().reshards, c.lifecycle.reshards());
+    // The re-sharded engine still answers exactly — full check on a
+    // small-range batch routed to the shards.
+    let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
+    let resp = c.query(qs.clone()).unwrap();
+    assert_eq!(resp.engine, "SHARDED");
+    for (k, &(l, r)) in qs.iter().enumerate() {
+        assert_eq!(resp.answers[k], naive_rmq(&xs, l as usize, r as usize) as u32);
     }
     c.shutdown();
 }
