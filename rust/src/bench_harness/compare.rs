@@ -1,0 +1,295 @@
+//! Bench-regression gate: compare a fresh `bench-smoke` JSON against a
+//! committed baseline (`rtxrmq bench-compare --baseline …`).
+//!
+//! Points are matched by (layout, n, batch); for each matched point the
+//! gate checks `ns_per_query` and — when both sides measured the write
+//! path — `upd_ns_per_op`, and fails on any relative regression above
+//! the tolerance (default 25%, the CI knob). A baseline point missing
+//! from the current run is coverage loss and also fails. New points in
+//! the current run are reported but never gate.
+//!
+//! A baseline whose `provenance` field says `modeled-bootstrap` (the
+//! committed placeholder seeded before any toolchain host ran the
+//! bench) reports its deltas but never fails the gate: the first real
+//! trajectory point — the CI artifact of a toolchain run — should be
+//! committed over it, at which point the gate arms itself.
+
+use crate::util::json::Json;
+use std::fmt::Write as _;
+
+/// Marker value of the baseline's `provenance` field for the committed
+/// pre-toolchain placeholder.
+pub const BOOTSTRAP_PROVENANCE: &str = "modeled-bootstrap";
+
+/// One gated metric of one matched grid point.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub layout: String,
+    pub n: u64,
+    pub batch: u64,
+    /// "ns/query" or "ns/update".
+    pub metric: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    /// `current / baseline − 1` (positive = slower than baseline).
+    pub delta: f64,
+    /// Above tolerance?
+    pub regressed: bool,
+}
+
+/// Full gate outcome.
+#[derive(Clone, Debug, Default)]
+pub struct CompareReport {
+    pub rows: Vec<CompareRow>,
+    /// Baseline points with no counterpart in the current run.
+    pub missing: Vec<String>,
+    /// Current-run points with no counterpart in the baseline (informational).
+    pub unmatched: Vec<String>,
+    /// The baseline is the committed pre-toolchain placeholder.
+    pub bootstrap_baseline: bool,
+    pub tolerance: f64,
+}
+
+impl CompareReport {
+    pub fn regressions(&self) -> Vec<&CompareRow> {
+        self.rows.iter().filter(|r| r.regressed).collect()
+    }
+
+    /// Should the CI step fail? Regressions (or lost coverage) against
+    /// a *real* baseline gate; a bootstrap baseline only reports.
+    pub fn failed(&self) -> bool {
+        !self.bootstrap_baseline && (!self.regressions().is_empty() || !self.missing.is_empty())
+    }
+}
+
+fn points_of(doc: &Json) -> Result<Vec<(String, u64, u64, f64, f64)>, String> {
+    let arr = doc
+        .get("points")
+        .and_then(|p| p.as_arr())
+        .ok_or_else(|| "no 'points' array in bench JSON".to_string())?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (i, p) in arr.iter().enumerate() {
+        let layout = p
+            .get("layout")
+            .and_then(|l| l.as_str())
+            .ok_or_else(|| format!("point {i}: missing layout"))?;
+        let n = p
+            .get("n")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| format!("point {i}: missing n"))?;
+        let batch = p
+            .get("batch")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| format!("point {i}: missing batch"))?;
+        let ns = p
+            .get("ns_per_query")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("point {i}: missing ns_per_query"))?;
+        let upd = p.get("upd_ns_per_op").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        out.push((layout.to_string(), n, batch, ns, upd));
+    }
+    Ok(out)
+}
+
+/// Compare two bench-smoke JSON documents. `tolerance` is the allowed
+/// relative slowdown per metric (0.25 = +25%).
+pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<CompareReport, String> {
+    for (doc, name) in [(baseline, "baseline"), (current, "current")] {
+        if doc.get("bench").and_then(|b| b.as_str()) != Some("rmq_smoke") {
+            return Err(format!("{name}: not a bench-smoke JSON ('bench' != \"rmq_smoke\")"));
+        }
+    }
+    let bootstrap_baseline =
+        baseline.get("provenance").and_then(|p| p.as_str()) == Some(BOOTSTRAP_PROVENANCE);
+    let base = points_of(baseline)?;
+    let cur = points_of(current)?;
+    let mut report = CompareReport { bootstrap_baseline, tolerance, ..Default::default() };
+    for (layout, n, batch, base_ns, base_upd) in &base {
+        let Some(&(_, _, _, cur_ns, cur_upd)) =
+            cur.iter().find(|(l, cn, cb, ..)| l == layout && cn == n && cb == batch)
+        else {
+            report.missing.push(format!("{layout} n={n} batch={batch}"));
+            continue;
+        };
+        let mut push = |metric: &'static str, b: f64, c: f64| {
+            if b <= 0.0 || c <= 0.0 {
+                // The write path is only measured with --update-frac;
+                // a side that didn't measure it cannot gate it.
+                return;
+            }
+            let delta = c / b - 1.0;
+            report.rows.push(CompareRow {
+                layout: layout.clone(),
+                n: *n,
+                batch: *batch,
+                metric,
+                baseline: b,
+                current: c,
+                delta,
+                regressed: delta > tolerance,
+            });
+        };
+        push("ns/query", *base_ns, cur_ns);
+        push("ns/update", *base_upd, cur_upd);
+    }
+    for (layout, n, batch, ..) in &cur {
+        if !base.iter().any(|(l, bn, bb, ..)| l == layout && bn == n && bb == batch) {
+            report.unmatched.push(format!("{layout} n={n} batch={batch}"));
+        }
+    }
+    if report.rows.is_empty() && report.missing.is_empty() {
+        return Err("no comparable points between baseline and current".to_string());
+    }
+    Ok(report)
+}
+
+/// Render the delta table as GitHub-flavoured markdown (the `bench-gate`
+/// CI step appends this to `$GITHUB_STEP_SUMMARY`).
+pub fn summary_md(report: &CompareReport) -> String {
+    let mut s = String::from("## rtxrmq bench-gate\n\n");
+    if report.bootstrap_baseline {
+        let _ = writeln!(
+            s,
+            "baseline is the committed `{BOOTSTRAP_PROVENANCE}` placeholder — deltas are \
+             informational until a measured BENCH_rmq.json is committed over it\n"
+        );
+    }
+    let _ = writeln!(
+        s,
+        "tolerance: +{:.0}% | verdict: **{}**\n",
+        report.tolerance * 100.0,
+        if report.failed() { "FAIL" } else { "PASS" }
+    );
+    s.push_str("| solver | n | batch | metric | baseline | current | delta | |\n");
+    s.push_str("|---|---:|---:|---|---:|---:|---:|---|\n");
+    for r in &report.rows {
+        let _ = writeln!(
+            s,
+            "| {} | {} | {} | {} | {:.1} | {:.1} | {:+.1}% | {} |",
+            r.layout,
+            r.n,
+            r.batch,
+            r.metric,
+            r.baseline,
+            r.current,
+            r.delta * 100.0,
+            if r.regressed { "REGRESSED" } else { "" }
+        );
+    }
+    for m in &report.missing {
+        let _ = writeln!(s, "\nmissing from current run: {m} (coverage loss)");
+    }
+    for u in &report.unmatched {
+        let _ = writeln!(s, "\nnew point (not in baseline): {u}");
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::obj;
+
+    fn smoke_doc(points: Vec<(&str, u64, u64, f64, f64)>, provenance: Option<&str>) -> Json {
+        let rows: Vec<Json> = points
+            .into_iter()
+            .map(|(layout, n, batch, ns, upd)| {
+                obj(vec![
+                    ("layout", Json::from(layout)),
+                    ("n", Json::from(n)),
+                    ("batch", Json::from(batch)),
+                    ("ns_per_query", Json::from(ns)),
+                    ("upd_ns_per_op", Json::from(upd)),
+                ])
+            })
+            .collect();
+        let mut fields = vec![("bench", Json::from("rmq_smoke")), ("points", Json::Arr(rows))];
+        if let Some(p) = provenance {
+            fields.push(("provenance", Json::from(p)));
+        }
+        obj(fields)
+    }
+
+    #[test]
+    fn identical_runs_pass_within_tolerance() {
+        let base = smoke_doc(vec![("wide", 65536, 4096, 400.0, 90.0)], None);
+        let cur = smoke_doc(vec![("wide", 65536, 4096, 440.0, 99.0)], None);
+        let report = compare(&base, &cur, 0.25).unwrap();
+        assert_eq!(report.rows.len(), 2, "query + update metrics");
+        assert!(report.regressions().is_empty());
+        assert!(!report.failed());
+        let md = summary_md(&report);
+        assert!(md.contains("PASS") && md.contains("+10.0%"), "{md}");
+    }
+
+    #[test]
+    fn injected_regression_fails_the_gate() {
+        let base = smoke_doc(
+            vec![("binary", 65536, 4096, 900.0, 0.0), ("wide", 65536, 4096, 400.0, 90.0)],
+            None,
+        );
+        // Wide column 40% slower on queries: one regressed row.
+        let cur = smoke_doc(
+            vec![("binary", 65536, 4096, 910.0, 0.0), ("wide", 65536, 4096, 560.0, 92.0)],
+            None,
+        );
+        let report = compare(&base, &cur, 0.25).unwrap();
+        assert!(report.failed());
+        let reg = report.regressions();
+        assert_eq!(reg.len(), 1);
+        assert_eq!((reg[0].layout.as_str(), reg[0].metric), ("wide", "ns/query"));
+        assert!(summary_md(&report).contains("REGRESSED"));
+    }
+
+    #[test]
+    fn update_regression_gates_only_when_both_sides_measured() {
+        let base = smoke_doc(vec![("sharded", 65536, 4096, 300.0, 50.0)], None);
+        // ns/update 2x worse -> fail …
+        let slow = smoke_doc(vec![("sharded", 65536, 4096, 300.0, 100.0)], None);
+        assert!(compare(&base, &slow, 0.25).unwrap().failed());
+        // … but a current run without the write path cannot gate it.
+        let unmeasured = smoke_doc(vec![("sharded", 65536, 4096, 300.0, 0.0)], None);
+        let report = compare(&base, &unmeasured, 0.25).unwrap();
+        assert_eq!(report.rows.len(), 1);
+        assert!(!report.failed());
+    }
+
+    #[test]
+    fn missing_coverage_fails_new_points_do_not() {
+        let base = smoke_doc(
+            vec![("binary", 65536, 4096, 900.0, 0.0), ("wide", 65536, 4096, 400.0, 0.0)],
+            None,
+        );
+        let cur = smoke_doc(
+            vec![("binary", 65536, 4096, 900.0, 0.0), ("sharded", 65536, 4096, 250.0, 0.0)],
+            None,
+        );
+        let report = compare(&base, &cur, 0.25).unwrap();
+        assert!(report.failed(), "baseline wide column vanished");
+        assert_eq!(report.missing, vec!["wide n=65536 batch=4096"]);
+        assert_eq!(report.unmatched, vec!["sharded n=65536 batch=4096"]);
+    }
+
+    #[test]
+    fn bootstrap_baseline_reports_but_never_fails() {
+        let base =
+            smoke_doc(vec![("wide", 65536, 4096, 400.0, 0.0)], Some(BOOTSTRAP_PROVENANCE));
+        let cur = smoke_doc(vec![("wide", 65536, 4096, 4000.0, 0.0)], None);
+        let report = compare(&base, &cur, 0.25).unwrap();
+        assert!(report.bootstrap_baseline);
+        assert_eq!(report.regressions().len(), 1, "the delta is still reported");
+        assert!(!report.failed(), "placeholder baselines do not gate");
+        assert!(summary_md(&report).contains("modeled-bootstrap"));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        let good = smoke_doc(vec![("wide", 1024, 128, 100.0, 0.0)], None);
+        let not_smoke = obj(vec![("bench", Json::from("other"))]);
+        assert!(compare(&not_smoke, &good, 0.25).is_err());
+        assert!(compare(&good, &not_smoke, 0.25).is_err());
+        let disjoint = smoke_doc(vec![("wide", 2048, 128, 100.0, 0.0)], None);
+        let report = compare(&good, &disjoint, 0.25).unwrap();
+        assert!(report.failed(), "fully disjoint grids are coverage loss");
+    }
+}

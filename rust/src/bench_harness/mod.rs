@@ -9,6 +9,7 @@
 //! work is batch-independent, so sampling is exact for everything except
 //! the saturation term, which the models carry explicitly (Fig. 13).
 
+pub mod compare;
 pub mod runner;
 pub mod smoke;
 

@@ -90,6 +90,14 @@ pub struct FusedBatch {
     pub requests: Vec<Request>,
     /// The flattened op streams as alternating query/update segments.
     pub segments: Vec<Segment>,
+    /// Fence-dependency annotation, parallel to `segments`: for an
+    /// update segment, the index of the query segment its *preparation*
+    /// may overlap with — always the directly preceding one, because
+    /// the fence only constrains queries *after* the update segment;
+    /// queries before it read values the staging lane never mutates.
+    /// `None` for every query segment and for an update segment with no
+    /// preceding query segment (nothing to hide the refit work behind).
+    pub overlap_with: Vec<Option<usize>>,
     /// Per-request query-op counts, for splitting answers back.
     pub query_splits: Vec<usize>,
     /// Per-request update-op counts (reported in each response).
@@ -124,7 +132,17 @@ impl FusedBatch {
             query_splits.push(nq);
             update_splits.push(nu);
         }
-        FusedBatch { requests, segments, query_splits, update_splits }
+        // Segments strictly alternate kinds, so a non-leading update
+        // segment is always directly preceded by a query segment.
+        let overlap_with = segments
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match s {
+                Segment::Updates(_) if i > 0 => Some(i - 1),
+                _ => None,
+            })
+            .collect();
+        FusedBatch { requests, segments, overlap_with, query_splits, update_splits }
     }
 
     /// Total query ops across the fused batch.
@@ -238,6 +256,20 @@ mod tests {
         assert_eq!(fused.total_queries(), 3);
         let split = fused.split_answers(&[7, 8, 9]);
         assert_eq!(split, vec![vec![7, 8], vec![9]]);
+        // Fence-dependency annotation: each update segment may overlap
+        // the query segment directly before it.
+        assert_eq!(fused.overlap_with, vec![None, Some(0), None, Some(2)]);
+    }
+
+    #[test]
+    fn leading_update_segment_has_no_overlap_target() {
+        let (r, _k) = mixed(
+            1,
+            vec![Op::Update { i: 0, v: 0.5 }, Op::Update { i: 1, v: 0.25 }, Op::Query((0, 1))],
+        );
+        let fused = FusedBatch::from_requests(vec![r]);
+        assert_eq!(fused.segments.len(), 2);
+        assert_eq!(fused.overlap_with, vec![None, None]);
     }
 
     #[test]
@@ -336,6 +368,26 @@ mod tests {
             }
             if nq != fused.total_queries() || nu != fused.update_splits.iter().sum::<usize>() {
                 return Err("segment counts disagree with splits".into());
+            }
+            // Overlap annotation invariants: parallel to segments; every
+            // update segment except a leading one points at its direct
+            // (query) predecessor, queries never point anywhere.
+            if fused.overlap_with.len() != fused.segments.len() {
+                return Err("overlap annotation length mismatch".into());
+            }
+            for (i, (seg, ov)) in fused.segments.iter().zip(&fused.overlap_with).enumerate() {
+                let want = match seg {
+                    Segment::Updates(_) if i > 0 => Some(i - 1),
+                    _ => None,
+                };
+                if *ov != want {
+                    return Err(format!("segment {i}: overlap {ov:?}, want {want:?}"));
+                }
+                if let Some(j) = *ov {
+                    if !matches!(fused.segments[j], Segment::Queries(_)) {
+                        return Err(format!("segment {i} overlaps non-query segment {j}"));
+                    }
+                }
             }
             let flat: Vec<u32> = expected.iter().flatten().copied().collect();
             if fused.split_answers(&flat) != expected {

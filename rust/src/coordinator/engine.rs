@@ -37,7 +37,7 @@ use crate::rmq::exhaustive::Exhaustive;
 use crate::rmq::hrmq::Hrmq;
 use crate::rmq::lca::LcaRmq;
 use crate::rmq::rtx::RtxRmq;
-use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
+use crate::rmq::sharded::{PreparedBlockUpdate, ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::runtime::Runtime;
 use crate::workload::observer::WorkloadObserver;
@@ -186,10 +186,14 @@ impl Engine for XlaEngine {
 /// guarded by one lock: queries share the read lock, an update batch
 /// takes the write lock and bumps the seq before releasing it, so
 /// readers never observe a half-applied batch and a read-locked
-/// (values, seq) snapshot is consistent by construction.
+/// (values, seq) snapshot is consistent by construction. `shape_gen`
+/// counts structure swaps (re-shards): the seq tracks *value* history,
+/// the shape generation tracks *decomposition* history — a staged
+/// update commit is valid only while both stand.
 struct VersionedSharded {
     rmq: ShardedRmq,
     seq: u64,
+    shape_gen: u64,
 }
 
 /// The set's only mutable engine — always current, shared across epochs
@@ -200,7 +204,7 @@ pub struct ShardedEngine {
 
 impl ShardedEngine {
     pub fn new(rmq: ShardedRmq) -> ShardedEngine {
-        ShardedEngine { inner: RwLock::new(VersionedSharded { rmq, seq: 0 }) }
+        ShardedEngine { inner: RwLock::new(VersionedSharded { rmq, seq: 0, shape_gen: 0 }) }
     }
 
     /// Applied-update sequence number (one per update batch). This is
@@ -239,14 +243,101 @@ impl ShardedEngine {
     }
 
     /// Swap in a replacement iff the seq still equals `expect_seq`.
+    /// Bumps the shape generation, which invalidates any update batch
+    /// staged against the old decomposition (its commit falls back to
+    /// the direct path).
     pub(crate) fn install(&self, rmq: ShardedRmq, expect_seq: u64) -> bool {
         let mut g = self.inner.write().expect("sharded lock");
         if g.seq != expect_seq {
             return false;
         }
         g.rmq = rmq;
+        g.shape_gen += 1;
         true
     }
+
+    /// Stage an update batch for the pipelined write path: snapshot the
+    /// touched blocks and the (seq, shape) fingerprint under a *briefly
+    /// held* read lock, then build the per-block replacement solvers
+    /// with no lock held — so the expensive refit work runs concurrently
+    /// with query segments reading the same engine.
+    pub fn prepare_update_batch(
+        &self,
+        updates: &[(usize, f32)],
+        workers: usize,
+    ) -> PreparedUpdate {
+        let t0 = Instant::now();
+        let (spec, seq, shape_gen) = {
+            let g = self.inner.read().expect("sharded lock");
+            (g.rmq.stage_update_batch(updates), g.seq, g.shape_gen)
+        };
+        let prep = spec.build(workers);
+        PreparedUpdate { prep, seq, shape_gen, prep_ns: t0.elapsed().as_nanos() as u64 }
+    }
+
+    /// Commit a staged batch at its fence. The fast path installs the
+    /// prepared blocks under the write lock iff no update batch and no
+    /// re-shard landed since the stage (seq + shape fingerprint); a
+    /// conflict voids the preparation and the batch is applied through
+    /// the direct path instead — either way the values land exactly
+    /// once and the seq bumps exactly once, so epoch staleness
+    /// accounting is identical to [`update_batch`](Engine::update_batch).
+    pub fn commit_prepared(&self, p: PreparedUpdate, workers: usize) -> CommitOutcome {
+        let mut g = self.inner.write().expect("sharded lock");
+        if g.seq == p.seq && g.shape_gen == p.shape_gen {
+            match g.rmq.commit_prepared(p.prep) {
+                Ok(()) => {
+                    g.seq += 1;
+                    return CommitOutcome::Installed;
+                }
+                Err(back) => {
+                    // Fingerprint said clean but the decomposition
+                    // disagrees — defensive: the direct path is always
+                    // correct.
+                    g.rmq.update_batch_with(back.updates(), workers);
+                    g.seq += 1;
+                    return CommitOutcome::FellBack;
+                }
+            }
+        }
+        g.rmq.update_batch_with(p.prep.updates(), workers);
+        g.seq += 1;
+        CommitOutcome::FellBack
+    }
+}
+
+/// A staged update batch: per-block refit work computed against a
+/// read-locked snapshot, plus the fingerprint that must still hold at
+/// commit time.
+pub struct PreparedUpdate {
+    prep: PreparedBlockUpdate,
+    seq: u64,
+    shape_gen: u64,
+    /// Wall-clock ns the preparation took — the work the pipeline hides
+    /// behind the preceding query segment.
+    pub prep_ns: u64,
+}
+
+impl PreparedUpdate {
+    /// Number of point updates in the staged batch.
+    pub fn len(&self) -> usize {
+        self.prep.updates().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prep.updates().is_empty()
+    }
+}
+
+/// What [`ShardedEngine::commit_prepared`] did at the fence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CommitOutcome {
+    /// The prepared per-block work was installed as-is.
+    Installed,
+    /// A conflicting write or re-shard voided the preparation; the
+    /// batch was applied through the direct path (same values, same
+    /// seq accounting — only the refit work was re-done).
+    FellBack,
 }
 
 impl Engine for ShardedEngine {
@@ -354,6 +445,7 @@ fn build_sharded(xs: &[f32], cfg: EngineCfg) -> Arc<ShardedEngine> {
 pub struct EngineSet {
     pub n: usize,
     engines: Vec<Arc<dyn Engine>>,
+    sharded: Arc<ShardedEngine>,
 }
 
 impl EngineSet {
@@ -366,9 +458,9 @@ impl EngineSet {
     pub fn build_with(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: EngineCfg) -> EngineSet {
         let sharded = build_sharded(xs, cfg);
         let mut engines = build_static_engines(xs, runtime);
-        let sharded_dyn: Arc<dyn Engine> = sharded;
+        let sharded_dyn: Arc<dyn Engine> = sharded.clone();
         engines.insert(1, sharded_dyn);
-        EngineSet { n: xs.len(), engines }
+        EngineSet { n: xs.len(), engines, sharded }
     }
 
     pub fn get(&self, kind: EngineKind) -> Option<&dyn Engine> {
@@ -377,6 +469,29 @@ impl EngineSet {
 
     pub fn kinds(&self) -> Vec<EngineKind> {
         self.engines.iter().map(|e| e.kind()).collect()
+    }
+
+    /// The typed mutable engine (the staged write path is
+    /// sharded-specific and does not fit the object-safe [`Engine`]
+    /// surface).
+    pub fn sharded(&self) -> &ShardedEngine {
+        &self.sharded
+    }
+
+    /// Staged write path, one-shot surface: see
+    /// [`ShardedEngine::prepare_update_batch`].
+    pub fn prepare_update_batch(
+        &self,
+        updates: &[(usize, f32)],
+        workers: usize,
+    ) -> PreparedUpdate {
+        self.sharded.prepare_update_batch(updates, workers)
+    }
+
+    /// Staged write path, one-shot surface: see
+    /// [`ShardedEngine::commit_prepared`].
+    pub fn commit_prepared(&self, p: PreparedUpdate, workers: usize) -> CommitOutcome {
+        self.sharded.commit_prepared(p, workers)
     }
 }
 
@@ -555,6 +670,26 @@ impl EpochState {
     pub fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<EngineKind> {
         self.sharded.update_batch(updates, workers)?;
         Ok(EngineKind::Sharded)
+    }
+
+    /// Pipelined write path, stage half: run by the serving loop's
+    /// staging lane while the *preceding* query segment executes (safe:
+    /// the fence only constrains later queries, and staging never
+    /// mutates the live structure).
+    pub fn prepare_update(&self, updates: &[(usize, f32)], workers: usize) -> PreparedUpdate {
+        self.sharded.prepare_update_batch(updates, workers)
+    }
+
+    /// Pipelined write path, commit half: runs at the fence. Seq
+    /// accounting is identical to [`update_batch`](Self::update_batch)
+    /// for either outcome, so epoch staleness and the observer feed see
+    /// exactly the sequential protocol.
+    pub fn commit_prepared(
+        &self,
+        p: PreparedUpdate,
+        workers: usize,
+    ) -> (EngineKind, CommitOutcome) {
+        (EngineKind::Sharded, self.sharded.commit_prepared(p, workers))
     }
 
     /// Trigger logic, run by the serving thread after each fused batch
@@ -802,6 +937,93 @@ mod tests {
         }
         let queries = vec![(0u32, 511u32), (4, 40), (32, 511)];
         let got = epoch.get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries));
+    }
+
+    #[test]
+    fn staged_commit_installs_when_nothing_conflicts() {
+        let mut xs = Rng::new(80).uniform_f32_vec(1024);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            LifecycleCfg::default(),
+        );
+        let batch = vec![(5usize, -1.0f32), (63, -0.5), (64, -0.25), (900, -2.0)];
+        let prep = state.prepare_update(&batch, 2);
+        assert_eq!(prep.len(), 4);
+        assert!(!prep.is_empty());
+        assert!(prep.prep_ns > 0);
+        // Staging mutates nothing: the epoch is still fresh.
+        assert!(state.is_fresh(&state.current()));
+        assert_eq!(state.applied_seq(), 0);
+        let (kind, outcome) = state.commit_prepared(prep, 2);
+        assert_eq!(kind, EngineKind::Sharded);
+        assert_eq!(outcome, CommitOutcome::Installed);
+        assert_eq!(state.applied_seq(), 1, "commit bumps the seq exactly once");
+        assert!(!state.is_fresh(&state.current()), "staleness accounting as in direct apply");
+        for &(i, v) in &batch {
+            xs[i] = v;
+        }
+        let queries = vec![(0u32, 1023u32), (60, 70), (890, 910)];
+        let got = state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries));
+    }
+
+    #[test]
+    fn staged_commit_falls_back_on_conflicting_write() {
+        // A different update batch lands between stage and commit: the
+        // prepared work is void (it was built from pre-conflict values),
+        // the commit must take the direct path, and the final state must
+        // equal conflict-then-batch applied in order.
+        let mut xs = Rng::new(81).uniform_f32_vec(512);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(32) },
+            LifecycleCfg::default(),
+        );
+        let batch = vec![(10usize, -1.0f32), (11, 0.9)];
+        let prep = state.prepare_update(&batch, 2);
+        // The conflict: overlaps block 0 (index 11) so the stale
+        // prepared block would resurrect old values if installed.
+        state.update_batch(&[(11, -3.0), (400, -2.0)], 2).unwrap();
+        let (_, outcome) = state.commit_prepared(prep, 2);
+        assert_eq!(outcome, CommitOutcome::FellBack);
+        assert_eq!(state.applied_seq(), 2);
+        for &(i, v) in &[(11usize, -3.0f32), (400, -2.0), (10, -1.0), (11, 0.9)] {
+            xs[i] = v;
+        }
+        let queries = vec![(0u32, 511u32), (8, 16), (390, 410)];
+        let got = state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries), "fallback applies the batch in order");
+    }
+
+    #[test]
+    fn staged_commit_falls_back_after_a_reshard() {
+        // A re-shard between stage and commit changes the decomposition
+        // but not the values (seq unmoved) — the shape generation must
+        // catch it and route the commit through the direct path.
+        let mut xs = Rng::new(82).uniform_f32_vec(2048);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            LifecycleCfg::default(),
+        );
+        let batch = vec![(100usize, -1.0f32), (2000, -0.5)];
+        let prep = state.prepare_update(&batch, 2);
+        let metrics = Mutex::new(Metrics::new());
+        state.run_job(BuildJob::Reshard(16), &metrics);
+        assert_eq!(state.shard_block_live(), 16);
+        let (_, outcome) = state.commit_prepared(prep, 2);
+        assert_eq!(outcome, CommitOutcome::FellBack);
+        assert_eq!(state.applied_seq(), 1);
+        for &(i, v) in &batch {
+            xs[i] = v;
+        }
+        let queries = vec![(0u32, 2047u32), (90, 110), (1990, 2047)];
+        let got = state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
         assert_eq!(got, oracle_batch(&xs, &queries));
     }
 

@@ -27,6 +27,21 @@ pub struct Metrics {
     /// Write path: total point updates applied.
     pub updates: u64,
     pub update_latency: LatencyHistogram,
+    /// Pipeline: update segments whose refit work was staged on the
+    /// overlap lane while the preceding query segment executed.
+    pub staged_batches: u64,
+    /// Pipeline: staged commits that installed the prepared work as-is.
+    pub staged_installed: u64,
+    /// Pipeline: staged commits voided by a conflicting write or
+    /// re-shard, re-applied through the direct path at the fence.
+    pub staged_fallbacks: u64,
+    /// Pipeline: total ns of update preparation hidden behind query
+    /// execution (per segment: min(prepare wall-clock, dispatch→fence
+    /// gap) — the latency the two-lane executor removed vs a serial
+    /// refit-at-the-fence).
+    pub overlap_ns_hidden_total: u64,
+    /// Pipeline: per-segment distribution of the hidden preparation ns.
+    pub overlap_hidden: LatencyHistogram,
     /// Lifecycle: latest published epoch version.
     pub epoch_version: u64,
     /// Lifecycle: background static rebuilds completed.
@@ -67,6 +82,21 @@ impl Metrics {
         self.update_batches += 1;
         self.updates += updates;
         self.update_latency.record(latency_ns);
+    }
+
+    /// A staged (pipelined) update segment committed at its fence.
+    /// `installed` is whether the prepared work survived the conflict
+    /// checks; `hidden_ns` is the preparation time that overlapped the
+    /// preceding query segment.
+    pub fn record_staged_commit(&mut self, installed: bool, hidden_ns: u64) {
+        self.staged_batches += 1;
+        if installed {
+            self.staged_installed += 1;
+        } else {
+            self.staged_fallbacks += 1;
+        }
+        self.overlap_ns_hidden_total += hidden_ns;
+        self.overlap_hidden.record(hidden_ns);
     }
 
     /// A background static rebuild published epoch `version`.
@@ -153,6 +183,19 @@ impl fmt::Display for Metrics {
                 fmt_ns(self.update_latency.mean_ns()),
             )?;
         }
+        // Pipeline line only when the two-lane executor staged work.
+        if self.staged_batches > 0 {
+            writeln!(
+                f,
+                "  {:<10} staged={} installed={} fallbacks={} overlap_ns_hidden={} hidden p50={}",
+                "pipeline",
+                self.staged_batches,
+                self.staged_installed,
+                self.staged_fallbacks,
+                self.overlap_ns_hidden_total,
+                fmt_ns(self.overlap_hidden.quantile_ns(0.5) as f64),
+            )?;
+        }
         // Lifecycle line only once something happened.
         if self.epoch_version > 0 || self.rebuilds > 0 || self.reshards > 0 {
             write!(
@@ -218,6 +261,23 @@ mod tests {
         assert!(!text.contains("updates"), "{text}");
         assert!(!text.contains("lifecycle"), "{text}");
         assert!(!text.contains("observed"), "{text}");
+        assert!(!text.contains("pipeline"), "{text}");
+    }
+
+    #[test]
+    fn staged_commits_roll_up_into_the_pipeline_line() {
+        let mut m = Metrics::new();
+        m.record_staged_commit(true, 40_000);
+        m.record_staged_commit(true, 10_000);
+        m.record_staged_commit(false, 0);
+        assert_eq!(m.staged_batches, 3);
+        assert_eq!(m.staged_installed, 2);
+        assert_eq!(m.staged_fallbacks, 1);
+        assert_eq!(m.overlap_ns_hidden_total, 50_000);
+        let text = m.to_string();
+        assert!(text.contains("pipeline"), "{text}");
+        assert!(text.contains("staged=3 installed=2 fallbacks=1"), "{text}");
+        assert!(text.contains("overlap_ns_hidden=50000"), "{text}");
     }
 
     #[test]

@@ -7,9 +7,23 @@
 //! stale static engines / re-shards once the observed traffic says it
 //! is worthwhile — so the Fig. 12 crossover routing comes back after a
 //! burst of updates instead of being lost forever.
+//!
+//! Mixed streams execute on a **two-lane pipeline**: when a query
+//! segment is directly followed by an update segment (the batcher's
+//! `overlap_with` annotation), the update's refit work is *staged* on a
+//! dedicated lane — per-block replacement solvers built against a
+//! snapshot — while the serving lane still executes the query segment.
+//! At the fence the staged work commits under the write lock (seq- and
+//! shape-checked; conflicts fall back to the direct apply), so the
+//! refit latency hides behind query execution instead of stalling the
+//! stream. Results are bit-identical to the serial executor; the
+//! `pipeline` metrics line reports how much latency was hidden.
 
 use super::batcher::{next_batch, BatcherCfg, Request, Response, Segment};
-use super::engine::{spawn_builder, BuildJob, EngineCfg, EngineKind, EpochState, LifecycleCfg};
+use super::engine::{
+    spawn_builder, BuildJob, CommitOutcome, EngineCfg, EngineKind, EpochState, LifecycleCfg,
+    PreparedUpdate,
+};
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
 use crate::rmq::Query;
@@ -32,6 +46,10 @@ pub struct CoordinatorCfg {
     pub engines: EngineCfg,
     /// Epoch-lifecycle knobs (`serve --rebuild`, `--reshard-drift`).
     pub lifecycle: LifecycleCfg,
+    /// Overlap update-segment preparation with the preceding query
+    /// segment (`serve --no-pipeline` turns it off; answers are
+    /// bit-identical either way).
+    pub pipeline: bool,
 }
 
 impl Default for CoordinatorCfg {
@@ -42,6 +60,7 @@ impl Default for CoordinatorCfg {
             engine_workers: crate::util::pool::default_workers(),
             engines: EngineCfg::default(),
             lifecycle: LifecycleCfg::default(),
+            pipeline: true,
         }
     }
 }
@@ -50,6 +69,7 @@ impl Default for CoordinatorCfg {
 pub struct Coordinator {
     tx: Option<SyncSender<Request>>,
     worker: Option<JoinHandle<()>>,
+    stager: Option<JoinHandle<()>>,
     job_tx: Option<SyncSender<BuildJob>>,
     builder: Option<JoinHandle<()>>,
     pub metrics: Arc<Mutex<Metrics>>,
@@ -69,12 +89,29 @@ impl Coordinator {
         let metrics = Arc::new(Mutex::new(Metrics::new()));
         let (job_tx, builder) = spawn_builder(state.clone(), metrics.clone());
         let (tx, rx) = sync_channel::<Request>(cfg.batcher.queue_cap);
+        // Staging lane: a dedicated worker that prepares an update
+        // segment's refit work against a snapshot while the serving
+        // thread still executes the *preceding* query segment. Rendezvous
+        // channels of depth 1 — at most one preparation is ever in
+        // flight, and the serving thread joins it at the fence.
+        let (stage_tx, stage_rx) = sync_channel::<Vec<(usize, f32)>>(1);
+        let (done_tx, done_rx) = sync_channel::<PreparedUpdate>(1);
+        let stage_state = state.clone();
+        let stage_workers = cfg.engine_workers;
+        let stager = std::thread::spawn(move || {
+            while let Ok(ups) = stage_rx.recv() {
+                if done_tx.send(stage_state.prepare_update(&ups, stage_workers)).is_err() {
+                    break;
+                }
+            }
+        });
         let m = metrics.clone();
         let st = state.clone();
         let jt = job_tx.clone();
         let n = xs.len();
         let batcher_cfg = cfg.batcher;
         let workers = cfg.engine_workers;
+        let pipeline = cfg.pipeline;
         let worker = std::thread::spawn(move || {
             while let Some(fused) = next_batch(&rx, &batcher_cfg) {
                 let t0 = std::time::Instant::now();
@@ -86,13 +123,30 @@ impl Coordinator {
                 // briefly runs ahead mid-publish): keeps response epochs
                 // monotone across update-only batches.
                 let mut epoch_seen = st.current().version;
-                // Segments execute strictly in stream order on this one
-                // thread — that *is* the fence: an update segment is
-                // visible to every later query segment and to none
-                // earlier.
-                for seg in &fused.segments {
+                // In-flight staged preparation: (update segment index it
+                // commits at, dispatch instant).
+                let mut staged: Option<(usize, std::time::Instant)> = None;
+                // Segments execute (commit, for staged updates) strictly
+                // in stream order on this one thread — that *is* the
+                // fence: an update segment is visible to every later
+                // query segment and to none earlier. Staging only ever
+                // *reads*, so overlapping it with the preceding query
+                // segment cannot leak values across the fence.
+                for (si, seg) in fused.segments.iter().enumerate() {
                     match seg {
                         Segment::Queries(qs) => {
+                            // Two-lane dispatch: if the next segment is an
+                            // update fence, hand its preparation to the
+                            // staging lane before running this query
+                            // segment, per the batcher's annotation.
+                            if pipeline {
+                                if let Some(Segment::Updates(ups)) = fused.segments.get(si + 1) {
+                                    debug_assert_eq!(fused.overlap_with[si + 1], Some(si));
+                                    if stage_tx.send(ups.clone()).is_ok() {
+                                        staged = Some((si + 1, std::time::Instant::now()));
+                                    }
+                                }
+                            }
                             // Pin this segment to the epoch current at its
                             // start: the Arc keeps a mid-segment background
                             // swap from freeing engines under us; the next
@@ -129,22 +183,52 @@ impl Coordinator {
                         }
                         Segment::Updates(ups) => {
                             let ts = std::time::Instant::now();
-                            match st.update_batch(ups, workers) {
-                                Ok(kind) => {
-                                    update_engine.get_or_insert(kind.name());
-                                    m.lock().unwrap().record_update_batch(
-                                        ups.len() as u64,
-                                        ts.elapsed().as_nanos() as u64,
+                            let mut applied: Option<EngineKind> = None;
+                            if let Some((at, dispatched)) = staged.take() {
+                                debug_assert_eq!(at, si, "staged work commits at its own fence");
+                                // Join the staging lane and commit at the
+                                // fence. `hidden` is the slice of the
+                                // preparation that ran while this thread
+                                // was busy with the previous segment — the
+                                // latency the pipeline removed. The gap is
+                                // measured *before* the blocking recv: a
+                                // preparation that outlives the query
+                                // segment stalls the fence, and that stall
+                                // must not count as hidden.
+                                let gap = dispatched.elapsed().as_nanos() as u64;
+                                if let Ok(prep) = done_rx.recv() {
+                                    let hidden = prep.prep_ns.min(gap);
+                                    let (kind, outcome) = st.commit_prepared(prep, workers);
+                                    m.lock().unwrap().record_staged_commit(
+                                        outcome == CommitOutcome::Installed,
+                                        hidden,
                                     );
-                                }
-                                // Admission validated the indices; this
-                                // only fires when no mutable engine is
-                                // built, which bootstrap precludes.
-                                Err(e) => {
-                                    eprintln!("update batch dropped: {e}");
-                                    updates_ok = false;
+                                    applied = Some(kind);
                                 }
                             }
+                            if applied.is_none() {
+                                match st.update_batch(ups, workers) {
+                                    Ok(kind) => applied = Some(kind),
+                                    // Admission validated the indices; this
+                                    // only fires when no mutable engine is
+                                    // built, which bootstrap precludes.
+                                    Err(e) => {
+                                        eprintln!("update batch dropped: {e}");
+                                        updates_ok = false;
+                                    }
+                                }
+                            }
+                            if let Some(kind) = applied {
+                                update_engine.get_or_insert(kind.name());
+                                m.lock().unwrap().record_update_batch(
+                                    ups.len() as u64,
+                                    ts.elapsed().as_nanos() as u64,
+                                );
+                            }
+                            // Observer feed stays at the *commit* point,
+                            // exactly as in the serial executor, so the
+                            // lifecycle's staleness/seq accounting is
+                            // unchanged by pipelining.
                             st.observer.lock().unwrap().observe_updates(ups.len());
                         }
                     }
@@ -187,6 +271,7 @@ impl Coordinator {
         Coordinator {
             tx: Some(tx),
             worker: Some(worker),
+            stager: Some(stager),
             job_tx: Some(job_tx),
             builder: Some(builder),
             metrics,
@@ -262,6 +347,11 @@ impl Coordinator {
         drop(self.tx.take());
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+        // The serving thread owned the staging lane's channels; its
+        // exit hangs them up, so the stager drains and stops.
+        if let Some(s) = self.stager.take() {
+            let _ = s.join();
         }
         drop(self.job_tx.take());
         if let Some(b) = self.builder.take() {
@@ -414,6 +504,94 @@ mod tests {
         assert_eq!(after.updates_applied, 0);
         assert_eq!(c.lifecycle.rebuilds(), 0, "--rebuild off never rebuilds");
         assert_eq!(c.lifecycle.epoch_version(), 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn pipelined_executor_stages_update_segments_and_stays_exact() {
+        // Fence-heavy stream: q|u|q|u|q segments per request, so every
+        // update segment has a preceding query segment to overlap. The
+        // answers must equal the sequential oracle and the metrics must
+        // show staged commits with hidden preparation time.
+        let n = 2048usize;
+        let mut xs = Rng::new(90).uniform_f32_vec(n);
+        let c = Coordinator::start(&xs, None, CoordinatorCfg::default());
+        let mut rng = Rng::new(91);
+        for _ in 0..8 {
+            let mut ops = Vec::new();
+            let mut want = Vec::new();
+            for _ in 0..3 {
+                let l = rng.range(0, n - 1);
+                let r = rng.range(l, n - 1);
+                ops.push(Op::Query((l as u32, r as u32)));
+                want.push(crate::rmq::naive_rmq(&xs, l, r) as u32);
+                let i = rng.range(0, n - 1);
+                let v = rng.f32();
+                ops.push(Op::Update { i: i as u32, v });
+                xs[i] = v;
+            }
+            let resp = c.submit_mixed(ops).unwrap();
+            assert_eq!(resp.answers, want);
+            assert_eq!(resp.updates_applied, 3);
+        }
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.update_batches, 24, "3 fences per request x 8 requests");
+        assert_eq!(m.staged_batches, 24, "every fence had a preceding query segment");
+        assert_eq!(
+            m.staged_installed, 24,
+            "single-writer stream: no conflicts, every prepared batch installs"
+        );
+        assert_eq!(m.staged_fallbacks, 0);
+        assert!(m.overlap_ns_hidden_total > 0, "preparation overlapped query execution");
+        assert!(m.to_string().contains("pipeline"), "{m}");
+        drop(m);
+        c.shutdown();
+    }
+
+    #[test]
+    fn leading_update_segments_take_the_direct_path() {
+        // A request that *starts* with updates has nothing to hide the
+        // first fence behind — the executor must fall through to the
+        // direct apply and still fence correctly.
+        let xs = vec![0.5f32; 128];
+        let c = Coordinator::start(&xs, None, CoordinatorCfg::default());
+        let resp = c
+            .submit_mixed(vec![
+                Op::Update { i: 100, v: 0.1 },
+                Op::Query((0, 127)),
+                Op::Update { i: 3, v: 0.05 },
+                Op::Query((0, 127)),
+            ])
+            .unwrap();
+        assert_eq!(resp.answers, vec![100, 3]);
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.update_batches, 2);
+        assert_eq!(m.staged_batches, 1, "only the second fence had a query before it");
+        drop(m);
+        c.shutdown();
+    }
+
+    #[test]
+    fn pipeline_off_never_stages() {
+        let xs = vec![0.5f32; 256];
+        let c = Coordinator::start(
+            &xs,
+            None,
+            CoordinatorCfg { pipeline: false, ..Default::default() },
+        );
+        let resp = c
+            .submit_mixed(vec![
+                Op::Query((0, 255)),
+                Op::Update { i: 9, v: 0.1 },
+                Op::Query((0, 255)),
+            ])
+            .unwrap();
+        assert_eq!(resp.answers, vec![0, 9], "serial executor: same fence semantics");
+        let m = c.metrics.lock().unwrap();
+        assert_eq!(m.staged_batches, 0);
+        assert_eq!(m.overlap_ns_hidden_total, 0);
+        assert_eq!(m.update_batches, 1);
+        drop(m);
         c.shutdown();
     }
 

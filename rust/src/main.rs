@@ -28,6 +28,7 @@ fn main() {
         Some("solve") => cmd_solve(&args),
         Some("serve") => cmd_serve(&args),
         Some("bench-smoke") => cmd_bench_smoke(&args),
+        Some("bench-compare") => cmd_bench_compare(&args),
         Some("memory") => cmd_memory(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") => cmd_info(),
@@ -61,7 +62,10 @@ fn print_help() {
             .opt("rebuild", "epoch lifecycle: auto = background rebuild/re-shard, off (default auto)")
             .opt("reshard-drift", "re-shard when the tuned block drifts this factor (default 2.0)")
             .opt("quiet-tail", "append this many pure-query requests (rebuild trigger window)")
+            .opt("shift-dist", "switch the mixed stream to this distribution halfway through")
             .opt("expect-rebuild", "exit non-zero unless a background rebuild occurred")
+            .opt("expect-reshard", "exit non-zero unless a background re-shard occurred")
+            .opt("no-pipeline", "serial executor: apply update segments at the fence, no overlap")
             .opt("no-xla", "disable the PJRT/XLA engine"),
         Help::new("bench-smoke", "wall-clock ns/query grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
@@ -72,6 +76,11 @@ fn print_help() {
             .opt("update-frac", "also time updates: batch×frac points per grid cell (default 0)")
             .opt("summary-md", "append a markdown summary table to this file")
             .opt("out", "output JSON path (default BENCH_rmq.json)"),
+        Help::new("bench-compare", "regression gate: fresh bench-smoke JSON vs baseline")
+            .opt("baseline", "committed baseline JSON (required; ci/BENCH_baseline.json in CI)")
+            .opt("current", "fresh bench JSON (default BENCH_rmq.json)")
+            .opt("max-regress", "allowed relative slowdown per metric (default 0.25)")
+            .opt("summary-md", "append the delta table to this markdown file"),
         Help::new("memory", "data-structure memory report").opt("n", "array size"),
         Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
         Help::new("info", "print the GPU/CPU architecture profiles"),
@@ -146,6 +155,18 @@ fn cmd_serve(args: &Args) -> i32 {
     });
     let reshard_drift: f64 = args.get_or("reshard-drift", 2.0f64).unwrap();
     let quiet_tail: usize = args.get_or("quiet-tail", 0usize).unwrap();
+    // Reshard-inducing distribution shift (nightly soak): the second
+    // half of the run offers this distribution instead of --dist.
+    let shift_dist = match args.opt("shift-dist") {
+        None => None,
+        Some(s) => match RangeDist::parse(s) {
+            Some(d) => Some(d),
+            None => {
+                eprintln!("invalid --shift-dist {s} (expected large|medium|small)");
+                std::process::exit(2);
+            }
+        },
+    };
     let xs = gen_array(n, 7);
     let runtime = if args.flag("no-xla") {
         None
@@ -159,6 +180,7 @@ fn cmd_serve(args: &Args) -> i32 {
         CoordinatorCfg {
             engines: EngineCfg { shard_block },
             lifecycle: LifecycleCfg { rebuild, reshard_drift, ..Default::default() },
+            pipeline: !args.flag("no-pipeline"),
             ..Default::default()
         },
     );
@@ -169,8 +191,12 @@ fn cmd_serve(args: &Args) -> i32 {
     let mut oracle = xs.clone();
     if mixed {
         let mut total_updates = 0usize;
-        for _ in 0..requests {
-            let ops = gen_mixed(n, batch, update_frac, dist, &mut rng);
+        for r in 0..requests {
+            let d = match shift_dist {
+                Some(sd) if r >= requests / 2 => sd,
+                _ => dist,
+            };
+            let ops = gen_mixed(n, batch, update_frac, d, &mut rng);
             let resp = c.submit_mixed(ops.clone()).expect("serve");
             total_updates += resp.updates_applied;
             let mut checked = 0;
@@ -210,9 +236,12 @@ fn cmd_serve(args: &Args) -> i32 {
     if quiet_tail > 0 {
         // Quiet period: pure-query requests that let the observer's
         // decayed update rate fall below the rebuild threshold, so the
-        // background builder can refresh the static engines.
+        // background builder can refresh the static engines. Under a
+        // --shift-dist run the tail keeps the shifted distribution, so
+        // the workload-fed tuner sees the drift it should re-shard for.
+        let tail_dist = shift_dist.unwrap_or(dist);
         for _ in 0..quiet_tail {
-            let qs = gen_queries(n, batch, dist, &mut rng);
+            let qs = gen_queries(n, batch, tail_dist, &mut rng);
             let resp = c.query(qs.clone()).expect("quiet tail");
             for (k, &(l, r)) in qs.iter().take(2).enumerate() {
                 assert_eq!(
@@ -225,25 +254,32 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         println!("quiet tail: {quiet_tail} pure-query requests served");
     }
-    if args.flag("expect-rebuild") {
-        // The claim happens on the serving thread; the build may still
-        // be in flight on the builder — give it a moment to land.
+    // The lifecycle claims happen on the serving thread; the builds may
+    // still be in flight on the builder — give each expectation a grace
+    // window to land before failing the run.
+    let expect = |flag: &str, what: &str, count: &dyn Fn() -> u64| -> bool {
+        if !args.flag(flag) {
+            return true;
+        }
         let t1 = std::time::Instant::now();
-        while c.metrics.lock().unwrap().rebuilds == 0
-            && t1.elapsed() < std::time::Duration::from_secs(5)
-        {
+        while count() == 0 && t1.elapsed() < std::time::Duration::from_secs(5) {
             std::thread::sleep(std::time::Duration::from_millis(50));
         }
-        if c.metrics.lock().unwrap().rebuilds == 0 {
-            eprintln!("--expect-rebuild: no background rebuild occurred");
-            println!("{}", c.metrics.lock().unwrap());
-            c.shutdown();
-            return 1;
+        if count() == 0 {
+            eprintln!("--{flag}: no background {what} occurred");
+            return false;
         }
-    }
+        true
+    };
+    let ok = expect("expect-rebuild", "rebuild", &|| c.metrics.lock().unwrap().rebuilds)
+        && expect("expect-reshard", "re-shard", &|| c.metrics.lock().unwrap().reshards);
     println!("{}", c.metrics.lock().unwrap());
     c.shutdown();
-    0
+    if ok {
+        0
+    } else {
+        1
+    }
 }
 
 fn cmd_bench_smoke(args: &Args) -> i32 {
@@ -300,6 +336,88 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             eprintln!("failed to write {out}: {e}");
             1
         }
+    }
+}
+
+fn cmd_bench_compare(args: &Args) -> i32 {
+    use rtxrmq::bench_harness::compare::{compare, summary_md};
+    use rtxrmq::bench_harness::smoke::append_summary_md;
+    use rtxrmq::util::json::Json;
+    let baseline_path = match args.opt("baseline") {
+        Some(p) => p.to_string(),
+        None => {
+            eprintln!("bench-compare: --baseline is required");
+            return 2;
+        }
+    };
+    let current_path = args.str_or("current", "BENCH_rmq.json");
+    let max_regress: f64 = args.get_or("max-regress", 0.25f64).unwrap();
+    let load = |path: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Json::parse(text.trim()).map_err(|e| format!("{path}: {e}"))
+    };
+    let (baseline, current) = match (load(&baseline_path), load(&current_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (b, c) => {
+            for r in [b.err(), c.err()].into_iter().flatten() {
+                eprintln!("bench-compare: {r}");
+            }
+            return 2;
+        }
+    };
+    let report = match compare(&baseline, &current, max_regress) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bench-compare: {e}");
+            return 2;
+        }
+    };
+    let rows: Vec<Vec<String>> = report
+        .rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.layout.clone(),
+                r.n.to_string(),
+                r.batch.to_string(),
+                r.metric.to_string(),
+                format!("{:.1}", r.baseline),
+                format!("{:.1}", r.current),
+                format!("{:+.1}%", r.delta * 100.0),
+                if r.regressed { "REGRESSED".into() } else { String::new() },
+            ]
+        })
+        .collect();
+    rtxrmq::bench_harness::print_table(
+        &format!("bench-gate vs {baseline_path} (tolerance +{:.0}%)", max_regress * 100.0),
+        &["solver", "n", "batch", "metric", "baseline", "current", "delta", ""],
+        &rows,
+    );
+    for m in &report.missing {
+        eprintln!("bench-compare: baseline point missing from current run: {m}");
+    }
+    if let Some(md_path) = args.opt("summary-md") {
+        if let Err(e) = append_summary_md(std::path::Path::new(md_path), &summary_md(&report)) {
+            eprintln!("failed to append summary to {md_path}: {e}");
+        }
+    }
+    if report.bootstrap_baseline {
+        println!(
+            "baseline is the modeled bootstrap placeholder — gate reports only; commit a \
+             measured BENCH_rmq.json (the CI bench artifact) over {baseline_path} to arm it"
+        );
+    }
+    if report.failed() {
+        eprintln!(
+            "bench-compare: {} regression(s), {} missing point(s) beyond +{:.0}% tolerance",
+            report.regressions().len(),
+            report.missing.len(),
+            max_regress * 100.0
+        );
+        1
+    } else {
+        println!("bench-gate: PASS ({} metrics compared)", report.rows.len());
+        0
     }
 }
 

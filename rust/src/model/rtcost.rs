@@ -116,6 +116,47 @@ impl RtCostModel {
         self.c_ray + depth * (self.c_node + 4.0 * self.c_aabb) + 2.0 * self.c_tri
     }
 
+    /// Modeled work of a leaf-to-root **path refit** in a BVH over `k`
+    /// elements: re-shape one triangle, then recompute ~log2 k node
+    /// bounds (4 lanes of box mins each) up the ancestor chain. This is
+    /// the `refit_prims` route single-update blocks and single-minimum
+    /// summary changes take (`rmq::sharded`), as opposed to the full
+    /// Θ(k) refit-and-rescan sweep.
+    pub fn path_refit_work(&self, k: f64) -> f64 {
+        let depth = k.max(2.0).log2().ceil() + 1.0;
+        self.c_tri + depth * (self.c_node + 4.0 * self.c_aabb)
+    }
+
+    /// Update-side work **per point** at block size `bs` when update
+    /// segments carry `points` updates each. Distinguishes the batch
+    /// shapes the write path special-cases:
+    ///
+    /// - `points == 0` (shape unknown): the conservative dense charge
+    ///   `B + n/B` — a full block refit + rescan plus a full summary
+    ///   refit per point, the pre-observation prior.
+    /// - `points ≤ n/B` (sparse batch, mostly *single-update blocks*):
+    ///   each touched block takes the path-refit route — Θ(log B)
+    ///   instead of Θ(B), with the O(1) min maintenance skipping the
+    ///   rescan.
+    /// - larger batches: full per-block refits, amortised over the
+    ///   points sharing each block.
+    ///
+    /// The summary term is the single-minimum point refit (Θ(log n/B))
+    /// when at most one block is touched, the full Θ(n/B) sweep
+    /// otherwise — both amortised over the batch.
+    pub fn shard_update_work(&self, n: usize, bs: usize, points: f64) -> f64 {
+        let b = (bs.max(1)) as f64;
+        let nb = ((n.max(1)) as f64 / b).max(1.0);
+        if points <= 0.0 {
+            return b + nb;
+        }
+        let k = points.max(1.0);
+        let touched = k.min(nb);
+        let per_block = if k <= nb { self.path_refit_work(b) } else { b };
+        let summary = if touched <= 1.0 { self.path_refit_work(nb) } else { nb };
+        (touched * per_block + summary) / k
+    }
+
     /// Modeled work units per op of the two-level sharded engine at
     /// block size `bs` under workload `w` (array length `n`).
     ///
@@ -124,21 +165,14 @@ impl RtCostModel {
     /// over `B`-element BVHs plus — once the span passes two blocks — a
     /// summary probe over the `n/B`-element block-minima BVH.
     ///
-    /// Update side: a point update re-shapes and refits its block
-    /// (Θ(B): the rescan reads every element, the refit walks every
-    /// leaf) and pays one summary refit (Θ(n/B)) in the worst case of a
-    /// batch whose updates each touch a distinct block; larger batches
-    /// only amortise this further, and the summary *point-refit* path
-    /// (`rmq::sharded`: batches moving a single block minimum re-shape
-    /// one triangle and refit its ancestor path) makes the `n/B` term an
-    /// upper bound realised only by multi-block batches — so the model
-    /// is conservative.
+    /// Update side: [`shard_update_work`](Self::shard_update_work) with
+    /// an unknown batch shape — the conservative `B + n/B` charge the
+    /// CLI priors imply. The observed tuner
+    /// ([`tune_shard_block_observed`](Self::tune_shard_block_observed))
+    /// sharpens it with the measured mean update-segment size.
     pub fn shard_cost_per_op(&self, n: usize, bs: usize, w: &ShardWorkload) -> f64 {
-        let nf = (n.max(1)) as f64;
-        let b = (bs.max(1)) as f64;
-        let nb = (nf / b).max(1.0);
         let query = self.shard_query_work(n, bs, w.mean_range);
-        let update = b + nb;
+        let update = self.shard_update_work(n, bs, 0.0);
         let u = w.update_frac.clamp(0.0, 1.0);
         (1.0 - u) * query + u * update
     }
@@ -204,8 +238,6 @@ impl RtCostModel {
         let mut best = (f64::INFINITY, 4usize);
         let mut bs = 4usize;
         loop {
-            let b = bs as f64;
-            let nb = ((n.max(1)) as f64 / b).max(1.0);
             let mut query = 0.0;
             for (k, &wk) in w.range_hist.iter().enumerate() {
                 if wk > 0.0 {
@@ -215,7 +247,11 @@ impl RtCostModel {
                 }
             }
             query /= mass;
-            let cost = (1.0 - u) * query + u * (b + nb);
+            // The observed mean update-segment size sharpens the update
+            // term: sparse segments path-refit single-update blocks,
+            // only dense ones pay the full B + n/B sweep.
+            let update = self.shard_update_work(n, bs, w.mean_update_batch);
+            let cost = (1.0 - u) * query + u * update;
             if cost < best.0 {
                 best = (cost, bs);
             }
@@ -535,7 +571,75 @@ mod tests {
     fn observed(mean_range: f64, update_frac: f64, bucket: usize, mass: f64) -> ObservedWorkload {
         let mut hist = [0.0; crate::workload::observer::RANGE_BUCKETS];
         hist[bucket] = mass;
-        ObservedWorkload { mean_range, mean_batch: 64.0, update_frac, range_hist: hist, ops: 100 }
+        ObservedWorkload {
+            mean_range,
+            mean_batch: 64.0,
+            update_frac,
+            range_hist: hist,
+            ops: 100,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn update_work_distinguishes_batch_shapes() {
+        let m = RtCostModel::default();
+        let (n, bs) = (1usize << 16, 256usize);
+        let (b, nb) = (bs as f64, (n / bs) as f64);
+        // Unknown shape: the conservative dense prior.
+        assert_eq!(m.shard_update_work(n, bs, 0.0), b + nb);
+        // A single-point batch takes both path-refit routes — orders of
+        // magnitude below the dense charge.
+        let single = m.shard_update_work(n, bs, 1.0);
+        assert!(
+            (single - (m.path_refit_work(b) + m.path_refit_work(nb))).abs() < 1e-9,
+            "single = {single}"
+        );
+        assert!(single < (b + nb) / 10.0, "single {single} vs dense {}", b + nb);
+        // Sparse multi-block batches: path refits per block, full
+        // summary sweep amortised over the batch.
+        let k = 8.0;
+        let sparse = m.shard_update_work(n, bs, k);
+        assert!(
+            (sparse - (k * m.path_refit_work(b) + nb) / k).abs() < 1e-9,
+            "sparse = {sparse}"
+        );
+        // Denser-than-blocks batches: full block refits, amortised.
+        let dense = m.shard_update_work(n, bs, 4.0 * nb);
+        assert!(
+            (dense - (nb * b + nb) / (4.0 * nb)).abs() < 1e-9,
+            "dense = {dense}"
+        );
+        // Per-point cost shrinks as batches amortise the shared work.
+        assert!(sparse < m.shard_update_work(n, bs, 2.0) || k <= 2.0);
+        assert!(dense < b + nb);
+    }
+
+    #[test]
+    fn observed_single_point_updates_relax_the_update_penalty() {
+        // With point updates known to arrive one at a time, the update
+        // term stops punishing large blocks (path refit is Θ(log B)),
+        // so the tuner picks a block at least as large as the dense
+        // prior would under the same mixed traffic.
+        let m = RtCostModel::default();
+        let n = 1usize << 18;
+        let mut dense = observed(96.0, 0.4, 6, 10.0);
+        let mut single = dense;
+        dense.mean_update_batch = 0.0; // unknown -> dense prior
+        single.mean_update_batch = 1.0;
+        let tuned_dense = m.tune_shard_block_observed(n, &dense);
+        let tuned_single = m.tune_shard_block_observed(n, &single);
+        assert!(
+            tuned_single >= tuned_dense,
+            "single-point updates must not shrink the block: {tuned_single} < {tuned_dense}"
+        );
+        // And the modeled cost at the chosen block strictly improves.
+        let cost =
+            |w: &ObservedWorkload, bs| {
+                0.6 * m.shard_query_work(n, bs, 96.0)
+                    + 0.4 * m.shard_update_work(n, bs, w.mean_update_batch)
+            };
+        assert!(cost(&single, tuned_single) < cost(&dense, tuned_dense));
     }
 
     #[test]

@@ -119,7 +119,54 @@
 //!   leaf-to-root path (`RtxRmq::update_values_point`) instead of
 //!   sweeping the whole summary structure — the Θ(n/B) per-batch term
 //!   the cost model charges becomes an upper bound realised only by
-//!   multi-block batches.
+//!   multi-block batches. The same route now applies one level down: a
+//!   block that received exactly **one** update path-refits its block
+//!   BVH and maintains its min table in O(1) (rescan only when the old
+//!   argmin's value rose), and `RtCostModel::shard_update_work` charges
+//!   update batches by their observed shape — single-point batches cost
+//!   two path refits, not `B + n/B`.
+//!
+//! # Overlapped update/query pipeline (design note)
+//!
+//! The serial executor made every update segment a full pipeline stall:
+//! finish query segment k−1, refit, resume. The serving loop now runs a
+//! **two-lane pipeline** (`coordinator::server`):
+//!
+//! - **Why overlapping with the *preceding* segment is safe.** The
+//!   fence semantics only constrain *later* queries — segment k−1 must
+//!   not see update segment k's values, and preparation never writes.
+//!   Staging computes per-block *replacement* solvers from a
+//!   read-locked snapshot (`ShardedRmq::stage_update_batch` copies the
+//!   touched block slices with the updates applied; `StagedUpdateSpec::
+//!   build` constructs solvers with no lock held), so queries of
+//!   segment k−1 keep reading the live, pre-fence structure while the
+//!   refit work runs. The batcher annotates each update segment with
+//!   the query segment it may overlap (`FusedBatch::overlap_with` —
+//!   always the direct predecessor; a leading update segment has
+//!   nothing to hide behind and applies directly).
+//! - **The prepare/commit seq protocol.** A preparation records the
+//!   mutable engine's (applied-update seq, shape generation) under the
+//!   same read lock that snapshots the blocks. At the fence,
+//!   `ShardedEngine::commit_prepared` takes the write lock and installs
+//!   the prepared blocks **iff both still match** — a moved seq means a
+//!   conflicting update batch landed (the prepared blocks embed stale
+//!   values), a moved shape generation means a background re-shard
+//!   swapped the decomposition (block ids no longer line up). Either
+//!   conflict voids the preparation and the batch is applied through
+//!   the ordinary direct path under the same lock. Both outcomes bump
+//!   the seq exactly once, so results are bit-identical to serial
+//!   execution for any overlap timing — the differential suite
+//!   (`tests/mixed_stream.rs`) and the no-toolchain simulation
+//!   (`epoch_sim.py`) pin pipelined vs sequential-oracle execution
+//!   across fence-heavy streams, conflicts included.
+//! - **Interaction with epoch staleness.** The observer feed and
+//!   `EpochState::plan` stay at *commit* points: an update segment
+//!   bumps the seq when it commits (not when it stages), so epochs read
+//!   as stale at exactly the same stream positions as under serial
+//!   execution, and in-flight query segments still pin their epoch as
+//!   in the lifecycle design above. The `pipeline` metrics line
+//!   (`overlap_ns_hidden`) reports how much preparation latency the
+//!   overlap actually removed from the serving thread's critical path.
 
 pub mod cartesian;
 pub mod exhaustive;

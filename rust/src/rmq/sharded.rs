@@ -155,6 +155,73 @@ impl BlockSolver {
     }
 }
 
+/// Snapshot of the work an update batch needs, taken by
+/// [`ShardedRmq::stage_update_batch`] (cheap, lock-held): each touched
+/// block's post-update value slice plus the decomposition fingerprint.
+/// [`build`](Self::build) turns it into a [`PreparedBlockUpdate`] with
+/// no lock held — the expensive half of the pipelined write path.
+pub struct StagedUpdateSpec {
+    n: usize,
+    bs: usize,
+    opts: ShardedOptions,
+    updates: Vec<(usize, f32)>,
+    /// (block id, fresh value slice) per touched block.
+    blocks: Vec<(usize, Vec<f32>)>,
+}
+
+impl StagedUpdateSpec {
+    /// Build a replacement solver per touched block (parallel over
+    /// blocks, like construction) and its fresh leftmost argmin. Pure:
+    /// reads only the staged copies, so it runs concurrently with
+    /// queries against the live structure.
+    pub fn build(mut self, workers: usize) -> PreparedBlockUpdate {
+        let (bs, opts) = (self.bs, self.opts);
+        let built: Vec<Vec<(usize, BlockSolver, u32)>> =
+            pool::map_chunks_mut(&mut self.blocks, workers, |_, slice| {
+                slice
+                    .iter()
+                    .map(|(b, vals)| {
+                        let solver = BlockSolver::build(vals, &opts);
+                        let local = super::naive_rmq(vals, 0, vals.len() - 1);
+                        (*b, solver, (b * bs + local) as u32)
+                    })
+                    .collect()
+            });
+        PreparedBlockUpdate {
+            n: self.n,
+            bs: self.bs,
+            updates: self.updates,
+            blocks: built.into_iter().flatten().collect(),
+        }
+    }
+}
+
+/// Prepared refit work for one update batch: per touched block a
+/// replacement solver built from the staged values, plus the fresh
+/// leftmost global argmin. Installed by
+/// [`ShardedRmq::commit_prepared`]; valid only while the decomposition
+/// it was staged against (and its values) stand — the engine layer
+/// guards both with a (seq, shape) fingerprint.
+pub struct PreparedBlockUpdate {
+    n: usize,
+    bs: usize,
+    updates: Vec<(usize, f32)>,
+    blocks: Vec<(usize, BlockSolver, u32)>,
+}
+
+impl PreparedBlockUpdate {
+    /// The original point updates (the direct-apply fallback input when
+    /// a commit-time conflict voids the prepared work).
+    pub fn updates(&self) -> &[(usize, f32)] {
+        &self.updates
+    }
+
+    /// Number of blocks this preparation rebuilt.
+    pub fn touched_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
 /// The two-level sharded solver.
 pub struct ShardedRmq {
     xs: Vec<f32>,
@@ -337,14 +404,41 @@ impl ShardedRmq {
                 rest = tail;
             }
             let xs = &self.xs;
+            let old_min = &self.block_min;
+            let old_argmin = &self.block_argmin;
             let (bs, n) = (self.bs, self.xs.len());
             pool::map_chunks_mut(&mut jobs, workers, |_, slice| {
                 let mut out = Vec::with_capacity(slice.len());
                 for (b, local, solver) in slice.iter_mut() {
                     let start = *b * bs;
                     let end = (start + bs).min(n);
-                    solver.update(local, &xs[start..end]);
-                    out.push((*b, super::naive_rmq(xs, start, end - 1) as u32));
+                    let arg = if local.len() == 1 {
+                        // Single-update block: path-refit the block BVH
+                        // (Θ(log B) vs the full sweep) and maintain the
+                        // min table in O(1) — the Θ(B) rescan is only
+                        // needed when the old argmin's value *rose*.
+                        solver.update_point(local, &xs[start..end]);
+                        let (j, v) = local[0];
+                        let gi = start + j;
+                        let oa = old_argmin[*b] as usize;
+                        if gi == oa {
+                            // The leftmost minimum moved in place; if it
+                            // rose, some other element may now win.
+                            if v <= old_min[*b] {
+                                gi
+                            } else {
+                                super::naive_rmq(xs, start, end - 1)
+                            }
+                        } else if v < old_min[*b] || (v == old_min[*b] && gi < oa) {
+                            gi
+                        } else {
+                            oa
+                        }
+                    } else {
+                        solver.update(local, &xs[start..end]);
+                        super::naive_rmq(xs, start, end - 1)
+                    };
+                    out.push((*b, arg as u32));
                 }
                 out
             })
@@ -360,20 +454,103 @@ impl ShardedRmq {
                 summary_updates.push((b, v));
             }
         }
-        if !summary_updates.is_empty() {
-            if let Some(s) = &mut self.summary {
-                if summary_updates.len() == 1 {
-                    // Exactly one block minimum moved (the common case for
-                    // sparse batches): re-shape that one summary triangle
-                    // and refit its ancestor path instead of sweeping the
-                    // whole summary structure — this removes the Θ(n/B)
-                    // per-batch term the cost model charges updates.
-                    s.update_point(&summary_updates, &self.block_min);
-                } else {
-                    s.update(&summary_updates, &self.block_min);
-                }
+        self.apply_summary_updates(summary_updates);
+    }
+
+    /// Fold changed block minima into the summary solver: a single moved
+    /// minimum re-shapes one summary triangle and refits its ancestor
+    /// path (removing the Θ(n/B) per-batch term the cost model charges
+    /// updates); multi-block changes take the full summary refit. Shared
+    /// by the direct write path and [`commit_prepared`](Self::commit_prepared).
+    fn apply_summary_updates(&mut self, summary_updates: Vec<(usize, f32)>) {
+        if summary_updates.is_empty() {
+            return;
+        }
+        if let Some(s) = &mut self.summary {
+            if summary_updates.len() == 1 {
+                s.update_point(&summary_updates, &self.block_min);
+            } else {
+                s.update(&summary_updates, &self.block_min);
             }
         }
+    }
+
+    /// Stage an update batch against the current values: copy each
+    /// touched block's value slice with the updates applied (later
+    /// duplicates win, as in the direct path). This is the cheap,
+    /// snapshot-consistent half of the pipelined write path — callers
+    /// run it under a read lock, then [`StagedUpdateSpec::build`] the
+    /// expensive per-block replacement solvers with **no lock held**,
+    /// and finally [`commit_prepared`](Self::commit_prepared) under the
+    /// write lock at the fence.
+    pub fn stage_update_batch(&self, updates: &[(usize, f32)]) -> StagedUpdateSpec {
+        let mut by_block: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
+        for &(i, v) in updates {
+            assert!(i < self.xs.len(), "update index {i} out of range");
+            by_block.entry(i / self.bs).or_default().push((i % self.bs, v));
+        }
+        let blocks = by_block
+            .into_iter()
+            .map(|(b, local)| {
+                let start = b * self.bs;
+                let end = (start + self.bs).min(self.xs.len());
+                let mut vals = self.xs[start..end].to_vec();
+                for (j, v) in local {
+                    vals[j] = v;
+                }
+                (b, vals)
+            })
+            .collect();
+        StagedUpdateSpec {
+            n: self.xs.len(),
+            bs: self.bs,
+            opts: self.opts,
+            updates: updates.to_vec(),
+            blocks,
+        }
+    }
+
+    /// `stage` + `build` in one call (solver-level convenience; the
+    /// serving pipeline splits them around its read lock).
+    pub fn prepare_update_batch(
+        &self,
+        updates: &[(usize, f32)],
+        workers: usize,
+    ) -> PreparedBlockUpdate {
+        self.stage_update_batch(updates).build(workers)
+    }
+
+    /// Install a prepared batch. Fails (returning the preparation
+    /// untouched, values unchanged) when the prepared work no longer
+    /// matches this decomposition — the array was re-sharded or swapped
+    /// since the stage. Detecting a *value* conflict (a different update
+    /// batch landing in between) is the caller's job via its sequence
+    /// check (`coordinator::engine::ShardedEngine::commit_prepared`);
+    /// with both checks passed, the installed structure answers exactly
+    /// like a direct [`update_batch_with`](Self::update_batch_with).
+    pub fn commit_prepared(
+        &mut self,
+        p: PreparedBlockUpdate,
+    ) -> Result<(), PreparedBlockUpdate> {
+        if p.n != self.xs.len() || p.bs != self.bs {
+            return Err(p);
+        }
+        let PreparedBlockUpdate { updates, blocks, .. } = p;
+        for &(i, v) in &updates {
+            self.xs[i] = v;
+        }
+        let mut summary_updates: Vec<(usize, f32)> = Vec::new();
+        for (b, solver, arg) in blocks {
+            self.blocks[b] = solver;
+            self.block_argmin[b] = arg;
+            let v = self.xs[arg as usize];
+            if self.block_min[b] != v {
+                self.block_min[b] = v;
+                summary_updates.push((b, v));
+            }
+        }
+        self.apply_summary_updates(summary_updates);
+        Ok(())
     }
 
     /// The served values — the snapshot source for background rebuilds
@@ -790,6 +967,107 @@ mod tests {
             );
         }
         resharded.validate().unwrap();
+    }
+
+    #[test]
+    fn prepared_commit_matches_direct_apply() {
+        // The pipelined write path (stage → build off-lock → commit)
+        // must leave the solver answer-identical to the direct
+        // update_batch_with path — the bit-identical-results invariant.
+        check("prepared vs direct updates", 20, |rng| {
+            let xs = gen::f32_array(rng, 32..=1024);
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 6);
+            for base in backends() {
+                let opts = ShardedOptions { block_size: bs, ..base };
+                let mut staged = ShardedRmq::with_options(&xs, opts);
+                let mut direct = ShardedRmq::with_options(&xs, opts);
+                for _ in 0..5 {
+                    let count = rng.range(1, 24);
+                    let batch: Vec<(usize, f32)> =
+                        (0..count).map(|_| (rng.range(0, n - 1), rng.f32())).collect();
+                    let prep = staged.prepare_update_batch(&batch, 3);
+                    assert!(prep.touched_blocks() >= 1);
+                    staged.commit_prepared(prep).map_err(|_| "commit refused".to_string())?;
+                    direct.update_batch_with(&batch, 1);
+                    if staged.values() != direct.values() {
+                        return Err(format!("{:?} bs={bs}: values diverge", base.backend));
+                    }
+                    for _ in 0..12 {
+                        let (l, r) = gen::query(rng, n);
+                        let (a, b) =
+                            (staged.rmq(l as u32, r as u32), direct.rmq(l as u32, r as u32));
+                        if a != b {
+                            return Err(format!(
+                                "{:?} bs={bs} ({l},{r}): staged {a} != direct {b}",
+                                base.backend
+                            ));
+                        }
+                    }
+                }
+                staged.validate()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn commit_refuses_a_resharded_decomposition() {
+        let xs = Rng::new(98).uniform_f32_vec(512);
+        let s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, ..Default::default() },
+        );
+        let prep = s.prepare_update_batch(&[(10, -1.0), (300, -2.0)], 2);
+        // The decomposition the work was staged against is gone.
+        let mut resharded = s.reshard(16);
+        let back = resharded.commit_prepared(prep).expect_err("shape mismatch must refuse");
+        assert_eq!(back.updates(), &[(10, -1.0), (300, -2.0)]);
+        assert_eq!(resharded.value_of(10), xs[10], "refused commit changes nothing");
+        // The returned preparation feeds the direct-apply fallback.
+        resharded.update_batch(back.updates());
+        assert_eq!(resharded.value_of(10), -1.0);
+        assert_eq!(resharded.rmq(0, 511), 300);
+        resharded.validate().unwrap();
+    }
+
+    #[test]
+    fn single_update_fast_path_keeps_min_tables_exact() {
+        // One-point batches take the path-refit + O(1) min-maintenance
+        // route; ties and a raised old argmin are the tricky cases, so
+        // quantised values keep them frequent.
+        check("single-update fast path", 25, |rng| {
+            let xs: Vec<f32> =
+                gen::f32_array(rng, 16..=512).iter().map(|v| (v * 8.0).floor() / 8.0).collect();
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 5);
+            let mut s = ShardedRmq::with_options(
+                &xs,
+                ShardedOptions { block_size: bs, ..Default::default() },
+            );
+            let mut local = xs.clone();
+            for _ in 0..30 {
+                let i = rng.range(0, n - 1);
+                // Mix raises, drops and exact ties with existing values.
+                let v = match rng.range(0, 2) {
+                    0 => (rng.f32() * 8.0).floor() / 8.0,
+                    1 => local[rng.range(0, n - 1)],
+                    _ => local[i] + 0.25,
+                };
+                local[i] = v;
+                s.update_batch(&[(i, v)]);
+                s.validate()?;
+                for _ in 0..6 {
+                    let (l, r) = gen::query(rng, n);
+                    let want = naive_rmq(&local, l, r);
+                    let got = s.rmq(l as u32, r as u32) as usize;
+                    if got != want {
+                        return Err(format!("bs={bs} ({l},{r}): got {got} want {want}"));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

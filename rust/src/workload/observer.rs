@@ -25,6 +25,11 @@ pub struct ObservedWorkload {
     pub mean_range: f64,
     /// Decayed mean query-segment size (0 until a query is seen).
     pub mean_batch: f64,
+    /// Decayed mean update-segment size in points (0 until an update is
+    /// seen). Feeds the cost model's update term: batches near 1 point
+    /// take the single-update path-refit route, larger ones amortise
+    /// full block refits (`RtCostModel::shard_update_work`).
+    pub mean_update_batch: f64,
     /// Decayed fraction of ops that are point updates.
     pub update_frac: f64,
     /// Decayed range-length mass per log₂ bucket: `range_hist[k]` holds
@@ -40,6 +45,7 @@ impl Default for ObservedWorkload {
         ObservedWorkload {
             mean_range: 0.0,
             mean_batch: 0.0,
+            mean_update_batch: 0.0,
             update_frac: 0.0,
             range_hist: [0.0; RANGE_BUCKETS],
             ops: 0,
@@ -59,6 +65,8 @@ pub struct WorkloadObserver {
     /// Decayed query-segment size mass and segment count.
     dbatch: f64,
     dsegs: f64,
+    /// Decayed update-segment count (`du` is the decayed point mass).
+    dusegs: f64,
     hist: [f64; RANGE_BUCKETS],
     ops: u64,
 }
@@ -74,6 +82,7 @@ impl WorkloadObserver {
             dlen: 0.0,
             dbatch: 0.0,
             dsegs: 0.0,
+            dusegs: 0.0,
             hist: [0.0; RANGE_BUCKETS],
             ops: 0,
         }
@@ -85,6 +94,7 @@ impl WorkloadObserver {
         self.dlen *= self.alpha;
         self.dbatch *= self.alpha;
         self.dsegs *= self.alpha;
+        self.dusegs *= self.alpha;
         for h in self.hist.iter_mut() {
             *h *= self.alpha;
         }
@@ -114,6 +124,7 @@ impl WorkloadObserver {
         }
         self.decay();
         self.du += count as f64;
+        self.dusegs += 1.0;
         self.ops += count as u64;
     }
 
@@ -122,6 +133,7 @@ impl WorkloadObserver {
         ObservedWorkload {
             mean_range: if self.dq > 0.0 { self.dlen / self.dq } else { 0.0 },
             mean_batch: if self.dsegs > 0.0 { self.dbatch / self.dsegs } else { 0.0 },
+            mean_update_batch: if self.dusegs > 0.0 { self.du / self.dusegs } else { 0.0 },
             update_frac: if mass > 0.0 { self.du / mass } else { 0.0 },
             range_hist: self.hist,
             ops: self.ops,
@@ -157,6 +169,23 @@ mod tests {
         // Length-16 queries land in bucket 4.
         assert!(s.range_hist[4] > 0.0);
         assert_eq!(s.range_hist[5], 0.0);
+    }
+
+    #[test]
+    fn mean_update_batch_tracks_segment_sizes() {
+        let mut o = WorkloadObserver::new(8.0);
+        assert_eq!(o.snapshot().mean_update_batch, 0.0, "no updates yet");
+        o.observe_updates(1);
+        assert!((o.snapshot().mean_update_batch - 1.0).abs() < 1e-9);
+        // Two segments of 1 and 7 points: decayed mean lands between.
+        o.observe_updates(7);
+        let m = o.snapshot().mean_update_batch;
+        assert!((1.0..=7.0).contains(&m), "{m}");
+        // A run of large segments pulls the decayed mean up toward 32.
+        for _ in 0..40 {
+            o.observe_updates(32);
+        }
+        assert!(o.snapshot().mean_update_batch > 28.0);
     }
 
     #[test]

@@ -6,7 +6,10 @@
 //! earlier one — exactly the answers a sequential re-solve of the op
 //! stream produces, leftmost ties included.
 
-use rtxrmq::coordinator::engine::{EngineCfg, LifecycleCfg, ShardBlock};
+use rtxrmq::coordinator::engine::{
+    CommitOutcome, EngineCfg, LifecycleCfg, ShardBlock, ShardedEngine,
+};
+use rtxrmq::rmq::sharded::{ShardedOptions, ShardedRmq};
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
 use rtxrmq::rmq::naive_rmq;
@@ -357,6 +360,260 @@ fn reshard_trigger_fires_when_the_offered_distribution_shifts() {
     for (k, &(l, r)) in qs.iter().enumerate() {
         assert_eq!(resp.answers[k], naive_rmq(&xs, l as usize, r as usize) as u32);
     }
+    c.shutdown();
+}
+
+/// Fence-heavy op stream generator: high alternation rate between
+/// queries and updates (many short segments — the shape the two-lane
+/// pipeline is built for), with an optional block to confine indices to.
+fn fence_heavy_ops(
+    n: usize,
+    count: usize,
+    block: Option<(usize, usize)>,
+    rng: &mut Rng,
+) -> Vec<Op> {
+    let (lo, len) = block.unwrap_or((0, n));
+    let mut ops = Vec::with_capacity(count);
+    for k in 0..count {
+        // Alternate in short runs: q,u,q,u with occasional doubles.
+        if k % 2 == 0 || rng.f64() < 0.2 {
+            let l = lo + rng.range(0, len - 1);
+            let r = lo + rng.range(l - lo, len - 1);
+            ops.push(Op::Query((l as u32, r as u32)));
+        } else {
+            let i = lo + rng.range(0, len - 1);
+            ops.push(Op::Update { i: i as u32, v: rng.f32() });
+        }
+    }
+    ops
+}
+
+#[test]
+fn pipelined_and_serial_executors_agree_hit_for_hit() {
+    // The tentpole invariant: the two-lane pipelined executor must be
+    // bit-identical to the serial executor (and both to the sequential
+    // oracle) on fence-heavy streams.
+    let n = 1 << 12;
+    let xs = gen_array(n, 50);
+    let pipelined = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            engines: EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            ..Default::default()
+        },
+    );
+    let serial = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            engines: EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            pipeline: false,
+            ..Default::default()
+        },
+    );
+    let mut oracle = xs.clone();
+    let mut rng = Rng::new(51);
+    for round in 0..12 {
+        let ops = fence_heavy_ops(n, 64, None, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let a = pipelined.submit_mixed(ops.clone()).unwrap();
+        let b = serial.submit_mixed(ops).unwrap();
+        assert_eq!(a.answers, want, "pipelined, round {round}");
+        assert_eq!(b.answers, want, "serial, round {round}");
+        assert_eq!(a.updates_applied, b.updates_applied);
+    }
+    let mp = pipelined.metrics.lock().unwrap();
+    assert!(mp.staged_batches > 0, "fence-heavy streams must exercise the overlap lane");
+    assert_eq!(mp.staged_fallbacks, 0, "single-writer streams never conflict");
+    assert!(mp.overlap_ns_hidden_total > 0);
+    drop(mp);
+    assert_eq!(serial.metrics.lock().unwrap().staged_batches, 0);
+    pipelined.shutdown();
+    serial.shutdown();
+}
+
+#[test]
+fn pipelined_update_then_query_on_the_same_block() {
+    // The sharpest fence case for the overlap: the staged preparation
+    // rebuilds exactly the block the preceding query segment is
+    // probing, and the query after the fence re-reads it. Everything is
+    // confined to one block so any leak is unmissable.
+    let n = 1024usize;
+    let bs = 64usize;
+    let xs = gen_array(n, 52);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(bs));
+    let mut rng = Rng::new(53);
+    for round in 0..10 {
+        let block = rng.range(0, n / bs - 1);
+        let mut ops = fence_heavy_ops(n, 40, Some((block * bs, bs)), &mut rng);
+        // End on update-then-query-the-whole-block, the classic pair.
+        let i = block * bs + rng.range(0, bs - 1);
+        ops.push(Op::Update { i: i as u32, v: -1.0 - round as f32 });
+        ops.push(Op::Query(((block * bs) as u32, (block * bs + bs - 1) as u32)));
+        ops.push(Op::Query((0, (n - 1) as u32)));
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "round {round}");
+    }
+    assert!(c.metrics.lock().unwrap().staged_batches > 0);
+    c.shutdown();
+}
+
+#[test]
+fn back_to_back_update_segments_mix_staged_and_direct_paths() {
+    // Leading update segments have no query to hide behind (direct
+    // path); interior ones ride the overlap lane. Streams shaped
+    // [u..][q..][u..] and [q..][u..][u-leading next request] pin both
+    // paths and their interleaving across consecutive fused batches.
+    let n = 1 << 11;
+    let xs = gen_array(n, 54);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(32));
+    let mut rng = Rng::new(55);
+    for round in 0..8 {
+        let shapes: [&[bool]; 3] = [
+            &[false, false, true],                     // u,u,q — leading updates
+            &[true, false, true, false],               // q,u,q,u — trailing update
+            &[false, true, false, false, true, false], // u,q,u,u,q,u
+        ];
+        for (si, shape) in shapes.iter().enumerate() {
+            let mut ops = Vec::new();
+            for &is_query in shape.iter() {
+                for _ in 0..rng.range(1, 4) {
+                    if is_query {
+                        let l = rng.range(0, n - 1);
+                        ops.push(Op::Query((l as u32, rng.range(l, n - 1) as u32)));
+                    } else {
+                        ops.push(Op::Update {
+                            i: rng.range(0, n - 1) as u32,
+                            v: rng.f32(),
+                        });
+                    }
+                }
+            }
+            let want = oracle_run(&mut oracle, &ops);
+            let resp = c.submit_mixed(ops).unwrap();
+            assert_eq!(resp.answers, want, "round {round} shape {si}");
+        }
+    }
+    let m = c.metrics.lock().unwrap();
+    assert!(m.staged_batches > 0, "interior update segments staged");
+    assert!(
+        m.staged_batches < m.update_batches,
+        "leading update segments took the direct path: staged {} of {}",
+        m.staged_batches,
+        m.update_batches
+    );
+    drop(m);
+    c.shutdown();
+}
+
+#[test]
+fn commit_conflict_fallback_is_exact_through_the_public_api() {
+    // The prepared work races a conflicting writer (another update
+    // batch, then separately a re-shard): the commit must detect it,
+    // fall back to the direct path, and end bit-identical to applying
+    // the batches in commit order.
+    let mut rng = Rng::new(56);
+    let xs: Vec<f32> = (0..512).map(|_| rng.f32()).collect();
+    let engine = ShardedEngine::new(ShardedRmq::with_options(
+        &xs,
+        ShardedOptions { block_size: 32, ..Default::default() },
+    ));
+    let mut oracle = xs.clone();
+    // Conflicting update batch between stage and commit.
+    let staged_batch = vec![(40usize, -1.0f32), (41, 0.75), (300, -0.5)];
+    let prep = engine.prepare_update_batch(&staged_batch, 2);
+    let conflict = vec![(41usize, -2.0f32), (100, -3.0)];
+    rtxrmq::coordinator::engine::Engine::update_batch(&engine, &conflict, 2).unwrap();
+    assert_eq!(engine.commit_prepared(prep, 2), CommitOutcome::FellBack);
+    for &(i, v) in conflict.iter().chain(&staged_batch) {
+        oracle[i] = v;
+    }
+    assert_eq!(engine.seq(), 2, "both batches bumped the seq once each");
+    let queries: Vec<(u32, u32)> = (0..200)
+        .map(|_| {
+            let l = rng.range(0, 511);
+            (l as u32, rng.range(l, 511) as u32)
+        })
+        .collect();
+    let got = rtxrmq::coordinator::engine::Engine::solve(&engine, &queries, 2).unwrap();
+    for (k, &(l, r)) in queries.iter().enumerate() {
+        assert_eq!(got[k] as usize, naive_rmq(&oracle, l as usize, r as usize), "({l},{r})");
+    }
+    // Re-shard between stage and commit: values unchanged, shape moved.
+    let prep = engine.prepare_update_batch(&[(7, -9.0)], 2);
+    assert!(engine.reshard(8), "quiet re-shard installs");
+    assert_eq!(engine.commit_prepared(prep, 2), CommitOutcome::FellBack);
+    oracle[7] = -9.0;
+    assert_eq!(
+        rtxrmq::coordinator::engine::Engine::solve(&engine, &[(0, 511)], 1).unwrap(),
+        vec![7],
+        "post-reshard fallback applied the batch"
+    );
+}
+
+#[test]
+fn epoch_swap_during_overlapped_prepare_stays_exact() {
+    // Background rebuilds and re-shards publish at arbitrary points
+    // while the pipelined executor has prepares in flight: busy mixed
+    // phase (stale epoch, staged fences), then a quiet phase with
+    // sporadic updates so rebuilds/re-shards land *between* staged
+    // commits. Every answer must match the sequential oracle and at
+    // least one background publish must actually have happened.
+    let n = 1usize << 14;
+    let xs = gen_array(n, 57);
+    let mut oracle = xs.clone();
+    let c = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::Heuristic,
+            engines: EngineCfg {
+                shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+            },
+            lifecycle: LifecycleCfg { observer_half_life: 2.0, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(58);
+    // Busy phase: fence-heavy mixed streams keep prepares in flight.
+    for round in 0..6 {
+        let ops = fence_heavy_ops(n, 64, None, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "busy round {round}");
+    }
+    // Shifted, mostly-quiet phase: large-range queries drive the tuner
+    // (re-shard pressure) and decay the update rate (rebuild pressure),
+    // while an occasional staged update keeps the overlap lane hot.
+    let mut publishes = 0u64;
+    for round in 0..400 {
+        let mut ops: Vec<Op> =
+            gen_queries(n, 24, RangeDist::Large, &mut rng).into_iter().map(Op::Query).collect();
+        if round % 5 == 0 {
+            let i = rng.range(0, n - 1);
+            ops.push(Op::Update { i: i as u32, v: rng.f32() });
+            ops.push(Op::Query((0, (n - 1) as u32)));
+        }
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "quiet round {round} via {}", resp.engine);
+        publishes = c.lifecycle.rebuilds() + c.lifecycle.reshards();
+        if publishes >= 2 {
+            break;
+        }
+    }
+    assert!(publishes >= 1, "no background publish landed during the pipelined stream");
+    let m = c.metrics.lock().unwrap();
+    assert!(m.staged_batches > 0);
+    // Conflicted commits (a re-shard racing a staged prepare) are legal
+    // — the fallback path absorbs them — but every answer above was
+    // still exact.
+    assert_eq!(m.staged_installed + m.staged_fallbacks, m.staged_batches);
+    drop(m);
     c.shutdown();
 }
 
