@@ -87,7 +87,7 @@ fn main() {
         "  {:.0} ops/s end to end (fenced: each query sees exactly the prior updates)",
         (answered + updated) as f64 / wall.as_secs_f64()
     );
-    println!("\n{}", coordinator.metrics.lock().unwrap());
+    println!("\n{}", coordinator.metrics.lock());
     coordinator.shutdown();
     println!("-> the refit write path keeps answers exact with no global rebuild (paper §7.iii)");
 }

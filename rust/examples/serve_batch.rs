@@ -54,6 +54,7 @@ fn main() {
                 max_batch_queries: 1 << 15,
                 max_wait: std::time::Duration::from_millis(1),
                 queue_cap: 128,
+                ..Default::default()
             },
             engine_workers: rtxrmq::util::pool::default_workers(),
             ..Default::default()
@@ -116,5 +117,5 @@ fn main() {
         fmt_ns(percentile(&lat, 99.0))
     );
     println!("routing         : {:?}", per_engine.lock().unwrap());
-    println!("\n{}", coordinator.metrics.lock().unwrap());
+    println!("\n{}", coordinator.metrics.lock());
 }

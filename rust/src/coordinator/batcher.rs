@@ -11,24 +11,68 @@
 //! a **fence**: the server applies it between the neighbouring query
 //! segments, so queries before it never see its values and queries
 //! after it always do.
+//!
+//! Overload behavior: a request may carry a deadline; one that expires
+//! while queued is dropped whole at segment-build time — none of its
+//! ops execute (updates included, so the op stream stays all-or-
+//! nothing) and it is rejected with [`ServeError::DeadlineExceeded`].
+//! Admission control on top sheds with [`ServeError::Overloaded`] when
+//! the queue depth crosses [`BatcherCfg::shed_watermark`] (the
+//! coordinator's `submit` path), so under sustained overload the queue
+//! rejects fast instead of timing every caller out.
 
 use crate::rmq::Query;
+use crate::util::faults;
 use crate::workload::Op;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
+
+/// What a submitter gets back: the response, or a typed rejection.
+pub type Reply = Result<Response, ServeError>;
+
+/// Typed rejection for a request that was not served. The differential
+/// contract only covers *accepted* requests — a rejected request
+/// executes none of its ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Shed at admission: queue depth crossed the watermark.
+    Overloaded,
+    /// The deadline passed before the request reached an engine.
+    DeadlineExceeded,
+    /// The serving loop could not complete the request (its batch was
+    /// lost to a caught panic).
+    Failed,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "request shed: queue at watermark"),
+            ServeError::DeadlineExceeded => write!(f, "request deadline exceeded"),
+            ServeError::Failed => write!(f, "request failed in the serving loop"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// One client request: an ordered stream of queries and updates.
 pub struct Request {
     pub id: u64,
     pub ops: Vec<Op>,
-    /// Where to deliver the response.
-    pub reply: SyncSender<Response>,
+    /// Drop-dead time: if the request is still queued past this
+    /// instant, it is dropped whole and rejected with
+    /// [`ServeError::DeadlineExceeded`]. `None` = wait forever.
+    pub deadline: Option<Instant>,
+    /// Where to deliver the response (or the typed rejection).
+    pub reply: SyncSender<Reply>,
 }
 
 impl Request {
     /// A read-only request (the common case).
-    pub fn queries(id: u64, queries: Vec<Query>, reply: SyncSender<Response>) -> Request {
-        Request { id, ops: queries.into_iter().map(Op::Query).collect(), reply }
+    pub fn queries(id: u64, queries: Vec<Query>, reply: SyncSender<Reply>) -> Request {
+        Request { id, ops: queries.into_iter().map(Op::Query).collect(), deadline: None, reply }
     }
 }
 
@@ -64,6 +108,10 @@ pub struct BatcherCfg {
     /// Bounded request queue length (senders block when full —
     /// backpressure).
     pub queue_cap: usize,
+    /// Shed new submissions with [`ServeError::Overloaded`] once this
+    /// many requests are queued. Defaults to `queue_cap`: shedding
+    /// replaces blocking exactly where backpressure would have begun.
+    pub shed_watermark: usize,
 }
 
 impl Default for BatcherCfg {
@@ -72,6 +120,7 @@ impl Default for BatcherCfg {
             max_batch_queries: 1 << 16,
             max_wait: Duration::from_millis(2),
             queue_cap: 256,
+            shed_watermark: 256,
         }
     }
 }
@@ -88,6 +137,10 @@ pub enum Segment {
 /// A closed group of requests to run as one fused batch.
 pub struct FusedBatch {
     pub requests: Vec<Request>,
+    /// Requests whose deadline had already passed when the batch was
+    /// built — excluded from every segment (no op of theirs executes);
+    /// the server rejects each with [`ServeError::DeadlineExceeded`].
+    pub expired: Vec<Request>,
     /// The flattened op streams as alternating query/update segments.
     pub segments: Vec<Segment>,
     /// Fence-dependency annotation, parallel to `segments`: for an
@@ -98,14 +151,20 @@ pub struct FusedBatch {
     /// `None` for every query segment and for an update segment with no
     /// preceding query segment (nothing to hide the refit work behind).
     pub overlap_with: Vec<Option<usize>>,
-    /// Per-request query-op counts, for splitting answers back.
+    /// Per-request query-op counts, for splitting answers back
+    /// (parallel to `requests` — expired requests have no slot).
     pub query_splits: Vec<usize>,
     /// Per-request update-op counts (reported in each response).
     pub update_splits: Vec<usize>,
 }
 
 impl FusedBatch {
-    fn from_requests(requests: Vec<Request>) -> FusedBatch {
+    /// Build the segment view of a closed group, dropping requests
+    /// whose deadline passed before `now` (deadline-based shedding's
+    /// second stage — the queue-time check).
+    pub fn from_requests(requests: Vec<Request>, now: Instant) -> FusedBatch {
+        let (requests, expired): (Vec<_>, Vec<_>) =
+            requests.into_iter().partition(|r| r.deadline.map_or(true, |d| d > now));
         let mut segments: Vec<Segment> = Vec::new();
         let mut query_splits = Vec::with_capacity(requests.len());
         let mut update_splits = Vec::with_capacity(requests.len());
@@ -142,7 +201,7 @@ impl FusedBatch {
                 _ => None,
             })
             .collect();
-        FusedBatch { requests, segments, overlap_with, query_splits, update_splits }
+        FusedBatch { requests, expired, segments, overlap_with, query_splits, update_splits }
     }
 
     /// Total query ops across the fused batch.
@@ -164,14 +223,32 @@ impl FusedBatch {
     }
 }
 
-/// Pull the next fused batch from the queue. Returns None when all
-/// senders disconnected and the queue drained (shutdown).
-pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherCfg) -> Option<FusedBatch> {
+/// What one batcher pull produced.
+pub enum BatchPull {
+    /// A fused batch; more may follow.
+    Batch(FusedBatch),
+    /// The request channel disconnected with these requests already
+    /// pulled: serve them, then shut down. (Treating Disconnected like
+    /// Timeout here used to strand a pending partial group — the next
+    /// `recv` would report shutdown and the group's ops were lost.)
+    Final(FusedBatch),
+    /// All senders disconnected and the queue drained.
+    Shutdown,
+}
+
+/// Pull the next fused batch from the queue, keeping `queued` (the
+/// admission-control depth gauge) in sync as requests leave it.
+pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherCfg, queued: &AtomicUsize) -> BatchPull {
     // Block for the first request of the group.
-    let first = rx.recv().ok()?;
+    let first = match rx.recv() {
+        Ok(r) => r,
+        Err(_) => return BatchPull::Shutdown,
+    };
+    queued.fetch_sub(1, Ordering::AcqRel);
     let mut total = first.ops.len();
     let mut group = vec![first];
     let opened = Instant::now();
+    let mut disconnected = false;
     while total < cfg.max_batch_queries {
         let left = cfg.max_wait.checked_sub(opened.elapsed()).unwrap_or_default();
         if left.is_zero() {
@@ -179,14 +256,27 @@ pub fn next_batch(rx: &Receiver<Request>, cfg: &BatcherCfg) -> Option<FusedBatch
         }
         match rx.recv_timeout(left) {
             Ok(req) => {
+                queued.fetch_sub(1, Ordering::AcqRel);
                 total += req.ops.len();
                 group.push(req);
             }
             Err(RecvTimeoutError::Timeout) => break,
-            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Disconnected) => {
+                disconnected = true;
+                break;
+            }
         }
     }
-    Some(FusedBatch::from_requests(group))
+    // Injected hand-off failure: unwinds before any segment executes,
+    // so the pulled group is dropped whole — its submitters see a
+    // closed reply channel (a rejection), never a partial effect.
+    faults::fire("batcher.handoff");
+    let fused = FusedBatch::from_requests(group, Instant::now());
+    if disconnected {
+        BatchPull::Final(fused)
+    } else {
+        BatchPull::Batch(fused)
+    }
 }
 
 #[cfg(test)]
@@ -194,21 +284,21 @@ mod tests {
     use super::*;
     use std::sync::mpsc;
 
-    fn req(id: u64, queries: Vec<Query>) -> (Request, mpsc::Receiver<Response>) {
+    fn req(id: u64, queries: Vec<Query>) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::sync_channel(1);
         (Request::queries(id, queries, tx), rx)
     }
 
-    fn mixed(id: u64, ops: Vec<Op>) -> (Request, mpsc::Receiver<Response>) {
+    fn mixed(id: u64, ops: Vec<Op>) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::sync_channel(1);
-        (Request { id, ops, reply: tx }, rx)
+        (Request { id, ops, deadline: None, reply: tx }, rx)
     }
 
     #[test]
     fn fuses_in_fifo_order_and_splits_back() {
         let (r1, _k1) = req(1, vec![(0, 1), (2, 3)]);
         let (r2, _k2) = req(2, vec![(4, 5)]);
-        let fused = FusedBatch::from_requests(vec![r1, r2]);
+        let fused = FusedBatch::from_requests(vec![r1, r2], Instant::now());
         // Query-only requests fuse into one segment.
         assert_eq!(fused.segments.len(), 1);
         match &fused.segments[0] {
@@ -218,6 +308,7 @@ mod tests {
         let split = fused.split_answers(&[10, 20, 30]);
         assert_eq!(split, vec![vec![10, 20], vec![30]]);
         assert_eq!(fused.update_splits, vec![0, 0]);
+        assert!(fused.expired.is_empty());
     }
 
     #[test]
@@ -232,7 +323,7 @@ mod tests {
             ],
         );
         let (r2, _k2) = mixed(2, vec![Op::Query((4, 5)), Op::Update { i: 0, v: 0.1 }]);
-        let fused = FusedBatch::from_requests(vec![r1, r2]);
+        let fused = FusedBatch::from_requests(vec![r1, r2], Instant::now());
         // q | uu | q q | u — the trailing query run merges across the
         // request boundary (r2 arrived later, so seeing r1's updates is
         // exactly arrival-order consistency).
@@ -267,29 +358,63 @@ mod tests {
             1,
             vec![Op::Update { i: 0, v: 0.5 }, Op::Update { i: 1, v: 0.25 }, Op::Query((0, 1))],
         );
-        let fused = FusedBatch::from_requests(vec![r]);
+        let fused = FusedBatch::from_requests(vec![r], Instant::now());
         assert_eq!(fused.segments.len(), 2);
         assert_eq!(fused.overlap_with, vec![None, None]);
     }
 
     #[test]
+    fn expired_requests_are_dropped_whole_at_build_time() {
+        let now = Instant::now();
+        let (mut r1, _k1) =
+            mixed(1, vec![Op::Query((0, 1)), Op::Update { i: 3, v: 0.5 }, Op::Query((2, 3))]);
+        r1.deadline = Some(now - Duration::from_millis(1));
+        let (r2, _k2) = req(2, vec![(4, 5)]);
+        let (mut r3, _k3) = req(3, vec![(6, 7)]);
+        r3.deadline = Some(now + Duration::from_secs(60));
+        let fused = FusedBatch::from_requests(vec![r1, r2, r3], now);
+        // r1 is gone whole: no query slot, no update fence, nothing.
+        assert_eq!(fused.expired.len(), 1);
+        assert_eq!(fused.expired[0].id, 1);
+        assert_eq!(fused.requests.iter().map(|r| r.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert_eq!(fused.segments.len(), 1, "the expired update fence must not execute");
+        assert_eq!(fused.query_splits, vec![1, 1]);
+        assert_eq!(fused.update_splits, vec![0, 0]);
+        assert_eq!(fused.split_answers(&[10, 20]), vec![vec![10], vec![20]]);
+    }
+
+    #[test]
     fn next_batch_closes_on_size() {
         let (tx, rx) = mpsc::sync_channel::<Request>(16);
-        let cfg =
-            BatcherCfg { max_batch_queries: 3, max_wait: Duration::from_secs(5), queue_cap: 16 };
+        let cfg = BatcherCfg {
+            max_batch_queries: 3,
+            max_wait: Duration::from_secs(5),
+            queue_cap: 16,
+            shed_watermark: 16,
+        };
+        let queued = AtomicUsize::new(0);
         for id in 0..4 {
             let (r, _keep) = req(id, vec![(0, 0), (1, 1)]);
             std::mem::forget(_keep); // keep reply channel alive
             tx.send(r).unwrap();
+            queued.fetch_add(1, Ordering::AcqRel);
         }
-        let b = next_batch(&rx, &cfg).unwrap();
+        let b = match next_batch(&rx, &cfg, &queued) {
+            BatchPull::Batch(b) => b,
+            _ => panic!("live channel yields a regular batch"),
+        };
         // First request has 2 >= ... group closes at >= 3 ops: two
         // requests (4 ops) since the check happens before pulling.
         assert_eq!(b.requests.len(), 2);
         assert_eq!(b.total_queries(), 4);
+        assert_eq!(queued.load(Ordering::Acquire), 2, "pulls decrement the depth gauge");
         // Remaining two requests form the next group.
-        let b2 = next_batch(&rx, &cfg).unwrap();
+        let b2 = match next_batch(&rx, &cfg, &queued) {
+            BatchPull::Batch(b) => b,
+            _ => panic!("live channel yields a regular batch"),
+        };
         assert_eq!(b2.requests.len(), 2);
+        assert_eq!(queued.load(Ordering::Acquire), 0);
     }
 
     #[test]
@@ -299,20 +424,63 @@ mod tests {
             max_batch_queries: 1000,
             max_wait: Duration::from_millis(5),
             queue_cap: 16,
+            shed_watermark: 16,
         };
         let (r, _keep) = req(7, vec![(0, 0)]);
         tx.send(r).unwrap();
+        let queued = AtomicUsize::new(1);
         let t0 = Instant::now();
-        let b = next_batch(&rx, &cfg).unwrap();
+        let b = match next_batch(&rx, &cfg, &queued) {
+            BatchPull::Batch(b) => b,
+            _ => panic!("timeout closes a regular batch"),
+        };
         assert_eq!(b.requests.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]
-    fn next_batch_none_on_shutdown() {
+    fn next_batch_shutdown_on_disconnect() {
         let (tx, rx) = mpsc::sync_channel::<Request>(1);
         drop(tx);
-        assert!(next_batch(&rx, &BatcherCfg::default()).is_none());
+        let queued = AtomicUsize::new(0);
+        assert!(matches!(
+            next_batch(&rx, &BatcherCfg::default(), &queued),
+            BatchPull::Shutdown
+        ));
+    }
+
+    #[test]
+    fn disconnect_flushes_the_pending_partial_group() {
+        // A group is open (first request pulled) when every sender
+        // disconnects: the partial group must come back as Final, not
+        // be stranded behind a Timeout-equal arm.
+        let (tx, rx) = mpsc::sync_channel::<Request>(16);
+        let cfg = BatcherCfg {
+            max_batch_queries: 1000,
+            max_wait: Duration::from_secs(5),
+            queue_cap: 16,
+            shed_watermark: 16,
+        };
+        let (r1, _k1) = req(1, vec![(0, 0)]);
+        let (r2, _k2) = req(2, vec![(1, 1)]);
+        tx.send(r1).unwrap();
+        tx.send(r2).unwrap();
+        drop(tx);
+        let queued = AtomicUsize::new(2);
+        let t0 = Instant::now();
+        match next_batch(&rx, &cfg, &queued) {
+            BatchPull::Final(b) => {
+                assert_eq!(b.requests.len(), 2, "both queued requests flushed");
+                assert!(
+                    t0.elapsed() < Duration::from_secs(5),
+                    "disconnect must close the group immediately, not wait out max_wait"
+                );
+            }
+            BatchPull::Batch(_) => panic!("disconnected channel must signal Final"),
+            BatchPull::Shutdown => panic!("pending requests must not be stranded"),
+        }
+        assert_eq!(queued.load(Ordering::Acquire), 0);
+        assert!(matches!(next_batch(&rx, &cfg, &queued), BatchPull::Shutdown));
     }
 
     #[test]
@@ -340,7 +508,7 @@ mod tests {
                 expected.push(answers);
                 requests.push(r);
             }
-            let fused = FusedBatch::from_requests(requests);
+            let fused = FusedBatch::from_requests(requests, Instant::now());
             // Segments must partition the op stream: alternating kinds,
             // never empty, counts adding up.
             let mut prev_is_query: Option<bool> = None;

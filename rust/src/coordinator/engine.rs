@@ -40,14 +40,17 @@ use crate::rmq::rtx::RtxRmq;
 use crate::rmq::sharded::{PreparedBlockUpdate, ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::runtime::Runtime;
+use crate::util::faults;
+use crate::util::sync::{Mutex, RwLock};
 use crate::workload::observer::WorkloadObserver;
 use crate::workload::RangeDist;
 use anyhow::{anyhow, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Engine identifiers (stable names used by the router, CLI and metrics).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -212,18 +215,18 @@ impl ShardedEngine {
     /// freshness: an epoch with `built_from_seq == seq()` serves the
     /// exact values its static engines were built from.
     pub fn seq(&self) -> u64 {
-        self.inner.read().expect("sharded lock").seq
+        self.inner.read().seq
     }
 
     /// Live block size (the re-shard drift comparison's denominator).
     pub fn block_size(&self) -> usize {
-        self.inner.read().expect("sharded lock").rmq.block_size()
+        self.inner.read().rmq.block_size()
     }
 
     /// Consistent (values, applied-seq) snapshot — the rebuild source
     /// for background static-engine builds.
     pub fn snapshot(&self) -> (Vec<f32>, u64) {
-        let g = self.inner.read().expect("sharded lock");
+        let g = self.inner.read();
         (g.rmq.values().to_vec(), g.seq)
     }
 
@@ -235,10 +238,15 @@ impl ShardedEngine {
     /// the swap happened.
     pub fn reshard(&self, block_size: usize) -> bool {
         let (xs, opts, expect) = {
-            let g = self.inner.read().expect("sharded lock");
+            let g = self.inner.read();
             (g.rmq.values().to_vec(), g.rmq.options(), g.seq)
         };
         let fresh = ShardedRmq::reshard_from(&xs, opts, block_size);
+        // Injected install failure: indistinguishable from a seq
+        // conflict to the lifecycle (drop the replacement, back off).
+        if faults::fire("reshard.install") {
+            return false;
+        }
         self.install(fresh, expect)
     }
 
@@ -247,7 +255,7 @@ impl ShardedEngine {
     /// staged against the old decomposition (its commit falls back to
     /// the direct path).
     pub(crate) fn install(&self, rmq: ShardedRmq, expect_seq: u64) -> bool {
-        let mut g = self.inner.write().expect("sharded lock");
+        let mut g = self.inner.write();
         if g.seq != expect_seq {
             return false;
         }
@@ -268,7 +276,7 @@ impl ShardedEngine {
     ) -> PreparedUpdate {
         let t0 = Instant::now();
         let (spec, seq, shape_gen) = {
-            let g = self.inner.read().expect("sharded lock");
+            let g = self.inner.read();
             (g.rmq.stage_update_batch(updates), g.seq, g.shape_gen)
         };
         let prep = spec.build(workers);
@@ -283,8 +291,14 @@ impl ShardedEngine {
     /// once and the seq bumps exactly once, so epoch staleness
     /// accounting is identical to [`update_batch`](Engine::update_batch).
     pub fn commit_prepared(&self, p: PreparedUpdate, workers: usize) -> CommitOutcome {
-        let mut g = self.inner.write().expect("sharded lock");
-        if g.seq == p.seq && g.shape_gen == p.shape_gen {
+        // Injected commit conflict: drawn before the write lock so a
+        // delay rule cannot stall readers. An `err` here voids the
+        // preparation exactly like a real seq/shape conflict — the
+        // direct path applies the same values, so answers are
+        // unchanged (`panic` is rejected for this site at parse time).
+        let forced_conflict = faults::fire("stage.commit");
+        let mut g = self.inner.write();
+        if !forced_conflict && g.seq == p.seq && g.shape_gen == p.shape_gen {
             match g.rmq.commit_prepared(p.prep) {
                 Ok(()) => {
                     g.seq += 1;
@@ -294,16 +308,38 @@ impl ShardedEngine {
                     // Fingerprint said clean but the decomposition
                     // disagrees — defensive: the direct path is always
                     // correct.
-                    g.rmq.update_batch_with(back.updates(), workers);
-                    g.seq += 1;
+                    apply_direct(&mut g, back.updates(), workers);
                     return CommitOutcome::FellBack;
                 }
             }
         }
-        g.rmq.update_batch_with(p.prep.updates(), workers);
-        g.seq += 1;
+        apply_direct(&mut g, p.prep.updates(), workers);
         CommitOutcome::FellBack
     }
+}
+
+/// Apply an update batch through the direct path with a panic backstop,
+/// bumping the seq exactly once. `update_batch_with` writes the batch's
+/// values into the array *before* any structural refit, so if it
+/// unwinds mid-refit (a bug — injected worker panics are already
+/// absorbed inside `util::pool`) the values array plus the batch is
+/// still a correct source: re-apply the values and rebuild the
+/// decomposition from scratch. The rebuild runs with `build_workers =
+/// 1` — fully inline, it cannot reach any fault-injection site, so
+/// recovery is deterministic.
+fn apply_direct(g: &mut VersionedSharded, updates: &[(usize, f32)], workers: usize) {
+    if catch_unwind(AssertUnwindSafe(|| g.rmq.update_batch_with(updates, workers))).is_err() {
+        faults::note_caught();
+        let mut vals = g.rmq.values().to_vec();
+        for &(i, v) in updates {
+            vals[i] = v;
+        }
+        let mut opts = g.rmq.options();
+        opts.build_workers = 1;
+        let block_size = g.rmq.block_size();
+        g.rmq = ShardedRmq::reshard_from(&vals, opts, block_size);
+    }
+    g.seq += 1;
 }
 
 /// A staged update batch: per-block refit work computed against a
@@ -346,11 +382,11 @@ impl Engine for ShardedEngine {
     }
 
     fn solve(&self, queries: &[Query], workers: usize) -> Result<Vec<u32>> {
-        Ok(self.inner.read().expect("sharded lock").rmq.batch(queries, workers))
+        Ok(self.inner.read().rmq.batch(queries, workers))
     }
 
     fn memory_bytes(&self) -> usize {
-        self.inner.read().expect("sharded lock").rmq.memory_bytes()
+        self.inner.read().rmq.memory_bytes()
     }
 
     fn supports_updates(&self) -> bool {
@@ -358,9 +394,8 @@ impl Engine for ShardedEngine {
     }
 
     fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<()> {
-        let mut g = self.inner.write().expect("sharded lock");
-        g.rmq.update_batch_with(updates, workers);
-        g.seq += 1;
+        let mut g = self.inner.write();
+        apply_direct(&mut g, updates, workers);
         Ok(())
     }
 }
@@ -601,6 +636,12 @@ pub struct EpochState {
     /// full rebuilds that can never install.
     reshard_cooldown: AtomicU64,
     reshard_failures: AtomicU64,
+    /// Hysteresis: consecutive `plan` calls whose tuned block size sat
+    /// at or beyond `reshard_drift`. A re-shard fires only on the 2nd —
+    /// adjacent power-of-two tunings can park the drift ratio at
+    /// exactly the threshold, and one borderline observation must not
+    /// churn a full re-shard.
+    reshard_streak: AtomicU64,
 }
 
 impl EpochState {
@@ -631,12 +672,13 @@ impl EpochState {
             pending: AtomicBool::new(false),
             reshard_cooldown: AtomicU64::new(0),
             reshard_failures: AtomicU64::new(0),
+            reshard_streak: AtomicU64::new(0),
         })
     }
 
     /// The current epoch (an `Arc` clone — callers pin it per segment).
     pub fn current(&self) -> Arc<EngineEpoch> {
-        self.current.read().expect("epoch lock").clone()
+        self.current.read().clone()
     }
 
     /// The published applied-update sequence number.
@@ -703,7 +745,7 @@ impl EpochState {
         if self.pending.load(Ordering::Acquire) {
             return None;
         }
-        let obs = self.observer.lock().expect("observer lock").snapshot();
+        let obs = self.observer.lock().snapshot();
         if obs.ops == 0 {
             return None;
         }
@@ -729,7 +771,14 @@ impl EpochState {
             let tuned = self.cost.tune_shard_block_observed(self.n, &obs).max(1);
             let drift = (tuned as f64 / live as f64).max(live as f64 / tuned as f64);
             if drift >= self.cfg.reshard_drift {
-                return self.claim(BuildJob::Reshard(tuned));
+                // Hysteresis: fire only on the 2nd consecutive drifted
+                // plan — see `reshard_streak`.
+                if self.reshard_streak.fetch_add(1, Ordering::AcqRel) >= 1 {
+                    self.reshard_streak.store(0, Ordering::Release);
+                    return self.claim(BuildJob::Reshard(tuned));
+                }
+            } else {
+                self.reshard_streak.store(0, Ordering::Release);
             }
         }
         None
@@ -753,6 +802,10 @@ impl EpochState {
     pub fn run_job(&self, job: BuildJob, metrics: &Mutex<Metrics>) {
         match job {
             BuildJob::Statics => {
+                // Injected build failure: unwinds before any state is
+                // touched — the builder loop catches it, serving pins
+                // the last good epoch, plan() reschedules.
+                faults::fire("build.statics");
                 let t0 = Instant::now();
                 let (xs, seq) = self.sharded.snapshot();
                 let mut engines = build_static_engines(&xs, self.runtime.clone());
@@ -760,17 +813,15 @@ impl EpochState {
                 engines.insert(1, sharded_dyn);
                 let version = self.version.fetch_add(1, Ordering::AcqRel) + 1;
                 let epoch = Arc::new(EngineEpoch::new(version, seq, self.n, engines));
-                *self.current.write().expect("epoch lock") = epoch;
+                *self.current.write() = epoch;
                 // Metrics before the counter: the counter is the
                 // "rebuild done" signal pollers watch, and they expect
                 // the recorded metrics to be visible once it trips.
-                metrics
-                    .lock()
-                    .expect("metrics lock")
-                    .record_rebuild(version, t0.elapsed().as_nanos() as u64);
+                metrics.lock().record_rebuild(version, t0.elapsed().as_nanos() as u64);
                 self.rebuilds.fetch_add(1, Ordering::AcqRel);
             }
             BuildJob::Reshard(block_size) => {
+                faults::fire("build.reshard");
                 if self.sharded.reshard(block_size) {
                     // Publish a version bump so the swap is observable;
                     // the statics are untouched — the sharded engine is
@@ -778,16 +829,13 @@ impl EpochState {
                     // the new decomposition.
                     let version = self.version.fetch_add(1, Ordering::AcqRel) + 1;
                     let cur = self.current();
-                    *self.current.write().expect("epoch lock") = Arc::new(EngineEpoch::new(
+                    *self.current.write() = Arc::new(EngineEpoch::new(
                         version,
                         cur.built_from_seq,
                         self.n,
                         cur.engines.clone(),
                     ));
-                    metrics
-                        .lock()
-                        .expect("metrics lock")
-                        .record_reshard(version, self.sharded.block_size());
+                    metrics.lock().record_reshard(version, self.sharded.block_size());
                     self.reshard_failures.store(0, Ordering::Release);
                     self.reshards.fetch_add(1, Ordering::AcqRel);
                 } else {
@@ -808,14 +856,34 @@ impl EpochState {
 /// jobs (the builds themselves parallelise over `util::pool` inside the
 /// engine constructors, e.g. the sharded per-block build). Dropping
 /// every sender stops the thread after the queue drains.
+///
+/// The loop is panic-isolated: a job that unwinds (a build bug, or an
+/// injected `build.statics`/`build.reshard` fault) is caught, counted
+/// as a builder respawn, and the pending slot released so `plan()` can
+/// reschedule — serving pins the last good epoch meanwhile. Consecutive
+/// panics back off exponentially before the next job is taken, so a
+/// deterministically-crashing build cannot spin the builder hot.
 pub fn spawn_builder(
     state: Arc<EpochState>,
     metrics: Arc<Mutex<Metrics>>,
 ) -> (SyncSender<BuildJob>, JoinHandle<()>) {
     let (tx, rx) = sync_channel::<BuildJob>(2);
     let handle = std::thread::spawn(move || {
+        let mut consecutive_panics = 0u32;
         while let Ok(job) = rx.recv() {
-            state.run_job(job, &metrics);
+            match catch_unwind(AssertUnwindSafe(|| state.run_job(job, &metrics))) {
+                Ok(()) => consecutive_panics = 0,
+                Err(_) => {
+                    faults::note_caught();
+                    // run_job died before its trailing release.
+                    state.clear_pending();
+                    metrics.lock().record_builder_respawn();
+                    std::thread::sleep(Duration::from_millis(
+                        1u64 << consecutive_panics.min(6),
+                    ));
+                    consecutive_panics += 1;
+                }
+            }
         }
     });
     (tx, handle)
@@ -1051,7 +1119,7 @@ mod tests {
         assert!(state.is_fresh(&fresh));
         assert!(!state.is_fresh(&old), "the old epoch stays stale");
         assert_eq!(state.rebuilds(), 1);
-        assert_eq!(metrics.lock().unwrap().rebuilds, 1);
+        assert_eq!(metrics.lock().rebuilds, 1);
         // The rebuilt statics serve the *updated* values.
         let queries = vec![(0u32, 1023u32), (50, 150), (850, 950)];
         let want = oracle_batch(&xs, &queries);
@@ -1110,7 +1178,7 @@ mod tests {
         // Stale but busy: the threshold holds the rebuild back.
         state.update_batch(&[(5, -0.5)], 1).unwrap();
         for _ in 0..4 {
-            let mut o = state.observer.lock().unwrap();
+            let mut o = state.observer.lock();
             o.observe_queries(&qs);
             o.observe_updates(64);
         }
@@ -1118,7 +1186,7 @@ mod tests {
         // Quiet period: decay until the threshold trips.
         let mut fired = None;
         for k in 0..500 {
-            state.observer.lock().unwrap().observe_queries(&qs);
+            state.observer.lock().observe_queries(&qs);
             if let Some(job) = state.plan() {
                 fired = Some((k, job));
                 break;
@@ -1153,7 +1221,7 @@ mod tests {
         let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
         let mut fired = None;
         for _ in 0..50 {
-            state.observer.lock().unwrap().observe_queries(&large);
+            state.observer.lock().observe_queries(&large);
             if let Some(job) = state.plan() {
                 fired = Some(job);
                 break;
@@ -1193,16 +1261,44 @@ mod tests {
         // Offer drifted traffic, as in plan_fires_reshard_on_observed_drift.
         let mut rng = Rng::new(76);
         let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
-        state.observer.lock().unwrap().observe_queries(&large);
+        state.observer.lock().observe_queries(&large);
         // Simulate two aborted installs' worth of backoff.
         state.reshard_failures.store(1, Ordering::Release);
         state.reshard_cooldown.store(2, Ordering::Release);
         assert_eq!(state.plan(), None, "cooldown tick 1 skips the re-shard");
         assert_eq!(state.plan(), None, "cooldown tick 2 skips the re-shard");
+        assert_eq!(state.plan(), None, "first post-cooldown drifted plan only arms hysteresis");
         match state.plan() {
             Some(BuildJob::Reshard(_)) => {}
             j => panic!("cooldown elapsed: expected a re-shard, got {j:?}"),
         }
+    }
+
+    #[test]
+    fn reshard_hysteresis_requires_two_consecutive_drifted_plans() {
+        let n = 1usize << 14;
+        let xs = Rng::new(77).uniform_f32_vec(n);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg {
+                shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+            },
+            LifecycleCfg::default(),
+        );
+        // Sustained drifted traffic, as in plan_fires_reshard_on_observed_drift.
+        let mut rng = Rng::new(78);
+        let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
+        state.observer.lock().observe_queries(&large);
+        assert_eq!(state.plan(), None, "one drifted observation must not re-shard");
+        assert!(
+            matches!(state.plan(), Some(BuildJob::Reshard(_))),
+            "the 2nd consecutive drifted plan fires"
+        );
+        // Firing resets the streak: the next pair behaves the same.
+        state.clear_pending();
+        assert_eq!(state.plan(), None, "streak restarts after a fire");
+        assert!(matches!(state.plan(), Some(BuildJob::Reshard(_))));
     }
 
     #[test]
@@ -1219,7 +1315,7 @@ mod tests {
         let mut rng = Rng::new(73);
         let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
         for _ in 0..100 {
-            state.observer.lock().unwrap().observe_queries(&qs);
+            state.observer.lock().observe_queries(&qs);
             assert_eq!(state.plan(), None);
         }
     }
@@ -1241,7 +1337,7 @@ mod tests {
         handle.join().unwrap();
         assert_eq!(state.rebuilds(), 1);
         assert!(state.is_fresh(&state.current()));
-        assert_eq!(metrics.lock().unwrap().epoch_version, 1);
+        assert_eq!(metrics.lock().epoch_version, 1);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! snapshot so pure-query runs print no dead histogram lines.
 
 use super::engine::EngineKind;
+use crate::util::faults::FaultStats;
 use crate::util::stats::{fmt_ns, LatencyHistogram};
 use crate::workload::observer::ObservedWorkload;
 use std::collections::HashMap;
@@ -55,6 +56,26 @@ pub struct Metrics {
     /// Decayed traffic observation (`workload::observer`), refreshed by
     /// the serving loop after every fused batch.
     pub observed: Option<ObservedWorkload>,
+    /// Faults: injected events fired by the `util::faults` registry
+    /// (0 on a production run with no `--inject` schedule).
+    pub injected_faults: u64,
+    /// Faults: panics caught at an isolation boundary (pool join, stager,
+    /// builder loop, serving-loop backstop) — injected *or* genuine.
+    pub caught_panics: u64,
+    /// Faults: poisoned locks transparently recovered by
+    /// `util::sync`.
+    pub lock_recoveries: u64,
+    /// Faults: background builder job-loop respawns after a caught panic.
+    pub builder_respawns: u64,
+    /// Faults: degraded-path events — a dead staged preparation falling
+    /// back to the direct apply, or a batch lost to the serving-loop
+    /// backstop.
+    pub degraded_fallbacks: u64,
+    /// Shedding: requests rejected at admission (queue at watermark).
+    pub shed: u64,
+    /// Shedding: requests dropped because their deadline expired (at
+    /// admission or at batch build time).
+    pub deadline_expired: u64,
     pub started: Option<std::time::Instant>,
 }
 
@@ -119,6 +140,46 @@ impl Metrics {
         self.observed = Some(obs);
         self.epoch_version = self.epoch_version.max(epoch_version);
         self.shard_block = block;
+    }
+
+    /// Mirror the fault registry's live counters (cumulative since the
+    /// registry was last armed; monotone, so overwrite is exact). The
+    /// serving loop refreshes this after every batch.
+    pub fn record_faults(&mut self, s: FaultStats) {
+        self.injected_faults = self.injected_faults.max(s.injected());
+        self.caught_panics = self.caught_panics.max(s.caught);
+        self.lock_recoveries = self.lock_recoveries.max(s.lock_recovered);
+    }
+
+    /// The background builder respawned its job loop after a panic.
+    pub fn record_builder_respawn(&mut self) {
+        self.builder_respawns += 1;
+    }
+
+    /// A degraded-path event: staged-prepare death fell back to the
+    /// direct apply, or a batch was lost to the serving-loop backstop.
+    pub fn record_degraded(&mut self) {
+        self.degraded_fallbacks += 1;
+    }
+
+    /// A request was shed at admission (queue depth at the watermark).
+    pub fn record_shed(&mut self) {
+        self.shed += 1;
+    }
+
+    /// A request was dropped because its deadline expired.
+    pub fn record_expired(&mut self) {
+        self.deadline_expired += 1;
+    }
+
+    fn any_faults(&self) -> bool {
+        self.injected_faults > 0
+            || self.caught_panics > 0
+            || self.lock_recoveries > 0
+            || self.builder_respawns > 0
+            || self.degraded_fallbacks > 0
+            || self.shed > 0
+            || self.deadline_expired > 0
     }
 
     pub fn engine(&self, kind: EngineKind) -> Option<&EngineMetrics> {
@@ -207,6 +268,23 @@ impl fmt::Display for Metrics {
                 write!(f, " rebuild p50={}", fmt_ns(self.rebuild_latency.quantile_ns(0.5) as f64))?;
             }
             writeln!(f)?;
+        }
+        // Fault/shed accounting, suppressed on a clean run (the common
+        // case: no injection, no panics, no overload).
+        if self.any_faults() {
+            writeln!(
+                f,
+                "  {:<10} injected={} caught={} lock_recovered={} respawns={} fallbacks={} \
+                 shed={} expired={}",
+                "faults",
+                self.injected_faults,
+                self.caught_panics,
+                self.lock_recoveries,
+                self.builder_respawns,
+                self.degraded_fallbacks,
+                self.shed,
+                self.deadline_expired,
+            )?;
         }
         // Decayed traffic view, suppressed until traffic was observed.
         if let Some(o) = &self.observed {
@@ -306,6 +384,41 @@ mod tests {
         let mut quiet = Metrics::new();
         quiet.record_observed(ObservedWorkload::default(), 0, 64);
         assert!(!quiet.to_string().contains("observed"));
+    }
+
+    #[test]
+    fn faults_line_appears_only_when_something_went_wrong() {
+        let mut m = Metrics::new();
+        m.record_batch(EngineKind::Lca, 64, 1_000);
+        assert!(!m.to_string().contains("faults"), "{m}");
+        // A clean registry snapshot keeps the line suppressed.
+        m.record_faults(FaultStats::default());
+        assert!(!m.to_string().contains("faults"), "{m}");
+        m.record_faults(FaultStats {
+            injected_panics: 2,
+            injected_delays: 1,
+            injected_errors: 0,
+            caught: 2,
+            lock_recovered: 1,
+        });
+        m.record_builder_respawn();
+        m.record_degraded();
+        m.record_shed();
+        m.record_expired();
+        let text = m.to_string();
+        assert!(
+            text.contains(
+                "injected=3 caught=2 lock_recovered=1 respawns=1 fallbacks=1 shed=1 expired=1"
+            ),
+            "{text}"
+        );
+        // Registry counters are cumulative: a later, larger snapshot
+        // overwrites; a stale smaller one never regresses the line.
+        m.record_faults(FaultStats { injected_panics: 5, caught: 4, ..Default::default() });
+        m.record_faults(FaultStats::default());
+        assert_eq!(m.injected_faults, 5);
+        assert_eq!(m.caught_panics, 4);
+        assert_eq!(m.lock_recoveries, 1);
     }
 
     #[test]

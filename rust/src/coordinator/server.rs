@@ -18,22 +18,38 @@
 //! refit latency hides behind query execution instead of stalling the
 //! stream. Results are bit-identical to the serial executor; the
 //! `pipeline` metrics line reports how much latency was hidden.
+//!
+//! Every thread here is panic-isolated (see the "Failure model" note in
+//! `rmq/mod.rs`): the staging lane catches its own panics and hands the
+//! fence a fallback signal (ticketed, so an abandoned preparation can
+//! never commit at a later fence), the builder catches and respawns its
+//! job loop with backoff, and the serving loop itself backstops both
+//! the batcher pull and segment execution — a lost batch rejects its
+//! requests with [`ServeError::Failed`] instead of killing the thread.
+//! Overload is shed at admission ([`ServeError::Overloaded`] past the
+//! queue-depth watermark) and expiry at batch build time
+//! ([`ServeError::DeadlineExceeded`]).
 
-use super::batcher::{next_batch, BatcherCfg, Request, Response, Segment};
+use super::batcher::{next_batch, BatchPull, BatcherCfg, Reply, Request, Response, Segment};
 use super::engine::{
     spawn_builder, BuildJob, CommitOutcome, EngineCfg, EngineKind, EpochState, LifecycleCfg,
     PreparedUpdate,
 };
 use super::metrics::Metrics;
 use super::router::{Policy, Router};
+use crate::coordinator::batcher::ServeError;
 use crate::rmq::Query;
 use crate::runtime::Runtime;
+use crate::util::faults;
+use crate::util::sync::Mutex;
 use crate::workload::{validate_ops, Op};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 /// Coordinator configuration.
 #[derive(Clone, Debug)]
@@ -76,6 +92,10 @@ pub struct Coordinator {
     /// Observable lifecycle state (epoch version, rebuild/re-shard
     /// counters, live block size).
     pub lifecycle: Arc<EpochState>,
+    /// Live queue depth — requests submitted but not yet pulled by the
+    /// batcher. Admission control sheds at `shed_watermark`.
+    queued: Arc<AtomicUsize>,
+    shed_watermark: usize,
     next_id: AtomicU64,
     n: usize,
 }
@@ -87,20 +107,34 @@ impl Coordinator {
         let state = EpochState::bootstrap(xs, runtime, cfg.engines, cfg.lifecycle);
         let router = Router::new(cfg.policy);
         let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let queued = Arc::new(AtomicUsize::new(0));
         let (job_tx, builder) = spawn_builder(state.clone(), metrics.clone());
         let (tx, rx) = sync_channel::<Request>(cfg.batcher.queue_cap);
         // Staging lane: a dedicated worker that prepares an update
         // segment's refit work against a snapshot while the serving
         // thread still executes the *preceding* query segment. Rendezvous
         // channels of depth 1 — at most one preparation is ever in
-        // flight, and the serving thread joins it at the fence.
-        let (stage_tx, stage_rx) = sync_channel::<Vec<(usize, f32)>>(1);
-        let (done_tx, done_rx) = sync_channel::<PreparedUpdate>(1);
+        // flight, and the serving thread joins it at the fence. Both
+        // directions carry a ticket: the fence accepts only the result
+        // of the preparation it dispatched, so a preparation abandoned
+        // by a panicked batch can never commit later. A `None` result
+        // means the preparation itself died — the fence falls back to
+        // the direct apply path.
+        let (stage_tx, stage_rx) = sync_channel::<(u64, Vec<(usize, f32)>)>(1);
+        let (done_tx, done_rx) = sync_channel::<(u64, Option<PreparedUpdate>)>(1);
         let stage_state = state.clone();
         let stage_workers = cfg.engine_workers;
         let stager = std::thread::spawn(move || {
-            while let Ok(ups) = stage_rx.recv() {
-                if done_tx.send(stage_state.prepare_update(&ups, stage_workers)).is_err() {
+            while let Ok((ticket, ups)) = stage_rx.recv() {
+                let prep = catch_unwind(AssertUnwindSafe(|| {
+                    // Injected staging-lane failure (the stage.build
+                    // site inside the spec build is caught here too).
+                    faults::fire("stage.prepare");
+                    stage_state.prepare_update(&ups, stage_workers)
+                }))
+                .map_err(|_| faults::note_caught())
+                .ok();
+                if done_tx.send((ticket, prep)).is_err() {
                     break;
                 }
             }
@@ -112,159 +146,243 @@ impl Coordinator {
         let batcher_cfg = cfg.batcher;
         let workers = cfg.engine_workers;
         let pipeline = cfg.pipeline;
+        let queued_w = queued.clone();
         let worker = std::thread::spawn(move || {
-            while let Some(fused) = next_batch(&rx, &batcher_cfg) {
+            // Monotone ticket for staged preparations (see above).
+            let mut stage_ticket: u64 = 0;
+            loop {
+                // The pull is panic-isolated: an injected
+                // batcher.handoff panic drops the pulled group whole —
+                // its submitters see a closed reply channel, no op of
+                // theirs has executed — and serving continues.
+                let pull =
+                    match catch_unwind(AssertUnwindSafe(|| next_batch(&rx, &batcher_cfg, &queued_w)))
+                    {
+                        Ok(p) => p,
+                        Err(_) => {
+                            faults::note_caught();
+                            m.lock().record_degraded();
+                            continue;
+                        }
+                    };
+                let (fused, last) = match pull {
+                    BatchPull::Batch(f) => (f, false),
+                    BatchPull::Final(f) => (f, true),
+                    BatchPull::Shutdown => break,
+                };
+                // Deadline shedding, queue-time stage: requests that
+                // expired while waiting are rejected whole.
+                for req in &fused.expired {
+                    m.lock().record_expired();
+                    let _ = req.reply.try_send(Err(ServeError::DeadlineExceeded));
+                }
                 let t0 = std::time::Instant::now();
-                let mut answers: Vec<u32> = Vec::with_capacity(fused.total_queries());
-                let mut query_engine: Option<&'static str> = None;
-                let mut update_engine: Option<&'static str> = None;
-                let mut updates_ok = true;
-                // Published-epoch version (not the raw counter, which
-                // briefly runs ahead mid-publish): keeps response epochs
-                // monotone across update-only batches.
-                let mut epoch_seen = st.current().version;
-                // In-flight staged preparation: (update segment index it
-                // commits at, dispatch instant).
-                let mut staged: Option<(usize, std::time::Instant)> = None;
-                // Segments execute (commit, for staged updates) strictly
-                // in stream order on this one thread — that *is* the
-                // fence: an update segment is visible to every later
-                // query segment and to none earlier. Staging only ever
-                // *reads*, so overlapping it with the preceding query
-                // segment cannot leak values across the fence.
-                for (si, seg) in fused.segments.iter().enumerate() {
-                    match seg {
-                        Segment::Queries(qs) => {
-                            // Two-lane dispatch: if the next segment is an
-                            // update fence, hand its preparation to the
-                            // staging lane before running this query
-                            // segment, per the batcher's annotation.
-                            if pipeline {
-                                if let Some(Segment::Updates(ups)) = fused.segments.get(si + 1) {
-                                    debug_assert_eq!(fused.overlap_with[si + 1], Some(si));
-                                    if stage_tx.send(ups.clone()).is_ok() {
-                                        staged = Some((si + 1, std::time::Instant::now()));
+                // Segment execution is backstopped too. Injected faults
+                // are all absorbed *below* this point (pool retries,
+                // stager fallback, commit conflicts), so under
+                // injection this catch never fires — it exists so a
+                // genuine executor bug degrades to Failed replies for
+                // one batch instead of wedging the serving loop.
+                let exec = catch_unwind(AssertUnwindSafe(|| {
+                    let mut answers: Vec<u32> = Vec::with_capacity(fused.total_queries());
+                    let mut query_engine: Option<&'static str> = None;
+                    let mut update_engine: Option<&'static str> = None;
+                    let mut updates_ok = true;
+                    // Published-epoch version (not the raw counter, which
+                    // briefly runs ahead mid-publish): keeps response epochs
+                    // monotone across update-only batches.
+                    let mut epoch_seen = st.current().version;
+                    // In-flight staged preparation: (update segment index
+                    // it commits at, its ticket, dispatch instant).
+                    let mut staged: Option<(usize, u64, std::time::Instant)> = None;
+                    // Segments execute (commit, for staged updates) strictly
+                    // in stream order on this one thread — that *is* the
+                    // fence: an update segment is visible to every later
+                    // query segment and to none earlier. Staging only ever
+                    // *reads*, so overlapping it with the preceding query
+                    // segment cannot leak values across the fence.
+                    for (si, seg) in fused.segments.iter().enumerate() {
+                        match seg {
+                            Segment::Queries(qs) => {
+                                // Two-lane dispatch: if the next segment is an
+                                // update fence, hand its preparation to the
+                                // staging lane before running this query
+                                // segment, per the batcher's annotation.
+                                if pipeline {
+                                    if let Some(Segment::Updates(ups)) = fused.segments.get(si + 1)
+                                    {
+                                        debug_assert_eq!(fused.overlap_with[si + 1], Some(si));
+                                        stage_ticket += 1;
+                                        if stage_tx.send((stage_ticket, ups.clone())).is_ok() {
+                                            staged = Some((
+                                                si + 1,
+                                                stage_ticket,
+                                                std::time::Instant::now(),
+                                            ));
+                                        }
                                     }
                                 }
-                            }
-                            // Pin this segment to the epoch current at its
-                            // start: the Arc keeps a mid-segment background
-                            // swap from freeing engines under us; the next
-                            // segment re-loads and routes freely against
-                            // whatever epoch is current by then.
-                            let epoch = st.current();
-                            let fresh = st.is_fresh(&epoch);
-                            let kind = router.route_epoch(n, qs, epoch.kinds(), fresh);
-                            let engine = epoch.get(kind).expect("routed engine exists");
-                            let ts = std::time::Instant::now();
-                            let got = match engine.solve(qs, workers) {
-                                Ok(a) => a,
-                                Err(e) => {
-                                    // Only the XLA engine can fail, and a
-                                    // stale epoch never routes to it — so
-                                    // the exhaustive fallback still sees
-                                    // the array its epoch was built from.
-                                    eprintln!("engine {} failed: {e}", kind.name());
-                                    epoch
-                                        .get(EngineKind::Exhaustive)
-                                        .expect("exhaustive always built")
-                                        .solve(qs, workers)
-                                        .expect("exhaustive cannot fail")
-                                }
-                            };
-                            let seg_ns = ts.elapsed().as_nanos() as u64;
-                            m.lock().unwrap().record_batch(kind, qs.len() as u64, seg_ns);
-                            st.observer.lock().unwrap().observe_queries(qs);
-                            epoch_seen = epoch.version;
-                            // Last segment wins: once an update fences the
-                            // batch, later segments are the current truth.
-                            query_engine = Some(kind.name());
-                            answers.extend_from_slice(&got);
-                        }
-                        Segment::Updates(ups) => {
-                            let ts = std::time::Instant::now();
-                            let mut applied: Option<EngineKind> = None;
-                            if let Some((at, dispatched)) = staged.take() {
-                                debug_assert_eq!(at, si, "staged work commits at its own fence");
-                                // Join the staging lane and commit at the
-                                // fence. `hidden` is the slice of the
-                                // preparation that ran while this thread
-                                // was busy with the previous segment — the
-                                // latency the pipeline removed. The gap is
-                                // measured *before* the blocking recv: a
-                                // preparation that outlives the query
-                                // segment stalls the fence, and that stall
-                                // must not count as hidden.
-                                let gap = dispatched.elapsed().as_nanos() as u64;
-                                if let Ok(prep) = done_rx.recv() {
-                                    let hidden = prep.prep_ns.min(gap);
-                                    let (kind, outcome) = st.commit_prepared(prep, workers);
-                                    m.lock().unwrap().record_staged_commit(
-                                        outcome == CommitOutcome::Installed,
-                                        hidden,
-                                    );
-                                    applied = Some(kind);
-                                }
-                            }
-                            if applied.is_none() {
-                                match st.update_batch(ups, workers) {
-                                    Ok(kind) => applied = Some(kind),
-                                    // Admission validated the indices; this
-                                    // only fires when no mutable engine is
-                                    // built, which bootstrap precludes.
+                                // Pin this segment to the epoch current at its
+                                // start: the Arc keeps a mid-segment background
+                                // swap from freeing engines under us; the next
+                                // segment re-loads and routes freely against
+                                // whatever epoch is current by then.
+                                let epoch = st.current();
+                                let fresh = st.is_fresh(&epoch);
+                                let kind = router.route_epoch(n, qs, epoch.kinds(), fresh);
+                                let engine = epoch.get(kind).expect("routed engine exists");
+                                let ts = std::time::Instant::now();
+                                let got = match engine.solve(qs, workers) {
+                                    Ok(a) => a,
                                     Err(e) => {
-                                        eprintln!("update batch dropped: {e}");
-                                        updates_ok = false;
+                                        // Only the XLA engine can fail, and a
+                                        // stale epoch never routes to it — so
+                                        // the exhaustive fallback still sees
+                                        // the array its epoch was built from.
+                                        eprintln!("engine {} failed: {e}", kind.name());
+                                        epoch
+                                            .get(EngineKind::Exhaustive)
+                                            .expect("exhaustive always built")
+                                            .solve(qs, workers)
+                                            .expect("exhaustive cannot fail")
+                                    }
+                                };
+                                let seg_ns = ts.elapsed().as_nanos() as u64;
+                                m.lock().record_batch(kind, qs.len() as u64, seg_ns);
+                                st.observer.lock().observe_queries(qs);
+                                epoch_seen = epoch.version;
+                                // Last segment wins: once an update fences the
+                                // batch, later segments are the current truth.
+                                query_engine = Some(kind.name());
+                                answers.extend_from_slice(&got);
+                            }
+                            Segment::Updates(ups) => {
+                                let ts = std::time::Instant::now();
+                                let mut applied: Option<EngineKind> = None;
+                                if let Some((at, ticket, dispatched)) = staged.take() {
+                                    debug_assert_eq!(
+                                        at, si,
+                                        "staged work commits at its own fence"
+                                    );
+                                    // Join the staging lane and commit at the
+                                    // fence. `hidden` is the slice of the
+                                    // preparation that ran while this thread
+                                    // was busy with the previous segment — the
+                                    // latency the pipeline removed. The gap is
+                                    // measured *before* the blocking recv: a
+                                    // preparation that outlives the query
+                                    // segment stalls the fence, and that stall
+                                    // must not count as hidden.
+                                    let gap = dispatched.elapsed().as_nanos() as u64;
+                                    let mut prep_opt: Option<PreparedUpdate> = None;
+                                    while let Ok((t, p)) = done_rx.recv() {
+                                        if t == ticket {
+                                            prep_opt = p;
+                                            break;
+                                        }
+                                        // Stale result of a ticket abandoned
+                                        // by a failed batch — discard.
+                                    }
+                                    if let Some(prep) = prep_opt {
+                                        let hidden = prep.prep_ns.min(gap);
+                                        let (kind, outcome) = st.commit_prepared(prep, workers);
+                                        m.lock().record_staged_commit(
+                                            outcome == CommitOutcome::Installed,
+                                            hidden,
+                                        );
+                                        applied = Some(kind);
+                                    } else {
+                                        // The preparation died on the staging
+                                        // lane: degrade to the direct path
+                                        // below — same values, same fencing,
+                                        // only the overlap is lost.
+                                        m.lock().record_degraded();
                                     }
                                 }
+                                if applied.is_none() {
+                                    match st.update_batch(ups, workers) {
+                                        Ok(kind) => applied = Some(kind),
+                                        // Admission validated the indices; this
+                                        // only fires when no mutable engine is
+                                        // built, which bootstrap precludes.
+                                        Err(e) => {
+                                            eprintln!("update batch dropped: {e}");
+                                            updates_ok = false;
+                                        }
+                                    }
+                                }
+                                if let Some(kind) = applied {
+                                    update_engine.get_or_insert(kind.name());
+                                    m.lock().record_update_batch(
+                                        ups.len() as u64,
+                                        ts.elapsed().as_nanos() as u64,
+                                    );
+                                }
+                                // Observer feed stays at the *commit* point,
+                                // exactly as in the serial executor, so the
+                                // lifecycle's staleness/seq accounting is
+                                // unchanged by pipelining.
+                                st.observer.lock().observe_updates(ups.len());
                             }
-                            if let Some(kind) = applied {
-                                update_engine.get_or_insert(kind.name());
-                                m.lock().unwrap().record_update_batch(
-                                    ups.len() as u64,
-                                    ts.elapsed().as_nanos() as u64,
-                                );
+                        }
+                    }
+                    (answers, query_engine, update_engine, updates_ok, epoch_seen)
+                }));
+                let latency = t0.elapsed().as_nanos() as u64;
+                match exec {
+                    Ok((answers, query_engine, update_engine, updates_ok, epoch_seen)) => {
+                        // Refresh the metrics' decayed-traffic view, then let
+                        // the lifecycle plan background work off it (rebuild
+                        // once the update rate is quiet, re-shard on tuner
+                        // drift).
+                        {
+                            let obs = st.observer.lock().snapshot();
+                            m.lock().record_observed(
+                                obs,
+                                st.epoch_version(),
+                                st.shard_block_live(),
+                            );
+                            m.lock().record_faults(faults::stats());
+                        }
+                        if let Some(job) = st.plan() {
+                            if jt.try_send(job).is_err() {
+                                st.clear_pending();
                             }
-                            // Observer feed stays at the *commit* point,
-                            // exactly as in the serial executor, so the
-                            // lifecycle's staleness/seq accounting is
-                            // unchanged by pipelining.
-                            st.observer.lock().unwrap().observe_updates(ups.len());
+                        }
+                        let per_request = fused.split_answers(&answers);
+                        let engine_name = query_engine.or(update_engine).unwrap_or("NONE");
+                        for ((req, ans), &ups) in
+                            fused.requests.iter().zip(per_request).zip(&fused.update_splits)
+                        {
+                            // A dropped client is not an error. A dropped
+                            // update segment must not be reported as applied.
+                            let _ = req.reply.try_send(Ok(Response {
+                                id: req.id,
+                                answers: ans,
+                                updates_applied: if updates_ok { ups } else { 0 },
+                                engine: engine_name,
+                                epoch: epoch_seen,
+                                batch_latency_ns: latency,
+                            }));
+                        }
+                    }
+                    Err(_) => {
+                        // One batch lost to a caught executor panic: every
+                        // request in it gets the typed rejection and serving
+                        // moves on — the serving loop never wedges.
+                        faults::note_caught();
+                        {
+                            let mut g = m.lock();
+                            g.record_degraded();
+                            g.record_faults(faults::stats());
+                        }
+                        for req in &fused.requests {
+                            let _ = req.reply.try_send(Err(ServeError::Failed));
                         }
                     }
                 }
-                // Refresh the metrics' decayed-traffic view, then let the
-                // lifecycle plan background work off it (rebuild once the
-                // update rate is quiet, re-shard on tuner drift).
-                {
-                    let obs = st.observer.lock().unwrap().snapshot();
-                    m.lock().unwrap().record_observed(
-                        obs,
-                        st.epoch_version(),
-                        st.shard_block_live(),
-                    );
-                }
-                if let Some(job) = st.plan() {
-                    if jt.try_send(job).is_err() {
-                        st.clear_pending();
-                    }
-                }
-                let latency = t0.elapsed().as_nanos() as u64;
-                let per_request = fused.split_answers(&answers);
-                let engine_name = query_engine.or(update_engine).unwrap_or("NONE");
-                for ((req, ans), &ups) in
-                    fused.requests.iter().zip(per_request).zip(&fused.update_splits)
-                {
-                    // A dropped client is not an error. A dropped update
-                    // segment must not be reported as applied.
-                    let _ = req.reply.try_send(Response {
-                        id: req.id,
-                        answers: ans,
-                        updates_applied: if updates_ok { ups } else { 0 },
-                        engine: engine_name,
-                        epoch: epoch_seen,
-                        batch_latency_ns: latency,
-                    });
+                if last {
+                    break;
                 }
             }
         });
@@ -276,6 +394,8 @@ impl Coordinator {
             builder: Some(builder),
             metrics,
             lifecycle: state,
+            queued,
+            shed_watermark: cfg.batcher.shed_watermark,
             next_id: AtomicU64::new(0),
             n,
         }
@@ -291,20 +411,54 @@ impl Coordinator {
     /// later query in the stream (and in any later request) and to no
     /// earlier one. Returns one answer per query op, in op order.
     pub fn submit_mixed(&self, ops: Vec<Op>) -> Result<Response> {
+        self.submit_mixed_deadline(ops, None)
+    }
+
+    /// [`submit_mixed`](Self::submit_mixed) with overload semantics: the
+    /// request is shed with [`ServeError::Overloaded`] when the queue
+    /// depth is at the watermark, and dropped whole (no op executes)
+    /// with [`ServeError::DeadlineExceeded`] if `deadline` elapses
+    /// before it reaches an engine. Both come back as typed errors
+    /// (`downcast_ref::<ServeError>()`).
+    pub fn submit_mixed_deadline(
+        &self,
+        ops: Vec<Op>,
+        deadline: Option<Duration>,
+    ) -> Result<Response> {
         validate_ops(self.n, &ops).map_err(|e| {
-            self.metrics.lock().unwrap().record_rejected();
+            self.metrics.lock().record_rejected();
             anyhow!(e)
         })?;
-        self.metrics.lock().unwrap().record_request();
+        // Admission-control shed: reject fast instead of blocking on a
+        // full queue.
+        if self.queued.load(Ordering::Acquire) >= self.shed_watermark {
+            self.metrics.lock().record_shed();
+            return Err(anyhow::Error::new(ServeError::Overloaded));
+        }
+        let deadline = match deadline {
+            Some(d) if d.is_zero() => {
+                // Already expired at admission; don't bother the queue.
+                self.metrics.lock().record_expired();
+                return Err(anyhow::Error::new(ServeError::DeadlineExceeded));
+            }
+            d => d.map(|d| std::time::Instant::now() + d),
+        };
+        self.metrics.lock().record_request();
         let (reply_tx, reply_rx) = sync_channel(1);
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, ops, reply: reply_tx };
-        self.tx
-            .as_ref()
-            .expect("not shut down")
-            .send(req)
-            .map_err(|_| anyhow!("coordinator stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow!("coordinator dropped reply"))
+        let req = Request { id, ops, deadline, reply: reply_tx };
+        // Increment *before* send: the batcher decrements after its
+        // recv, and the gauge must never underflow.
+        self.queued.fetch_add(1, Ordering::AcqRel);
+        if self.tx.as_ref().expect("not shut down").send(req).is_err() {
+            self.queued.fetch_sub(1, Ordering::AcqRel);
+            return Err(anyhow!("coordinator stopped"));
+        }
+        match reply_rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(anyhow::Error::new(e)),
+            Err(_) => Err(anyhow!("coordinator dropped reply")),
+        }
     }
 
     /// Non-blocking submit; Err(queries) when the queue is full
@@ -312,7 +466,7 @@ impl Coordinator {
     pub fn try_submit(
         &self,
         queries: Vec<Query>,
-        reply: SyncSender<Response>,
+        reply: SyncSender<Reply>,
     ) -> std::result::Result<u64, Vec<Query>> {
         let unwrap_queries = |ops: Vec<Op>| {
             ops.into_iter()
@@ -323,18 +477,29 @@ impl Coordinator {
                 .collect()
         };
         if crate::rmq::validate_queries(self.n, &queries).is_err() {
-            self.metrics.lock().unwrap().record_rejected();
+            self.metrics.lock().record_rejected();
             return Err(queries);
         }
-        self.metrics.lock().unwrap().record_request();
+        self.metrics.lock().record_request();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request::queries(id, queries, reply);
+        self.queued.fetch_add(1, Ordering::AcqRel);
         match self.tx.as_ref().expect("not shut down").try_send(req) {
             Ok(()) => Ok(id),
             Err(TrySendError::Full(r)) | Err(TrySendError::Disconnected(r)) => {
+                self.queued.fetch_sub(1, Ordering::AcqRel);
                 Err(unwrap_queries(r.ops))
             }
         }
+    }
+
+    /// Fold the fault registry's live counters into the metrics. The
+    /// serving loop does this after every batch; call it before reading
+    /// metrics that must include recoveries which happened after the
+    /// last batch (e.g. a builder respawn during a quiet tail, or at
+    /// shutdown).
+    pub fn sync_faults(&self) {
+        self.metrics.lock().record_faults(faults::stats());
     }
 
     /// Graceful shutdown: drain the request queue, join the serving
@@ -357,6 +522,7 @@ impl Coordinator {
         if let Some(b) = self.builder.take() {
             let _ = b.join();
         }
+        self.sync_faults();
     }
 }
 
@@ -402,7 +568,7 @@ mod tests {
         let (c, _) = coordinator(128, Policy::Heuristic);
         assert!(c.query(vec![(5, 4)]).is_err());
         assert!(c.query(vec![(0, 128)]).is_err());
-        assert_eq!(c.metrics.lock().unwrap().rejected, 2);
+        assert_eq!(c.metrics.lock().rejected, 2);
         c.shutdown();
     }
 
@@ -427,7 +593,7 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
-        let m = c.metrics.lock().unwrap();
+        let m = c.metrics.lock();
         assert_eq!(m.requests, 40);
         assert_eq!(m.total_queries(), 40 * 16);
     }
@@ -441,7 +607,7 @@ mod tests {
         let qs = gen_queries(1 << 15, 32, RangeDist::Small, &mut rng);
         let resp = c.query(qs).unwrap();
         assert_eq!(resp.engine, "SHARDED");
-        let m = c.metrics.lock().unwrap();
+        let m = c.metrics.lock();
         assert!(m.engine(crate::coordinator::engine::EngineKind::Sharded).is_some());
         // The serving loop refreshes the decayed-traffic view.
         let obs = m.observed.expect("observed traffic recorded");
@@ -465,7 +631,7 @@ mod tests {
         let resp = c.submit_mixed(ops).unwrap();
         assert_eq!(resp.answers, vec![0, 7, 3], "each chunk sees exactly the prior updates");
         assert_eq!(resp.updates_applied, 2);
-        let m = c.metrics.lock().unwrap();
+        let m = c.metrics.lock();
         assert_eq!(m.update_batches, 2);
         assert_eq!(m.updates, 2);
         drop(m);
@@ -534,7 +700,7 @@ mod tests {
             assert_eq!(resp.answers, want);
             assert_eq!(resp.updates_applied, 3);
         }
-        let m = c.metrics.lock().unwrap();
+        let m = c.metrics.lock();
         assert_eq!(m.update_batches, 24, "3 fences per request x 8 requests");
         assert_eq!(m.staged_batches, 24, "every fence had a preceding query segment");
         assert_eq!(
@@ -564,7 +730,7 @@ mod tests {
             ])
             .unwrap();
         assert_eq!(resp.answers, vec![100, 3]);
-        let m = c.metrics.lock().unwrap();
+        let m = c.metrics.lock();
         assert_eq!(m.update_batches, 2);
         assert_eq!(m.staged_batches, 1, "only the second fence had a query before it");
         drop(m);
@@ -587,7 +753,7 @@ mod tests {
             ])
             .unwrap();
         assert_eq!(resp.answers, vec![0, 9], "serial executor: same fence semantics");
-        let m = c.metrics.lock().unwrap();
+        let m = c.metrics.lock();
         assert_eq!(m.staged_batches, 0);
         assert_eq!(m.overlap_ns_hidden_total, 0);
         assert_eq!(m.update_batches, 1);
@@ -599,7 +765,63 @@ mod tests {
     fn rejects_invalid_update_ops() {
         let (c, _) = coordinator(128, Policy::Heuristic);
         assert!(c.submit_mixed(vec![Op::Update { i: 128, v: 0.0 }]).is_err());
-        assert_eq!(c.metrics.lock().unwrap().rejected, 1);
+        assert_eq!(c.metrics.lock().rejected, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_watermark_sheds_with_typed_overloaded() {
+        let xs = Rng::new(83).uniform_f32_vec(128);
+        let c = Coordinator::start(
+            &xs,
+            None,
+            CoordinatorCfg {
+                batcher: BatcherCfg { shed_watermark: 0, ..Default::default() },
+                ..Default::default()
+            },
+        );
+        let err = c.query(vec![(0, 127)]).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
+        let m = c.metrics.lock();
+        assert_eq!(m.shed, 1);
+        assert_eq!(m.requests, 0, "a shed request never counts as admitted");
+        drop(m);
+        c.shutdown();
+    }
+
+    #[test]
+    fn zero_deadline_is_rejected_before_any_op_executes() {
+        let xs = vec![0.5f32; 128];
+        let c = Coordinator::start(&xs, None, CoordinatorCfg::default());
+        let err = c
+            .submit_mixed_deadline(
+                vec![Op::Update { i: 3, v: 0.1 }, Op::Query((0, 127))],
+                Some(Duration::ZERO),
+            )
+            .unwrap_err();
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::DeadlineExceeded));
+        assert_eq!(c.metrics.lock().deadline_expired, 1);
+        // The rejected request's update must not have landed: on the
+        // all-equal array the leftmost minimum is still index 0.
+        let resp = c.query(vec![(0, 127)]).unwrap();
+        assert_eq!(resp.answers, vec![0], "rejected update must not execute");
+        assert_eq!(c.metrics.lock().update_batches, 0);
+        c.shutdown();
+    }
+
+    #[test]
+    fn generous_deadline_serves_normally() {
+        let (c, xs) = coordinator(1024, Policy::ModeledCost);
+        let mut rng = Rng::new(84);
+        let qs = gen_queries(1024, 32, RangeDist::Medium, &mut rng);
+        let resp =
+            c.submit_mixed_deadline(
+                qs.iter().copied().map(Op::Query).collect(),
+                Some(Duration::from_secs(60)),
+            )
+            .unwrap();
+        assert_eq!(resp.answers, oracle_batch(&xs, &qs));
+        assert_eq!(c.metrics.lock().deadline_expired, 0);
         c.shutdown();
     }
 

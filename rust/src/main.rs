@@ -8,6 +8,7 @@
 //!   artifacts    list the AOT artifact variants (PJRT manifest)
 //!   info         architecture profiles used by the models
 
+use rtxrmq::coordinator::batcher::BatcherCfg;
 use rtxrmq::coordinator::engine::{
     EngineCfg, EngineKind, EngineSet, LifecycleCfg, RebuildMode, ShardBlock,
 };
@@ -16,6 +17,7 @@ use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
 use rtxrmq::rmq::naive_rmq;
 use rtxrmq::runtime::Runtime;
 use rtxrmq::util::cli::{Args, Help};
+use rtxrmq::util::faults::{self, FaultPlan};
 use rtxrmq::util::rng::Rng;
 use rtxrmq::util::stats::fmt_mb;
 use rtxrmq::workload::{gen_array, gen_mixed, gen_queries, Op, RangeDist};
@@ -66,6 +68,10 @@ fn print_help() {
             .opt("expect-rebuild", "exit non-zero unless a background rebuild occurred")
             .opt("expect-reshard", "exit non-zero unless a background re-shard occurred")
             .opt("no-pipeline", "serial executor: apply update segments at the fence, no overlap")
+            .opt("inject", "fault schedule site:kind:prob:count[,...] (chaos mode; see util::faults)")
+            .opt("inject-seed", "RNG seed of the fault schedule — same seed, same faults (default 42)")
+            .opt("deadline-ms", "per-request deadline; expired requests are dropped whole (0 = off)")
+            .opt("shed-watermark", "queue depth past which admission sheds Overloaded (default 256)")
             .opt("no-xla", "disable the PJRT/XLA engine"),
         Help::new("bench-smoke", "wall-clock ns/query grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
@@ -167,6 +173,23 @@ fn cmd_serve(args: &Args) -> i32 {
             }
         },
     };
+    // Chaos mode: arm the deterministic fault registry before any
+    // serving thread starts. A bad spec is a usage error, not a crash.
+    let inject_seed: u64 = args.get_or("inject-seed", 42u64).unwrap();
+    if let Some(spec) = args.opt("inject") {
+        match FaultPlan::parse(spec, inject_seed) {
+            Ok(plan) => faults::arm(plan),
+            Err(e) => {
+                eprintln!("invalid --inject: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    let deadline_ms: u64 = args.get_or("deadline-ms", 0u64).unwrap();
+    let deadline =
+        if deadline_ms > 0 { Some(std::time::Duration::from_millis(deadline_ms)) } else { None };
+    let shed_watermark: usize =
+        args.get_or("shed-watermark", BatcherCfg::default().shed_watermark).unwrap();
     let xs = gen_array(n, 7);
     let runtime = if args.flag("no-xla") {
         None
@@ -178,6 +201,7 @@ fn cmd_serve(args: &Args) -> i32 {
         &xs,
         runtime,
         CoordinatorCfg {
+            batcher: BatcherCfg { shed_watermark, ..Default::default() },
             engines: EngineCfg { shard_block },
             lifecycle: LifecycleCfg { rebuild, reshard_drift, ..Default::default() },
             pipeline: !args.flag("no-pipeline"),
@@ -189,6 +213,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // The rolling oracle tracks applied updates (mixed mode); a few
     // answers per request are spot-checked against it.
     let mut oracle = xs.clone();
+    let mut rejected = 0usize;
     if mixed {
         let mut total_updates = 0usize;
         for r in 0..requests {
@@ -197,7 +222,18 @@ fn cmd_serve(args: &Args) -> i32 {
                 _ => dist,
             };
             let ops = gen_mixed(n, batch, update_frac, d, &mut rng);
-            let resp = c.submit_mixed(ops.clone()).expect("serve");
+            // A rejected request — shed at admission, expired deadline,
+            // or dropped whole by an injected hand-off fault — executed
+            // none of its ops, so the rolling oracle skips it entirely.
+            // Accepted requests must still match the oracle exactly,
+            // whatever faults were injected underneath.
+            let resp = match c.submit_mixed_deadline(ops.clone(), deadline) {
+                Ok(resp) => resp,
+                Err(_) => {
+                    rejected += 1;
+                    continue;
+                }
+            };
             total_updates += resp.updates_applied;
             let mut checked = 0;
             let mut k = 0;
@@ -217,19 +253,25 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         let wall = t0.elapsed();
         println!(
-            "served {requests} mixed requests x {batch} ops ({total_updates} updates) \
-             in {wall:.2?} ({:.0} ops/s, fenced, spot-checked)",
+            "served {} of {requests} mixed requests x {batch} ops ({total_updates} updates, \
+             {rejected} rejected) in {wall:.2?} ({:.0} ops/s, fenced, spot-checked)",
+            requests - rejected,
             (requests * batch) as f64 / wall.as_secs_f64()
         );
     } else {
         for i in 0..requests {
             let dist = [RangeDist::Small, RangeDist::Medium, RangeDist::Large][i % 3];
             let qs = gen_queries(n, batch, dist, &mut rng);
-            c.query(qs).expect("serve");
+            let ops = qs.into_iter().map(Op::Query).collect();
+            if c.submit_mixed_deadline(ops, deadline).is_err() {
+                rejected += 1;
+            }
         }
         let wall = t0.elapsed();
         println!(
-            "served {requests} requests x {batch} queries in {wall:.2?} ({:.0} queries/s)",
+            "served {} of {requests} requests x {batch} queries ({rejected} rejected) \
+             in {wall:.2?} ({:.0} queries/s)",
+            requests - rejected,
             (requests * batch) as f64 / wall.as_secs_f64()
         );
     }
@@ -240,9 +282,16 @@ fn cmd_serve(args: &Args) -> i32 {
         // --shift-dist run the tail keeps the shifted distribution, so
         // the workload-fed tuner sees the drift it should re-shard for.
         let tail_dist = shift_dist.unwrap_or(dist);
+        let mut tail_served = 0usize;
         for _ in 0..quiet_tail {
             let qs = gen_queries(n, batch, tail_dist, &mut rng);
-            let resp = c.query(qs.clone()).expect("quiet tail");
+            // An injected hand-off fault can still reject a tail
+            // request whole; only accepted answers are oracle-checked.
+            let resp = match c.query(qs.clone()) {
+                Ok(resp) => resp,
+                Err(_) => continue,
+            };
+            tail_served += 1;
             for (k, &(l, r)) in qs.iter().take(2).enumerate() {
                 assert_eq!(
                     resp.answers[k],
@@ -252,7 +301,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 );
             }
         }
-        println!("quiet tail: {quiet_tail} pure-query requests served");
+        println!("quiet tail: {tail_served} of {quiet_tail} pure-query requests served");
     }
     // The lifecycle claims happen on the serving thread; the builds may
     // still be in flight on the builder — give each expectation a grace
@@ -271,10 +320,14 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         true
     };
-    let ok = expect("expect-rebuild", "rebuild", &|| c.metrics.lock().unwrap().rebuilds)
-        && expect("expect-reshard", "re-shard", &|| c.metrics.lock().unwrap().reshards);
-    println!("{}", c.metrics.lock().unwrap());
+    let ok = expect("expect-rebuild", "rebuild", &|| c.metrics.lock().rebuilds)
+        && expect("expect-reshard", "re-shard", &|| c.metrics.lock().reshards);
+    // Fold recoveries that landed after the last batch (e.g. a builder
+    // respawn during the grace window) into the printed snapshot.
+    c.sync_faults();
+    println!("{}", c.metrics.lock());
     c.shutdown();
+    faults::disarm();
     if ok {
         0
     } else {

@@ -167,6 +167,50 @@
 //!   in the lifecycle design above. The `pipeline` metrics line
 //!   (`overlap_ns_hidden`) reports how much preparation latency the
 //!   overlap actually removed from the serving thread's critical path.
+//!
+//! # Failure model & graceful degradation (design note)
+//!
+//! The serving stack runs real threads (batcher-fed serving loop,
+//! staged-prepare worker, background builder, pool workers); the failure
+//! model says what each one is allowed to do when code panics, and what
+//! clients may observe. Three rules:
+//!
+//! - **Absorb at source.** Every lifecycle thread is panic-isolated at
+//!   its own boundary (`catch_unwind` + the poison-recovering locks in
+//!   `util::sync`), and recovery happens at the layer that owns the
+//!   state. A panicked pool worker's chunk is re-run inline by the
+//!   caller (`util::pool` — same closure, same slice, bit-identical).
+//!   A dead staged preparation makes the fence fall back to the direct
+//!   apply path (the same path a commit conflict takes). A panic inside
+//!   a direct apply is caught after the values landed but before the
+//!   refit — recovery rebuilds the touched structures *from the stored
+//!   values*, so the batch is never half-visible. A dead background
+//!   builder clears its claimed job and respawns with exponential
+//!   backoff; the lifecycle simply reschedules. A panic at the batcher
+//!   hand-off drops the pulled group before any segment executes.
+//! - **Accepted implies exact; rejected implies no effect.** Clients
+//!   see a typed result (`batcher::ServeError`): `Overloaded` when the
+//!   queue-depth gauge passes the shed watermark (admission control,
+//!   checked before enqueue), `DeadlineExceeded` when a request's
+//!   deadline lapses in the queue (dropped whole at batch-build time,
+//!   before any of its ops execute), `Failed` when the serving loop's
+//!   last-resort backstop caught a genuine bug. In every case the
+//!   rejection is *whole-request*: no partial stream executes, so the
+//!   differential contract survives — under any fault schedule, every
+//!   **accepted** request's answers are bit-identical to the fault-free
+//!   sequential oracle (the chaos suite in `tests/mixed_stream.rs`
+//!   pins this; `faults_sim.py` mirrors the protocol sans toolchain).
+//! - **Deterministic chaos.** `util::faults` is a process-global
+//!   registry of named injection sites (`serve --inject
+//!   "site:kind:prob:count"`, seeded RNG per rule) compiled into every
+//!   build: one relaxed atomic load when disarmed, so production pays
+//!   nothing. Panics injected at a site are indistinguishable from
+//!   organic panics at that boundary — the recovery paths above are
+//!   exercised, counted (`faults` metrics line: injected, caught,
+//!   lock-recovered, respawns, fallbacks, shed, expired), and asserted
+//!   against the oracle. `panic` at `stage.commit` is rejected by the
+//!   parser (a commit panic could strand a half-applied batch); the
+//!   `err` kind forces the conflict-fallback path instead.
 
 pub mod cartesian;
 pub mod exhaustive;

@@ -175,6 +175,10 @@ impl StagedUpdateSpec {
     /// reads only the staged copies, so it runs concurrently with
     /// queries against the live structure.
     pub fn build(mut self, workers: usize) -> PreparedBlockUpdate {
+        // Injected staging failure: unwinds before any refit work; the
+        // staging lane catches it and the fence falls back to the
+        // direct update path (same values, answers unchanged).
+        crate::util::faults::fire("stage.build");
         let (bs, opts) = (self.bs, self.opts);
         let built: Vec<Vec<(usize, BlockSolver, u32)>> =
             pool::map_chunks_mut(&mut self.blocks, workers, |_, slice| {

@@ -1,0 +1,360 @@
+//! Deterministic fault injection for the serving stack (`serve
+//! --inject`, the chaos differential suite, and the nightly chaos
+//! soak). A [`FaultPlan`] is a list of rules `site:kind:prob:count`
+//! parsed from the CLI; arming it installs the plan in a process-global
+//! registry that the instrumented sites poll through [`fire`].
+//!
+//! Design constraints:
+//!
+//! - **Compiled in always, zero-cost when empty.** [`fire`] is a single
+//!   relaxed atomic load on the disarmed (production) path; the plan
+//!   lookup, RNG draw and counter updates only run while a plan is
+//!   armed.
+//! - **Deterministic replay.** Every rule draws from its own
+//!   [`Rng`](crate::util::rng::Rng) stream, seeded from `(seed, rule
+//!   index)` — a rule's k-th draw is a pure function of the spec, so a
+//!   chaos run with a fixed seed injects the same schedule every time
+//!   (up to thread interleaving at sites reached from multiple worker
+//!   threads, which only reorders draws within one rule).
+//! - **Named sites, checked early.** Rules may only name the sites the
+//!   code actually instruments ([`SITES`]) — a typo in an `--inject`
+//!   spec fails parsing instead of silently injecting nothing. Sites
+//!   prefixed `test.` are always accepted (unit tests exercising the
+//!   registry itself without touching production sites).
+//!
+//! Fault kinds: `panic` unwinds at the site (recovery paths catch it),
+//! `delay`/`delayN` sleeps N ms (default 1) — latency injection — and
+//! `err` makes [`fire`] return `true`, which err-aware sites translate
+//! into their forced-failure path (a staged commit conflict, an aborted
+//! re-shard install). `panic` is rejected at `stage.commit`: a fence
+//! that dies after earlier update segments of its batch landed could
+//! not preserve the differential guarantee — use `err` there.
+//!
+//! The registry also hosts the recovery counters the `faults` metrics
+//! line reports: panics caught by the isolation boundaries
+//! ([`note_caught`]) and poisoned locks recovered by
+//! [`util::sync`](crate::util::sync) ([`note_lock_recovered`]).
+
+use crate::util::rng::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex as StdMutex;
+use std::time::Duration;
+
+/// Every instrumented injection site. Kept in one place so specs can be
+/// validated at parse time and the docs stay honest.
+pub const SITES: &[&str] = &[
+    // Background epoch builds (engine.rs builder thread).
+    "build.statics",
+    "build.reshard",
+    // Forced-abort point of a re-shard install (err kind).
+    "reshard.install",
+    // Staged-update prepare (server.rs staging lane thread).
+    "stage.prepare",
+    // Per-block replacement build (sharded.rs StagedUpdateSpec::build).
+    "stage.build",
+    // Fence commit of a staged batch (err = forced conflict).
+    "stage.commit",
+    // Per-chunk worker closures (util/pool.rs spawned workers).
+    "pool.worker",
+    // Batcher hand-off (next_batch, serving thread, pre-execution).
+    "batcher.handoff",
+];
+
+/// What an armed rule does when its probability draw hits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Unwind at the site (the panic-isolation boundaries catch it).
+    Panic,
+    /// Sleep this many milliseconds (latency injection).
+    Delay(u64),
+    /// Make [`fire`] return `true` — the site's forced-error path.
+    Error,
+}
+
+/// One parsed `site:kind:prob:count` rule with its private RNG stream.
+#[derive(Clone, Debug)]
+struct FaultRule {
+    site: String,
+    kind: FaultKind,
+    prob: f64,
+    /// Remaining fires; `u64::MAX` = unlimited (`count` of 0).
+    remaining: u64,
+    rng: Rng,
+}
+
+/// A parsed, seeded fault schedule (comma-separated rules).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    rules: Vec<FaultRule>,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated spec: `site:kind:prob:count[,...]`.
+    /// `kind` is `panic`, `err`, `delay` or `delayN` (N ms); `prob` in
+    /// (0, 1]; `count` caps the number of fires (0 = unlimited).
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan, String> {
+        let mut rules = Vec::new();
+        for (idx, part) in spec.split(',').map(str::trim).filter(|p| !p.is_empty()).enumerate() {
+            let fields: Vec<&str> = part.split(':').collect();
+            if fields.len() != 4 {
+                return Err(format!("rule '{part}': expected site:kind:prob:count"));
+            }
+            let site = fields[0].to_string();
+            if !SITES.contains(&site.as_str()) && !site.starts_with("test.") {
+                return Err(format!("rule '{part}': unknown site '{site}' (see faults::SITES)"));
+            }
+            let kind = match fields[1] {
+                "panic" => FaultKind::Panic,
+                "err" | "error" => FaultKind::Error,
+                "delay" => FaultKind::Delay(1),
+                d if d.starts_with("delay") => {
+                    let ms: u64 = d[5..]
+                        .parse()
+                        .map_err(|_| format!("rule '{part}': bad delay '{d}'"))?;
+                    FaultKind::Delay(ms)
+                }
+                k => return Err(format!("rule '{part}': unknown kind '{k}'")),
+            };
+            if kind == FaultKind::Panic && site == "stage.commit" {
+                return Err(format!(
+                    "rule '{part}': panic at stage.commit would lose a half-applied batch; \
+                     use err (forced conflict) instead"
+                ));
+            }
+            let prob: f64 = fields[2]
+                .parse()
+                .ok()
+                .filter(|p| *p > 0.0 && *p <= 1.0)
+                .ok_or_else(|| format!("rule '{part}': prob must be in (0, 1]"))?;
+            let count: u64 =
+                fields[3].parse().map_err(|_| format!("rule '{part}': bad count"))?;
+            rules.push(FaultRule {
+                site,
+                kind,
+                prob,
+                remaining: if count == 0 { u64::MAX } else { count },
+                rng: Rng::new(seed ^ (0x9E37_79B9_7F4A_7C15u64.wrapping_mul(idx as u64 + 1))),
+            });
+        }
+        Ok(FaultPlan { rules })
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// Draw against every rule for `site`; first hit wins.
+    fn check(&mut self, site: &str) -> Option<FaultKind> {
+        for rule in self.rules.iter_mut() {
+            if rule.site != site || rule.remaining == 0 {
+                continue;
+            }
+            if rule.rng.f64() < rule.prob {
+                if rule.remaining != u64::MAX {
+                    rule.remaining -= 1;
+                }
+                return Some(rule.kind);
+            }
+        }
+        None
+    }
+}
+
+// Process-global registry. ARMED is the only thing the production path
+// touches; PLAN and the counters live behind it.
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLAN: StdMutex<Option<FaultPlan>> = StdMutex::new(None);
+static INJECTED_PANICS: AtomicU64 = AtomicU64::new(0);
+static INJECTED_DELAYS: AtomicU64 = AtomicU64::new(0);
+static INJECTED_ERRORS: AtomicU64 = AtomicU64::new(0);
+static CAUGHT: AtomicU64 = AtomicU64::new(0);
+static LOCK_RECOVERED: AtomicU64 = AtomicU64::new(0);
+
+/// Install a plan and reset the injection counters. An empty plan
+/// leaves the registry disarmed (zero-cost).
+pub fn arm(plan: FaultPlan) {
+    for c in [&INJECTED_PANICS, &INJECTED_DELAYS, &INJECTED_ERRORS, &CAUGHT, &LOCK_RECOVERED] {
+        c.store(0, Ordering::Relaxed);
+    }
+    let armed = !plan.is_empty();
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = if armed { Some(plan) } else { None };
+    ARMED.store(armed, Ordering::Release);
+}
+
+/// Disarm the registry (counters are kept for post-run reporting).
+pub fn disarm() {
+    ARMED.store(false, Ordering::Release);
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner()) = None;
+}
+
+/// RAII arming for tests: disarms on drop even if the test panics.
+pub struct ArmGuard(());
+
+pub fn arm_guard(plan: FaultPlan) -> ArmGuard {
+    arm(plan);
+    ArmGuard(())
+}
+
+impl Drop for ArmGuard {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Poll the registry at a named site. Returns `true` iff an `err` fault
+/// fired (the caller's forced-failure path); a `panic` fault unwinds
+/// from here, a `delay` fault sleeps and returns `false`. Disarmed:
+/// one relaxed load, nothing else.
+#[inline]
+pub fn fire(site: &str) -> bool {
+    if !ARMED.load(Ordering::Relaxed) {
+        return false;
+    }
+    fire_armed(site)
+}
+
+#[cold]
+fn fire_armed(site: &str) -> bool {
+    // The kind is extracted and the guard dropped *before* any panic so
+    // the plan mutex can never be poisoned by its own injection.
+    let kind = {
+        let mut plan = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+        plan.as_mut().and_then(|p| p.check(site))
+    };
+    match kind {
+        None => false,
+        Some(FaultKind::Panic) => {
+            INJECTED_PANICS.fetch_add(1, Ordering::Relaxed);
+            panic!("injected fault: panic at {site}");
+        }
+        Some(FaultKind::Delay(ms)) => {
+            INJECTED_DELAYS.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(ms));
+            false
+        }
+        Some(FaultKind::Error) => {
+            INJECTED_ERRORS.fetch_add(1, Ordering::Relaxed);
+            true
+        }
+    }
+}
+
+/// A panic-isolation boundary caught an unwind (pool worker retry,
+/// stager fallback, builder respawn, serving-loop backstop).
+pub fn note_caught() {
+    CAUGHT.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A poison-recovering lock wrapper recovered a poisoned guard.
+pub fn note_lock_recovered() {
+    LOCK_RECOVERED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Snapshot of the registry counters (the metrics `faults` line).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub injected_panics: u64,
+    pub injected_delays: u64,
+    pub injected_errors: u64,
+    pub caught: u64,
+    pub lock_recovered: u64,
+}
+
+impl FaultStats {
+    pub fn injected(&self) -> u64 {
+        self.injected_panics + self.injected_delays + self.injected_errors
+    }
+}
+
+pub fn stats() -> FaultStats {
+    FaultStats {
+        injected_panics: INJECTED_PANICS.load(Ordering::Relaxed),
+        injected_delays: INJECTED_DELAYS.load(Ordering::Relaxed),
+        injected_errors: INJECTED_ERRORS.load(Ordering::Relaxed),
+        caught: CAUGHT.load(Ordering::Relaxed),
+        lock_recovered: LOCK_RECOVERED.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_multi_rule_specs() {
+        let p = FaultPlan::parse(
+            "stage.prepare:panic:0.5:3, pool.worker:delay2:1.0:0 ,reshard.install:err:0.25:1",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0].kind, FaultKind::Panic);
+        assert_eq!(p.rules[0].remaining, 3);
+        assert_eq!(p.rules[1].kind, FaultKind::Delay(2));
+        assert_eq!(p.rules[1].remaining, u64::MAX, "count 0 = unlimited");
+        assert_eq!(p.rules[2].kind, FaultKind::Error);
+        assert!(FaultPlan::parse("", 7).unwrap().is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "nope.site:panic:0.5:1",       // unknown site
+            "stage.prepare:explode:0.5:1", // unknown kind
+            "stage.prepare:panic:1.5:1",   // prob out of range
+            "stage.prepare:panic:0:1",     // prob must be > 0
+            "stage.prepare:panic:0.5",     // missing field
+            "stage.prepare:delayx:0.5:1",  // bad delay
+            "stage.commit:panic:0.5:1",    // mid-fence panic forbidden
+        ] {
+            assert!(FaultPlan::parse(bad, 1).is_err(), "{bad}");
+        }
+        // err at stage.commit is the supported forced-conflict form.
+        assert!(FaultPlan::parse("stage.commit:err:0.5:1", 1).is_ok());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_seed_and_count_limited() {
+        let draw = |seed: u64| {
+            let mut p = FaultPlan::parse("test.site:err:0.5:4", seed).unwrap();
+            (0..64).map(|_| p.check("test.site").is_some()).collect::<Vec<_>>()
+        };
+        assert_eq!(draw(42), draw(42), "same seed, same schedule");
+        assert_ne!(draw(42), draw(43), "seed changes the schedule");
+        assert_eq!(draw(42).iter().filter(|&&hit| hit).count(), 4, "count caps total fires");
+        // Draws at other sites pull nothing from this rule's stream.
+        let mut p = FaultPlan::parse("test.site:err:1.0:1", 1).unwrap();
+        assert!(p.check("test.other").is_none());
+        assert!(p.check("test.site").is_some());
+    }
+
+    #[test]
+    fn global_registry_fires_counts_and_disarms() {
+        // Serialized against other tests of the *global* registry by
+        // using only `test.`-prefixed sites no other code polls.
+        let _g = arm_guard(FaultPlan::parse("test.reg:err:1.0:2,test.lat:delay:1.0:1", 3).unwrap());
+        assert!(fire("test.reg"));
+        assert!(fire("test.reg"));
+        assert!(!fire("test.reg"), "count exhausted");
+        assert!(!fire("test.lat"), "delay returns false");
+        assert!(!fire("test.unarmed"));
+        let s = stats();
+        assert_eq!(s.injected_errors, 2);
+        assert_eq!(s.injected_delays, 1);
+        assert_eq!(s.injected(), 3);
+        drop(_g);
+        assert!(!fire("test.reg"), "disarmed on guard drop");
+    }
+
+    #[test]
+    fn injected_panic_unwinds_and_is_countable() {
+        let _g = arm_guard(FaultPlan::parse("test.boom:panic:1.0:1", 5).unwrap());
+        let r = std::panic::catch_unwind(|| fire("test.boom"));
+        assert!(r.is_err(), "panic kind unwinds");
+        note_caught();
+        let s = stats();
+        assert_eq!(s.injected_panics, 1);
+        assert!(s.caught >= 1);
+        assert!(!fire("test.boom"), "single-shot");
+    }
+}

@@ -6,9 +6,11 @@
 pub mod bits;
 pub mod cli;
 pub mod csv;
+pub mod faults;
 pub mod json;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub mod sync;
 pub mod timer;

@@ -9,6 +9,18 @@
 //! the hot-path engines use it to hand back per-worker `Counters` that
 //! the caller sums, instead of funnelling every worker through a shared
 //! `Mutex` (§Perf: no lock traffic inside the query loop).
+//!
+//! §Robustness: spawned workers are panic-isolated. A worker that
+//! unwinds (a bug, or an injected `pool.worker` fault) is caught at the
+//! join, counted via [`faults::note_caught`], and its chunk re-run
+//! inline on the calling thread — the chunk closures are pure functions
+//! of their disjoint slice, so an inline retry produces exactly the
+//! result the dead worker would have. The inline paths (single chunk,
+//! and the retry itself) never poll the fault registry, so a retry
+//! cannot re-draw the fault that killed the worker.
+
+use crate::util::faults;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 
 /// Number of workers to use: `RTXRMQ_THREADS` env override, else the
 /// machine's available parallelism.
@@ -71,9 +83,28 @@ where
     }
     let f = &f;
     std::thread::scope(|s| {
-        let handles: Vec<_> =
-            slices.into_iter().map(|(off, slice)| s.spawn(move || f(off, slice))).collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+        let handles: Vec<_> = slices
+            .into_iter()
+            .map(|(off, slice)| {
+                s.spawn(move || {
+                    let r = catch_unwind(AssertUnwindSafe(|| {
+                        faults::fire("pool.worker");
+                        f(off, &mut *slice)
+                    }));
+                    (off, slice, r.ok())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                let (off, slice, r) = h.join().expect("worker thread infrastructure failed");
+                r.unwrap_or_else(|| {
+                    faults::note_caught();
+                    f(off, slice)
+                })
+            })
+            .collect()
     })
 }
 
@@ -119,11 +150,27 @@ where
         return;
     }
     let f = &f;
+    // Ranges whose worker panicked; re-run inline after the scope (the
+    // closures are idempotent over their disjoint ranges).
+    let failed: std::sync::Mutex<Vec<std::ops::Range<usize>>> = std::sync::Mutex::new(Vec::new());
     std::thread::scope(|s| {
         for r in ranges {
-            s.spawn(move || f(r));
+            let failed = &failed;
+            s.spawn(move || {
+                let attempt = catch_unwind(AssertUnwindSafe(|| {
+                    faults::fire("pool.worker");
+                    f(r.clone())
+                }));
+                if attempt.is_err() {
+                    failed.lock().unwrap_or_else(|p| p.into_inner()).push(r);
+                }
+            });
         }
     });
+    for r in failed.into_inner().unwrap_or_else(|p| p.into_inner()) {
+        faults::note_caught();
+        f(r);
+    }
 }
 
 #[cfg(test)]
@@ -198,5 +245,42 @@ mod tests {
         let mut v = vec![0u8; 16];
         for_each_chunk_mut(&mut v, 1, |_, s| s.fill(7));
         assert!(v.iter().all(|&x| x == 7));
+    }
+
+    #[test]
+    fn map_chunks_retries_panicked_worker_inline() {
+        // First invocation touching offset 0 dies mid-write; the join
+        // catches it and the inline retry recomputes the exact chunk.
+        let boom = std::sync::atomic::AtomicBool::new(true);
+        let mut v = vec![0usize; 1000];
+        let sums = map_chunks_mut(&mut v, 4, |off, slice| {
+            for (k, x) in slice.iter_mut().enumerate() {
+                *x = off + k;
+            }
+            if off == 0 && boom.swap(false, Ordering::SeqCst) {
+                panic!("worker dies after writing");
+            }
+            slice.iter().sum::<usize>()
+        });
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i));
+        assert_eq!(sums.len(), 4);
+        assert_eq!(sums.iter().sum::<usize>(), (0..1000).sum::<usize>());
+    }
+
+    #[test]
+    fn run_chunked_retries_panicked_range() {
+        let boom = std::sync::atomic::AtomicBool::new(true);
+        let visited = std::sync::Mutex::new(vec![0u32; 1003]);
+        run_chunked(1003, 5, |r| {
+            if boom.swap(false, Ordering::SeqCst) {
+                panic!("worker dies before touching its range");
+            }
+            let mut v = visited.lock().unwrap_or_else(|p| p.into_inner());
+            for i in r {
+                v[i] = 1; // idempotent: retry rewrites the same slots
+            }
+        });
+        let v = visited.into_inner().unwrap_or_else(|p| p.into_inner());
+        assert!(v.iter().all(|&x| x == 1), "every index visited despite one dead worker");
     }
 }

@@ -1,0 +1,113 @@
+//! Poison-recovering `Mutex` / `RwLock` wrappers. The serving stack
+//! isolates panics with `catch_unwind` at thread boundaries, but a
+//! panic while a guard is held still poisons a std lock — and every
+//! later `.lock().unwrap()` would then wedge the serving loop forever.
+//! These wrappers recover the guard instead (`PoisonError::into_inner`)
+//! and count the recovery in the fault registry, so one dead worker can
+//! never take the whole coordinator down.
+//!
+//! Recovering a poisoned guard is only sound because every structure
+//! guarded by these locks is repaired (or rebuilt from source values)
+//! by the same `catch_unwind` boundary that caught the panic — see the
+//! "Failure model" note in `rmq/mod.rs`.
+
+use crate::util::faults;
+use std::sync::{
+    Mutex as StdMutex, MutexGuard, RwLock as StdRwLock, RwLockReadGuard, RwLockWriteGuard,
+    TryLockError,
+};
+
+/// `std::sync::Mutex` whose `lock()` returns the guard directly,
+/// recovering (and counting) poison instead of propagating it.
+#[derive(Debug, Default)]
+pub struct Mutex<T: ?Sized>(StdMutex<T>);
+
+impl<T> Mutex<T> {
+    pub const fn new(value: T) -> Self {
+        Mutex(StdMutex::new(value))
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        self.0.lock().unwrap_or_else(|p| {
+            faults::note_lock_recovered();
+            p.into_inner()
+        })
+    }
+
+    pub fn try_lock(&self) -> Option<MutexGuard<'_, T>> {
+        match self.0.try_lock() {
+            Ok(g) => Some(g),
+            Err(TryLockError::Poisoned(p)) => {
+                faults::note_lock_recovered();
+                Some(p.into_inner())
+            }
+            Err(TryLockError::WouldBlock) => None,
+        }
+    }
+}
+
+/// `std::sync::RwLock` with the same poison-recovering contract.
+#[derive(Debug, Default)]
+pub struct RwLock<T: ?Sized>(StdRwLock<T>);
+
+impl<T> RwLock<T> {
+    pub const fn new(value: T) -> Self {
+        RwLock(StdRwLock::new(value))
+    }
+
+    pub fn read(&self) -> RwLockReadGuard<'_, T> {
+        self.0.read().unwrap_or_else(|p| {
+            faults::note_lock_recovered();
+            p.into_inner()
+        })
+    }
+
+    pub fn write(&self) -> RwLockWriteGuard<'_, T> {
+        self.0.write().unwrap_or_else(|p| {
+            faults::note_lock_recovered();
+            p.into_inner()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn mutex_survives_panic_while_held() {
+        let m = Mutex::new(vec![1, 2, 3]);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock();
+            panic!("die with the guard held");
+        }));
+        assert!(r.is_err());
+        // A std mutex would now be poisoned; the wrapper recovers.
+        assert_eq!(*m.lock(), vec![1, 2, 3]);
+        assert!(m.try_lock().is_some());
+    }
+
+    #[test]
+    fn rwlock_survives_panic_while_write_held() {
+        let l = RwLock::new(7u64);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = l.write();
+            *g = 8;
+            panic!("die mid-write");
+        }));
+        assert!(r.is_err());
+        assert_eq!(*l.read(), 8, "writes before the panic are visible");
+        *l.write() = 9;
+        assert_eq!(*l.read(), 9);
+    }
+
+    #[test]
+    fn try_lock_contends_without_poison() {
+        let m = Mutex::new(0u8);
+        let g = m.lock();
+        assert!(m.try_lock().is_none(), "held elsewhere, not poisoned");
+        drop(g);
+        assert!(m.try_lock().is_some());
+    }
+}

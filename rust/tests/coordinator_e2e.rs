@@ -91,6 +91,7 @@ fn batching_under_concurrency_is_lossless() {
                 max_batch_queries: 512,
                 max_wait: std::time::Duration::from_millis(3),
                 queue_cap: 64,
+                ..Default::default()
             },
             engine_workers: 2,
             ..Default::default()
@@ -117,7 +118,7 @@ fn batching_under_concurrency_is_lossless() {
     for h in handles {
         h.join().unwrap();
     }
-    let m = c.metrics.lock().unwrap();
+    let m = c.metrics.lock();
     assert_eq!(m.requests, 120);
     // Batching must have fused at least some requests.
     let batches: u64 = rtxrmq::coordinator::engine::EngineKind::all()

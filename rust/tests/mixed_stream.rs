@@ -9,12 +9,25 @@
 use rtxrmq::coordinator::engine::{
     CommitOutcome, EngineCfg, LifecycleCfg, ShardBlock, ShardedEngine,
 };
-use rtxrmq::rmq::sharded::{ShardedOptions, ShardedRmq};
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
 use rtxrmq::rmq::naive_rmq;
+use rtxrmq::rmq::sharded::{ShardedOptions, ShardedRmq};
+use rtxrmq::util::faults::{self, FaultPlan};
 use rtxrmq::util::rng::Rng;
 use rtxrmq::workload::{gen_array, gen_mixed, gen_queries, Op, RangeDist};
+
+/// Every test in this binary serializes on one mutex: the chaos tests
+/// arm the **process-global** fault registry, and the clean tests
+/// assert exact pipeline counters (e.g. `staged_fallbacks == 0`) that a
+/// concurrently-armed schedule would perturb. Cargo runs the tests of
+/// one binary on concurrent threads, so the isolation must be explicit.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    // A panicked test poisons the mutex; later tests still run.
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 /// The oracle: apply the op stream to a plain array, answering queries
 /// by rescan — the sequential semantics the coordinator must reproduce.
@@ -43,6 +56,7 @@ fn coordinator(xs: &[f32], shard_block: ShardBlock) -> Coordinator {
 
 #[test]
 fn gen_mixed_streams_match_oracle_hit_for_hit() {
+    let _guard = serial();
     let n = 1 << 12;
     let xs = gen_array(n, 21);
     let mut oracle = xs.clone();
@@ -63,6 +77,7 @@ fn duplicate_heavy_streams_keep_leftmost_ties() {
     // Quantised values force constant ties between the left partial,
     // summary and right partial probes — and between pre- and
     // post-update values.
+    let _guard = serial();
     let n = 1 << 11;
     let xs: Vec<f32> = gen_array(n, 23).iter().map(|v| (v * 4.0).floor() / 4.0).collect();
     let mut oracle = xs.clone();
@@ -89,6 +104,7 @@ fn update_bursts_straddling_block_seams() {
     // Bursts land exactly on the block seams (last index of block b,
     // first of b+1), fenced between query chunks whose ranges straddle
     // the same seams — the decomposition's worst case.
+    let _guard = serial();
     let n = 1024usize;
     let bs = 64usize;
     let xs = gen_array(n, 25);
@@ -116,6 +132,7 @@ fn update_bursts_straddling_block_seams() {
 fn back_to_back_batches_touching_the_same_block() {
     // Consecutive requests hammer one block (refit-after-refit on the
     // same BVH) with full-range reads fencing each burst.
+    let _guard = serial();
     let n = 512usize;
     let xs = gen_array(n, 27);
     let mut oracle = xs.clone();
@@ -141,6 +158,7 @@ fn back_to_back_batches_touching_the_same_block() {
 fn auto_tuned_shard_block_serves_mixed_streams() {
     // `--shard-block auto` end to end: the tuner picks the block size,
     // the stream still matches the oracle hit for hit.
+    let _guard = serial();
     let n = 1 << 12;
     let xs = gen_array(n, 29);
     let mut oracle = xs.clone();
@@ -164,6 +182,7 @@ fn quiet_period_rebuild_reroutes_large_ranges_to_lca() {
     // batch lands on the rebuilt LCA engine — with every answer,
     // including those served while the epoch swap was in flight,
     // matching the sequential oracle.
+    let _guard = serial();
     let n = 1usize << 15;
     let xs = gen_array(n, 41);
     let mut oracle = xs.clone();
@@ -214,7 +233,7 @@ fn quiet_period_rebuild_reroutes_large_ranges_to_lca() {
         }
     }
     assert!(fired, "quiet period must trigger a background rebuild");
-    assert!(c.metrics.lock().unwrap().rebuilds >= 1);
+    assert!(c.metrics.lock().rebuilds >= 1);
     // Fresh epoch: the crossover routing is back — large ranges go to
     // the rebuilt LCA (not the shards), hit-for-hit with the oracle.
     let large = gen_queries(n, 128, RangeDist::Large, &mut rng);
@@ -238,6 +257,7 @@ fn rebuild_mid_stream_pins_segments_to_their_epochs() {
     // segments finish on the epoch they pinned, later segments use the
     // new one (response epochs are monotone per client), and every
     // answer is bit-identical to each client's sequential oracle.
+    let _guard = serial();
     let n = 1usize << 14;
     let region = n / 4;
     let xs = gen_array(n, 43);
@@ -307,7 +327,7 @@ fn rebuild_mid_stream_pins_segments_to_their_epochs() {
     // Later segments use the new epoch.
     let resp = c.query(vec![(0, (n - 1) as u32)]).unwrap();
     assert!(resp.epoch >= 1, "post-rebuild responses carry the new epoch");
-    assert!(c.metrics.lock().unwrap().updates > 0);
+    assert!(c.metrics.lock().updates > 0);
 }
 
 #[test]
@@ -317,6 +337,7 @@ fn reshard_trigger_fires_when_the_offered_distribution_shifts() {
     // offered load is pure large ranges — the workload-fed tuner drifts
     // >= 2x from the live block size, the lifecycle re-shards in the
     // background, and answers stay exact throughout.
+    let _guard = serial();
     let n = 1usize << 15;
     let xs = gen_array(n, 44);
     let c = Coordinator::start(
@@ -351,7 +372,7 @@ fn reshard_trigger_fires_when_the_offered_distribution_shifts() {
     let live = c.lifecycle.shard_block_live();
     let drift = (live as f64 / initial as f64).max(initial as f64 / live as f64);
     assert!(drift >= 2.0, "initial {initial} live {live}");
-    assert_eq!(c.metrics.lock().unwrap().reshards, c.lifecycle.reshards());
+    assert_eq!(c.metrics.lock().reshards, c.lifecycle.reshards());
     // The re-sharded engine still answers exactly — full check on a
     // small-range batch routed to the shards.
     let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
@@ -393,6 +414,7 @@ fn pipelined_and_serial_executors_agree_hit_for_hit() {
     // The tentpole invariant: the two-lane pipelined executor must be
     // bit-identical to the serial executor (and both to the sequential
     // oracle) on fence-heavy streams.
+    let _guard = serial();
     let n = 1 << 12;
     let xs = gen_array(n, 50);
     let pipelined = Coordinator::start(
@@ -423,12 +445,12 @@ fn pipelined_and_serial_executors_agree_hit_for_hit() {
         assert_eq!(b.answers, want, "serial, round {round}");
         assert_eq!(a.updates_applied, b.updates_applied);
     }
-    let mp = pipelined.metrics.lock().unwrap();
+    let mp = pipelined.metrics.lock();
     assert!(mp.staged_batches > 0, "fence-heavy streams must exercise the overlap lane");
     assert_eq!(mp.staged_fallbacks, 0, "single-writer streams never conflict");
     assert!(mp.overlap_ns_hidden_total > 0);
     drop(mp);
-    assert_eq!(serial.metrics.lock().unwrap().staged_batches, 0);
+    assert_eq!(serial.metrics.lock().staged_batches, 0);
     pipelined.shutdown();
     serial.shutdown();
 }
@@ -439,6 +461,7 @@ fn pipelined_update_then_query_on_the_same_block() {
     // rebuilds exactly the block the preceding query segment is
     // probing, and the query after the fence re-reads it. Everything is
     // confined to one block so any leak is unmissable.
+    let _guard = serial();
     let n = 1024usize;
     let bs = 64usize;
     let xs = gen_array(n, 52);
@@ -457,7 +480,7 @@ fn pipelined_update_then_query_on_the_same_block() {
         let resp = c.submit_mixed(ops).unwrap();
         assert_eq!(resp.answers, want, "round {round}");
     }
-    assert!(c.metrics.lock().unwrap().staged_batches > 0);
+    assert!(c.metrics.lock().staged_batches > 0);
     c.shutdown();
 }
 
@@ -467,6 +490,7 @@ fn back_to_back_update_segments_mix_staged_and_direct_paths() {
     // path); interior ones ride the overlap lane. Streams shaped
     // [u..][q..][u..] and [q..][u..][u-leading next request] pin both
     // paths and their interleaving across consecutive fused batches.
+    let _guard = serial();
     let n = 1 << 11;
     let xs = gen_array(n, 54);
     let mut oracle = xs.clone();
@@ -498,7 +522,7 @@ fn back_to_back_update_segments_mix_staged_and_direct_paths() {
             assert_eq!(resp.answers, want, "round {round} shape {si}");
         }
     }
-    let m = c.metrics.lock().unwrap();
+    let m = c.metrics.lock();
     assert!(m.staged_batches > 0, "interior update segments staged");
     assert!(
         m.staged_batches < m.update_batches,
@@ -516,6 +540,7 @@ fn commit_conflict_fallback_is_exact_through_the_public_api() {
     // batch, then separately a re-shard): the commit must detect it,
     // fall back to the direct path, and end bit-identical to applying
     // the batches in commit order.
+    let _guard = serial();
     let mut rng = Rng::new(56);
     let xs: Vec<f32> = (0..512).map(|_| rng.f32()).collect();
     let engine = ShardedEngine::new(ShardedRmq::with_options(
@@ -563,6 +588,7 @@ fn epoch_swap_during_overlapped_prepare_stays_exact() {
     // sporadic updates so rebuilds/re-shards land *between* staged
     // commits. Every answer must match the sequential oracle and at
     // least one background publish must actually have happened.
+    let _guard = serial();
     let n = 1usize << 14;
     let xs = gen_array(n, 57);
     let mut oracle = xs.clone();
@@ -607,7 +633,7 @@ fn epoch_swap_during_overlapped_prepare_stays_exact() {
         }
     }
     assert!(publishes >= 1, "no background publish landed during the pipelined stream");
-    let m = c.metrics.lock().unwrap();
+    let m = c.metrics.lock();
     assert!(m.staged_batches > 0);
     // Conflicted commits (a re-shard racing a staged prepare) are legal
     // — the fallback path absorbs them — but every answer above was
@@ -624,6 +650,7 @@ fn concurrent_mixed_clients_in_disjoint_regions() {
     // sequentially consistent in isolation (other clients never touch
     // its region), so its answers must match its private oracle even
     // though the coordinator interleaves and fuses across clients.
+    let _guard = serial();
     let n = 1 << 12;
     let region = n / 4;
     let xs = gen_array(n, 31);
@@ -658,7 +685,147 @@ fn concurrent_mixed_clients_in_disjoint_regions() {
     for h in handles {
         h.join().unwrap();
     }
-    let m = c.metrics.lock().unwrap();
+    let m = c.metrics.lock();
     assert_eq!(m.requests, 40);
     assert!(m.updates > 0, "streams contained updates");
+}
+
+// ---------------------------------------------------------------------
+// Chaos differentials: the same oracle contract, but with a seeded fault
+// schedule armed. The guarantee under test is absorb-at-source — every
+// injected panic/delay/forced-error is caught below the serving loop, so
+// every *accepted* request's answers stay bit-identical to the
+// sequential oracle, and the fault metrics record the recovery.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chaos_staging_lane_faults_keep_accepted_answers_exact() {
+    let _guard = serial();
+    // The schedule kills the staged-prepare worker twice, delays it
+    // twice, kills one per-block spec build, forces commit conflicts
+    // (the err form — panic at commit is rejected by the parser), and
+    // sprinkles pool-worker panics. All deterministic from the seed.
+    let arm = faults::arm_guard(
+        FaultPlan::parse(
+            "stage.prepare:panic:1.0:2,stage.prepare:delay2:1.0:2,\
+             stage.build:panic:1.0:1,stage.commit:err:0.5:3,pool.worker:panic:0.2:4",
+            4242,
+        )
+        .unwrap(),
+    );
+    let n = 1 << 12;
+    let xs = gen_array(n, 60);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(64));
+    let mut rng = Rng::new(61);
+    for round in 0..12 {
+        let ops = fence_heavy_ops(n, 64, None, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "chaos round {round}");
+    }
+    c.sync_faults();
+    let m = c.metrics.lock();
+    assert!(m.injected_faults >= 5, "the schedule must actually fire: {m}");
+    assert!(m.caught_panics >= 1, "injected panics were caught, not propagated");
+    assert!(m.degraded_fallbacks >= 1, "a dead staged prepare fell back to the direct path");
+    assert!(m.to_string().contains("injected="), "faults line surfaces in the report: {m}");
+    drop(m);
+    drop(arm); // disarm before shutdown so teardown runs clean
+    c.shutdown();
+}
+
+#[test]
+fn chaos_builder_panic_respawns_and_the_rebuild_still_lands() {
+    let _guard = serial();
+    // The first background rebuild job panics at `build.statics`; the
+    // builder thread must respawn, the lifecycle must reschedule, and
+    // the retry must publish a fresh epoch — self-healing end to end.
+    let arm = faults::arm_guard(FaultPlan::parse("build.statics:panic:1.0:1", 7).unwrap());
+    let n = 1usize << 15;
+    let xs = gen_array(n, 62);
+    let mut oracle = xs.clone();
+    let c = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::Heuristic,
+            engines: EngineCfg { shard_block: ShardBlock::Sqrt },
+            lifecycle: LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(63);
+    // Busy mixed phase: make the static engines stale.
+    for round in 0..6 {
+        let ops = gen_mixed(n, 64, 0.3, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "busy round {round}");
+    }
+    // Quiet phase: the first scheduled rebuild dies to the injected
+    // panic; keep serving until the respawned builder's retry lands.
+    let mut fired = false;
+    for round in 0..900 {
+        let qs = gen_queries(n, 64, RangeDist::Small, &mut rng);
+        let resp = c.query(qs.clone()).unwrap();
+        for (k, &(l, r)) in qs.iter().take(2).enumerate() {
+            assert_eq!(
+                resp.answers[k],
+                naive_rmq(&oracle, l as usize, r as usize) as u32,
+                "quiet round {round} ({l},{r}) via {}",
+                resp.engine
+            );
+        }
+        if c.lifecycle.rebuilds() >= 1 {
+            fired = true;
+            break;
+        }
+    }
+    assert!(fired, "the rebuild must land after the injected builder panic");
+    c.sync_faults();
+    let m = c.metrics.lock();
+    assert_eq!(m.builder_respawns, 1, "the injected panic killed exactly one job: {m}");
+    assert!(m.caught_panics >= 1);
+    assert!(m.injected_faults >= 1);
+    drop(m);
+    drop(arm);
+    c.shutdown();
+}
+
+#[test]
+fn chaos_handoff_fault_rejects_the_group_whole_and_serving_continues() {
+    let _guard = serial();
+    // A panic at the batcher hand-off drops the pulled group before any
+    // segment executes: its submitters see a rejection (closed reply
+    // channel), never a partial effect — so the oracle simply skips the
+    // rejected stream, and later requests serve normally.
+    let arm = faults::arm_guard(FaultPlan::parse("batcher.handoff:panic:1.0:1", 9).unwrap());
+    let n = 1 << 10;
+    let xs = gen_array(n, 64);
+    let mut oracle = xs.clone();
+    let c = coordinator(&xs, ShardBlock::Fixed(32));
+    let mut rng = Rng::new(65);
+    let (mut served, mut rejected) = (0u32, 0u32);
+    for round in 0..6 {
+        let ops = fence_heavy_ops(n, 32, None, &mut rng);
+        match c.submit_mixed(ops.clone()) {
+            Ok(resp) => {
+                // Accepted: must be exact, and the oracle advances.
+                let want = oracle_run(&mut oracle, &ops);
+                assert_eq!(resp.answers, want, "round {round}");
+                served += 1;
+            }
+            Err(_) => rejected += 1, // rejected whole: oracle untouched
+        }
+    }
+    assert_eq!(rejected, 1, "exactly the first pulled group died to the injected fault");
+    assert_eq!(served, 5, "serving continued after the caught panic");
+    c.sync_faults();
+    let m = c.metrics.lock();
+    assert!(m.caught_panics >= 1);
+    assert!(m.degraded_fallbacks >= 1, "the lost group is counted as a degraded event");
+    drop(m);
+    drop(arm);
+    c.shutdown();
 }
