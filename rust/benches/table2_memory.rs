@@ -8,13 +8,23 @@
 //! | 2^26  | 268.43 | 4512.15     | 3601.46 (79%) | 170.52 | 20.12 |
 //!
 //! Emits `results/table2_memory.csv` and prints measured-vs-paper rows.
+//!
+//! The sharded columns extend the paper's table with the two-level
+//! engine's resident footprint: `sharded_rtx` keeps one wide BVH per
+//! block, `sharded_inst` (the default backend) shares one shape tree
+//! per block length and stores ~6 bytes of compressed leaf records per
+//! element — ISSUE 7's acceptance gate (`inst × 4 ≤ rtx` at every n,
+//! bit-identical answers) is asserted inline, so a soak run of this
+//! bench at `--paper-scale` (n = 2^26) is the memory acceptance check.
 
 use rtxrmq::bench_harness::{print_table, BenchCfg};
 use rtxrmq::rmq::hrmq::Hrmq;
 use rtxrmq::rmq::lca::LcaRmq;
 use rtxrmq::rmq::rtx::RtxRmq;
+use rtxrmq::rmq::sharded::{ShardBackend, ShardedOptions, ShardedRmq};
 use rtxrmq::rmq::RmqSolver;
 use rtxrmq::util::csv::CsvWriter;
+use rtxrmq::util::rng::Rng;
 use rtxrmq::workload::gen_array;
 
 fn mb(bytes: usize) -> f64 {
@@ -31,7 +41,18 @@ fn main() {
     ];
     let mut csv = CsvWriter::create(
         cfg.out_dir.join("table2_memory.csv"),
-        &["n", "input_mb", "rtx_default_mb", "rtx_compacted_mb", "compaction_pct", "lca_mb", "hrmq_mb"],
+        &[
+            "n",
+            "input_mb",
+            "rtx_default_mb",
+            "rtx_compacted_mb",
+            "compaction_pct",
+            "lca_mb",
+            "hrmq_mb",
+            "sharded_rtx_mb",
+            "sharded_inst_mb",
+            "inst_ratio",
+        ],
     )
     .unwrap();
     let mut rows = Vec::new();
@@ -45,6 +66,18 @@ fn main() {
         let (default_b, compact_b) = rtx.scene().bvh.optix_size_estimate(rtx.prim_count());
         let lca = LcaRmq::new(&xs);
         let hrmq = Hrmq::new(&xs);
+        // Two-level sharded engine, per-block BVHs vs instanced blocks
+        // (shared shape trees + compressed leaf records), at the auto
+        // (√n) block size both would serve with.
+        let sharded_rtx = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { backend: ShardBackend::Rtx, ..Default::default() },
+        );
+        let sharded_inst = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { backend: ShardBackend::Instanced, ..Default::default() },
+        );
+        let (rtx_b, inst_b) = (sharded_rtx.memory_bytes(), sharded_inst.memory_bytes());
         let pct = 100.0 * compact_b as f64 / default_b as f64;
         csv.row(&[
             n.to_string(),
@@ -54,6 +87,9 @@ fn main() {
             format!("{pct:.0}"),
             format!("{:.3}", mb(lca.memory_bytes())),
             format!("{:.4}", mb(hrmq.memory_bytes())),
+            format!("{:.3}", mb(rtx_b)),
+            format!("{:.3}", mb(inst_b)),
+            format!("{:.1}", rtx_b as f64 / inst_b as f64),
         ])
         .unwrap();
         rows.push(vec![
@@ -63,16 +99,43 @@ fn main() {
             format!("{:.2} ({pct:.0}%) (paper {p_rtxc})", mb(compact_b)),
             format!("{:.3} (paper {p_lca})", mb(lca.memory_bytes())),
             format!("{:.4} (paper {p_hrmq})", mb(hrmq.memory_bytes())),
+            format!("{:.3}", mb(rtx_b)),
+            format!("{:.3} ({:.1}x smaller)", mb(inst_b), rtx_b as f64 / inst_b as f64),
         ]);
         // Structural check (the paper's ordering must hold):
         assert!(hrmq.memory_bytes() < lca.memory_bytes());
         assert!(lca.memory_bytes() < default_b);
         assert!(compact_b < default_b);
+        // ISSUE 7's memory acceptance: instanced blocks resident at
+        // least 4x below per-block BVHs — at equal answers.
+        assert!(
+            inst_b * 4 <= rtx_b,
+            "n={n}: instanced {inst_b} B not 4x below sharded-rtx {rtx_b} B"
+        );
+        let mut rng = Rng::new(cfg.seed ^ 0x7AB1E2);
+        for _ in 0..64 {
+            let l = rng.range(0, n - 1);
+            let r = rng.range(l, n - 1);
+            assert_eq!(
+                sharded_inst.rmq(l as u32, r as u32),
+                sharded_rtx.rmq(l as u32, r as u32),
+                "n={n} ({l},{r}): instanced answer diverged"
+            );
+        }
     }
     csv.flush().unwrap();
     print_table(
         "Table 2: data-structure memory (MB), measured vs paper",
-        &["n", "input", "RTXRMQ default", "RTXRMQ compacted", "LCA", "HRMQ"],
+        &[
+            "n",
+            "input",
+            "RTXRMQ default",
+            "RTXRMQ compacted",
+            "LCA",
+            "HRMQ",
+            "sharded rtx",
+            "sharded inst",
+        ],
         &rows,
     );
     println!(

@@ -2,11 +2,16 @@
 //! committed baseline (`rtxrmq bench-compare --baseline …`).
 //!
 //! Points are matched by (layout, n, batch); for each matched point the
-//! gate checks `ns_per_query` and — when both sides measured the write
-//! path — `upd_ns_per_op`, and fails on any relative regression above
-//! the tolerance (default 25%, the CI knob). A baseline point missing
-//! from the current run is coverage loss and also fails. New points in
-//! the current run are reported but never gate.
+//! gate checks `ns_per_query`, — when both sides measured the write
+//! path — `upd_ns_per_op`, and — when both sides recorded it —
+//! `resident_bytes` (memory regressions gate exactly like time
+//! regressions: the instanced backend's ≥4× footprint win must not
+//! erode silently). Any relative regression above the tolerance
+//! (default 25%, the CI knob) fails. `build_ms` is carried in the JSON
+//! but not gated: build wall time is too noisy on shared CI runners. A
+//! baseline point missing from the current run is coverage loss and
+//! also fails. New points in the current run are reported but never
+//! gate.
 //!
 //! A baseline whose `provenance` field says `modeled-bootstrap` (the
 //! committed placeholder seeded before any toolchain host ran the
@@ -27,7 +32,7 @@ pub struct CompareRow {
     pub layout: String,
     pub n: u64,
     pub batch: u64,
-    /// "ns/query" or "ns/update".
+    /// "ns/query", "ns/update" or "resident_bytes".
     pub metric: &'static str,
     pub baseline: f64,
     pub current: f64,
@@ -62,7 +67,7 @@ impl CompareReport {
     }
 }
 
-fn points_of(doc: &Json) -> Result<Vec<(String, u64, u64, f64, f64)>, String> {
+fn points_of(doc: &Json) -> Result<Vec<(String, u64, u64, f64, f64, f64)>, String> {
     let arr = doc
         .get("points")
         .and_then(|p| p.as_arr())
@@ -86,7 +91,10 @@ fn points_of(doc: &Json) -> Result<Vec<(String, u64, u64, f64, f64)>, String> {
             .and_then(|v| v.as_f64())
             .ok_or_else(|| format!("point {i}: missing ns_per_query"))?;
         let upd = p.get("upd_ns_per_op").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        out.push((layout.to_string(), n, batch, ns, upd));
+        // Baselines committed before the memory column existed read as
+        // 0.0 and fall through the both-sides-measured guard below.
+        let resident = p.get("resident_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        out.push((layout.to_string(), n, batch, ns, upd, resident));
     }
     Ok(out)
 }
@@ -104,8 +112,8 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
     let base = points_of(baseline)?;
     let cur = points_of(current)?;
     let mut report = CompareReport { bootstrap_baseline, tolerance, ..Default::default() };
-    for (layout, n, batch, base_ns, base_upd) in &base {
-        let Some(&(_, _, _, cur_ns, cur_upd)) =
+    for (layout, n, batch, base_ns, base_upd, base_resident) in &base {
+        let Some(&(_, _, _, cur_ns, cur_upd, cur_resident)) =
             cur.iter().find(|(l, cn, cb, ..)| l == layout && cn == n && cb == batch)
         else {
             report.missing.push(format!("{layout} n={n} batch={batch}"));
@@ -113,8 +121,10 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
         };
         let mut push = |metric: &'static str, b: f64, c: f64| {
             if b <= 0.0 || c <= 0.0 {
-                // The write path is only measured with --update-frac;
-                // a side that didn't measure it cannot gate it.
+                // The write path is only measured with --update-frac,
+                // and resident_bytes only exists in post-instancing
+                // runs; a side that didn't measure a metric cannot
+                // gate it.
                 return;
             }
             let delta = c / b - 1.0;
@@ -131,6 +141,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
         };
         push("ns/query", *base_ns, cur_ns);
         push("ns/update", *base_upd, cur_upd);
+        push("resident_bytes", *base_resident, cur_resident);
     }
     for (layout, n, batch, ..) in &cur {
         if !base.iter().any(|(l, bn, bb, ..)| l == layout && bn == n && bb == batch) {
@@ -280,6 +291,39 @@ mod tests {
         assert_eq!(report.regressions().len(), 1, "the delta is still reported");
         assert!(!report.failed(), "placeholder baselines do not gate");
         assert!(summary_md(&report).contains("modeled-bootstrap"));
+    }
+
+    #[test]
+    fn memory_regression_fails_the_gate() {
+        let with_mem = |resident: f64| {
+            let rows = vec![obj(vec![
+                ("layout", Json::from("sharded")),
+                ("n", Json::from(65536u64)),
+                ("batch", Json::from(4096u64)),
+                ("ns_per_query", Json::from(300.0)),
+                ("upd_ns_per_op", Json::from(0.0)),
+                ("build_ms", Json::from(12.0)),
+                ("resident_bytes", Json::from(resident)),
+            ])];
+            obj(vec![("bench", Json::from("rmq_smoke")), ("points", Json::Arr(rows))])
+        };
+        let base = with_mem(400_000.0);
+        // 50% more resident bytes: the instanced footprint win eroded.
+        let bloated = with_mem(600_000.0);
+        let report = compare(&base, &bloated, 0.25).unwrap();
+        assert!(report.failed());
+        let reg = report.regressions();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg[0].metric, "resident_bytes");
+        assert!(summary_md(&report).contains("resident_bytes"));
+        // Within tolerance passes.
+        assert!(!compare(&base, &with_mem(440_000.0), 0.25).unwrap().failed());
+        // A pre-instancing baseline without the column reports nothing
+        // for it and cannot gate it (the both-sides-measured guard).
+        let old = smoke_doc(vec![("sharded", 65536, 4096, 300.0, 0.0)], None);
+        let report = compare(&old, &bloated, 0.25).unwrap();
+        assert_eq!(report.rows.len(), 1, "ns/query only: {:?}", report.rows);
+        assert!(!report.failed());
     }
 
     #[test]

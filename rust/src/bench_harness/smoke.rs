@@ -21,7 +21,7 @@ use crate::coordinator::engine::ShardBlock;
 use crate::geometry::precision::{best_block_size, OptixLimits};
 use crate::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
 use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
-use crate::rmq::Query;
+use crate::rmq::{Query, RmqSolver};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::workload::{gen_array, gen_updates};
@@ -69,6 +69,13 @@ pub struct SmokePoint {
     pub ns_per_query: f64,
     /// Wall-clock ns per applied point update (0 when not measured).
     pub upd_ns_per_op: f64,
+    /// Wall-clock ms to build this solver over the n-element array
+    /// (shared by every batch row of the same (n, solver) pair).
+    pub build_ms: f64,
+    /// `RmqSolver::memory_bytes` of the freshly built solver — the
+    /// resident-memory column the instanced backend is meant to shrink
+    /// (ISSUE 7's ≥4× acceptance gate reads this).
+    pub resident_bytes: usize,
     pub counters: Counters,
 }
 
@@ -97,15 +104,21 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
         } else {
             RtxMode::Flat
         };
+        let t0 = std::time::Instant::now();
         let mut sharded = ShardedRmq::with_options(
             &xs,
             ShardedOptions { block_size: cfg.shard_block.resolve(n), ..Default::default() },
         );
-        let mut rtx: Vec<(AccelLayout, RtxRmq)> = AccelLayout::all()
+        let sharded_build = (t0.elapsed().as_secs_f64() * 1e3, sharded.memory_bytes());
+        let mut rtx: Vec<(AccelLayout, RtxRmq, f64, usize)> = AccelLayout::all()
             .into_iter()
             .map(|layout| {
                 let opts = RtxOptions { mode, layout, ..Default::default() };
-                (layout, RtxRmq::with_options(&xs, opts))
+                let t0 = std::time::Instant::now();
+                let solver = RtxRmq::with_options(&xs, opts);
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let bytes = solver.memory_bytes();
+                (layout, solver, ms, bytes)
             })
             .collect();
         for &batch in &cfg.batches {
@@ -115,6 +128,8 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
             let mut measure =
                 |label: &'static str,
                  run: &dyn Fn(&[Query], usize) -> (Vec<u32>, Counters),
+                 build_ms: f64,
+                 resident_bytes: usize,
                  points: &mut Vec<SmokePoint>| {
                     // Warm the structures (page-in, branch predictors)
                     // off the clock, then time one full batch.
@@ -136,17 +151,25 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                         batch,
                         ns_per_query: wall_ns / batch as f64,
                         upd_ns_per_op: 0.0,
+                        build_ms,
+                        resident_bytes,
                         counters,
                     });
                 };
-            for (layout, solver) in &rtx {
+            for (layout, solver, build_ms, bytes) in &rtx {
                 let label = match layout {
                     AccelLayout::Binary => LABEL_BINARY,
                     AccelLayout::Wide => LABEL_WIDE,
                 };
-                measure(label, &|q, w| solver.batch_counted(q, w), &mut points);
+                measure(label, &|q, w| solver.batch_counted(q, w), *build_ms, *bytes, &mut points);
             }
-            measure(LABEL_SHARDED, &|q, w| sharded.batch_counted(q, w), &mut points);
+            measure(
+                LABEL_SHARDED,
+                &|q, w| sharded.batch_counted(q, w),
+                sharded_build.0,
+                sharded_build.1,
+                &mut points,
+            );
 
             // Write path: time one update batch per solver, then roll the
             // values back off the clock so later grid points (and the
@@ -159,7 +182,7 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                 // The grid point pushed one row per RTX layout plus the
                 // sharded row, in that order — mirror it structurally.
                 let base = points.len() - (rtx.len() + 1);
-                for (slot, (_, solver)) in rtx.iter_mut().enumerate() {
+                for (slot, (_, solver, ..)) in rtx.iter_mut().enumerate() {
                     let t0 = std::time::Instant::now();
                     solver.update_values(&updates);
                     points[base + slot].upd_ns_per_op =
@@ -179,24 +202,40 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
 
 /// Speedup summary rows vs the binary baseline: one row per
 /// (n, batch, non-binary label).
+///
+/// A grid point without a binary baseline (a partial grid — e.g. a
+/// filtered rerun, or a future column measured at sizes the binary
+/// layout can't build) is **skipped with a log line**, never reported
+/// as a bogus ratio: a missing or unmeasured (≤ 0 ns) baseline used to
+/// divide through regardless, producing `inf`/`NaN` speedups downstream.
 pub fn speedups(points: &[SmokePoint]) -> Vec<(usize, usize, &'static str, f64, f64, f64)> {
     let mut out = Vec::new();
-    for p in points.iter().filter(|p| p.layout == LABEL_BINARY) {
-        for label in [LABEL_WIDE, LABEL_SHARDED] {
-            if let Some(w) = points
-                .iter()
-                .find(|w| w.layout == label && w.n == p.n && w.batch == p.batch)
-            {
-                out.push((
-                    p.n,
-                    p.batch,
-                    label,
-                    p.ns_per_query,
-                    w.ns_per_query,
-                    p.ns_per_query / w.ns_per_query,
-                ));
-            }
+    for p in points.iter().filter(|p| p.layout != LABEL_BINARY) {
+        let baseline = points
+            .iter()
+            .find(|b| b.layout == LABEL_BINARY && b.n == p.n && b.batch == p.batch);
+        let Some(b) = baseline else {
+            eprintln!(
+                "bench-smoke: no binary baseline for {} n={} batch={} — skipping speedup row",
+                p.layout, p.n, p.batch
+            );
+            continue;
+        };
+        if b.ns_per_query <= 0.0 || p.ns_per_query <= 0.0 {
+            eprintln!(
+                "bench-smoke: unmeasured ns/query for {} n={} batch={} — skipping speedup row",
+                p.layout, p.n, p.batch
+            );
+            continue;
         }
+        out.push((
+            p.n,
+            p.batch,
+            p.layout,
+            b.ns_per_query,
+            p.ns_per_query,
+            b.ns_per_query / p.ns_per_query,
+        ));
     }
     out
 }
@@ -213,6 +252,8 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
                 ("batch", Json::from(p.batch)),
                 ("ns_per_query", Json::from(p.ns_per_query)),
                 ("upd_ns_per_op", Json::from(p.upd_ns_per_op)),
+                ("build_ms", Json::from(p.build_ms)),
+                ("resident_bytes", Json::from(p.resident_bytes)),
                 ("nodes_visited", Json::from(p.counters.nodes_visited)),
                 ("aabb_tests", Json::from(p.counters.aabb_tests)),
                 ("tri_tests", Json::from(p.counters.tri_tests)),
@@ -252,8 +293,8 @@ pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
         "seed `{:#x}`, {} workers, update fraction {}\n\n",
         cfg.seed, cfg.workers, cfg.update_frac
     ));
-    s.push_str("| solver | n | batch | ns/query | ns/update | speedup vs binary |\n");
-    s.push_str("|---|---:|---:|---:|---:|---:|\n");
+    s.push_str("| solver | n | batch | ns/query | ns/update | build ms | resident MiB | speedup vs binary |\n");
+    s.push_str("|---|---:|---:|---:|---:|---:|---:|---:|\n");
     let sp = speedups(points);
     for p in points {
         let speedup = if p.layout == LABEL_BINARY {
@@ -269,8 +310,15 @@ pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
             "-".to_string()
         };
         s.push_str(&format!(
-            "| {} | {} | {} | {:.1} | {} | {} |\n",
-            p.layout, p.n, p.batch, p.ns_per_query, upd, speedup
+            "| {} | {} | {} | {:.1} | {} | {:.2} | {:.2} | {} |\n",
+            p.layout,
+            p.n,
+            p.batch,
+            p.ns_per_query,
+            upd,
+            p.build_ms,
+            p.resident_bytes as f64 / (1 << 20) as f64,
+            speedup
         ));
     }
     s
@@ -316,6 +364,19 @@ mod tests {
         }
         assert!(points.iter().all(|p| p.ns_per_query > 0.0));
         assert!(points.iter().all(|p| p.upd_ns_per_op == 0.0), "no write path measured");
+        assert!(points.iter().all(|p| p.build_ms > 0.0), "build wall time recorded");
+        assert!(points.iter().all(|p| p.resident_bytes > 0), "resident bytes recorded");
+        // The default sharded backend is instanced: its resident bytes
+        // must come in below the monolithic per-element BVH layouts.
+        let bytes = |label: &str| {
+            points.iter().find(|p| p.layout == label).unwrap().resident_bytes
+        };
+        assert!(
+            bytes(LABEL_SHARDED) < bytes(LABEL_WIDE),
+            "instanced sharded {} !< wide {}",
+            bytes(LABEL_SHARDED),
+            bytes(LABEL_WIDE)
+        );
         assert!(points.iter().all(|p| p.counters.rays >= 128));
         let sp = speedups(&points);
         assert_eq!(sp.len(), 2); // wide + sharded vs binary
@@ -334,6 +395,8 @@ mod tests {
         for p in pts {
             assert!(p.get("ns_per_query").and_then(|v| v.as_f64()).unwrap() > 0.0);
             assert!(p.get("upd_ns_per_op").and_then(|v| v.as_f64()).is_some());
+            assert!(p.get("build_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert!(p.get("resident_bytes").and_then(|v| v.as_u64()).unwrap() > 0);
             assert!(p.get("nodes_visited").and_then(|v| v.as_u64()).is_some());
             assert!(p.get("aabb_tests").and_then(|v| v.as_u64()).is_some());
             assert!(p.get("tri_tests").and_then(|v| v.as_u64()).is_some());
@@ -370,6 +433,41 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.matches("## rtxrmq bench-smoke").count(), 2, "append, not truncate");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn speedups_skip_points_without_a_binary_baseline() {
+        let mk = |layout, n, batch, ns| SmokePoint {
+            layout,
+            n,
+            batch,
+            ns_per_query: ns,
+            upd_ns_per_op: 0.0,
+            build_ms: 1.0,
+            resident_bytes: 64,
+            counters: Counters::default(),
+        };
+        let points = vec![
+            mk(LABEL_BINARY, 1024, 64, 900.0),
+            mk(LABEL_WIDE, 1024, 64, 300.0),
+            // Partial grid: no binary row at n = 4096 — both non-binary
+            // rows must be skipped with a log, not become inf/NaN.
+            mk(LABEL_WIDE, 4096, 64, 500.0),
+            mk(LABEL_SHARDED, 4096, 64, 250.0),
+            // Baseline present but unmeasured (0 ns): also skipped.
+            mk(LABEL_BINARY, 2048, 64, 0.0),
+            mk(LABEL_SHARDED, 2048, 64, 100.0),
+        ];
+        let sp = speedups(&points);
+        assert_eq!(sp.len(), 1, "only the fully covered point survives: {sp:?}");
+        let (n, batch, label, base_ns, ns, speedup) = sp[0];
+        assert_eq!((n, batch, label), (1024, 64, LABEL_WIDE));
+        assert!((speedup - 3.0).abs() < 1e-9, "{base_ns}/{ns} = {speedup}");
+        assert!(sp.iter().all(|&(.., s)| s.is_finite()));
+        // The markdown table renders skipped points with a "-" cell.
+        let cfg = SmokeCfg::default();
+        let md = summary_md(&cfg, &points);
+        assert!(md.contains("| - |"), "{md}");
     }
 
     #[test]

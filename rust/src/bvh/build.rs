@@ -7,6 +7,7 @@
 //! [`collapse_to_wide`] then folds either binary tree into the 4-wide
 //! SoA hot-path layout ([`crate::bvh::wide::WideBvh`]).
 
+use super::instanced::{ShapeNode, ShapeTree, MAX_INSTANCED_LEN, NO_CHILD};
 use super::wide::{WideBvh, WideNode, WidePrim};
 use super::{Aabb, Builder, Bvh, Node};
 use crate::geometry::Triangle;
@@ -246,6 +247,83 @@ pub fn collapse_to_wide(bvh: &Bvh, tris: &[Triangle]) -> WideBvh {
     }
     debug_assert_eq!(prims.len(), bvh.prim_order.len());
     WideBvh { nodes, prims, leaf_size: bvh.leaf_size }
+}
+
+// ------------------------------------------------------- shape trees --
+
+/// Build the shared shape for all blocks of length `len`
+/// ([`crate::bvh::instanced`]): a balanced 4-ary positional interval
+/// tree over `[0, len)`. Unlike the geometric builders above there is
+/// nothing to optimize — the "scene" is the integer line, every block
+/// of this length maps to the same footprint — so the split is a plain
+/// even 4-way chunking, recursed until a chunk fits one leaf lane.
+/// Children are emitted in position order directly after their parent
+/// (DFS preorder, forward child pointers), which gives the instance
+/// refit its one-reverse-sweep property and the probe its
+/// left-to-right lane order.
+pub fn build_shape_tree(len: usize, leaf_size: usize) -> ShapeTree {
+    assert!(len >= 1, "empty shape");
+    assert!(len <= MAX_INSTANCED_LEN, "instanced positions are u16 (len {len} > 2^16)");
+    let leaf_size = leaf_size.clamp(1, u8::MAX as usize);
+    let mut nodes: Vec<ShapeNode> = Vec::new();
+    let mut parent: Vec<u32> = Vec::new();
+    let mut node_of_pos: Vec<u32> = vec![0; len];
+    let mut lane_of_pos: Vec<u8> = vec![0; len];
+    // Recursion depth is log4(len/leaf) ≤ 8 for len ≤ 2^16 — safe.
+    #[allow(clippy::too_many_arguments)]
+    fn grow(
+        lo: usize,
+        hi: usize, // exclusive
+        par: u32,
+        leaf_size: usize,
+        nodes: &mut Vec<ShapeNode>,
+        parent: &mut Vec<u32>,
+        node_of_pos: &mut [u32],
+        lane_of_pos: &mut [u8],
+    ) -> u32 {
+        let ni = nodes.len() as u32;
+        nodes.push(ShapeNode::empty());
+        parent.push(par);
+        let span = hi - lo;
+        let (base, rem) = (span / 4, span % 4);
+        let mut at = lo;
+        for lane in 0..4 {
+            let size = base + usize::from(lane < rem);
+            if size == 0 {
+                continue; // empty lane (span < 4)
+            }
+            let (clo, chi) = (at, at + size);
+            at = chi;
+            let n = &mut nodes[ni as usize];
+            n.pmin[lane] = clo as u16;
+            n.pmax[lane] = (chi - 1) as u16;
+            if size <= leaf_size {
+                n.count[lane] = size as u8;
+                for p in clo..chi {
+                    node_of_pos[p] = ni;
+                    lane_of_pos[p] = lane as u8;
+                }
+            } else {
+                let child =
+                    grow(clo, chi, ni, leaf_size, nodes, parent, node_of_pos, lane_of_pos);
+                nodes[ni as usize].child[lane] = child;
+            }
+        }
+        ni
+    }
+    if len <= leaf_size {
+        // Single node, one leaf lane covering the whole block.
+        nodes.push(ShapeNode::empty());
+        parent.push(NO_CHILD);
+        let n = &mut nodes[0];
+        n.pmin[0] = 0;
+        n.pmax[0] = (len - 1) as u16;
+        n.count[0] = len as u8;
+        // node_of_pos/lane_of_pos are already all zeros.
+    } else {
+        grow(0, len, NO_CHILD, leaf_size, &mut nodes, &mut parent, &mut node_of_pos, &mut lane_of_pos);
+    }
+    ShapeTree { len, leaf_size, nodes, parent, node_of_pos, lane_of_pos }
 }
 
 /// In-place stable-ish partition; returns count of elements satisfying

@@ -1,0 +1,681 @@
+//! Instanced block geometry: **one shared shape tree per unique block
+//! length**, with per-block data reduced to an *instance* — a value
+//! offset/scale plus a compressed `u16` leaf table — instead of a full
+//! per-block BVH.
+//!
+//! The observation (ROADMAP "giant-array scale"; the AMR
+//! point-containment paper and RT-HDIST do the same on real RT
+//! hardware): every block of the sharded engine maps positions
+//! `0..len` to the same triangle footprint — only the *values* differ,
+//! and values enter traversal purely through ordering comparisons. So
+//! the node structure depends only on the block length and can be
+//! built once and shared by every same-length block:
+//!
+//! - [`ShapeTree`] — a balanced 4-ary positional interval tree over
+//!   `[0, len)`, the instanced analogue of the wide SoA BVH
+//!   (`bvh/wide.rs`): four child lanes per node, each covering a
+//!   contiguous `u16` position range, children laid out in position
+//!   order. Built by [`crate::bvh::build::build_shape_tree`], cached
+//!   per length in a [`ShapeSet`].
+//! - [`InstancedBlock`] — the per-block instance: `v_lo`/`scale`
+//!   (dequantization transform), a `qval` table of one `u16` per
+//!   element (the compressed leaf record — ~2 bytes vs the 24-byte
+//!   [`super::wide::WidePrim`]), and per-node per-lane quantized
+//!   minima (`node_qmin`) that play the role of the wide BVH's lane
+//!   AABBs.
+//!
+//! # Why quantized traversal stays exact
+//!
+//! `qval[p]` is a **lower bound**: `dequant(qval[p]) = v_lo +
+//! qval[p]·scale ≤ xs[p]` (floor quantization, with a rounding guard).
+//! `node_qmin` is the min of `qval` over a subtree, so its dequantized
+//! value lower-bounds every value in the subtree. Traversal descends a
+//! lane only when that lower bound could *strictly* beat the current
+//! best, and on reaching a leaf record it confirms against the exact
+//! `f32` from the caller's value slice before accepting. Pruning on a
+//! lower bound never discards a strictly-smaller candidate, and the
+//! exact compare rejects quantization collisions — answers are
+//! bit-identical to an exact solver.
+//!
+//! # Why leftmost ties survive quantization
+//!
+//! Lanes are visited strictly left-to-right in position order (children
+//! pushed in reverse so the leftmost pops first), so every candidate
+//! examined after the current best has a *larger* position. Both the
+//! descend test (`lower bound < best`) and the accept test
+//! (`exact value < best`) are strict, so a later equal value can never
+//! replace an earlier one — the leftmost minimum wins by construction,
+//! even when many records share a quantization bucket.
+//!
+//! # Updates without a rebuild
+//!
+//! A point update is a leaf-table write plus a leaf-to-root lane-min
+//! walk ([`InstancedBlock::refit_point`], `O(leaf + 4·depth)`): the
+//! shared shape is immutable, so there is no tree to rebuild. A value
+//! below the instance's `v_lo` lowers `v_lo` in place — every stored
+//! `qval` then dequantizes *lower*, which keeps the lower-bound
+//! invariant (bounds get looser, never wrong). Multi-point batches
+//! requantize the whole table ([`InstancedBlock::rebuild_values`],
+//! `O(len)` — still no node construction).
+
+use super::traverse::Counters;
+use std::sync::Arc;
+
+/// Sentinel for "no child node" in a [`ShapeNode`] lane.
+pub const NO_CHILD: u32 = u32::MAX;
+
+/// Blocks longer than this cannot be instanced: positions are
+/// block-relative `u16`s in the compressed leaf records.
+pub const MAX_INSTANCED_LEN: usize = 1 << 16;
+
+/// Elements per leaf lane of a shape tree (mirrors the wide BVH's
+/// default leaf size; bounded by the `u8` lane count field).
+pub const SHAPE_LEAF_SIZE: usize = 16;
+
+/// One 4-wide node of a shape tree. Lane `k` covers the contiguous
+/// position range `[pmin[k], pmax[k]]`; `count[k] > 0` marks a leaf
+/// lane holding `count[k]` records (record index == position, so the
+/// leaf table needs no indirection), `child[k] != NO_CHILD` an internal
+/// lane, and neither an empty lane (short blocks).
+#[derive(Clone, Copy, Debug)]
+pub struct ShapeNode {
+    pub pmin: [u16; 4],
+    pub pmax: [u16; 4],
+    pub child: [u32; 4],
+    pub count: [u8; 4],
+}
+
+impl ShapeNode {
+    pub fn empty() -> ShapeNode {
+        ShapeNode { pmin: [0; 4], pmax: [0; 4], child: [NO_CHILD; 4], count: [0; 4] }
+    }
+
+    #[inline]
+    pub fn lane_is_empty(&self, lane: usize) -> bool {
+        self.count[lane] == 0 && self.child[lane] == NO_CHILD
+    }
+}
+
+/// The shared, immutable shape for all blocks of one length: node
+/// structure + the reverse links the instance refit walk needs. Built
+/// once per unique length ([`ShapeSet`]) and shared by `Arc` — the
+/// per-block cost is only the instance tables.
+pub struct ShapeTree {
+    /// Block length this shape serves (`1..=MAX_INSTANCED_LEN`).
+    pub len: usize,
+    pub leaf_size: usize,
+    /// Node 0 is the root; children always follow their parent, so a
+    /// reverse index sweep sees every child before its parent.
+    pub nodes: Vec<ShapeNode>,
+    /// Parent node index per node (`NO_CHILD` for the root).
+    pub parent: Vec<u32>,
+    /// Leaf node owning each position.
+    pub node_of_pos: Vec<u32>,
+    /// Lane within that node.
+    pub lane_of_pos: Vec<u8>,
+}
+
+impl ShapeTree {
+    pub fn memory_bytes(&self) -> usize {
+        self.nodes.len() * std::mem::size_of::<ShapeNode>()
+            + self.parent.len() * 4
+            + self.node_of_pos.len() * 4
+            + self.lane_of_pos.len()
+    }
+
+    /// Structural invariants: the leaf lanes partition `[0, len)` in
+    /// strictly increasing position order (the property the leftmost
+    /// tie-break rests on), parent/child links agree, and the
+    /// per-position reverse links point at the owning leaf lane.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.len == 0 || self.len > MAX_INSTANCED_LEN {
+            return Err(format!("shape len {} out of range", self.len));
+        }
+        if self.nodes.is_empty() || self.parent.len() != self.nodes.len() {
+            return Err("node/parent table mismatch".into());
+        }
+        if self.node_of_pos.len() != self.len || self.lane_of_pos.len() != self.len {
+            return Err("reverse-link table length mismatch".into());
+        }
+        if self.parent[0] != NO_CHILD {
+            return Err("root must have no parent".into());
+        }
+        // In-order DFS must emit positions 0..len exactly once, in order.
+        let mut next_pos = 0usize;
+        let mut stack = vec![0u32];
+        let mut visited = vec![false; self.nodes.len()];
+        while let Some(ni) = stack.pop() {
+            let i = ni as usize;
+            if visited[i] {
+                return Err(format!("node {i} reachable twice"));
+            }
+            visited[i] = true;
+            let nd = &self.nodes[i];
+            // Push child lanes in reverse so lane 0's subtree completes
+            // first; leaf lanes are consumed inline left-to-right.
+            let mut pending: Vec<u32> = Vec::new();
+            for lane in 0..4 {
+                if nd.lane_is_empty(lane) {
+                    continue;
+                }
+                let (lo, hi) = (nd.pmin[lane] as usize, nd.pmax[lane] as usize);
+                if lo > hi || hi >= self.len {
+                    return Err(format!("node {i} lane {lane}: bad range [{lo},{hi}]"));
+                }
+                if nd.count[lane] > 0 {
+                    if nd.child[lane] != NO_CHILD {
+                        return Err(format!("node {i} lane {lane}: both leaf and child"));
+                    }
+                    if hi - lo + 1 != nd.count[lane] as usize
+                        || nd.count[lane] as usize > self.leaf_size
+                    {
+                        return Err(format!("node {i} lane {lane}: bad leaf count"));
+                    }
+                    if lo != next_pos {
+                        return Err(format!(
+                            "node {i} lane {lane}: out of order (have {next_pos}, lane at {lo})"
+                        ));
+                    }
+                    for p in lo..=hi {
+                        if self.node_of_pos[p] != ni || self.lane_of_pos[p] as usize != lane {
+                            return Err(format!("position {p}: stale reverse link"));
+                        }
+                    }
+                    next_pos = hi + 1;
+                } else {
+                    let ch = nd.child[lane] as usize;
+                    if ch >= self.nodes.len() || ch <= i {
+                        return Err(format!("node {i} lane {lane}: child {ch} out of order"));
+                    }
+                    if self.parent[ch] != ni {
+                        return Err(format!("node {ch}: parent link disagrees"));
+                    }
+                    pending.push(nd.child[lane]);
+                }
+            }
+            // The pending children are left-to-right; a plain stack
+            // visits them in reverse — but each child's positions are
+            // checked against `next_pos`, so order errors still surface
+            // as long as we recurse leftmost-first. Reverse for that.
+            for &c in pending.iter().rev() {
+                stack.push(c);
+            }
+        }
+        if next_pos != self.len {
+            return Err(format!("leaf lanes cover {next_pos} of {} positions", self.len));
+        }
+        Ok(())
+    }
+}
+
+/// Cache of shape trees keyed by block length. The sharded engine holds
+/// one and pre-populates it (`ensure`) for every distinct block length
+/// before its parallel build loops; lookups after that are read-only.
+/// Clones share the underlying trees (`Arc`), so a staged update spec
+/// can carry the set across threads for free.
+#[derive(Clone, Default)]
+pub struct ShapeSet {
+    shapes: Vec<Arc<ShapeTree>>,
+}
+
+impl ShapeSet {
+    /// Get-or-build the shape for `len`. Linear scan: a decomposition
+    /// has at most three distinct lengths (block, tail, summary).
+    pub fn ensure(&mut self, len: usize, leaf_size: usize) -> Arc<ShapeTree> {
+        if let Some(s) = self.shapes.iter().find(|s| s.len == len) {
+            return s.clone();
+        }
+        let s = Arc::new(super::build::build_shape_tree(len, leaf_size));
+        self.shapes.push(s.clone());
+        s
+    }
+
+    /// Lookup only — panics if [`ensure`](Self::ensure) did not run for
+    /// this length (shape building must happen before the parallel
+    /// block loops, which share the set immutably).
+    pub fn get(&self, len: usize) -> &Arc<ShapeTree> {
+        self.shapes
+            .iter()
+            .find(|s| s.len == len)
+            .expect("ShapeSet::ensure must run for every block length before instancing")
+    }
+
+    pub fn num_shapes(&self) -> usize {
+        self.shapes.len()
+    }
+
+    /// Bytes of all cached trees. Each tree is counted once no matter
+    /// how many instances share it — the whole point of instancing.
+    pub fn memory_bytes(&self) -> usize {
+        self.shapes.iter().map(|s| s.memory_bytes()).sum()
+    }
+}
+
+/// Floor-quantize `v` into the instance's bucket grid, guarding the
+/// lower-bound invariant `dequant(q) ≤ v` against f32 rounding.
+fn quantize(v: f32, v_lo: f32, scale: f32) -> u16 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    let raw = ((v - v_lo) / scale).floor();
+    let mut q = if raw <= 0.0 { 0u32 } else if raw >= 65535.0 { 65535 } else { raw as u32 };
+    while q > 0 && v_lo + q as f32 * scale > v {
+        q -= 1;
+    }
+    q as u16
+}
+
+/// One block's instance data over a shared [`ShapeTree`]: the value
+/// transform, the compressed per-position leaf table, and the per-node
+/// quantized lane minima. Exact `f32` values are *not* stored — the
+/// probe resolves them from the caller's value slice on hit, so a block
+/// costs ~2 bytes/element of leaf records plus ~0.6 bytes/element of
+/// lane minima instead of a 24-byte prim + node structure.
+pub struct InstancedBlock {
+    shape: Arc<ShapeTree>,
+    /// Dequantization offset. Only ever *lowered* by point refits, so
+    /// stored quantized values stay lower bounds.
+    v_lo: f32,
+    /// Bucket width `(v_hi − v_lo) / 65535`; 0 for all-equal blocks
+    /// (every record then dequantizes to `v_lo`, still a lower bound).
+    scale: f32,
+    /// Quantized lower bound per position (the compressed leaf record).
+    qval: Vec<u16>,
+    /// Per-node, per-lane min of `qval` over the lane's subtree.
+    node_qmin: Vec<[u16; 4]>,
+}
+
+impl InstancedBlock {
+    pub fn build(xs: &[f32], shape: Arc<ShapeTree>) -> InstancedBlock {
+        assert_eq!(xs.len(), shape.len, "value slice must match the shape length");
+        let mut b = InstancedBlock {
+            qval: vec![0; xs.len()],
+            node_qmin: vec![[u16::MAX; 4]; shape.nodes.len()],
+            shape,
+            v_lo: 0.0,
+            scale: 0.0,
+        };
+        b.rebuild_values(xs);
+        b
+    }
+
+    pub fn shape(&self) -> &Arc<ShapeTree> {
+        &self.shape
+    }
+
+    #[inline]
+    fn dequant(&self, q: u16) -> f32 {
+        self.v_lo + q as f32 * self.scale
+    }
+
+    /// Requantize the whole instance from fresh values (multi-point
+    /// update path / construction). `O(len)` table writes — the shared
+    /// shape is untouched, so this is the instanced engine's "rebuild".
+    pub fn rebuild_values(&mut self, xs: &[f32]) {
+        assert_eq!(xs.len(), self.shape.len);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        for &v in xs {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        self.v_lo = lo;
+        self.scale = if hi > lo { (hi - lo) / 65535.0 } else { 0.0 };
+        for (p, &v) in xs.iter().enumerate() {
+            self.qval[p] = quantize(v, self.v_lo, self.scale);
+        }
+        // Children follow their parent in the node array, so a single
+        // reverse sweep finalizes every child row before its parent
+        // reads it.
+        for i in (0..self.shape.nodes.len()).rev() {
+            let mut qmin = [u16::MAX; 4];
+            for lane in 0..4 {
+                let nd = &self.shape.nodes[i];
+                qmin[lane] = if nd.count[lane] > 0 {
+                    (nd.pmin[lane]..=nd.pmax[lane])
+                        .map(|p| self.qval[p as usize])
+                        .min()
+                        .unwrap()
+                } else if nd.child[lane] != NO_CHILD {
+                    let ch = nd.child[lane] as usize;
+                    self.node_qmin[ch].iter().copied().min().unwrap()
+                } else {
+                    u16::MAX
+                };
+            }
+            self.node_qmin[i] = qmin;
+        }
+    }
+
+    /// Point update: one leaf-table write plus a leaf-to-root lane-min
+    /// walk — `O(leaf + 4·depth)`, no node construction. A value below
+    /// the current `v_lo` lowers `v_lo` (all stored bounds shift down
+    /// together — looser, never wrong); a value above the build-time
+    /// `v_hi` clamps to the top bucket (still a lower bound).
+    pub fn refit_point(&mut self, pos: usize, v: f32) {
+        assert!(pos < self.shape.len);
+        if v < self.v_lo {
+            self.v_lo = v;
+        }
+        self.qval[pos] = quantize(v, self.v_lo, self.scale);
+        let mut node = self.shape.node_of_pos[pos] as usize;
+        let lane = self.shape.lane_of_pos[pos] as usize;
+        let nd = &self.shape.nodes[node];
+        let mut m = u16::MAX;
+        for p in nd.pmin[lane] as usize..=nd.pmax[lane] as usize {
+            m = m.min(self.qval[p]);
+        }
+        self.node_qmin[node][lane] = m;
+        loop {
+            let p = self.shape.parent[node];
+            if p == NO_CHILD {
+                break;
+            }
+            let pi = p as usize;
+            let lane_in_parent = self.shape.nodes[pi]
+                .child
+                .iter()
+                .position(|&c| c as usize == node)
+                .expect("parent links to child");
+            let subtree_min = self.node_qmin[node].iter().copied().min().unwrap();
+            if self.node_qmin[pi][lane_in_parent] == subtree_min {
+                break; // unchanged here ⇒ unchanged above
+            }
+            self.node_qmin[pi][lane_in_parent] = subtree_min;
+            node = pi;
+        }
+    }
+
+    /// Leftmost argmin over local positions `[l, r]`. `xs` is the
+    /// block's exact value slice (owned by the caller — the sharded
+    /// engine's value array); quantized bounds prune, exact values
+    /// decide. Counter semantics mirror the BVH probe: one ray per
+    /// probe, a node visit per shape node expanded, a lane-interval
+    /// test per non-empty lane, a "tri test" per leaf record scanned.
+    pub fn probe(&self, xs: &[f32], l: usize, r: usize, c: &mut Counters) -> usize {
+        debug_assert!(l <= r && r < self.shape.len);
+        debug_assert_eq!(xs.len(), self.shape.len);
+        c.rays += 1;
+        let (lq, rq) = (l as u32, r as u32);
+        let mut best = usize::MAX;
+        let mut best_val = f32::INFINITY;
+        // Work items: internal node (tag 0) or one leaf lane (tag 1).
+        // Items are pushed in reverse lane order, so the stack pops
+        // strictly left-to-right in position order — the invariant the
+        // leftmost tie-break rides on.
+        const LEAF: u32 = 1;
+        let mut stack: Vec<u32> = Vec::with_capacity(32);
+        stack.push(0);
+        while let Some(item) = stack.pop() {
+            let ni = (item >> 3) as usize;
+            let nd = &self.shape.nodes[ni];
+            if item & LEAF != 0 {
+                let lane = ((item >> 1) & 0x3) as usize;
+                let a = (nd.pmin[lane] as u32).max(lq) as usize;
+                let b = (nd.pmax[lane] as u32).min(rq) as usize;
+                for p in a..=b {
+                    c.tri_tests += 1;
+                    // Cheap quantized screen first; the exact value is
+                    // read only for survivors. Both compares are strict,
+                    // and p grows monotonically ⇒ leftmost ties hold.
+                    if self.dequant(self.qval[p]) < best_val {
+                        let v = xs[p];
+                        if v < best_val {
+                            best = p;
+                            best_val = v;
+                        }
+                    }
+                }
+                continue;
+            }
+            c.nodes_visited += 1;
+            let qmin = &self.node_qmin[ni];
+            // Re-check on pop: best_val may have improved since push.
+            let node_min = qmin.iter().copied().min().unwrap();
+            if self.dequant(node_min) >= best_val {
+                continue;
+            }
+            for lane in (0..4).rev() {
+                if nd.lane_is_empty(lane) {
+                    continue;
+                }
+                c.aabb_tests += 1;
+                if (nd.pmax[lane] as u32) < lq || (nd.pmin[lane] as u32) > rq {
+                    continue;
+                }
+                if self.dequant(qmin[lane]) >= best_val {
+                    continue; // can't strictly beat an earlier-position best
+                }
+                if nd.count[lane] > 0 {
+                    stack.push(((ni as u32) << 3) | ((lane as u32) << 1) | LEAF);
+                } else {
+                    stack.push(nd.child[lane] << 3);
+                }
+            }
+        }
+        debug_assert!(best != usize::MAX, "query range always contains a record");
+        best
+    }
+
+    /// Instance bytes (leaf table + lane minima). The shared shape is
+    /// *not* included — count it once per [`ShapeSet`], not per block.
+    pub fn memory_bytes(&self) -> usize {
+        self.qval.len() * 2 + self.node_qmin.len() * std::mem::size_of::<[u16; 4]>()
+    }
+
+    /// Invariants against the exact values: every stored record is a
+    /// lower bound, and every lane min matches a recomputation.
+    pub fn validate(&self, xs: &[f32]) -> Result<(), String> {
+        if xs.len() != self.shape.len || self.qval.len() != self.shape.len {
+            return Err("instance/shape length mismatch".into());
+        }
+        self.shape.validate()?;
+        for (p, &v) in xs.iter().enumerate() {
+            if self.dequant(self.qval[p]) > v {
+                return Err(format!(
+                    "position {p}: dequant({}) = {} exceeds value {v}",
+                    self.qval[p],
+                    self.dequant(self.qval[p])
+                ));
+            }
+        }
+        for (i, nd) in self.shape.nodes.iter().enumerate() {
+            for lane in 0..4 {
+                let want = if nd.count[lane] > 0 {
+                    (nd.pmin[lane]..=nd.pmax[lane])
+                        .map(|p| self.qval[p as usize])
+                        .min()
+                        .unwrap()
+                } else if nd.child[lane] != NO_CHILD {
+                    self.node_qmin[nd.child[lane] as usize].iter().copied().min().unwrap()
+                } else {
+                    u16::MAX
+                };
+                if self.node_qmin[i][lane] != want {
+                    return Err(format!("node {i} lane {lane}: stale qmin"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bvh::build::build_shape_tree;
+    use crate::util::rng::Rng;
+
+    fn naive(xs: &[f32], l: usize, r: usize) -> usize {
+        let mut best = l;
+        for k in l + 1..=r {
+            if xs[k] < xs[best] {
+                best = k;
+            }
+        }
+        best
+    }
+
+    #[test]
+    fn shape_trees_validate_across_lengths() {
+        for len in [1, 2, 3, 4, 5, 15, 16, 17, 63, 64, 65, 100, 255, 1000, 4096, 65536] {
+            let t = build_shape_tree(len, SHAPE_LEAF_SIZE);
+            t.validate().unwrap_or_else(|e| panic!("len {len}: {e}"));
+            assert!(t.memory_bytes() > 0);
+        }
+        // Tiny leaf sizes force deep trees; the structure must still hold.
+        for len in [7, 31, 64, 129] {
+            build_shape_tree(len, 1).validate().unwrap();
+            build_shape_tree(len, 2).validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn shape_set_dedups_by_length() {
+        let mut set = ShapeSet::default();
+        let a = set.ensure(64, SHAPE_LEAF_SIZE);
+        let b = set.ensure(64, SHAPE_LEAF_SIZE);
+        let c = set.ensure(63, SHAPE_LEAF_SIZE);
+        assert!(Arc::ptr_eq(&a, &b), "same length shares one tree");
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(set.num_shapes(), 2);
+        assert_eq!(set.memory_bytes(), a.memory_bytes() + c.memory_bytes());
+        assert!(Arc::ptr_eq(set.get(64), &a));
+    }
+
+    #[test]
+    fn probe_matches_naive_exhaustively() {
+        let mut rng = Rng::new(41);
+        let mut set = ShapeSet::default();
+        for &len in &[1usize, 2, 5, 16, 17, 48, 97, 130] {
+            let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+            for round in 0..4 {
+                // Tie-heavy quantized values stress bucket collisions.
+                let xs: Vec<f32> =
+                    (0..len).map(|_| (rng.f32() * 6.0).floor() / 2.0).collect();
+                let inst = InstancedBlock::build(&xs, shape.clone());
+                inst.validate(&xs).unwrap();
+                let mut c = Counters::default();
+                for l in 0..len {
+                    for r in l..len {
+                        let got = inst.probe(&xs, l, r, &mut c);
+                        let want = naive(&xs, l, r);
+                        assert_eq!(got, want, "len={len} round={round} ({l},{r}) xs={xs:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probe_is_exact_at_bucket_boundaries() {
+        // Values straddling a single quantization bucket: the quantized
+        // screen cannot tell them apart, so only the exact compare keeps
+        // the answer right — this pins the resolve-on-hit step.
+        let mut set = ShapeSet::default();
+        let shape = set.ensure(8, 4);
+        let lo = 0.0f32;
+        let hi = 655.35f32; // scale = 0.01
+        let eps = 0.001f32; // well inside one bucket
+        let xs = vec![hi, lo + eps, lo, lo + eps, hi, lo, lo + 2.0 * eps, hi];
+        let inst = InstancedBlock::build(&xs, shape.clone());
+        inst.validate(&xs).unwrap();
+        let mut c = Counters::default();
+        // Exact minimum is at 2 (and tied at 5): leftmost must win even
+        // though positions 1..=3 and 5..=6 share dequantized bounds.
+        assert_eq!(inst.probe(&xs, 0, 7, &mut c), 2);
+        assert_eq!(inst.probe(&xs, 3, 7, &mut c), 5);
+        assert_eq!(inst.probe(&xs, 1, 3, &mut c), 2);
+        assert_eq!(inst.probe(&xs, 3, 3, &mut c), 3);
+        assert_eq!(inst.probe(&xs, 5, 6, &mut c), 5);
+        // All-equal block (scale = 0): every bound collapses to v_lo.
+        let flat = vec![1.5f32; 8];
+        let inst = InstancedBlock::build(&flat, shape);
+        inst.validate(&flat).unwrap();
+        for l in 0..8 {
+            for r in l..8 {
+                assert_eq!(inst.probe(&flat, l, r, &mut c), l, "leftmost of all-equal");
+            }
+        }
+    }
+
+    #[test]
+    fn refit_point_matches_fresh_rebuild() {
+        let mut rng = Rng::new(43);
+        let mut set = ShapeSet::default();
+        for &len in &[3usize, 16, 33, 100] {
+            let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+            let mut xs: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+            let mut inst = InstancedBlock::build(&xs, shape.clone());
+            for _ in 0..40 {
+                let pos = rng.range(0, len - 1);
+                // Raises, drops (including below the current v_lo) and ties.
+                let v = match rng.range(0, 3) {
+                    0 => rng.f32() * 2.0 - 0.5,
+                    1 => -rng.f32(),
+                    2 => xs[rng.range(0, len - 1)],
+                    _ => xs[pos] + 0.25,
+                };
+                xs[pos] = v;
+                inst.refit_point(pos, v);
+                inst.validate(&xs).unwrap();
+                let fresh = InstancedBlock::build(&xs, shape.clone());
+                let mut c = Counters::default();
+                for _ in 0..16 {
+                    let l = rng.range(0, len - 1);
+                    let r = rng.range(l, len - 1);
+                    let want = naive(&xs, l, r);
+                    assert_eq!(inst.probe(&xs, l, r, &mut c), want, "refit ({l},{r})");
+                    assert_eq!(fresh.probe(&xs, l, r, &mut c), want, "rebuild ({l},{r})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rebuild_values_handles_batches_and_degenerate_blocks() {
+        let mut rng = Rng::new(47);
+        let mut set = ShapeSet::default();
+        let shape = set.ensure(40, SHAPE_LEAF_SIZE);
+        let mut xs: Vec<f32> = (0..40).map(|_| rng.f32()).collect();
+        let mut inst = InstancedBlock::build(&xs, shape.clone());
+        let mut c = Counters::default();
+        for round in 0..20 {
+            for _ in 0..rng.range(1, 8) {
+                let i = rng.range(0, 39);
+                xs[i] = if round % 3 == 0 { 0.25 } else { rng.f32() * 10.0 - 5.0 };
+            }
+            inst.rebuild_values(&xs);
+            inst.validate(&xs).unwrap();
+            for l in 0..40 {
+                for r in l..40 {
+                    assert_eq!(inst.probe(&xs, l, r, &mut c), naive(&xs, l, r));
+                }
+            }
+        }
+        // Degenerate: collapse to all-equal via a batch, then diverge again.
+        xs.iter_mut().for_each(|v| *v = 7.0);
+        inst.rebuild_values(&xs);
+        inst.validate(&xs).unwrap();
+        assert_eq!(inst.probe(&xs, 0, 39, &mut c), 0);
+        assert_eq!(inst.memory_bytes(), 40 * 2 + inst.node_qmin.len() * 8);
+    }
+
+    #[test]
+    fn quantize_guards_the_lower_bound() {
+        // Awkward scales where floor + f32 rounding can overshoot.
+        for &(lo, hi) in
+            &[(0.0f32, 1.0f32), (-3.7, 11.3), (1e-6, 2e-6), (0.1, 0.1000001), (-1e6, 1e6)]
+        {
+            let scale = if hi > lo { (hi - lo) / 65535.0 } else { 0.0 };
+            for k in 0..=100 {
+                let v = lo + (hi - lo) * k as f32 / 100.0;
+                let q = quantize(v, lo, scale);
+                assert!(lo + q as f32 * scale <= v, "lo={lo} hi={hi} v={v} q={q}");
+            }
+            // Above the representable range: clamps to the top bucket.
+            let q = quantize(hi + (hi - lo).abs() + 1.0, lo, scale);
+            assert!(lo + q as f32 * scale <= hi + (hi - lo).abs() + 1.0);
+        }
+        assert_eq!(quantize(5.0, 5.0, 0.0), 0, "degenerate scale");
+    }
+}

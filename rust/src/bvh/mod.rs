@@ -39,6 +39,7 @@
 //! makes modeled times comparable across layouts.
 
 pub mod build;
+pub mod instanced;
 pub mod traverse;
 pub mod wide;
 
@@ -179,6 +180,15 @@ pub struct RefitLinks {
     pub parent: Vec<u32>,
     /// `leaf_of_prim[p]` = leaf node whose range contains primitive `p`.
     pub leaf_of_prim: Vec<u32>,
+}
+
+impl RefitLinks {
+    /// Heap bytes of the link tables — once built, they are resident
+    /// alongside the structure they serve, so memory accounting must
+    /// include them.
+    pub fn memory_bytes(&self) -> usize {
+        self.parent.len() * 4 + self.leaf_of_prim.len() * 4
+    }
 }
 
 /// The acceleration structure.

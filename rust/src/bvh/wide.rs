@@ -109,6 +109,16 @@ pub struct WideRefitLinks {
     pub slot_of_prim: Vec<u32>,
 }
 
+impl WideRefitLinks {
+    /// Heap bytes of the link tables. Once a solver builds them they
+    /// stay resident for its lifetime, so resident-memory accounting
+    /// must include them (they were the largest omission in the old
+    /// node+prim-only tally).
+    pub fn memory_bytes(&self) -> usize {
+        (self.parent.len() + self.node_of_slot.len() + self.slot_of_prim.len()) * 4
+    }
+}
+
 /// The wide acceleration structure.
 pub struct WideBvh {
     pub nodes: Vec<WideNode>,
@@ -367,7 +377,10 @@ impl WideBvh {
         }
     }
 
-    /// Heap bytes of the wide structure (Table-2 style accounting).
+    /// Heap bytes of the structure's own allocations (nodes + leaf
+    /// records). [`WideRefitLinks`] are owned by whoever built them, so
+    /// their bytes are reported by [`WideRefitLinks::memory_bytes`] and
+    /// summed by the owning solver — see `RtxRmq::memory_bytes`.
     pub fn memory_bytes(&self) -> usize {
         self.nodes.len() * std::mem::size_of::<WideNode>()
             + self.prims.len() * std::mem::size_of::<WidePrim>()

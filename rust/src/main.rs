@@ -73,7 +73,7 @@ fn print_help() {
             .opt("deadline-ms", "per-request deadline; expired requests are dropped whole (0 = off)")
             .opt("shed-watermark", "queue depth past which admission sheds Overloaded (default 256)")
             .opt("no-xla", "disable the PJRT/XLA engine"),
-        Help::new("bench-smoke", "wall-clock ns/query grid: binary/wide BVH + sharded engine")
+        Help::new("bench-smoke", "wall-clock ns/query + build_ms/resident_bytes grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
             .opt("batches", "comma-separated batch sizes (default 2^12,2^16)")
             .opt("seed", "workload seed")
@@ -85,7 +85,7 @@ fn print_help() {
         Help::new("bench-compare", "regression gate: fresh bench-smoke JSON vs baseline")
             .opt("baseline", "committed baseline JSON (required; ci/BENCH_baseline.json in CI)")
             .opt("current", "fresh bench JSON (default BENCH_rmq.json)")
-            .opt("max-regress", "allowed relative slowdown per metric (default 0.25)")
+            .opt("max-regress", "allowed relative regression per metric, incl. resident_bytes (default 0.25)")
             .opt("summary-md", "append the delta table to this markdown file"),
         Help::new("memory", "data-structure memory report").opt("n", "array size"),
         Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
@@ -360,13 +360,25 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             p.batch.to_string(),
             format!("{:.1}", p.ns_per_query),
             if p.upd_ns_per_op > 0.0 { format!("{:.1}", p.upd_ns_per_op) } else { "-".into() },
+            format!("{:.2}", p.build_ms),
+            fmt_mb(p.resident_bytes as u64),
             p.counters.nodes_visited.to_string(),
             p.counters.tri_tests.to_string(),
         ]);
     }
     rtxrmq::bench_harness::print_table(
         "RTXRMQ solver smoke grid (local wall clock)",
-        &["layout", "n", "batch", "ns/query", "ns/update", "nodes_visited", "tri_tests"],
+        &[
+            "layout",
+            "n",
+            "batch",
+            "ns/query",
+            "ns/update",
+            "build_ms",
+            "resident",
+            "nodes_visited",
+            "tri_tests",
+        ],
         &rows,
     );
     for (n, batch, label, binary_ns, ns, speedup) in speedups(&points) {

@@ -70,6 +70,23 @@ pub struct RtCostModel {
     /// serving loop, so the charge is the throughput they steal from
     /// query workers — a small per-element constant, not a latency.
     pub c_rebuild_per_elem: f64,
+    /// Instancing discount on shard update-side work. With the
+    /// instanced block backend (`rmq::sharded::ShardBackend::Instanced`,
+    /// the default), a point update is a compressed leaf-table write
+    /// plus a lane-min walk over shared shape nodes, and a *staged
+    /// replacement block* is an O(B) quantize pass against the shared
+    /// shape tree — not a tree build. Staging-lane cost is therefore
+    /// charged as `c_inst ×` the refit-shaped work terms instead of
+    /// full build work, closing the ROADMAP carry-over ("staging-lane
+    /// cost is charged as build-not-refit until instancing lands").
+    /// The factor scales **all** of
+    /// [`shard_update_work`](Self::shard_update_work) uniformly, so
+    /// pure-update block-size tuning argmins are unchanged (√n stays
+    /// optimal); mixed workloads correctly lean further toward
+    /// query-optimal blocks. ≈ 0.35: the quantize + min-maintenance
+    /// pass touches ~1/3 the bytes of a bounds refit over 24-byte
+    /// `WidePrim` leaves.
+    pub c_inst: f64,
 }
 
 impl Default for RtCostModel {
@@ -83,6 +100,7 @@ impl Default for RtCostModel {
             half_sat: (1u64 << 21) as f64,
             launch_overhead_ns: 15_000.0,
             c_rebuild_per_elem: 0.01,
+            c_inst: 0.35,
         }
     }
 }
@@ -144,17 +162,24 @@ impl RtCostModel {
     /// The summary term is the single-minimum point refit (Θ(log n/B))
     /// when at most one block is touched, the full Θ(n/B) sweep
     /// otherwise — both amortised over the batch.
+    ///
+    /// Every branch is scaled by the uniform instancing discount
+    /// [`c_inst`](Self::c_inst): with the instanced default backend the
+    /// dense charge is an O(B) value-table rewrite (not a tree build)
+    /// and the sparse charge a leaf-table write + lane-min walk, so the
+    /// staging lane's replacement-block work is priced as refit-shaped,
+    /// not build-shaped.
     pub fn shard_update_work(&self, n: usize, bs: usize, points: f64) -> f64 {
         let b = (bs.max(1)) as f64;
         let nb = ((n.max(1)) as f64 / b).max(1.0);
         if points <= 0.0 {
-            return b + nb;
+            return self.c_inst * (b + nb);
         }
         let k = points.max(1.0);
         let touched = k.min(nb);
         let per_block = if k <= nb { self.path_refit_work(b) } else { b };
         let summary = if touched <= 1.0 { self.path_refit_work(nb) } else { nb };
-        (touched * per_block + summary) / k
+        self.c_inst * (touched * per_block + summary) / k
     }
 
     /// Modeled work units per op of the two-level sharded engine at
@@ -586,33 +611,57 @@ mod tests {
         let m = RtCostModel::default();
         let (n, bs) = (1usize << 16, 256usize);
         let (b, nb) = (bs as f64, (n / bs) as f64);
-        // Unknown shape: the conservative dense prior.
-        assert_eq!(m.shard_update_work(n, bs, 0.0), b + nb);
+        // Unknown shape: the conservative dense prior (instanced, so a
+        // value-table rewrite — the c_inst discount applies everywhere).
+        let prior = m.shard_update_work(n, bs, 0.0);
+        assert_eq!(prior, m.c_inst * (b + nb));
         // A single-point batch takes both path-refit routes — orders of
         // magnitude below the dense charge.
         let single = m.shard_update_work(n, bs, 1.0);
         assert!(
-            (single - (m.path_refit_work(b) + m.path_refit_work(nb))).abs() < 1e-9,
+            (single - m.c_inst * (m.path_refit_work(b) + m.path_refit_work(nb))).abs() < 1e-9,
             "single = {single}"
         );
-        assert!(single < (b + nb) / 10.0, "single {single} vs dense {}", b + nb);
+        assert!(single < prior / 10.0, "single {single} vs dense {prior}");
         // Sparse multi-block batches: path refits per block, full
         // summary sweep amortised over the batch.
         let k = 8.0;
         let sparse = m.shard_update_work(n, bs, k);
         assert!(
-            (sparse - (k * m.path_refit_work(b) + nb) / k).abs() < 1e-9,
+            (sparse - m.c_inst * (k * m.path_refit_work(b) + nb) / k).abs() < 1e-9,
             "sparse = {sparse}"
         );
         // Denser-than-blocks batches: full block refits, amortised.
         let dense = m.shard_update_work(n, bs, 4.0 * nb);
         assert!(
-            (dense - (nb * b + nb) / (4.0 * nb)).abs() < 1e-9,
+            (dense - m.c_inst * (nb * b + nb) / (4.0 * nb)).abs() < 1e-9,
             "dense = {dense}"
         );
         // Per-point cost shrinks as batches amortise the shared work.
         assert!(sparse < m.shard_update_work(n, bs, 2.0) || k <= 2.0);
-        assert!(dense < b + nb);
+        assert!(dense < prior);
+    }
+
+    #[test]
+    fn instancing_discount_scales_update_work_uniformly() {
+        // c_inst multiplies *every* shard_update_work branch by the same
+        // factor — the property that keeps pure-update tuning argmins
+        // where they were (√n) while pricing staged replacement blocks
+        // as refit-shaped work rather than builds.
+        let full = RtCostModel { c_inst: 1.0, ..Default::default() };
+        let disc = RtCostModel::default();
+        assert!(disc.c_inst > 0.0 && disc.c_inst < 1.0);
+        let n = 1usize << 16;
+        for bs in [4usize, 64, 256, 4096] {
+            for points in [0.0, 1.0, 8.0, 1e3, 1e7] {
+                let a = full.shard_update_work(n, bs, points);
+                let b = disc.shard_update_work(n, bs, points);
+                assert!((b - disc.c_inst * a).abs() < 1e-9, "bs={bs} points={points}");
+            }
+        }
+        // Pure-update workloads still tune to the √n default.
+        let w = ShardWorkload { mean_range: 64.0, update_frac: 1.0 };
+        assert_eq!(disc.tune_shard_block(n, &w), full.tune_shard_block(n, &w));
     }
 
     #[test]

@@ -46,7 +46,10 @@ impl RmqSolver for Exhaustive {
     }
 
     fn memory_bytes(&self) -> usize {
-        0 // no auxiliary structure (the input is not counted, as in Table 2)
+        // Table 2 lists EXHAUSTIVE as structure-free, but this solver
+        // *owns* the copy it scans — resident accounting counts every
+        // owned allocation (see the trait doc).
+        self.xs.len() * 4
     }
 }
 
@@ -92,7 +95,10 @@ mod tests {
     }
 
     #[test]
-    fn no_aux_memory() {
-        assert_eq!(Exhaustive::new(&[1.0]).memory_bytes(), 0);
+    fn memory_is_exactly_the_owned_copy() {
+        // Structure-free in the Table 2 sense: nothing beyond the input
+        // copy the solver owns.
+        assert_eq!(Exhaustive::new(&[1.0]).memory_bytes(), 4);
+        assert_eq!(Exhaustive::new(&[1.0; 100]).memory_bytes(), 400);
     }
 }

@@ -126,6 +126,57 @@
 //!   update batches by their observed shape — single-point batches cost
 //!   two path refits, not `B + n/B`.
 //!
+//! # Instanced block geometry & compressed leaves (design note)
+//!
+//! The sharded engine's per-block BVHs were structurally identical: a
+//! `B`-element block's tree shape depends only on `B`, never on the
+//! values. `ShardBackend::Instanced` (the default) exploits that the
+//! way RT hardware instancing does — build **one positional shape tree
+//! per unique block length** (`bvh::instanced::ShapeTree`, a balanced
+//! 4-wide interval tree over `[0, len)` with `u16` slot bounds) and
+//! store per-block data as an *instance*: a value offset/scale pair
+//! plus a compact leaf table.
+//!
+//! - **Shape-cache keying.** `ShapeSet` keys shared trees by block
+//!   *length* alone — an array of `nb` blocks holds at most three
+//!   distinct shapes (the interior length `B`, the tail length
+//!   `n mod B`, and the summary length `nb`), each `Arc`-shared by
+//!   every instance of that length. Shape bytes are counted once at
+//!   the `ShardedRmq` level, never per block: that is the entire
+//!   memory story. `u16` slot indices cap instanced lengths at 2^16;
+//!   a summary over more blocks than that falls back to a sparse
+//!   table (`ShardedRmq::with_options`).
+//! - **Compressed leaf records.** The non-instanced path spends 24
+//!   bytes per element on `WidePrim` leaves (plus ~2× that in wide
+//!   nodes). An instance spends ~6: a `u16` quantized value per
+//!   element (`qval`) plus 8 bytes of bucketed lane minima per shape
+//!   node (`node_qmin`). Values quantize block-relative — `q =
+//!   (v − v_lo) / scale`, floor-rounded with a guard loop so
+//!   `dequant(q) ≤ v` always — which keeps every quantized bound a
+//!   *lower* bound of the exact values it summarizes.
+//! - **Probe-time value translation.** Quantized fields only *screen*:
+//!   traversal descends a lane when its bucketed minimum could still
+//!   beat the incumbent, but every accept resolves the **exact f32**
+//!   from the caller's value slice (the solver-owned `xs` block) before
+//!   it updates the incumbent. The quantized tables never decide a
+//!   comparison between two candidates — they only rule lanes out.
+//! - **Why leftmost ties survive quantization.** Work items are pushed
+//!   in reverse lane order so the stack pops strictly left-to-right,
+//!   and both the descend test and the accept test are *strict* `<`
+//!   against the incumbent's exact value. Two positions in the same
+//!   quantization bucket therefore tie exactly as their f32 values
+//!   tie, and the earlier position wins because it is examined first —
+//!   the same argument as the non-instanced traversal, pinned at
+//!   bucket boundaries by `tests/instanced_diff.rs`.
+//! - **Updates without rebuilds.** A point update is a leaf-table
+//!   write (`InstancedBlock::refit_point`: requantize one slot, walk
+//!   its ancestor lane minima) — no tree to rebuild, because the tree
+//!   is *positional* and shared. A value dropping below `v_lo` lowers
+//!   the offset in place; bounds get looser, never wrong. Staged
+//!   replacement blocks (`StagedUpdateSpec`) are an O(B) quantize pass
+//!   against the cached shape, which is why `RtCostModel::c_inst`
+//!   prices staging-lane work as refit-shaped rather than build-shaped.
+//!
 //! # Overlapped update/query pipeline (design note)
 //!
 //! The serial executor made every update segment a full pipeline stall:
@@ -248,8 +299,12 @@ pub trait RmqSolver: Send + Sync {
         out
     }
 
-    /// Bytes of auxiliary data structures (paper Table 2; excludes the
-    /// input array itself).
+    /// Resident bytes of everything this solver owns (paper Table 2,
+    /// plus the bench harness's `resident_bytes` column). Solver-held
+    /// *copies* of the input array count — the instanced sharded engine
+    /// resolves exact values from its own `xs` at probe time, so that
+    /// copy is load-bearing, not bookkeeping. The caller's original
+    /// array is the only thing excluded.
     fn memory_bytes(&self) -> usize;
 }
 

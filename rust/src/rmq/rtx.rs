@@ -402,9 +402,17 @@ impl RmqSolver for RtxRmq {
     }
 
     fn memory_bytes(&self) -> usize {
-        // The acceleration structures + triangles + block tables (the
-        // input copy is not counted, matching Table 2's convention).
-        self.scene.memory_bytes() + self.block_argmin.len() * 4
+        // Every owned allocation: acceleration structures + triangles,
+        // block tables, the solver's value copy (`xs` is load-bearing —
+        // answers-by-value and update rescans read it), and the lazily
+        // built refit links once the update path has materialized them.
+        // (Table 2's paper convention excluded the input copy; resident
+        // accounting here is deliberately truthful instead — the paper
+        // comparison lives in `Bvh::optix_size_estimate`.)
+        self.scene.memory_bytes()
+            + self.block_argmin.len() * 4
+            + self.xs.len() * 4
+            + self.refit_links.as_ref().map_or(0, |l| l.memory_bytes())
     }
 }
 
@@ -730,5 +738,26 @@ mod tests {
         // BVH + triangles dominate; must exceed raw input size (Table 2's
         // point about RTXRMQ's memory cost).
         assert!(s.memory_bytes() > (1 << 10) * 4);
+    }
+
+    #[test]
+    fn memory_counts_every_owned_allocation() {
+        // The reported sum must equal the component-wise tally: scene +
+        // block tables + the value copy — and grow by exactly the link
+        // tables once a point update materializes them lazily.
+        let xs = crate::util::rng::Rng::new(54).uniform_f32_vec(512);
+        let mut s = RtxRmq::with_options(
+            &xs,
+            RtxOptions { mode: RtxMode::Blocks { block_size: 16 }, ..Default::default() },
+        );
+        let before = s.memory_bytes();
+        assert_eq!(
+            before,
+            s.scene.memory_bytes() + s.block_argmin.len() * 4 + s.xs.len() * 4
+        );
+        s.update_values_point(&[(7, 0.25)]);
+        let links = s.refit_links.as_ref().expect("point update builds links");
+        assert_eq!(s.memory_bytes(), before + links.memory_bytes());
+        assert!(links.memory_bytes() > 0);
     }
 }

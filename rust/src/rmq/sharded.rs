@@ -29,6 +29,7 @@
 use super::rtx::{RtxMode, RtxOptions, RtxRmq, RtxScratch};
 use super::sparse_table::SparseTable;
 use super::{Query, RmqSolver};
+use crate::bvh::instanced::{InstancedBlock, ShapeSet, MAX_INSTANCED_LEN, SHAPE_LEAF_SIZE};
 use crate::bvh::traverse::Counters;
 use crate::bvh::AccelLayout;
 use crate::util::pool;
@@ -37,9 +38,15 @@ use std::collections::BTreeMap;
 /// Which solver backs each block (and the summary).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum ShardBackend {
+    /// Instanced geometry (default): one shared shape tree per unique
+    /// block length plus a compressed per-block leaf table — see the
+    /// design note in [`crate::bvh::instanced`]. Point updates refit the
+    /// instance tables in place; no per-block tree exists to rebuild.
+    /// Block size is capped at `MAX_INSTANCED_LEN` (u16 positions).
+    #[default]
+    Instanced,
     /// RTXRMQ flat geometry per block (the paper's solver, in the regime
     /// it wins). Updates refit in place.
-    #[default]
     Rtx,
     /// Sparse table per block (oracle backend; updates rebuild the
     /// touched block — blocks are small, so this stays cheap).
@@ -49,6 +56,7 @@ pub enum ShardBackend {
 impl ShardBackend {
     pub fn name(&self) -> &'static str {
         match self {
+            ShardBackend::Instanced => "instanced",
             ShardBackend::Rtx => "rtx",
             ShardBackend::Sparse => "sparse",
         }
@@ -76,7 +84,7 @@ impl Default for ShardedOptions {
         ShardedOptions {
             block_size: 0,
             layout: AccelLayout::Wide,
-            backend: ShardBackend::Rtx,
+            backend: ShardBackend::default(),
             sort_queries: true,
             build_workers: 0,
         }
@@ -92,13 +100,20 @@ pub fn auto_block_size(n: usize) -> usize {
 
 /// One block's solver. Local indices in `[0, block_len)`.
 enum BlockSolver {
+    Instanced(InstancedBlock),
     Rtx(RtxRmq),
     Sparse(SparseTable),
 }
 
 impl BlockSolver {
-    fn build(xs: &[f32], opts: &ShardedOptions) -> BlockSolver {
+    /// `shapes` must already hold the shape for `xs.len()` when the
+    /// backend is instanced ([`ShapeSet::ensure`] runs before every
+    /// parallel build loop — the loops share the set immutably).
+    fn build(xs: &[f32], opts: &ShardedOptions, shapes: &ShapeSet) -> BlockSolver {
         match opts.backend {
+            ShardBackend::Instanced => {
+                BlockSolver::Instanced(InstancedBlock::build(xs, shapes.get(xs.len()).clone()))
+            }
             ShardBackend::Rtx => BlockSolver::Rtx(RtxRmq::with_options(
                 xs,
                 RtxOptions { mode: RtxMode::Flat, layout: opts.layout, ..Default::default() },
@@ -107,51 +122,82 @@ impl BlockSolver {
         }
     }
 
+    /// `xs_block` is the solver's exact value slice (block slice of the
+    /// engine's value array; `block_min` for the summary) — the
+    /// instanced probe resolves exact values from it on hit.
     #[inline]
-    fn rmq_local(&self, l: u32, r: u32, scratch: &mut RtxScratch, c: &mut Counters) -> u32 {
+    fn rmq_local(
+        &self,
+        xs_block: &[f32],
+        l: u32,
+        r: u32,
+        scratch: &mut RtxScratch,
+        c: &mut Counters,
+    ) -> u32 {
         match self {
+            BlockSolver::Instanced(s) => s.probe(xs_block, l as usize, r as usize, c) as u32,
             BlockSolver::Rtx(s) => s.rmq_counted(l, r, scratch, c),
             BlockSolver::Sparse(s) => s.rmq(l, r),
         }
     }
 
     /// Apply local point updates. `fresh` is the block's full value slice
-    /// *after* the updates (rebuild source for the sparse backend).
+    /// *after* the updates (rebuild source for the sparse backend and
+    /// requantization source for the instanced one).
     fn update(&mut self, local: &[(usize, f32)], fresh: &[f32]) {
         match self {
+            BlockSolver::Instanced(s) => s.rebuild_values(fresh),
             BlockSolver::Rtx(s) => s.update_values(local),
             BlockSolver::Sparse(s) => *s = SparseTable::new(fresh),
         }
     }
 
-    /// Point-update fast path for sparse batches: the Rtx backend
-    /// re-shapes the touched triangles and refits only their ancestor
-    /// paths (Θ(k·log n) vs the full sweep's Θ(n)); the sparse backend
-    /// has no refit path and rebuilds as before.
+    /// Point-update fast path for sparse batches: the instanced backend
+    /// writes the leaf record and walks its lane-min path (`O(leaf +
+    /// 4·depth)`, no tree work at all); the Rtx backend re-shapes the
+    /// touched triangles and refits only their ancestor paths (Θ(k·log
+    /// n) vs the full sweep's Θ(n)); the sparse backend has no refit
+    /// path and rebuilds as before.
     fn update_point(&mut self, local: &[(usize, f32)], fresh: &[f32]) {
         match self {
+            BlockSolver::Instanced(s) => {
+                for &(j, v) in local {
+                    s.refit_point(j, v);
+                }
+            }
             BlockSolver::Rtx(s) => s.update_values_point(local),
             BlockSolver::Sparse(s) => *s = SparseTable::new(fresh),
         }
     }
 
+    /// Bytes owned by this solver alone. For the instanced backend that
+    /// is just the compressed instance tables — the shared shape trees
+    /// are counted once at the [`ShardedRmq`] level (`ShapeSet`), not
+    /// per block: that is the entire point of instancing.
     fn memory_bytes(&self) -> usize {
         match self {
+            BlockSolver::Instanced(s) => s.memory_bytes(),
             BlockSolver::Rtx(s) => s.memory_bytes(),
             BlockSolver::Sparse(s) => s.memory_bytes(),
         }
     }
 
     /// Structural invariants of the acceleration structures (tests).
-    fn validate(&self) -> Result<(), String> {
-        if let BlockSolver::Rtx(s) = self {
-            let scene = s.scene();
-            scene.bvh.validate(&scene.tris)?;
-            if let Some(w) = &scene.wide {
-                w.validate(&scene.tris)?;
+    /// `xs_block` is the solver's exact value slice, needed to check the
+    /// instanced lower-bound invariant.
+    fn validate(&self, xs_block: &[f32]) -> Result<(), String> {
+        match self {
+            BlockSolver::Instanced(s) => s.validate(xs_block),
+            BlockSolver::Rtx(s) => {
+                let scene = s.scene();
+                scene.bvh.validate(&scene.tris)?;
+                if let Some(w) = &scene.wide {
+                    w.validate(&scene.tris)?;
+                }
+                Ok(())
             }
+            BlockSolver::Sparse(_) => Ok(()),
         }
-        Ok(())
     }
 }
 
@@ -164,6 +210,9 @@ pub struct StagedUpdateSpec {
     n: usize,
     bs: usize,
     opts: ShardedOptions,
+    /// Shared shape cache (Arc-cheap clone) so instanced replacement
+    /// blocks build against the same trees with no lock held.
+    shapes: ShapeSet,
     updates: Vec<(usize, f32)>,
     /// (block id, fresh value slice) per touched block.
     blocks: Vec<(usize, Vec<f32>)>,
@@ -180,12 +229,13 @@ impl StagedUpdateSpec {
         // direct update path (same values, answers unchanged).
         crate::util::faults::fire("stage.build");
         let (bs, opts) = (self.bs, self.opts);
+        let shapes = &self.shapes;
         let built: Vec<Vec<(usize, BlockSolver, u32)>> =
             pool::map_chunks_mut(&mut self.blocks, workers, |_, slice| {
                 slice
                     .iter()
                     .map(|(b, vals)| {
-                        let solver = BlockSolver::build(vals, &opts);
+                        let solver = BlockSolver::build(vals, &opts, shapes);
                         let local = super::naive_rmq(vals, 0, vals.len() - 1);
                         (*b, solver, (b * bs + local) as u32)
                     })
@@ -240,6 +290,11 @@ pub struct ShardedRmq {
     block_argmin: Vec<u32>,
     /// Solver over `block_min`; `None` when there is a single block.
     summary: Option<BlockSolver>,
+    /// Shared shape trees (instanced backend): at most three distinct
+    /// lengths — full block, tail block, summary. Counted once in
+    /// [`memory_bytes`](RmqSolver::memory_bytes) no matter how many
+    /// thousand blocks instance each tree.
+    shapes: ShapeSet,
     opts: ShardedOptions,
 }
 
@@ -259,24 +314,46 @@ impl ShardedRmq {
             "shard block size {bs} exceeds the flat-geometry precision limit 2^24 \
              (paper §5.2) — pick a smaller --shard-block or the sparse backend"
         );
+        assert!(
+            opts.backend != ShardBackend::Instanced || bs <= MAX_INSTANCED_LEN,
+            "shard block size {bs} exceeds the instanced u16-position limit 2^16 — \
+             pick a smaller --shard-block or the rtx/sparse backend"
+        );
         let nb = n.div_ceil(bs);
         let workers =
             if opts.build_workers == 0 { pool::default_workers() } else { opts.build_workers };
 
+        // Pre-populate the shared shapes (full block, tail, summary)
+        // before the parallel loops, which borrow the set immutably.
+        let mut shapes = ShapeSet::default();
+        if opts.backend == ShardBackend::Instanced {
+            shapes.ensure(bs.min(n), SHAPE_LEAF_SIZE);
+            shapes.ensure(n - (nb - 1) * bs, SHAPE_LEAF_SIZE);
+            if nb > 1 && nb <= MAX_INSTANCED_LEN {
+                shapes.ensure(nb, SHAPE_LEAF_SIZE);
+            }
+        }
+
         // Per-block solvers, built in parallel (each block is independent).
         let mut slots: Vec<Option<BlockSolver>> = (0..nb).map(|_| None).collect();
-        pool::for_each_chunk_mut(&mut slots, workers, |off, slice| {
-            for (k, slot) in slice.iter_mut().enumerate() {
-                let b = off + k;
-                let start = b * bs;
-                let end = (start + bs).min(n);
-                *slot = Some(BlockSolver::build(&xs[start..end], &opts));
-            }
-        });
+        {
+            let shapes = &shapes;
+            pool::for_each_chunk_mut(&mut slots, workers, |off, slice| {
+                for (k, slot) in slice.iter_mut().enumerate() {
+                    let b = off + k;
+                    let start = b * bs;
+                    let end = (start + bs).min(n);
+                    *slot = Some(BlockSolver::build(&xs[start..end], &opts, shapes));
+                }
+            });
+        }
         let blocks: Vec<BlockSolver> =
             slots.into_iter().map(|s| s.expect("block built")).collect();
 
-        // Block minima + the summary solver above them.
+        // Block minima + the summary solver above them. An instanced
+        // decomposition with more blocks than u16 positions can address
+        // falls back to a sparse summary (auto-tuned block sizes keep
+        // nb ≤ 2^16 up to n = 2^28; explicit tiny blocks can exceed it).
         let mut block_min = Vec::with_capacity(nb);
         let mut block_argmin = Vec::with_capacity(nb);
         for b in 0..nb {
@@ -286,9 +363,25 @@ impl ShardedRmq {
             block_min.push(xs[arg]);
             block_argmin.push(arg as u32);
         }
-        let summary = (nb > 1).then(|| BlockSolver::build(&block_min, &opts));
+        let summary = (nb > 1).then(|| {
+            if opts.backend == ShardBackend::Instanced && nb > MAX_INSTANCED_LEN {
+                BlockSolver::Sparse(SparseTable::new(&block_min))
+            } else {
+                BlockSolver::build(&block_min, &opts, &shapes)
+            }
+        });
 
-        ShardedRmq { xs: xs.to_vec(), bs, nb, blocks, block_min, block_argmin, summary, opts }
+        ShardedRmq {
+            xs: xs.to_vec(),
+            bs,
+            nb,
+            blocks,
+            block_min,
+            block_argmin,
+            summary,
+            shapes,
+            opts,
+        }
     }
 
     pub fn block_size(&self) -> usize {
@@ -315,15 +408,22 @@ impl ShardedRmq {
         debug_assert!(l <= r && r < self.xs.len());
         let (bl, br) = (l / self.bs, r / self.bs);
         let base_l = bl * self.bs;
+        let end_l = base_l + self.block_len(bl);
         if bl == br {
             // Entirely inside one block: a single small-range probe.
-            let local =
-                self.blocks[bl].rmq_local((l - base_l) as u32, (r - base_l) as u32, scratch, c);
+            let local = self.blocks[bl].rmq_local(
+                &self.xs[base_l..end_l],
+                (l - base_l) as u32,
+                (r - base_l) as u32,
+                scratch,
+                c,
+            );
             return (base_l + local as usize) as u32;
         }
         // Left partial block. Later candidates must beat it *strictly* —
         // their indices are larger, so ties keep the leftmost.
         let left_local = self.blocks[bl].rmq_local(
+            &self.xs[base_l..end_l],
             (l - base_l) as u32,
             (self.block_len(bl) - 1) as u32,
             scratch,
@@ -333,7 +433,9 @@ impl ShardedRmq {
         // Fully covered interior blocks: one probe of the summary array.
         if br - bl > 1 {
             let summary = self.summary.as_ref().expect("nb > 1 has a summary");
-            let b = summary.rmq_local((bl + 1) as u32, (br - 1) as u32, scratch, c) as usize;
+            let b = summary
+                .rmq_local(&self.block_min, (bl + 1) as u32, (br - 1) as u32, scratch, c)
+                as usize;
             let cand = self.block_argmin[b];
             if self.xs[cand as usize] < self.xs[best as usize] {
                 best = cand;
@@ -341,7 +443,9 @@ impl ShardedRmq {
         }
         // Right partial block.
         let base_r = br * self.bs;
-        let right_local = self.blocks[br].rmq_local(0, (r - base_r) as u32, scratch, c);
+        let end_r = base_r + self.block_len(br);
+        let right_local =
+            self.blocks[br].rmq_local(&self.xs[base_r..end_r], 0, (r - base_r) as u32, scratch, c);
         let cand = (base_r + right_local as usize) as u32;
         if self.xs[cand as usize] < self.xs[best as usize] {
             best = cand;
@@ -509,6 +613,7 @@ impl ShardedRmq {
             n: self.xs.len(),
             bs: self.bs,
             opts: self.opts,
+            shapes: self.shapes.clone(),
             updates: updates.to_vec(),
             blocks,
         }
@@ -597,10 +702,12 @@ impl ShardedRmq {
     /// (used by the update-path tests after refits).
     pub fn validate(&self) -> Result<(), String> {
         for (b, s) in self.blocks.iter().enumerate() {
-            s.validate().map_err(|e| format!("block {b}: {e}"))?;
+            let start = b * self.bs;
+            let end = start + self.block_len(b);
+            s.validate(&self.xs[start..end]).map_err(|e| format!("block {b}: {e}"))?;
         }
         if let Some(s) = &self.summary {
-            s.validate().map_err(|e| format!("summary: {e}"))?;
+            s.validate(&self.block_min).map_err(|e| format!("summary: {e}"))?;
         }
         // The summary tables must mirror the value array.
         for b in 0..self.nb {
@@ -631,10 +738,17 @@ impl RmqSolver for ShardedRmq {
     }
 
     fn memory_bytes(&self) -> usize {
+        // Every owned allocation: per-block solvers, the summary, the
+        // shared shape trees (once, not per instance), the min tables,
+        // and the value array — `xs` is load-bearing (instanced probes
+        // resolve exact values from it), so truthful resident accounting
+        // includes it.
         self.blocks.iter().map(|b| b.memory_bytes()).sum::<usize>()
             + self.summary.as_ref().map_or(0, |s| s.memory_bytes())
+            + self.shapes.memory_bytes()
             + self.block_min.len() * 4
             + self.block_argmin.len() * 4
+            + self.xs.len() * 4
     }
 }
 
@@ -646,10 +760,15 @@ mod tests {
     use crate::util::proptest::{check, gen};
     use crate::util::rng::Rng;
 
-    fn backends() -> [ShardedOptions; 3] {
+    fn backends() -> [ShardedOptions; 4] {
         [
-            ShardedOptions::default(),
-            ShardedOptions { layout: AccelLayout::Binary, ..Default::default() },
+            ShardedOptions::default(), // instanced
+            ShardedOptions { backend: ShardBackend::Rtx, ..Default::default() },
+            ShardedOptions {
+                backend: ShardBackend::Rtx,
+                layout: AccelLayout::Binary,
+                ..Default::default()
+            },
             ShardedOptions { backend: ShardBackend::Sparse, ..Default::default() },
         ]
     }
@@ -1088,13 +1207,17 @@ mod tests {
     #[test]
     fn memory_accounts_blocks_and_summary() {
         let xs = Rng::new(94).uniform_f32_vec(4096);
-        let s = ShardedRmq::with_options(
+        let inst = ShardedRmq::with_options(
             &xs,
             ShardedOptions { block_size: 64, ..Default::default() },
         );
-        assert_eq!(s.num_blocks(), 64);
-        // 64 block BVHs + summary BVH + two 64-entry tables.
-        assert!(s.memory_bytes() > 64 * 8);
+        assert_eq!(inst.num_blocks(), 64);
+        // Instance tables + shapes + min tables + the value array.
+        assert!(inst.memory_bytes() > 4096 * 4);
+        let rtx = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, backend: ShardBackend::Rtx, ..Default::default() },
+        );
         let sparse = ShardedRmq::with_options(
             &xs,
             ShardedOptions {
@@ -1103,6 +1226,105 @@ mod tests {
                 ..Default::default()
             },
         );
-        assert!(sparse.memory_bytes() < s.memory_bytes(), "sparse backend is smaller");
+        // The memory ordering the instancing PR establishes: shared
+        // shapes + compressed leaves < per-block sparse tables <
+        // per-block BVHs + triangles.
+        assert!(inst.memory_bytes() < sparse.memory_bytes(), "instanced is smallest");
+        assert!(sparse.memory_bytes() < rtx.memory_bytes(), "sparse beats per-block BVHs");
+    }
+
+    #[test]
+    fn instanced_resident_bytes_at_least_4x_below_rtx() {
+        // The PR's acceptance ratio, asserted at a CI-friendly scale
+        // with the auto block size (the ratio only grows with n: shape
+        // trees amortize further and per-block BVH overhead doesn't).
+        let xs = Rng::new(99).uniform_f32_vec(1 << 16);
+        let inst = ShardedRmq::new_auto(&xs);
+        assert_eq!(inst.backend(), ShardBackend::Instanced);
+        let rtx = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { backend: ShardBackend::Rtx, ..Default::default() },
+        );
+        let (i, r) = (inst.memory_bytes(), rtx.memory_bytes());
+        assert!(
+            i * 4 <= r,
+            "instanced {i} bytes vs rtx {r} bytes — ratio {:.2} < 4",
+            r as f64 / i as f64
+        );
+        // Equal answers at the lower footprint.
+        let mut rng = Rng::new(100);
+        for _ in 0..300 {
+            let l = rng.range(0, (1 << 16) - 1);
+            let q = rng.range(l, (1 << 16) - 1);
+            assert_eq!(inst.rmq(l as u32, q as u32), rtx.rmq(l as u32, q as u32));
+        }
+    }
+
+    #[test]
+    fn instanced_shape_cache_holds_at_most_three_trees() {
+        // 1000 elements / bs 64: full blocks (64), tail (40), summary
+        // (16 blocks) — three distinct lengths, three shared trees.
+        let xs = Rng::new(101).uniform_f32_vec(1000);
+        let s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 64, ..Default::default() },
+        );
+        assert_eq!(s.num_blocks(), 16);
+        assert!(s.shapes.num_shapes() <= 3, "shapes = {}", s.shapes.num_shapes());
+        s.validate().unwrap();
+    }
+
+    #[test]
+    fn instanced_tiny_blocks_fall_back_to_sparse_summary() {
+        // More blocks than u16 positions can address: the per-block
+        // level stays instanced, the summary falls back to sparse.
+        let xs = Rng::new(102).uniform_f32_vec((1 << 17) + 7);
+        let s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 1, ..Default::default() },
+        );
+        assert!(s.num_blocks() > MAX_INSTANCED_LEN);
+        assert!(matches!(s.summary, Some(BlockSolver::Sparse(_))));
+        let mut rng = Rng::new(103);
+        let n = xs.len();
+        for _ in 0..200 {
+            let l = rng.range(0, n - 1);
+            let r = rng.range(l, n - 1);
+            assert_eq!(s.rmq(l as u32, r as u32) as usize, naive_rmq(&xs, l, r), "({l},{r})");
+        }
+    }
+
+    #[test]
+    fn instanced_refit_path_matches_fresh_rebuild() {
+        // Point updates through the instance refit path (leaf-table
+        // write + lane-min walk) vs a from-scratch decomposition.
+        check("instanced refit vs rebuild", 20, |rng| {
+            let xs = gen::f32_array(rng, 32..=800);
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 6);
+            let opts = ShardedOptions { block_size: bs, ..Default::default() };
+            let mut s = ShardedRmq::with_options(&xs, opts);
+            let mut local = xs.clone();
+            for _ in 0..8 {
+                let i = rng.range(0, n - 1);
+                let v = rng.f32() * 2.0 - 0.5; // can drop below the block v_lo
+                local[i] = v;
+                s.update_batch(&[(i, v)]);
+                s.validate()?;
+                let rebuilt = ShardedRmq::with_options(&local, opts);
+                for _ in 0..12 {
+                    let (l, r) = gen::query(rng, n);
+                    let want = naive_rmq(&local, l, r);
+                    let (a, b) =
+                        (s.rmq(l as u32, r as u32) as usize, rebuilt.rmq(l as u32, r as u32) as usize);
+                    if a != want || b != want {
+                        return Err(format!(
+                            "bs={bs} ({l},{r}): refit {a} rebuild {b} want {want}"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -43,6 +43,15 @@ pub struct SceneRefitLinks {
     wide: Option<crate::bvh::wide::WideRefitLinks>,
 }
 
+impl SceneRefitLinks {
+    /// Heap bytes of the link tables across every built layout. The
+    /// fields are private, so owners (e.g. `RtxRmq`) report link
+    /// residency through this method.
+    pub fn memory_bytes(&self) -> usize {
+        self.bin.memory_bytes() + self.wide.as_ref().map_or(0, |w| w.memory_bytes())
+    }
+}
+
 /// A scene ready for ray launches: triangles + acceleration structures.
 pub struct Scene {
     pub tris: Vec<Triangle>,
@@ -242,6 +251,26 @@ mod tests {
         let binary =
             Scene::with_layout(build_scene(&xs), Builder::BinnedSah, 4, AccelLayout::Binary);
         assert!(scene.memory_bytes() > binary.memory_bytes());
+    }
+
+    #[test]
+    fn refit_links_memory_counts_every_table() {
+        // The sum must cover every owned allocation: both binary link
+        // tables and all three wide link tables, 4 bytes per entry.
+        let xs = crate::util::rng::Rng::new(36).uniform_f32_vec(256);
+        let scene = Scene::new(build_scene(&xs), Builder::BinnedSah, 4);
+        let links = scene.refit_links();
+        let bin = scene.bvh.refit_links();
+        let wide = scene.wide.as_ref().unwrap().refit_links();
+        let expect = (bin.parent.len() + bin.leaf_of_prim.len()) * 4
+            + (wide.parent.len() + wide.node_of_slot.len() + wide.slot_of_prim.len()) * 4;
+        assert_eq!(links.memory_bytes(), expect);
+        assert!(links.memory_bytes() > 0);
+
+        let binary =
+            Scene::with_layout(build_scene(&xs), Builder::BinnedSah, 4, AccelLayout::Binary);
+        let blinks = binary.refit_links();
+        assert_eq!(blinks.memory_bytes(), binary.bvh.refit_links().memory_bytes());
     }
 
     #[test]

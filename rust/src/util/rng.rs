@@ -215,7 +215,9 @@ mod tests {
         let mut r = Rng::new(13);
         let mu = (1000f64).ln();
         let mut samples: Vec<f64> = (0..50_001).map(|_| r.lognormal(mu, 0.3)).collect();
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        // Same latent NaN-panic pattern as `stats::percentile` had:
+        // total_cmp is total over all f64 payloads.
+        samples.sort_by(f64::total_cmp);
         let median = samples[25_000];
         assert!((median / 1000.0 - 1.0).abs() < 0.05, "median {median}");
     }

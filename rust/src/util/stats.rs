@@ -80,11 +80,15 @@ impl OnlineStats {
 }
 
 /// Exact percentile (nearest-rank on a copy; fine for bench-sized samples).
+///
+/// Sorts with [`f64::total_cmp`]: a NaN sample (e.g. a 0/0 ratio from an
+/// unmeasured bench column) sorts to the top instead of panicking the
+/// whole report inside `partial_cmp().unwrap()`.
 pub fn percentile(samples: &[f64], p: f64) -> f64 {
     assert!(!samples.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&p));
     let mut v: Vec<f64> = samples.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
     v[rank]
 }
@@ -224,6 +228,20 @@ mod tests {
         assert_eq!(percentile(&v, 0.0), 1.0);
         assert_eq!(percentile(&v, 50.0), 3.0);
         assert_eq!(percentile(&v, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_tolerates_nan_samples() {
+        // Regression: `partial_cmp().unwrap()` panicked on any NaN in
+        // the sample (a 0/0 speedup ratio was enough to kill a whole
+        // bench report). total_cmp sorts NaN above +inf, so the finite
+        // percentiles stay meaningful.
+        let v = [3.0, f64::NAN, 1.0, 2.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        // nearest-rank on the sorted [1, 2, 3, NaN]: round(1.5) = 2.
+        assert_eq!(percentile(&v, 50.0), 3.0);
+        assert!(percentile(&v, 100.0).is_nan());
+        assert!(percentile(&[f64::NAN], 50.0).is_nan());
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! Differential suite for the instanced block geometry (ISSUE 7's
+//! acceptance gate): the instanced sharded engine must answer
+//! **hit-for-hit identically** to the non-instanced (per-block BVH)
+//! sharded engine and the naive oracle — across every `RangeDist`
+//! regime, on adversarial arrays, under point updates through the
+//! instance refit path, and at quantization-bucket boundaries where the
+//! compressed `u16` leaf records cannot distinguish values on their own.
+
+use rtxrmq::rmq::naive_rmq;
+use rtxrmq::rmq::sharded::{ShardBackend, ShardedOptions, ShardedRmq};
+use rtxrmq::rmq::RmqSolver;
+use rtxrmq::util::proptest::{check, gen};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_queries, gen_updates, RangeDist};
+
+fn instanced(bs: usize) -> ShardedOptions {
+    ShardedOptions { block_size: bs, backend: ShardBackend::Instanced, ..Default::default() }
+}
+
+fn rtx_oracle(bs: usize) -> ShardedOptions {
+    ShardedOptions { block_size: bs, backend: ShardBackend::Rtx, ..Default::default() }
+}
+
+/// Instanced vs the non-instanced sharded engine, batch-for-batch, over
+/// all three range regimes.
+#[test]
+fn instanced_matches_rtx_backend_across_regimes() {
+    check("instanced vs rtx sharded, all regimes", 12, |rng| {
+        let xs = gen::f32_array(rng, 2..=1500);
+        let n = xs.len();
+        let bs = 1usize << rng.range(0, 8);
+        let inst = ShardedRmq::with_options(&xs, instanced(bs));
+        let oracle = ShardedRmq::with_options(&xs, rtx_oracle(bs));
+        for dist in RangeDist::all() {
+            let queries = gen_queries(n, 64, dist, rng);
+            let (a, b) = (inst.batch(&queries, 2), oracle.batch(&queries, 2));
+            if a != b {
+                let bad = a.iter().zip(&b).position(|(x, y)| x != y).unwrap();
+                return Err(format!(
+                    "{dist:?} n={n} bs={bs}: query {:?} instanced {} rtx {}",
+                    queries[bad], a[bad], b[bad]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Adversarial shapes: all-equal (scale collapses to 0), heavy
+/// duplicates (every quantization bucket shared), and n not a multiple
+/// of B (tail block gets its own shared shape). Exhaustive sweeps on
+/// the small ones.
+#[test]
+fn instanced_handles_adversarial_arrays() {
+    let shapes: Vec<(&str, Vec<f32>)> = vec![
+        ("n1", vec![0.5]),
+        ("n2-tie", vec![0.4, 0.4]),
+        ("all-equal", vec![1.0; 200]),
+        ("heavy-dup", (0..300).map(|i| (i % 3) as f32).collect()),
+        ("sawtooth", (0..256).map(|i| (i % 16) as f32).collect()),
+        // 131 % {1,2,16,64} != 0 for the non-1 sizes: tail shape paths.
+        ("prime-len", (0..131).map(|i| ((i * 7919) % 131) as f32).collect()),
+    ];
+    let mut rng = Rng::new(0x1257);
+    for (label, xs) in &shapes {
+        let n = xs.len();
+        for bs in [1usize, 2, 16, 64] {
+            let inst = ShardedRmq::with_options(xs, instanced(bs));
+            let queries: Vec<(u32, u32)> = if n <= 24 {
+                (0..n as u32).flat_map(|l| (l..n as u32).map(move |r| (l, r))).collect()
+            } else {
+                let mut qs: Vec<(u32, u32)> = (0..128)
+                    .map(|_| {
+                        let l = rng.range(0, n - 1);
+                        (l as u32, rng.range(l, n - 1) as u32)
+                    })
+                    .collect();
+                qs.push((0, n as u32 - 1));
+                qs.push((0, 0));
+                qs.push((n as u32 - 1, n as u32 - 1));
+                qs
+            };
+            for &(l, r) in &queries {
+                let want = naive_rmq(xs, l as usize, r as usize) as u32;
+                let got = inst.rmq(l, r);
+                assert_eq!(got, want, "{label} bs={bs} ({l},{r})");
+            }
+            inst.validate().unwrap_or_else(|e| panic!("{label} bs={bs}: {e}"));
+        }
+    }
+}
+
+/// Point updates through the instance refit path (leaf-table write +
+/// lane-min walk, no tree rebuild) vs a fresh from-scratch build and
+/// the in-place non-instanced engine, after every batch.
+#[test]
+fn instanced_updates_match_refit_and_rebuild() {
+    check("instanced updates vs rtx + rebuild", 10, |rng| {
+        let mut xs = gen::f32_array(rng, 16..=700);
+        let n = xs.len();
+        let bs = 1usize << rng.range(1, 6);
+        let mut inst = ShardedRmq::with_options(&xs, instanced(bs));
+        let mut oracle = ShardedRmq::with_options(&xs, rtx_oracle(bs));
+        for round in 0..4 {
+            // Alternate single-point batches (instance refit_point path)
+            // and multi-point batches (rebuild_values path).
+            let count = if round % 2 == 0 { 1 } else { rng.range(2, 12) };
+            let updates = gen_updates(n, count, rng);
+            for &(i, v) in &updates {
+                xs[i] = v;
+            }
+            inst.update_batch(&updates);
+            oracle.update_batch(&updates);
+            let rebuilt = ShardedRmq::with_options(&xs, instanced(bs));
+            for dist in RangeDist::all() {
+                let queries = gen_queries(n, 32, dist, rng);
+                let a = inst.batch(&queries, 2);
+                if a != oracle.batch(&queries, 2) {
+                    return Err(format!("bs={bs} round={round} {dist:?}: vs rtx mismatch"));
+                }
+                if a != rebuilt.batch(&queries, 2) {
+                    return Err(format!("bs={bs} round={round} {dist:?}: vs rebuild mismatch"));
+                }
+            }
+        }
+        inst.validate()
+    });
+}
+
+/// Values separated by less than one quantization bucket: the
+/// compressed records collide, so only the exact resolve-on-hit keeps
+/// leftmost semantics. Constructed so block minima also collide across
+/// blocks (summary-level buckets shared too).
+#[test]
+fn compressed_leaf_ties_are_exact_at_bucket_boundaries() {
+    let n = 256usize;
+    let bs = 16usize;
+    // Spread [0, 655.35] over the block so scale is exactly 0.01, then
+    // plant sub-bucket-width differences (0.001) around the minimum.
+    let mut xs = vec![655.35f32; n];
+    for b in 0..n / bs {
+        let start = b * bs;
+        // The true block min (+9) sits RIGHT of two near-ties that share
+        // its quantization bucket — the bucket screen alone would pick
+        // the earlier position, so exactness here pins resolve-on-hit.
+        xs[start + 2] = 0.002;
+        xs[start + 5] = 0.001;
+        xs[start + 9] = 0.0;
+    }
+    let inst = ShardedRmq::with_options(&xs, instanced(bs));
+    let oracle = ShardedRmq::with_options(&xs, rtx_oracle(bs));
+    inst.validate().unwrap();
+    for l in 0..n as u32 {
+        for r in l..n as u32 {
+            let want = naive_rmq(&xs, l as usize, r as usize) as u32;
+            assert_eq!(inst.rmq(l, r), want, "instanced ({l},{r})");
+            assert_eq!(oracle.rmq(l, r), want, "rtx ({l},{r})");
+        }
+    }
+    // Exact equal values across blocks: leftmost block must win at the
+    // summary level despite every block-min record sharing a bucket.
+    let flat = vec![3.25f32; n];
+    let inst = ShardedRmq::with_options(&flat, instanced(bs));
+    for l in (0..n as u32).step_by(5) {
+        for r in (l..n as u32).step_by(7) {
+            assert_eq!(inst.rmq(l, r), l, "all-equal leftmost ({l},{r})");
+        }
+    }
+}
+
+/// The staged (pipelined) write path builds instanced replacement
+/// blocks against the shared shape cache with no lock held; committing
+/// must be bit-identical to the direct path.
+#[test]
+fn instanced_staged_commit_matches_direct() {
+    let mut rng = Rng::new(0xABC7);
+    let xs: Vec<f32> = (0..500).map(|_| rng.f32()).collect();
+    let mut staged = ShardedRmq::with_options(&xs, instanced(32));
+    let mut direct = ShardedRmq::with_options(&xs, instanced(32));
+    for _ in 0..6 {
+        let updates: Vec<(usize, f32)> =
+            (0..rng.range(1, 16)).map(|_| (rng.range(0, 499), rng.f32())).collect();
+        let prep = staged.prepare_update_batch(&updates, 3);
+        staged.commit_prepared(prep).unwrap_or_else(|_| panic!("commit refused"));
+        direct.update_batch(&updates);
+        assert_eq!(staged.values(), direct.values());
+        for _ in 0..40 {
+            let l = rng.range(0, 499) as u32;
+            let r = rng.range(l as usize, 499) as u32;
+            assert_eq!(staged.rmq(l, r), direct.rmq(l, r), "({l},{r})");
+        }
+    }
+    staged.validate().unwrap();
+}

@@ -138,6 +138,7 @@ fn sharded_matrix_agrees_including_refits() {
             })
             .collect();
         let configs = [
+            (AccelLayout::Wide, ShardBackend::Instanced),
             (AccelLayout::Wide, ShardBackend::Rtx),
             (AccelLayout::Binary, ShardBackend::Rtx),
             (AccelLayout::Wide, ShardBackend::Sparse),

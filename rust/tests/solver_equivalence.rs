@@ -51,6 +51,7 @@ fn all_solvers(xs: &[f32], shard_bs: usize) -> Vec<(String, Box<dyn RmqSolver>)>
         ));
     }
     for (layout, backend) in [
+        (AccelLayout::Wide, ShardBackend::Instanced),
         (AccelLayout::Wide, ShardBackend::Rtx),
         (AccelLayout::Binary, ShardBackend::Rtx),
         (AccelLayout::Wide, ShardBackend::Sparse),
@@ -175,7 +176,7 @@ fn sharded_updates_match_fresh_sparse_table() {
         let mut xs = gen::f32_array(rng, 16..=600);
         let n = xs.len();
         let bs = 1usize << rng.range(1, 6);
-        for backend in [ShardBackend::Rtx, ShardBackend::Sparse] {
+        for backend in [ShardBackend::Instanced, ShardBackend::Rtx, ShardBackend::Sparse] {
             let mut sharded = ShardedRmq::with_options(
                 &xs,
                 ShardedOptions { block_size: bs, backend, ..Default::default() },
