@@ -52,6 +52,11 @@ pub struct CompareReport {
     pub unmatched: Vec<String>,
     /// The baseline is the committed pre-toolchain placeholder.
     pub bootstrap_baseline: bool,
+    /// The baseline's literal `provenance` field (`"measured"` when
+    /// absent: a committed bench artifact predating the field is a real
+    /// measurement, and defaulting the other way would let a mislabeled
+    /// baseline silently disarm the gate).
+    pub baseline_provenance: String,
     pub tolerance: f64,
 }
 
@@ -60,10 +65,17 @@ impl CompareReport {
         self.rows.iter().filter(|r| r.regressed).collect()
     }
 
+    /// Provenance escalation: the gate enforces exactly when the
+    /// baseline is *not* the modeled bootstrap placeholder — committing
+    /// a measured baseline arms it with no workflow change.
+    pub fn gate_enforcing(&self) -> bool {
+        !self.bootstrap_baseline
+    }
+
     /// Should the CI step fail? Regressions (or lost coverage) against
     /// a *real* baseline gate; a bootstrap baseline only reports.
     pub fn failed(&self) -> bool {
-        !self.bootstrap_baseline && (!self.regressions().is_empty() || !self.missing.is_empty())
+        self.gate_enforcing() && (!self.regressions().is_empty() || !self.missing.is_empty())
     }
 }
 
@@ -107,11 +119,16 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
             return Err(format!("{name}: not a bench-smoke JSON ('bench' != \"rmq_smoke\")"));
         }
     }
-    let bootstrap_baseline =
-        baseline.get("provenance").and_then(|p| p.as_str()) == Some(BOOTSTRAP_PROVENANCE);
+    let baseline_provenance = baseline
+        .get("provenance")
+        .and_then(|p| p.as_str())
+        .unwrap_or("measured")
+        .to_string();
+    let bootstrap_baseline = baseline_provenance == BOOTSTRAP_PROVENANCE;
     let base = points_of(baseline)?;
     let cur = points_of(current)?;
-    let mut report = CompareReport { bootstrap_baseline, tolerance, ..Default::default() };
+    let mut report =
+        CompareReport { bootstrap_baseline, baseline_provenance, tolerance, ..Default::default() };
     for (layout, n, batch, base_ns, base_upd, base_resident) in &base {
         let Some(&(_, _, _, cur_ns, cur_upd, cur_resident)) =
             cur.iter().find(|(l, cn, cb, ..)| l == layout && cn == n && cb == batch)
@@ -167,8 +184,10 @@ pub fn summary_md(report: &CompareReport) -> String {
     }
     let _ = writeln!(
         s,
-        "tolerance: +{:.0}% | verdict: **{}**\n",
+        "tolerance: +{:.0}% | baseline provenance: `{}` ({}) | verdict: **{}**\n",
         report.tolerance * 100.0,
+        report.baseline_provenance,
+        if report.gate_enforcing() { "enforcing" } else { "report-only" },
         if report.failed() { "FAIL" } else { "PASS" }
     );
     s.push_str("| solver | n | batch | metric | baseline | current | delta | |\n");
@@ -288,9 +307,31 @@ mod tests {
         let cur = smoke_doc(vec![("wide", 65536, 4096, 4000.0, 0.0)], None);
         let report = compare(&base, &cur, 0.25).unwrap();
         assert!(report.bootstrap_baseline);
+        assert!(!report.gate_enforcing());
+        assert_eq!(report.baseline_provenance, BOOTSTRAP_PROVENANCE);
         assert_eq!(report.regressions().len(), 1, "the delta is still reported");
         assert!(!report.failed(), "placeholder baselines do not gate");
         assert!(summary_md(&report).contains("modeled-bootstrap"));
+    }
+
+    #[test]
+    fn measured_provenance_arms_the_gate() {
+        // Explicitly-measured baseline: same regression now fails.
+        let base = smoke_doc(vec![("wide", 65536, 4096, 400.0, 0.0)], Some("measured"));
+        let cur = smoke_doc(vec![("wide", 65536, 4096, 4000.0, 0.0)], None);
+        let report = compare(&base, &cur, 0.25).unwrap();
+        assert!(!report.bootstrap_baseline);
+        assert!(report.gate_enforcing());
+        assert_eq!(report.baseline_provenance, "measured");
+        assert!(report.failed(), "a measured baseline enforces");
+        // A baseline predating the provenance field enforces too — the
+        // conservative default keeps mislabeling from disarming the
+        // gate.
+        let legacy = smoke_doc(vec![("wide", 65536, 4096, 400.0, 0.0)], None);
+        let report = compare(&legacy, &cur, 0.25).unwrap();
+        assert!(report.gate_enforcing());
+        assert_eq!(report.baseline_provenance, "measured");
+        assert!(report.failed());
     }
 
     #[test]

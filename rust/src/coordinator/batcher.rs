@@ -31,6 +31,29 @@ use std::time::{Duration, Instant};
 /// What a submitter gets back: the response, or a typed rejection.
 pub type Reply = Result<Response, ServeError>;
 
+/// Two-class QoS classification for the multi-tenant front-end: a
+/// request is **interactive** iff it is query-only and its mean range
+/// length sits at or under `ceiling`
+/// ([`router::interactive_range_ceiling`](crate::coordinator::router::interactive_range_ceiling)
+/// = √n). Anything that mutates — or scans past the shard regime — is
+/// **bulk**. Classified once at admission; the executor's pick order
+/// guarantees an interactive-headed tenant is never queued behind
+/// another tenant's bulk work.
+pub fn is_interactive(ops: &[Op], ceiling: f64) -> bool {
+    let mut total = 0u64;
+    let mut count = 0u64;
+    for op in ops {
+        match op {
+            Op::Update { .. } => return false,
+            Op::Query((l, r)) => {
+                total += u64::from(*r) - u64::from(*l) + 1;
+                count += 1;
+            }
+        }
+    }
+    count > 0 && total as f64 / count as f64 <= ceiling
+}
+
 /// Typed rejection for a request that was not served. The differential
 /// contract only covers *accepted* requests — a rejected request
 /// executes none of its ops.
@@ -292,6 +315,26 @@ mod tests {
     fn mixed(id: u64, ops: Vec<Op>) -> (Request, mpsc::Receiver<Reply>) {
         let (tx, rx) = mpsc::sync_channel(1);
         (Request { id, ops, deadline: None, reply: tx }, rx)
+    }
+
+    #[test]
+    fn interactive_class_rejects_updates_and_wide_ranges() {
+        // Pure small-range queries under the ceiling: interactive.
+        let qs = vec![Op::Query((0, 3)), Op::Query((10, 12))];
+        assert!(is_interactive(&qs, 16.0));
+        // Mean range length above the ceiling: bulk.
+        let wide = vec![Op::Query((0, 100))];
+        assert!(!is_interactive(&wide, 16.0));
+        // A single update anywhere demotes the whole request.
+        let upd = vec![Op::Query((0, 1)), Op::Update { i: 2, v: 0.5 }];
+        assert!(!is_interactive(&upd, 16.0));
+        // Empty requests carry no latency claim.
+        assert!(!is_interactive(&[], 16.0));
+        // Mean is what matters, not the max: one wide query amortized
+        // over many points can still be interactive.
+        let mixed_widths =
+            vec![Op::Query((0, 0)), Op::Query((1, 1)), Op::Query((2, 2)), Op::Query((0, 30))];
+        assert!(is_interactive(&mixed_widths, 16.0));
     }
 
     #[test]

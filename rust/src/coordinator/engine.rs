@@ -889,6 +889,47 @@ pub fn spawn_builder(
     (tx, handle)
 }
 
+/// Spawn the **shared** builder pool used by the multi-tenant front-end
+/// (`coordinator::tenants`): one thread draining `(tenant_idx, job)`
+/// pairs for every tenant's lifecycle work. Rebuilds and reshards are
+/// heavyweight — funneling them through one pool keeps N tenants from
+/// saturating N cores with background builds while serving lanes starve.
+///
+/// Backoff is **per tenant**: a tenant whose builds deterministically
+/// panic (a build bug, or an injected `build.statics` fault aimed at it)
+/// sleeps its own exponential backoff before the next job is taken, and
+/// its pending slot is released so `plan()` can reschedule — but a
+/// healthy tenant's jobs reset only that tenant's counter, never the
+/// crashing one's. Dropping the sender stops the thread after the queue
+/// drains.
+pub fn spawn_shared_builder(
+    tenants: Vec<(Arc<EpochState>, Arc<Mutex<Metrics>>)>,
+) -> (SyncSender<(usize, BuildJob)>, JoinHandle<()>) {
+    let (tx, rx) = sync_channel::<(usize, BuildJob)>(2 * tenants.len().max(1));
+    let handle = std::thread::spawn(move || {
+        let mut consecutive_panics = vec![0u32; tenants.len()];
+        while let Ok((idx, job)) = rx.recv() {
+            let Some((state, metrics)) = tenants.get(idx) else {
+                continue;
+            };
+            match catch_unwind(AssertUnwindSafe(|| state.run_job(job, metrics))) {
+                Ok(()) => consecutive_panics[idx] = 0,
+                Err(_) => {
+                    faults::note_caught();
+                    // run_job died before its trailing release.
+                    state.clear_pending();
+                    metrics.lock().record_builder_respawn();
+                    std::thread::sleep(Duration::from_millis(
+                        1u64 << consecutive_panics[idx].min(6),
+                    ));
+                    consecutive_panics[idx] += 1;
+                }
+            }
+        }
+    });
+    (tx, handle)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -77,11 +77,23 @@ pub struct Metrics {
     /// admission or at batch build time).
     pub deadline_expired: u64,
     pub started: Option<std::time::Instant>,
+    /// Correlation labels, prefixed to the snapshot header when set:
+    /// the manifest's run token (`run=<id>`) and, under the
+    /// multi-tenant front-end, the owning tenant (`tenant=<name>`).
+    pub run_id: Option<String>,
+    pub tenant: Option<String>,
 }
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics { started: Some(std::time::Instant::now()), ..Default::default() }
+    }
+
+    /// Attach correlation labels (manifest run token, tenant name) to
+    /// every later snapshot render.
+    pub fn set_labels(&mut self, run_id: Option<String>, tenant: Option<String>) {
+        self.run_id = run_id;
+        self.tenant = tenant;
     }
 
     pub fn record_batch(&mut self, kind: EngineKind, queries: u64, latency_ns: u64) {
@@ -204,10 +216,48 @@ impl Metrics {
             None => 0.0,
         }
     }
+
+    /// Manifest-shaped snapshot: the counters a soak's claims rest on,
+    /// as a JSON object (`util::manifest` embeds one per run, one per
+    /// tenant under the multi-tenant front-end).
+    pub fn summary_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{obj, Json};
+        let mut pairs: Vec<(&str, Json)> = vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("total_queries", Json::Num(self.total_queries() as f64)),
+            ("updates", Json::Num(self.updates as f64)),
+            ("update_batches", Json::Num(self.update_batches as f64)),
+            ("staged_batches", Json::Num(self.staged_batches as f64)),
+            ("staged_installed", Json::Num(self.staged_installed as f64)),
+            ("epoch_version", Json::Num(self.epoch_version as f64)),
+            ("rebuilds", Json::Num(self.rebuilds as f64)),
+            ("reshards", Json::Num(self.reshards as f64)),
+            ("shard_block", Json::Num(self.shard_block as f64)),
+            ("injected_faults", Json::Num(self.injected_faults as f64)),
+            ("caught_panics", Json::Num(self.caught_panics as f64)),
+            ("builder_respawns", Json::Num(self.builder_respawns as f64)),
+            ("degraded_fallbacks", Json::Num(self.degraded_fallbacks as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("deadline_expired", Json::Num(self.deadline_expired as f64)),
+        ];
+        if let Some(t) = &self.tenant {
+            pairs.push(("tenant", Json::Str(t.clone())));
+        }
+        obj(pairs)
+    }
 }
 
 impl fmt::Display for Metrics {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Label prefixes come first so the header stays grep-stable:
+        // every existing consumer matches from `requests=` onward.
+        if let Some(rid) = &self.run_id {
+            write!(f, "run={rid} ")?;
+        }
+        if let Some(t) = &self.tenant {
+            write!(f, "tenant={t} ")?;
+        }
         writeln!(
             f,
             "requests={} rejected={} total_queries={} throughput={:.0} q/s",
@@ -419,6 +469,34 @@ mod tests {
         assert_eq!(m.injected_faults, 5);
         assert_eq!(m.caught_panics, 4);
         assert_eq!(m.lock_recoveries, 1);
+    }
+
+    #[test]
+    fn labels_prefix_the_header_without_moving_it() {
+        let mut m = Metrics::new();
+        m.record_request();
+        assert!(m.to_string().starts_with("requests="), "{m}");
+        m.set_labels(Some("cafe0123deadbeef".into()), Some("bulk".into()));
+        let text = m.to_string();
+        assert!(text.starts_with("run=cafe0123deadbeef tenant=bulk requests="), "{text}");
+        // Existing consumers still match from `requests=` onward.
+        assert!(text.contains("requests=1 rejected=0"), "{text}");
+    }
+
+    #[test]
+    fn summary_json_carries_the_soak_counters() {
+        let mut m = Metrics::new();
+        m.record_request();
+        m.record_batch(EngineKind::Sharded, 64, 1_000);
+        m.record_shed();
+        m.record_rebuild(3, 1_000);
+        m.set_labels(None, Some("interactive".into()));
+        let j = m.summary_json();
+        assert_eq!(j.get("requests").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("total_queries").unwrap().as_u64(), Some(64));
+        assert_eq!(j.get("shed").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("rebuilds").unwrap().as_u64(), Some(1));
+        assert_eq!(j.get("tenant").unwrap().as_str(), Some("interactive"));
     }
 
     #[test]

@@ -13,9 +13,14 @@
 //!   environment has no tokio — documented substitution, DESIGN.md §0).
 //! - [`metrics`]: per-engine latency histograms, throughput counters,
 //!   lifecycle counters and the decayed traffic observation.
+//! - [`tenants`]: the multi-tenant front-end — a registry of named
+//!   arrays (each with its own epoch lifecycle) behind a work-stealing
+//!   executor with two-class QoS and layered admission control
+//!   ([`tenants::MultiCoordinator`]).
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
 pub mod router;
 pub mod server;
+pub mod tenants;

@@ -177,6 +177,17 @@ impl Router {
     }
 }
 
+/// Mean-range ceiling of the multi-tenant **interactive** QoS class:
+/// √n. The paper's Small distribution (mean ≈ n^0.3 — the regime
+/// RTXRMQ/the shards win by construction) sits well under it at any
+/// serving-scale n, Medium (≈ n^0.6) and Large (≈ n/2) sit above, so
+/// the class boundary matches the routing regime the interactive
+/// guarantee is about: a query-only batch of shard-sized ranges is
+/// cheap enough to always cut ahead of bulk work.
+pub fn interactive_range_ceiling(n: usize) -> f64 {
+    (n.max(1) as f64).sqrt()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +196,17 @@ mod tests {
 
     fn all_kinds() -> Vec<EngineKind> {
         vec![EngineKind::Rtx, EngineKind::Lca, EngineKind::Hrmq, EngineKind::Exhaustive]
+    }
+
+    #[test]
+    fn interactive_ceiling_separates_the_distributions() {
+        let n = 1 << 16;
+        let ceil = interactive_range_ceiling(n);
+        assert_eq!(ceil, 256.0);
+        // Small's mean (≈ n^0.3 ≈ 28) is interactive; Medium/Large not.
+        assert!(RangeDist::Small.mean_len(n) < ceil);
+        assert!(RangeDist::Medium.mean_len(n) > ceil);
+        assert!(RangeDist::Large.mean_len(n) > ceil);
     }
 
     #[test]

@@ -222,35 +222,9 @@ impl Coordinator {
                                         }
                                     }
                                 }
-                                // Pin this segment to the epoch current at its
-                                // start: the Arc keeps a mid-segment background
-                                // swap from freeing engines under us; the next
-                                // segment re-loads and routes freely against
-                                // whatever epoch is current by then.
-                                let epoch = st.current();
-                                let fresh = st.is_fresh(&epoch);
-                                let kind = router.route_epoch(n, qs, epoch.kinds(), fresh);
-                                let engine = epoch.get(kind).expect("routed engine exists");
-                                let ts = std::time::Instant::now();
-                                let got = match engine.solve(qs, workers) {
-                                    Ok(a) => a,
-                                    Err(e) => {
-                                        // Only the XLA engine can fail, and a
-                                        // stale epoch never routes to it — so
-                                        // the exhaustive fallback still sees
-                                        // the array its epoch was built from.
-                                        eprintln!("engine {} failed: {e}", kind.name());
-                                        epoch
-                                            .get(EngineKind::Exhaustive)
-                                            .expect("exhaustive always built")
-                                            .solve(qs, workers)
-                                            .expect("exhaustive cannot fail")
-                                    }
-                                };
-                                let seg_ns = ts.elapsed().as_nanos() as u64;
-                                m.lock().record_batch(kind, qs.len() as u64, seg_ns);
-                                st.observer.lock().observe_queries(qs);
-                                epoch_seen = epoch.version;
+                                let (got, epoch_version, kind) =
+                                    execute_query_segment(&st, &router, &m, qs, workers, n);
+                                epoch_seen = epoch_version;
                                 // Last segment wins: once an update fences the
                                 // batch, later segments are the current truth.
                                 query_engine = Some(kind.name());
@@ -530,6 +504,52 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.stop();
     }
+}
+
+/// Execute one query segment against an array's current epoch: pin the
+/// epoch, route against its freshness, solve (falling back to the
+/// exhaustive engine if the routed engine fails), record batch metrics,
+/// and feed the workload observer. Returns the answers, the pinned
+/// epoch's version, and the routed engine kind.
+///
+/// Shared by the single-array serving loop here and the multi-tenant
+/// executor (`coordinator::tenants`), so both front-ends answer through
+/// the identical routing/fallback/observation path.
+pub(crate) fn execute_query_segment(
+    st: &EpochState,
+    router: &Router,
+    m: &Mutex<Metrics>,
+    qs: &[Query],
+    workers: usize,
+    n: usize,
+) -> (Vec<u32>, u64, EngineKind) {
+    // Pin this segment to the epoch current at its start: the Arc keeps
+    // a mid-segment background swap from freeing engines under us; the
+    // next segment re-loads and routes freely against whatever epoch is
+    // current by then.
+    let epoch = st.current();
+    let fresh = st.is_fresh(&epoch);
+    let kind = router.route_epoch(n, qs, epoch.kinds(), fresh);
+    let engine = epoch.get(kind).expect("routed engine exists");
+    let ts = std::time::Instant::now();
+    let got = match engine.solve(qs, workers) {
+        Ok(a) => a,
+        Err(e) => {
+            // Only the XLA engine can fail, and a stale epoch never
+            // routes to it — so the exhaustive fallback still sees the
+            // array its epoch was built from.
+            eprintln!("engine {} failed: {e}", kind.name());
+            epoch
+                .get(EngineKind::Exhaustive)
+                .expect("exhaustive always built")
+                .solve(qs, workers)
+                .expect("exhaustive cannot fail")
+        }
+    };
+    let seg_ns = ts.elapsed().as_nanos() as u64;
+    m.lock().record_batch(kind, qs.len() as u64, seg_ns);
+    st.observer.lock().observe_queries(qs);
+    (got, epoch.version, kind)
 }
 
 #[cfg(test)]

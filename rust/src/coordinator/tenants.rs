@@ -1,0 +1,952 @@
+//! Multi-tenant serving front-end: a registry of named arrays, each
+//! owning its own epoch lifecycle (engines, observer, fault counters —
+//! everything [`EpochState`] already scopes per array), behind a small
+//! work-stealing executor that schedules fused batches **across**
+//! tenants.
+//!
+//! Scheduling contract (the QoS design note in `rmq/mod.rs` has the
+//! full rationale):
+//!
+//! - **One FIFO queue per tenant.** A tenant's op streams execute in
+//!   submission order no matter how the executor interleaves tenants —
+//!   the same arrival-order consistency the single-array coordinator
+//!   gives, so per-tenant rolling oracles stay valid. Requests are
+//!   classified once at admission ([`is_interactive`]); the queue
+//!   *head*'s class is the tenant's current class.
+//! - **Two-class pick order.** Workers scan interactive-headed tenants
+//!   first and bulk-headed tenants only when no interactive head
+//!   exists, so a small-range interactive segment is never queued
+//!   behind another tenant's bulk update/rebuild work. Within a class,
+//!   tenants are picked by **weighted deficit**: every scan adds the
+//!   tenant's weight to its deficit, the largest deficit wins and
+//!   resets — starvation-free weighted fairness without timestamps.
+//! - **At most one worker per tenant** ([`Claim`]): the fence semantics
+//!   of a fused batch require serial execution per array; claims make
+//!   cross-tenant parallelism safe without reordering any one tenant.
+//! - **Admission control is layered.** A global watermark (aggregate
+//!   queued requests) sheds first, then the per-tenant watermark, then
+//!   the per-tenant default deadline applies to requests that carry
+//!   none. Rejections are typed ([`ServeError`]) exactly like the
+//!   single-array path.
+//! - **One shared builder pool.** Rebuild/re-shard jobs from every
+//!   tenant funnel through [`spawn_shared_builder`] with per-tenant
+//!   panic backoff, so N tenants' lifecycles cannot monopolise N cores.
+//! - **Faults stay inside the batch.** Execution is backstopped per
+//!   batch (including the injectable `tenant.exec` site): a panic
+//!   rejects exactly that tenant's batch with [`ServeError::Failed`]
+//!   and touches no other tenant's queue, metrics, or epoch.
+
+use super::batcher::{is_interactive, FusedBatch, Reply, Request, Response, Segment, ServeError};
+use super::engine::{spawn_shared_builder, BuildJob, EngineCfg, EpochState, LifecycleCfg};
+use super::metrics::Metrics;
+use super::router::{interactive_range_ceiling, Policy, Router};
+use super::server::execute_query_segment;
+use crate::runtime::Runtime;
+use crate::util::faults;
+use crate::util::pool::Claim;
+use crate::util::sync::Mutex;
+use crate::workload::{validate_ops, Op, RangeDist, TenantLoad};
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Condvar, Mutex as StdMutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-tenant serving configuration (the single-array
+/// `CoordinatorCfg`, minus the batcher thread, plus QoS knobs).
+#[derive(Clone, Debug)]
+pub struct TenantCfg {
+    pub name: String,
+    pub policy: Policy,
+    pub engines: EngineCfg,
+    pub lifecycle: LifecycleCfg,
+    /// Weighted-deficit share relative to other tenants (≥ 1).
+    pub weight: u32,
+    /// Shed this tenant's submissions past this queue depth.
+    pub shed_watermark: usize,
+    /// Default deadline applied to requests that carry none.
+    pub deadline: Option<Duration>,
+    /// Close a drained batch at this many ops.
+    pub max_batch_ops: usize,
+    /// Interactive-class mean-range-length ceiling; `None` = √n
+    /// ([`interactive_range_ceiling`]).
+    pub interactive_ceiling: Option<f64>,
+}
+
+impl TenantCfg {
+    pub fn named(name: &str) -> TenantCfg {
+        TenantCfg {
+            name: name.to_string(),
+            policy: Policy::ModeledCost,
+            engines: EngineCfg::default(),
+            lifecycle: LifecycleCfg::default(),
+            weight: 1,
+            shed_watermark: 256,
+            deadline: None,
+            max_batch_ops: 1 << 16,
+            interactive_ceiling: None,
+        }
+    }
+}
+
+/// Executor-level configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MultiCfg {
+    /// Executor worker threads (cross-tenant parallelism; per-tenant
+    /// execution stays serial via claims).
+    pub exec_workers: usize,
+    /// Worker threads used by the engines inside one fused batch.
+    pub engine_workers: usize,
+    /// Aggregate queued-request cap across every tenant; sheds before
+    /// any per-tenant watermark is consulted.
+    pub global_watermark: usize,
+}
+
+impl Default for MultiCfg {
+    fn default() -> Self {
+        MultiCfg {
+            exec_workers: 2,
+            engine_workers: crate::util::pool::default_workers(),
+            global_watermark: 1024,
+        }
+    }
+}
+
+/// A queued request with its QoS class (classified once, at admission).
+struct QueuedReq {
+    req: Request,
+    interactive: bool,
+}
+
+/// One registered array and everything scoped to it.
+pub struct Tenant {
+    pub name: String,
+    n: usize,
+    state: Arc<EpochState>,
+    router: Router,
+    pub metrics: Arc<Mutex<Metrics>>,
+    queue: Mutex<VecDeque<QueuedReq>>,
+    /// Live queue depth (this tenant only).
+    queued: AtomicUsize,
+    /// Exclusive-execution claim: at most one worker drains this tenant
+    /// at a time, preserving the per-array fence.
+    claim: Claim,
+    /// Weighted-deficit accumulator (reset on pick).
+    deficit: AtomicU64,
+    weight: u32,
+    shed_watermark: usize,
+    deadline: Option<Duration>,
+    max_batch_ops: usize,
+    ceiling: f64,
+    next_id: AtomicU64,
+}
+
+impl Tenant {
+    fn head_class(&self) -> Option<bool> {
+        self.queue.lock().front().map(|q| q.interactive)
+    }
+}
+
+/// State shared by the executor workers.
+struct Shared {
+    tenants: Vec<Arc<Tenant>>,
+    global_queued: AtomicUsize,
+    stop: AtomicBool,
+    /// Wakeup signal: submitters notify after a push, workers wait when
+    /// every queue is empty or claimed.
+    signal: (StdMutex<()>, Condvar),
+    engine_workers: usize,
+}
+
+/// Scan one QoS class: every ready (non-empty, unclaimed, head-class
+/// matching) tenant earns its weight of deficit; the largest deficit is
+/// picked and reset. Returns the picked tenant index.
+fn pick_class(tenants: &[Arc<Tenant>], interactive: bool) -> Option<usize> {
+    let mut best: Option<(usize, u64)> = None;
+    for (i, t) in tenants.iter().enumerate() {
+        if t.claim.is_claimed() || t.head_class() != Some(interactive) {
+            continue;
+        }
+        let d = t.deficit.fetch_add(u64::from(t.weight), Ordering::AcqRel) + u64::from(t.weight);
+        if best.map(|(_, bd)| d > bd).unwrap_or(true) {
+            best = Some((i, d));
+        }
+    }
+    best.map(|(i, _)| {
+        tenants[i].deficit.store(0, Ordering::Release);
+        i
+    })
+}
+
+/// Two-pass pick: interactive-headed tenants strictly before
+/// bulk-headed ones.
+fn pick_next(tenants: &[Arc<Tenant>]) -> Option<usize> {
+    pick_class(tenants, true).or_else(|| pick_class(tenants, false))
+}
+
+/// Drain one batch from a claimed tenant and execute it. Only
+/// **consecutive same-class** requests fuse (a class flip at the head
+/// re-enters the scheduler, so a bulk run queued behind an interactive
+/// head cannot ride its pick), capped at `max_batch_ops` ops.
+fn serve_one(shared: &Shared, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>) {
+    let t = &shared.tenants[idx];
+    let group = {
+        let mut q = t.queue.lock();
+        let Some(head_class) = q.front().map(|r| r.interactive) else {
+            return;
+        };
+        let mut group: Vec<Request> = Vec::new();
+        let mut ops = 0usize;
+        while let Some(front) = q.front() {
+            if front.interactive != head_class || (!group.is_empty() && ops >= t.max_batch_ops) {
+                break;
+            }
+            let qr = q.pop_front().expect("front checked");
+            ops += qr.req.ops.len();
+            t.queued.fetch_sub(1, Ordering::AcqRel);
+            shared.global_queued.fetch_sub(1, Ordering::AcqRel);
+            group.push(qr.req);
+        }
+        group
+    };
+    if group.is_empty() {
+        return;
+    }
+    let fused = FusedBatch::from_requests(group, Instant::now());
+    for req in &fused.expired {
+        t.metrics.lock().record_expired();
+        let _ = req.reply.try_send(Err(ServeError::DeadlineExceeded));
+    }
+    if fused.requests.is_empty() {
+        return;
+    }
+    let st = &t.state;
+    let m = &t.metrics;
+    let workers = shared.engine_workers;
+    let t0 = Instant::now();
+    // Batch backstop, same contract as the single-array loop: a panic
+    // (a genuine executor bug, or the injectable `tenant.exec` site)
+    // costs exactly this tenant's batch — Failed replies — and leaves
+    // every other tenant untouched.
+    let exec = catch_unwind(AssertUnwindSafe(|| {
+        faults::fire("tenant.exec");
+        let mut answers: Vec<u32> = Vec::with_capacity(fused.total_queries());
+        let mut query_engine: Option<&'static str> = None;
+        let mut update_engine: Option<&'static str> = None;
+        let mut updates_ok = true;
+        let mut epoch_seen = st.current().version;
+        for seg in &fused.segments {
+            match seg {
+                Segment::Queries(qs) => {
+                    let (got, epoch_version, kind) =
+                        execute_query_segment(st, &t.router, m, qs, workers, t.n);
+                    epoch_seen = epoch_version;
+                    query_engine = Some(kind.name());
+                    answers.extend_from_slice(&got);
+                }
+                Segment::Updates(ups) => {
+                    let ts = Instant::now();
+                    match st.update_batch(ups, workers) {
+                        Ok(kind) => {
+                            update_engine.get_or_insert(kind.name());
+                            m.lock().record_update_batch(
+                                ups.len() as u64,
+                                ts.elapsed().as_nanos() as u64,
+                            );
+                        }
+                        Err(e) => {
+                            eprintln!("tenant {}: update batch dropped: {e}", t.name);
+                            updates_ok = false;
+                        }
+                    }
+                    st.observer.lock().observe_updates(ups.len());
+                }
+            }
+        }
+        (answers, query_engine, update_engine, updates_ok, epoch_seen)
+    }));
+    let latency = t0.elapsed().as_nanos() as u64;
+    match exec {
+        Ok((answers, query_engine, update_engine, updates_ok, epoch_seen)) => {
+            {
+                let obs = st.observer.lock().snapshot();
+                let mut g = m.lock();
+                g.record_observed(obs, st.epoch_version(), st.shard_block_live());
+                g.record_faults(faults::stats());
+            }
+            // Lifecycle work goes to the shared pool, tagged with the
+            // tenant index so backoff and accounting stay per tenant.
+            if let Some(job) = st.plan() {
+                if job_tx.try_send((idx, job)).is_err() {
+                    st.clear_pending();
+                }
+            }
+            let per_request = fused.split_answers(&answers);
+            let engine_name = query_engine.or(update_engine).unwrap_or("NONE");
+            for ((req, ans), &ups) in
+                fused.requests.iter().zip(per_request).zip(&fused.update_splits)
+            {
+                let _ = req.reply.try_send(Ok(Response {
+                    id: req.id,
+                    answers: ans,
+                    updates_applied: if updates_ok { ups } else { 0 },
+                    engine: engine_name,
+                    epoch: epoch_seen,
+                    batch_latency_ns: latency,
+                }));
+            }
+        }
+        Err(_) => {
+            faults::note_caught();
+            {
+                let mut g = m.lock();
+                g.record_degraded();
+                g.record_faults(faults::stats());
+            }
+            for req in &fused.requests {
+                let _ = req.reply.try_send(Err(ServeError::Failed));
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, job_tx: SyncSender<(usize, BuildJob)>) {
+    loop {
+        match pick_next(&shared.tenants) {
+            Some(idx) => {
+                // The pick can lose the claim race to another worker —
+                // fine, re-scan; the loser finds other work or waits.
+                if let Some(_guard) = shared.tenants[idx].claim.try_claim() {
+                    serve_one(&shared, idx, &job_tx);
+                }
+            }
+            None => {
+                if shared.stop.load(Ordering::Acquire)
+                    && shared.global_queued.load(Ordering::Acquire) == 0
+                {
+                    break;
+                }
+                let g = shared.signal.0.lock().unwrap_or_else(|p| p.into_inner());
+                // Short timeout: a claimed tenant releasing, or stop,
+                // must be observed without a dedicated notification.
+                let _ = shared
+                    .signal
+                    .1
+                    .wait_timeout(g, Duration::from_millis(2))
+                    .map(|x| x.0)
+                    .unwrap_or_else(|p| p.into_inner().0);
+            }
+        }
+    }
+}
+
+/// Handle to the running multi-tenant front-end.
+pub struct MultiCoordinator {
+    shared: Arc<Shared>,
+    by_name: BTreeMap<String, usize>,
+    global_watermark: usize,
+    workers: Vec<JoinHandle<()>>,
+    job_tx: Option<SyncSender<(usize, BuildJob)>>,
+    builder: Option<JoinHandle<()>>,
+}
+
+impl MultiCoordinator {
+    /// Bootstrap every tenant's initial epoch, start the shared builder
+    /// pool and the executor workers.
+    pub fn start(
+        arrays: Vec<(TenantCfg, Vec<f32>)>,
+        runtime: Option<Arc<Runtime>>,
+        cfg: MultiCfg,
+    ) -> MultiCoordinator {
+        let mut tenants = Vec::with_capacity(arrays.len());
+        let mut by_name = BTreeMap::new();
+        for (i, (tc, xs)) in arrays.into_iter().enumerate() {
+            let state = EpochState::bootstrap(&xs, runtime.clone(), tc.engines, tc.lifecycle);
+            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            metrics.lock().set_labels(None, Some(tc.name.clone()));
+            let ceiling =
+                tc.interactive_ceiling.unwrap_or_else(|| interactive_range_ceiling(xs.len()));
+            by_name.insert(tc.name.clone(), i);
+            tenants.push(Arc::new(Tenant {
+                name: tc.name,
+                n: xs.len(),
+                state,
+                router: Router::new(tc.policy),
+                metrics,
+                queue: Mutex::new(VecDeque::new()),
+                queued: AtomicUsize::new(0),
+                claim: Claim::new(),
+                deficit: AtomicU64::new(0),
+                weight: tc.weight.max(1),
+                shed_watermark: tc.shed_watermark,
+                deadline: tc.deadline,
+                max_batch_ops: tc.max_batch_ops,
+                ceiling,
+                next_id: AtomicU64::new(0),
+            }));
+        }
+        let (job_tx, builder) = spawn_shared_builder(
+            tenants.iter().map(|t| (t.state.clone(), t.metrics.clone())).collect(),
+        );
+        let shared = Arc::new(Shared {
+            tenants,
+            global_queued: AtomicUsize::new(0),
+            stop: AtomicBool::new(false),
+            signal: (StdMutex::new(()), Condvar::new()),
+            engine_workers: cfg.engine_workers.max(1),
+        });
+        let workers = (0..cfg.exec_workers.max(1))
+            .map(|_| {
+                let s = shared.clone();
+                let jt = job_tx.clone();
+                std::thread::spawn(move || worker_loop(s, jt))
+            })
+            .collect();
+        MultiCoordinator {
+            shared,
+            by_name,
+            global_watermark: cfg.global_watermark,
+            workers,
+            job_tx: Some(job_tx),
+            builder: Some(builder),
+        }
+    }
+
+    fn tenant(&self, name: &str) -> Result<&Arc<Tenant>> {
+        self.by_name
+            .get(name)
+            .map(|&i| &self.shared.tenants[i])
+            .ok_or_else(|| anyhow!("unknown tenant {name:?}"))
+    }
+
+    /// Admit a request for `tenant` and return the reply channel
+    /// without blocking on the answer (pipelined clients keep `depth`
+    /// of these in flight). Admission order: validation → global
+    /// watermark → per-tenant watermark → effective deadline.
+    pub fn submit_async(
+        &self,
+        tenant: &str,
+        ops: Vec<Op>,
+        deadline: Option<Duration>,
+    ) -> Result<Receiver<Reply>> {
+        let t = self.tenant(tenant)?;
+        validate_ops(t.n, &ops).map_err(|e| {
+            t.metrics.lock().record_rejected();
+            anyhow!(e)
+        })?;
+        if self.shared.global_queued.load(Ordering::Acquire) >= self.global_watermark
+            || t.queued.load(Ordering::Acquire) >= t.shed_watermark
+        {
+            t.metrics.lock().record_shed();
+            return Err(anyhow::Error::new(ServeError::Overloaded));
+        }
+        let deadline = match deadline.or(t.deadline) {
+            Some(d) if d.is_zero() => {
+                t.metrics.lock().record_expired();
+                return Err(anyhow::Error::new(ServeError::DeadlineExceeded));
+            }
+            d => d.map(|d| Instant::now() + d),
+        };
+        t.metrics.lock().record_request();
+        let interactive = is_interactive(&ops, t.ceiling);
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let id = t.next_id.fetch_add(1, Ordering::Relaxed);
+        // Gauges go up *before* the push: workers decrement after the
+        // pop, and neither gauge may underflow.
+        t.queued.fetch_add(1, Ordering::AcqRel);
+        self.shared.global_queued.fetch_add(1, Ordering::AcqRel);
+        t.queue
+            .lock()
+            .push_back(QueuedReq { req: Request { id, ops, deadline, reply: reply_tx }, interactive });
+        self.shared.signal.1.notify_all();
+        Ok(reply_rx)
+    }
+
+    /// Blocking submit: admit, wait, unwrap the typed reply.
+    pub fn submit(
+        &self,
+        tenant: &str,
+        ops: Vec<Op>,
+        deadline: Option<Duration>,
+    ) -> Result<Response> {
+        let rx = self.submit_async(tenant, ops, deadline)?;
+        match rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(anyhow::Error::new(e)),
+            Err(_) => Err(anyhow!("executor dropped reply")),
+        }
+    }
+
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.shared.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    pub fn metrics(&self, tenant: &str) -> Result<Arc<Mutex<Metrics>>> {
+        Ok(self.tenant(tenant)?.metrics.clone())
+    }
+
+    pub fn lifecycle(&self, tenant: &str) -> Result<Arc<EpochState>> {
+        Ok(self.tenant(tenant)?.state.clone())
+    }
+
+    /// Fold the fault registry's live counters into every tenant's
+    /// metrics (see `Coordinator::sync_faults`).
+    pub fn sync_faults(&self) {
+        for t in &self.shared.tenants {
+            t.metrics.lock().record_faults(faults::stats());
+        }
+    }
+
+    /// Graceful shutdown: workers drain every queue, then the shared
+    /// builder drains its lifecycle jobs.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::Release);
+        self.shared.signal.1.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        drop(self.job_tx.take());
+        if let Some(b) = self.builder.take() {
+            let _ = b.join();
+        }
+        self.sync_faults();
+    }
+}
+
+impl Drop for MultiCoordinator {
+    fn drop(&mut self) {
+        if !self.workers.is_empty() || self.builder.is_some() {
+            self.stop();
+        }
+    }
+}
+
+/// One tenant's CLI/driver spec: the workload shape
+/// ([`TenantLoad`]) plus serving and driver knobs. Grammar (one spec;
+/// `serve --tenant-specs` joins several with `;`):
+///
+/// ```text
+/// name[,k=v]*    keys: n, dist, uf, weight, watermark, deadline-ms,
+///                      depth, tail, shift, requests, batch
+/// ```
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub load: TenantLoad,
+    pub weight: u32,
+    pub watermark: Option<usize>,
+    pub deadline_ms: Option<u64>,
+    /// Async submissions the driver keeps in flight (1 = blocking).
+    pub depth: usize,
+    /// Quiet pure-query requests appended after the main stream (gives
+    /// the lifecycle a window to rebuild/re-shard).
+    pub tail: usize,
+    /// Driver request count override (else the serve-level default).
+    pub requests: Option<usize>,
+    /// Driver ops-per-request override.
+    pub batch: Option<usize>,
+}
+
+impl TenantSpec {
+    /// A default tenant (`t0`, `t1`, … via `serve --tenants N`).
+    pub fn default_named(name: &str) -> TenantSpec {
+        TenantSpec {
+            load: TenantLoad {
+                name: name.to_string(),
+                n: 1 << 16,
+                dist: RangeDist::Medium,
+                update_frac: 0.1,
+                shift: None,
+            },
+            weight: 1,
+            watermark: None,
+            deadline_ms: None,
+            depth: 1,
+            tail: 0,
+            requests: None,
+            batch: None,
+        }
+    }
+
+    /// Parse one `name,k=v,...` spec.
+    pub fn parse(s: &str) -> std::result::Result<TenantSpec, String> {
+        let mut parts = s.split(',').map(str::trim);
+        let name = parts.next().filter(|p| !p.is_empty()).ok_or("empty tenant spec")?;
+        if name.contains('=') {
+            return Err(format!("tenant spec must start with a name, got {name:?}"));
+        }
+        let mut spec = TenantSpec::default_named(name);
+        for kv in parts {
+            if kv.is_empty() {
+                continue;
+            }
+            let (k, v) = kv.split_once('=').ok_or_else(|| format!("expected k=v, got {kv:?}"))?;
+            match k {
+                "n" => {
+                    spec.load.n = crate::util::cli::parse_scaled(v)
+                        .filter(|&n| n >= 2)
+                        .ok_or_else(|| format!("bad n={v}"))? as usize;
+                }
+                "dist" => {
+                    spec.load.dist = RangeDist::parse(v).ok_or_else(|| format!("bad dist={v}"))?;
+                }
+                "uf" => {
+                    spec.load.update_frac = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|u| (0.0..=1.0).contains(u))
+                        .ok_or_else(|| format!("bad uf={v}"))?;
+                }
+                "shift" => {
+                    spec.load.shift =
+                        Some(RangeDist::parse(v).ok_or_else(|| format!("bad shift={v}"))?);
+                }
+                "weight" => {
+                    spec.weight = v
+                        .parse::<u32>()
+                        .ok()
+                        .filter(|&w| w >= 1)
+                        .ok_or_else(|| format!("bad weight={v}"))?;
+                }
+                "watermark" => {
+                    spec.watermark =
+                        Some(v.parse::<usize>().map_err(|_| format!("bad watermark={v}"))?);
+                }
+                "deadline-ms" => {
+                    spec.deadline_ms =
+                        Some(v.parse::<u64>().map_err(|_| format!("bad deadline-ms={v}"))?);
+                }
+                "depth" => {
+                    spec.depth = v
+                        .parse::<usize>()
+                        .ok()
+                        .filter(|&d| d >= 1)
+                        .ok_or_else(|| format!("bad depth={v}"))?;
+                }
+                "tail" => {
+                    spec.tail = v.parse::<usize>().map_err(|_| format!("bad tail={v}"))?;
+                }
+                "requests" => {
+                    spec.requests = Some(
+                        crate::util::cli::parse_scaled(v)
+                            .filter(|&r| r >= 1)
+                            .ok_or_else(|| format!("bad requests={v}"))?
+                            as usize,
+                    );
+                }
+                "batch" => {
+                    spec.batch = Some(
+                        v.parse::<usize>()
+                            .ok()
+                            .filter(|&b| b >= 1)
+                            .ok_or_else(|| format!("bad batch={v}"))?,
+                    );
+                }
+                other => return Err(format!("unknown tenant key {other:?}")),
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a `;`-joined list, rejecting duplicate names.
+    pub fn parse_list(s: &str) -> std::result::Result<Vec<TenantSpec>, String> {
+        let mut specs = Vec::new();
+        let mut names = std::collections::BTreeSet::new();
+        for part in s.split(';').map(str::trim).filter(|p| !p.is_empty()) {
+            let spec = TenantSpec::parse(part)?;
+            if !names.insert(spec.load.name.clone()) {
+                return Err(format!("duplicate tenant name {:?}", spec.load.name));
+            }
+            specs.push(spec);
+        }
+        if specs.is_empty() {
+            return Err("no tenant specs".to_string());
+        }
+        Ok(specs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rmq::naive_rmq;
+    use crate::util::rng::Rng;
+    use crate::workload::{gen_array, gen_mixed};
+
+    fn mk_multi(names: &[&str], n: usize, cfg: MultiCfg) -> MultiCoordinator {
+        let arrays = names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| (TenantCfg::named(name), gen_array(n, 100 + i as u64)))
+            .collect();
+        MultiCoordinator::start(arrays, None, cfg)
+    }
+
+    fn push_raw(mc: &MultiCoordinator, tenant: &str, interactive: bool) -> Receiver<Reply> {
+        let t = mc.tenant(tenant).unwrap();
+        let (tx, rx) = sync_channel(1);
+        t.queued.fetch_add(1, Ordering::AcqRel);
+        mc.shared.global_queued.fetch_add(1, Ordering::AcqRel);
+        t.queue.lock().push_back(QueuedReq {
+            req: Request { id: 0, ops: vec![Op::Query((0, 1))], deadline: None, reply: tx },
+            interactive,
+        });
+        rx
+    }
+
+    fn drain_manual(mc: &MultiCoordinator, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>) {
+        let _guard = mc.shared.tenants[idx].claim.try_claim().expect("unclaimed in test");
+        serve_one(&mc.shared, idx, job_tx);
+    }
+
+    /// A coordinator with no live workers, so tests can drive the
+    /// scheduler by hand without racing the real executor.
+    fn mk_manual_arrays(
+        arrays: Vec<(TenantCfg, Vec<f32>)>,
+    ) -> (MultiCoordinator, SyncSender<(usize, BuildJob)>) {
+        let mut mc = MultiCoordinator::start(
+            arrays,
+            None,
+            MultiCfg { exec_workers: 1, engine_workers: 2, global_watermark: 1024 },
+        );
+        mc.shared.stop.store(true, Ordering::Release);
+        mc.shared.signal.1.notify_all();
+        for w in mc.workers.drain(..) {
+            let _ = w.join();
+        }
+        mc.shared.stop.store(false, Ordering::Release);
+        let jt = mc.job_tx.clone().expect("running");
+        (mc, jt)
+    }
+
+    fn mk_manual(names: &[&str], n: usize) -> (MultiCoordinator, SyncSender<(usize, BuildJob)>) {
+        let arrays = names
+            .iter()
+            .enumerate()
+            .map(|(i, name)| (TenantCfg::named(name), gen_array(n, 100 + i as u64)))
+            .collect();
+        mk_manual_arrays(arrays)
+    }
+
+    #[test]
+    fn interactive_heads_pick_before_bulk_heads() {
+        let (mc, _jt) = mk_manual(&["a", "b", "c"], 64);
+        // Bulk heads on a and b (with accumulated deficit), interactive
+        // head on c: c must still win the pick.
+        let _ra = push_raw(&mc, "a", false);
+        let _rb = push_raw(&mc, "b", false);
+        mc.shared.tenants[0].deficit.store(1000, Ordering::Release);
+        mc.shared.tenants[1].deficit.store(1000, Ordering::Release);
+        let _rc = push_raw(&mc, "c", true);
+        assert_eq!(pick_next(&mc.shared.tenants), Some(2), "interactive preempts bulk");
+        // With c drained, the bulk pass resumes on the deficit leaders.
+        mc.shared.tenants[2].queue.lock().clear();
+        let got = pick_next(&mc.shared.tenants);
+        assert!(got == Some(0) || got == Some(1), "bulk pass picks a bulk head, got {got:?}");
+    }
+
+    #[test]
+    fn weighted_deficit_shares_picks_by_weight() {
+        let mut a = TenantCfg::named("w3");
+        a.weight = 3;
+        let b = TenantCfg::named("w1");
+        let (mc, _jt) =
+            mk_manual_arrays(vec![(a, gen_array(64, 1)), (b, gen_array(64, 2))]);
+        let mut picks = [0usize; 2];
+        for _ in 0..40 {
+            // Keep both queues non-empty with bulk heads.
+            for name in ["w3", "w1"] {
+                let t = mc.tenant(name).unwrap();
+                if t.queue.lock().is_empty() {
+                    let _rx = push_raw(&mc, name, false);
+                }
+            }
+            let i = pick_next(&mc.shared.tenants).expect("both ready");
+            picks[i] += 1;
+            mc.shared.tenants[i].queue.lock().clear();
+            while mc.shared.tenants[i].queued.swap(0, Ordering::AcqRel) > 0 {
+                mc.shared.global_queued.fetch_sub(1, Ordering::AcqRel);
+            }
+        }
+        // 3:1 weights → w3 gets ~30 of 40 picks; allow slack for the
+        // alternating warm-up.
+        assert!(
+            picks[0] >= 2 * picks[1],
+            "weight-3 tenant out-picks weight-1 ({} vs {})",
+            picks[0],
+            picks[1]
+        );
+    }
+
+    #[test]
+    fn answers_match_per_tenant_oracles_under_interleaving() {
+        let n = 512;
+        let mc = mk_multi(
+            &["t0", "t1"],
+            n,
+            MultiCfg { exec_workers: 3, engine_workers: 2, global_watermark: 1024 },
+        );
+        let mut oracles: Vec<Vec<f32>> =
+            vec![gen_array(n, 100), gen_array(n, 101)];
+        let mut rng = Rng::new(7);
+        for round in 0..30 {
+            for (ti, name) in ["t0", "t1"].iter().enumerate() {
+                let ops = gen_mixed(n, 16, 0.3, RangeDist::Small, &mut rng);
+                let resp = mc.submit(name, ops.clone(), None).expect("accepted");
+                let mut ai = 0;
+                for op in &ops {
+                    match *op {
+                        Op::Update { i, v } => oracles[ti][i as usize] = v,
+                        Op::Query((l, r)) => {
+                            let want = naive_rmq(&oracles[ti], l as usize, r as usize) as u32;
+                            assert_eq!(
+                                resp.answers[ai], want,
+                                "tenant {name} round {round} query {ai}"
+                            );
+                            ai += 1;
+                        }
+                    }
+                }
+                assert_eq!(ai, resp.answers.len());
+            }
+        }
+        mc.shutdown();
+    }
+
+    #[test]
+    fn per_tenant_watermark_sheds_only_that_tenant() {
+        let mut full = TenantCfg::named("full");
+        full.shed_watermark = 0;
+        let open = TenantCfg::named("open");
+        let mc = MultiCoordinator::start(
+            vec![(full, gen_array(64, 1)), (open, gen_array(64, 2))],
+            None,
+            MultiCfg::default(),
+        );
+        let err = mc.submit("full", vec![Op::Query((0, 1))], None).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
+        assert_eq!(mc.metrics("full").unwrap().lock().shed, 1);
+        let ok = mc.submit("open", vec![Op::Query((0, 1))], None).unwrap();
+        assert_eq!(ok.answers.len(), 1);
+        assert_eq!(mc.metrics("open").unwrap().lock().shed, 0);
+        mc.shutdown();
+    }
+
+    #[test]
+    fn global_watermark_sheds_before_tenant_watermarks() {
+        let mc = mk_multi(
+            &["a", "b"],
+            64,
+            MultiCfg { exec_workers: 1, engine_workers: 1, global_watermark: 0 },
+        );
+        for name in ["a", "b"] {
+            let err = mc.submit(name, vec![Op::Query((0, 1))], None).unwrap_err();
+            assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::Overloaded));
+        }
+        mc.shutdown();
+    }
+
+    #[test]
+    fn default_deadline_applies_and_zero_expires_at_admission() {
+        let mut t = TenantCfg::named("strict");
+        t.deadline = Some(Duration::ZERO);
+        let mc =
+            MultiCoordinator::start(vec![(t, gen_array(64, 1))], None, MultiCfg::default());
+        // No per-request deadline: the tenant default (zero) applies.
+        let err = mc.submit("strict", vec![Op::Query((0, 1))], None).unwrap_err();
+        assert_eq!(err.downcast_ref::<ServeError>(), Some(&ServeError::DeadlineExceeded));
+        assert_eq!(mc.metrics("strict").unwrap().lock().deadline_expired, 1);
+        // An explicit per-request deadline overrides the default.
+        let ok = mc
+            .submit("strict", vec![Op::Query((0, 1))], Some(Duration::from_secs(60)))
+            .unwrap();
+        assert_eq!(ok.answers.len(), 1);
+        mc.shutdown();
+    }
+
+    #[test]
+    fn unknown_tenant_and_invalid_ops_reject() {
+        let mc = mk_multi(&["only"], 64, MultiCfg::default());
+        assert!(mc.submit("nope", vec![Op::Query((0, 1))], None).is_err());
+        let err = mc.submit("only", vec![Op::Query((0, 64))], None).unwrap_err();
+        assert!(err.downcast_ref::<ServeError>().is_none(), "validation is not a ServeError");
+        assert_eq!(mc.metrics("only").unwrap().lock().rejected, 1);
+        mc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending_requests() {
+        let mc = mk_multi(
+            &["d"],
+            256,
+            MultiCfg { exec_workers: 2, engine_workers: 2, global_watermark: 1024 },
+        );
+        let rxs: Vec<_> = (0..16)
+            .map(|i| {
+                mc.submit_async("d", vec![Op::Query((0, i as u32))], None).expect("admitted")
+            })
+            .collect();
+        mc.shutdown();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().expect("reply delivered").expect("served, not dropped");
+            assert_eq!(resp.answers.len(), 1, "request {i}");
+        }
+    }
+
+    #[test]
+    fn class_flip_splits_the_drained_batch() {
+        let (mc, jt) = mk_manual(&["x"], 64);
+        // interactive, interactive, bulk: one drain takes exactly the
+        // two interactive requests; the bulk request waits its turn.
+        let r1 = push_raw(&mc, "x", true);
+        let r2 = push_raw(&mc, "x", true);
+        let r3 = push_raw(&mc, "x", false);
+        drain_manual(&mc, 0, &jt);
+        assert!(r1.try_recv().is_ok() && r2.try_recv().is_ok());
+        assert!(r3.try_recv().is_err(), "bulk run does not ride the interactive drain");
+        assert_eq!(mc.shared.tenants[0].head_class(), Some(false));
+        drain_manual(&mc, 0, &jt);
+        assert!(r3.try_recv().is_ok());
+        assert_eq!(mc.shared.global_queued.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn tenant_spec_parses_grammar_and_rejects_junk() {
+        let spec = TenantSpec::parse(
+            "bulk,n=64k,dist=large,uf=0.5,weight=2,watermark=4,deadline-ms=250,depth=8,tail=3,shift=small,requests=1k,batch=32",
+        )
+        .unwrap();
+        assert_eq!(spec.load.name, "bulk");
+        assert_eq!(spec.load.n, 64 * 1024);
+        assert_eq!(spec.load.dist, RangeDist::Large);
+        assert_eq!(spec.load.update_frac, 0.5);
+        assert_eq!(spec.load.shift, Some(RangeDist::Small));
+        assert_eq!(spec.weight, 2);
+        assert_eq!(spec.watermark, Some(4));
+        assert_eq!(spec.deadline_ms, Some(250));
+        assert_eq!(spec.depth, 8);
+        assert_eq!(spec.tail, 3);
+        assert_eq!(spec.requests, Some(1024));
+        assert_eq!(spec.batch, Some(32));
+        // Defaults.
+        let d = TenantSpec::parse("plain").unwrap();
+        assert_eq!(d.load.n, 1 << 16);
+        assert_eq!(d.weight, 1);
+        assert_eq!(d.depth, 1);
+        // Rejections.
+        assert!(TenantSpec::parse("").is_err());
+        assert!(TenantSpec::parse("k=v").is_err(), "name must come first");
+        assert!(TenantSpec::parse("t,uf=1.5").is_err());
+        assert!(TenantSpec::parse("t,weight=0").is_err());
+        assert!(TenantSpec::parse("t,nope=1").is_err());
+        assert!(TenantSpec::parse_list("a;b;a").is_err(), "duplicate names");
+        assert_eq!(TenantSpec::parse_list("a; b ;c").unwrap().len(), 3);
+        assert!(TenantSpec::parse_list("").is_err());
+    }
+}

@@ -8,21 +8,27 @@
 //!   artifacts    list the AOT artifact variants (PJRT manifest)
 //!   info         architecture profiles used by the models
 
-use rtxrmq::coordinator::batcher::BatcherCfg;
+use rtxrmq::coordinator::batcher::{BatcherCfg, Reply, Response, ServeError};
 use rtxrmq::coordinator::engine::{
     EngineCfg, EngineKind, EngineSet, LifecycleCfg, RebuildMode, ShardBlock,
 };
 use rtxrmq::coordinator::router::Policy;
 use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::coordinator::tenants::{MultiCfg, MultiCoordinator, TenantCfg, TenantSpec};
 use rtxrmq::rmq::naive_rmq;
 use rtxrmq::runtime::Runtime;
 use rtxrmq::util::cli::{Args, Help};
 use rtxrmq::util::faults::{self, FaultPlan};
+use rtxrmq::util::json::Json;
+use rtxrmq::util::manifest::{self, ManifestBuilder};
 use rtxrmq::util::rng::Rng;
 use rtxrmq::util::stats::fmt_mb;
 use rtxrmq::workload::{gen_array, gen_mixed, gen_queries, Op, RangeDist};
+use std::collections::VecDeque;
 use std::path::Path;
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() {
     let args = Args::from_env();
@@ -31,6 +37,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("bench-smoke") => cmd_bench_smoke(&args),
         Some("bench-compare") => cmd_bench_compare(&args),
+        Some("manifest-check") => cmd_manifest_check(&args),
         Some("memory") => cmd_memory(&args),
         Some("artifacts") => cmd_artifacts(&args),
         Some("info") => cmd_info(),
@@ -72,6 +79,11 @@ fn print_help() {
             .opt("inject-seed", "RNG seed of the fault schedule — same seed, same faults (default 42)")
             .opt("deadline-ms", "per-request deadline; expired requests are dropped whole (0 = off)")
             .opt("shed-watermark", "queue depth past which admission sheds Overloaded (default 256)")
+            .opt("tenants", "multi-tenant mode: serve N default tenants t0..tN-1")
+            .opt("tenant-specs", "multi-tenant mode: 'name,k=v,..;name2,..' — keys n dist uf shift weight watermark deadline-ms depth tail requests batch")
+            .opt("global-watermark", "multi-tenant: aggregate queued-request shed cap (default 1024)")
+            .opt("exec-workers", "multi-tenant: executor worker threads (default 2)")
+            .opt("manifest", "write a hashed run manifest (JSON) to this path; threads run= into metrics lines")
             .opt("no-xla", "disable the PJRT/XLA engine"),
         Help::new("bench-smoke", "wall-clock ns/query + build_ms/resident_bytes grid: binary/wide BVH + sharded engine")
             .opt("ns", "comma-separated array sizes (default 2^16,2^18,2^20)")
@@ -81,12 +93,16 @@ fn print_help() {
             .opt("dist", "expected range dist fed to the 'auto' tuner (default small)")
             .opt("update-frac", "also time updates: batch×frac points per grid cell (default 0)")
             .opt("summary-md", "append a markdown summary table to this file")
-            .opt("out", "output JSON path (default BENCH_rmq.json)"),
+            .opt("out", "output JSON path (default BENCH_rmq.json)")
+            .opt("manifest", "write a hashed run manifest recording the bench JSON artifact"),
         Help::new("bench-compare", "regression gate: fresh bench-smoke JSON vs baseline")
             .opt("baseline", "committed baseline JSON (required; ci/BENCH_baseline.json in CI)")
             .opt("current", "fresh bench JSON (default BENCH_rmq.json)")
             .opt("max-regress", "allowed relative regression per metric, incl. resident_bytes (default 0.25)")
-            .opt("summary-md", "append the delta table to this markdown file"),
+            .opt("summary-md", "append the delta table to this markdown file")
+            .opt("manifest", "write a hashed run manifest recording both gate inputs"),
+        Help::new("manifest-check", "re-hash and validate a run manifest (CI gate)")
+            .opt("path", "manifest JSON to validate (required)"),
         Help::new("memory", "data-structure memory report").opt("n", "array size"),
         Help::new("artifacts", "list AOT artifacts").opt("dir", "artifacts dir"),
         Help::new("info", "print the GPU/CPU architecture profiles"),
@@ -149,6 +165,9 @@ fn cmd_solve(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
+    if args.opt("tenants").is_some() || args.opt("tenant-specs").is_some() {
+        return cmd_serve_multi(args);
+    }
     let n: usize = args.get_or("n", 1usize << 16).unwrap();
     let requests: usize = args.get_or("requests", 128usize).unwrap();
     let batch: usize = args.get_or("batch", 1024usize).unwrap();
@@ -190,6 +209,8 @@ fn cmd_serve(args: &Args) -> i32 {
         if deadline_ms > 0 { Some(std::time::Duration::from_millis(deadline_ms)) } else { None };
     let shed_watermark: usize =
         args.get_or("shed-watermark", BatcherCfg::default().shed_watermark).unwrap();
+    let manifest_path = args.opt("manifest").map(str::to_string);
+    let run_id = manifest_path.as_ref().map(|_| manifest::gen_run_id());
     let xs = gen_array(n, 7);
     let runtime = if args.flag("no-xla") {
         None
@@ -208,6 +229,9 @@ fn cmd_serve(args: &Args) -> i32 {
             ..Default::default()
         },
     );
+    if let Some(id) = &run_id {
+        c.metrics.lock().set_labels(Some(id.clone()), None);
+    }
     let mut rng = Rng::new(9);
     let t0 = std::time::Instant::now();
     // The rolling oracle tracks applied updates (mixed mode); a few
@@ -326,12 +350,387 @@ fn cmd_serve(args: &Args) -> i32 {
     // respawn during the grace window) into the printed snapshot.
     c.sync_faults();
     println!("{}", c.metrics.lock());
+    let summary = c.metrics.lock().summary_json();
     c.shutdown();
     faults::disarm();
-    if ok {
-        0
+    let code = if ok { 0 } else { 1 };
+    finish_manifest(manifest_path.as_deref(), run_id.as_deref(), summary, &[], code)
+}
+
+/// Seal and write the run manifest when `--manifest` was given; no-op
+/// otherwise. The recorded exit code is the run's own; a failed
+/// artifact hash or manifest write turns a passing run into a failure —
+/// the contract is machine-checkable or loudly absent, never silently
+/// wrong.
+fn finish_manifest(
+    path: Option<&str>,
+    run_id: Option<&str>,
+    metrics: Json,
+    artifacts: &[&str],
+    code: i32,
+) -> i32 {
+    let (Some(path), Some(run_id)) = (path, run_id) else {
+        return code;
+    };
+    let mut b = ManifestBuilder::new(run_id);
+    let argv: Vec<String> = std::env::args().collect();
+    b.command(&argv, code);
+    b.metrics(metrics);
+    for a in artifacts {
+        if let Err(e) = b.artifact(Path::new(a)) {
+            eprintln!("manifest: failed to hash artifact {a}: {e}");
+            return if code == 0 { 1 } else { code };
+        }
+    }
+    match b.write(Path::new(path)) {
+        Ok(_) => {
+            println!("wrote manifest {path} (run {run_id})");
+            code
+        }
+        Err(e) => {
+            eprintln!("failed to write manifest {path}: {e}");
+            if code == 0 {
+                1
+            } else {
+                code
+            }
+        }
+    }
+}
+
+/// Per-tenant driver tally; the grep-stable `tenant-summary` line the
+/// nightly soak asserts against is printed from these counters (the
+/// *client's* view — admission rejections classified by type), while
+/// the metrics block above it carries the server's view.
+#[derive(Clone, Copy, Default)]
+struct TenantOutcome {
+    submitted: u64,
+    served: u64,
+    shed: u64,
+    expired: u64,
+    failed: u64,
+    updates: u64,
+}
+
+impl TenantOutcome {
+    fn note_err(&mut self, e: &anyhow::Error) {
+        match e.downcast_ref::<ServeError>() {
+            Some(ServeError::Overloaded) => self.shed += 1,
+            Some(ServeError::DeadlineExceeded) => self.expired += 1,
+            _ => self.failed += 1,
+        }
+    }
+}
+
+/// Spot-check an accepted response against the rolling oracle and apply
+/// its updates. Replies are processed in submission order (per-tenant
+/// FIFO holds across the multi-tenant executor), so the oracle is exact
+/// for every accepted request no matter how tenants interleave.
+fn check_response(
+    name: &str,
+    ops: &[Op],
+    resp: &Response,
+    oracle: &mut [f32],
+    out: &mut TenantOutcome,
+) {
+    out.served += 1;
+    out.updates += resp.updates_applied as u64;
+    let mut checked = 0;
+    let mut k = 0;
+    for op in ops {
+        match *op {
+            Op::Query((l, r)) => {
+                if checked < 4 {
+                    let want = naive_rmq(oracle, l as usize, r as usize) as u32;
+                    assert_eq!(
+                        resp.answers[k], want,
+                        "tenant {name}: ({l},{r}) via {}",
+                        resp.engine
+                    );
+                    checked += 1;
+                }
+                k += 1;
+            }
+            Op::Update { i, v } => oracle[i as usize] = v,
+        }
+    }
+}
+
+/// One tenant's synthetic client: depth-K pipelined submission against
+/// its own rolling oracle, then a quiet pure-query tail (the lifecycle
+/// trigger window). A rejected request executed none of its ops, so the
+/// oracle skips it; the injectable `tenant.exec` site panics *before*
+/// any segment executes, so a Failed batch also leaves the oracle
+/// exact.
+fn drive_tenant(
+    mc: &MultiCoordinator,
+    spec: &TenantSpec,
+    idx: usize,
+    requests_default: usize,
+    batch_default: usize,
+) -> TenantOutcome {
+    let name = spec.load.name.as_str();
+    let n = spec.load.n;
+    let requests = spec.requests.unwrap_or(requests_default);
+    let batch = spec.batch.unwrap_or(batch_default);
+    let mut rng = Rng::new(11 + idx as u64);
+    let mut oracle = gen_array(n, 7 + idx as u64);
+    let mut out = TenantOutcome::default();
+    let mut inflight: VecDeque<(Vec<Op>, Receiver<Reply>)> = VecDeque::new();
+    let mut drain_one = |inflight: &mut VecDeque<(Vec<Op>, Receiver<Reply>)>,
+                         oracle: &mut Vec<f32>,
+                         out: &mut TenantOutcome| {
+        let Some((ops, rx)) = inflight.pop_front() else {
+            return;
+        };
+        match rx.recv() {
+            Ok(Ok(resp)) => check_response(name, &ops, &resp, oracle, out),
+            Ok(Err(ServeError::Overloaded)) => out.shed += 1,
+            Ok(Err(ServeError::DeadlineExceeded)) => out.expired += 1,
+            Ok(Err(ServeError::Failed)) | Err(_) => out.failed += 1,
+        }
+    };
+    for r in 0..requests {
+        let progress = r as f64 / requests.max(1) as f64;
+        let ops = spec.load.gen_request(batch, progress, &mut rng);
+        out.submitted += 1;
+        if spec.depth <= 1 {
+            match mc.submit(name, ops.clone(), None) {
+                Ok(resp) => check_response(name, &ops, &resp, &mut oracle, &mut out),
+                Err(e) => out.note_err(&e),
+            }
+        } else {
+            match mc.submit_async(name, ops.clone(), None) {
+                Ok(rx) => {
+                    inflight.push_back((ops, rx));
+                    if inflight.len() >= spec.depth {
+                        drain_one(&mut inflight, &mut oracle, &mut out);
+                    }
+                }
+                Err(e) => out.note_err(&e),
+            }
+        }
+    }
+    while !inflight.is_empty() {
+        drain_one(&mut inflight, &mut oracle, &mut out);
+    }
+    for _ in 0..spec.tail {
+        let qs = gen_queries(n, batch, spec.load.dist_at(1.0), &mut rng);
+        let ops: Vec<Op> = qs.into_iter().map(Op::Query).collect();
+        out.submitted += 1;
+        match mc.submit(name, ops.clone(), None) {
+            Ok(resp) => check_response(name, &ops, &resp, &mut oracle, &mut out),
+            Err(e) => out.note_err(&e),
+        }
+    }
+    out
+}
+
+fn cmd_serve_multi(args: &Args) -> i32 {
+    let specs: Vec<TenantSpec> = match args.opt("tenant-specs") {
+        Some(s) => match TenantSpec::parse_list(s) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("invalid --tenant-specs: {e}");
+                return 2;
+            }
+        },
+        None => {
+            let count: usize = args.get_or("tenants", 2usize).unwrap();
+            if count == 0 {
+                eprintln!("--tenants must be >= 1");
+                return 2;
+            }
+            (0..count).map(|i| TenantSpec::default_named(&format!("t{i}"))).collect()
+        }
+    };
+    let rebuild = RebuildMode::parse(&args.str_or("rebuild", "auto")).unwrap_or_else(|| {
+        eprintln!("invalid --rebuild (expected auto|off)");
+        std::process::exit(2);
+    });
+    let reshard_drift: f64 = args.get_or("reshard-drift", 2.0f64).unwrap();
+    let inject_seed: u64 = args.get_or("inject-seed", 42u64).unwrap();
+    if let Some(spec) = args.opt("inject") {
+        match FaultPlan::parse(spec, inject_seed) {
+            Ok(plan) => faults::arm(plan),
+            Err(e) => {
+                eprintln!("invalid --inject: {e}");
+                return 2;
+            }
+        }
+    }
+    let requests_default: usize = args.get_or("requests", 96usize).unwrap();
+    let batch_default: usize = args.get_or("batch", 1024usize).unwrap();
+    let shed_watermark: usize =
+        args.get_or("shed-watermark", BatcherCfg::default().shed_watermark).unwrap();
+    let deadline_ms: u64 = args.get_or("deadline-ms", 0u64).unwrap();
+    let global_watermark: usize = args.get_or("global-watermark", 1024usize).unwrap();
+    let exec_workers: usize = args.get_or("exec-workers", 2usize).unwrap();
+    let manifest_path = args.opt("manifest").map(str::to_string);
+    let run_id = manifest_path.as_ref().map(|_| manifest::gen_run_id());
+    let runtime = if args.flag("no-xla") {
+        None
     } else {
-        1
+        Runtime::load(Path::new("artifacts")).ok().map(Arc::new)
+    };
+    let arrays: Vec<(TenantCfg, Vec<f32>)> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let mut tc = TenantCfg::named(&spec.load.name);
+            tc.engines = EngineCfg {
+                shard_block: shard_block_arg(args, spec.load.dist, spec.load.update_frac),
+            };
+            tc.lifecycle = LifecycleCfg { rebuild, reshard_drift, ..Default::default() };
+            tc.weight = spec.weight;
+            tc.shed_watermark = spec.watermark.unwrap_or(shed_watermark);
+            let dms = spec.deadline_ms.unwrap_or(deadline_ms);
+            tc.deadline = (dms > 0).then(|| Duration::from_millis(dms));
+            (tc, gen_array(spec.load.n, 7 + i as u64))
+        })
+        .collect();
+    let mc = MultiCoordinator::start(
+        arrays,
+        runtime,
+        MultiCfg {
+            exec_workers,
+            engine_workers: rtxrmq::util::pool::default_workers(),
+            global_watermark,
+        },
+    );
+    if let Some(id) = &run_id {
+        for spec in &specs {
+            let m = mc.metrics(&spec.load.name).expect("registered");
+            m.lock().set_labels(Some(id.clone()), Some(spec.load.name.clone()));
+        }
+    }
+    let t0 = Instant::now();
+    // One client thread per tenant; an oracle-mismatch assert panics
+    // the thread, which the join below converts into a failed run.
+    let outcomes: Vec<Option<TenantOutcome>> = std::thread::scope(|s| {
+        let handles: Vec<_> = specs
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let mc = &mc;
+                s.spawn(move || drive_tenant(mc, spec, i, requests_default, batch_default))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().ok()).collect()
+    });
+    let wall = t0.elapsed();
+    let oracles_ok = outcomes.iter().all(Option::is_some);
+    if !oracles_ok {
+        eprintln!("serve: a tenant client failed its oracle check");
+    }
+    // Lifecycle expectations hold if *any* tenant did the work; builds
+    // may still be in flight on the shared pool — grace-poll like the
+    // single-array path.
+    let expect = |flag: &str, what: &str, count: &dyn Fn() -> u64| -> bool {
+        if !args.flag(flag) {
+            return true;
+        }
+        let t1 = Instant::now();
+        while count() == 0 && t1.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        if count() == 0 {
+            eprintln!("--{flag}: no background {what} occurred in any tenant");
+            return false;
+        }
+        true
+    };
+    let sum_over = |f: &dyn Fn(&Arc<rtxrmq::coordinator::engine::EpochState>) -> u64| -> u64 {
+        specs.iter().map(|s| f(&mc.lifecycle(&s.load.name).expect("registered"))).sum()
+    };
+    let ok = oracles_ok
+        && expect("expect-rebuild", "rebuild", &|| sum_over(&|lc| lc.rebuilds()))
+        && expect("expect-reshard", "re-shard", &|| sum_over(&|lc| lc.reshards()));
+    mc.sync_faults();
+    let mut total_submitted = 0u64;
+    let mut total_served = 0u64;
+    let mut metrics_doc = std::collections::BTreeMap::new();
+    for (spec, out) in specs.iter().zip(&outcomes) {
+        let name = spec.load.name.as_str();
+        let out = out.unwrap_or_default();
+        println!("{}", mc.metrics(name).expect("registered").lock());
+        let lc = mc.lifecycle(name).expect("registered");
+        println!(
+            "tenant-summary name={name} submitted={} served={} shed={} expired={} failed={} \
+             updates={} epoch={} rebuilds={} reshards={}",
+            out.submitted,
+            out.served,
+            out.shed,
+            out.expired,
+            out.failed,
+            out.updates,
+            lc.epoch_version(),
+            lc.rebuilds(),
+            lc.reshards()
+        );
+        total_submitted += out.submitted;
+        total_served += out.served;
+        metrics_doc.insert(
+            name.to_string(),
+            mc.metrics(name).expect("registered").lock().summary_json(),
+        );
+    }
+    println!(
+        "served {total_served} of {total_submitted} requests across {} tenants in {wall:.2?}",
+        specs.len()
+    );
+    mc.shutdown();
+    faults::disarm();
+    let code = if ok { 0 } else { 1 };
+    finish_manifest(
+        manifest_path.as_deref(),
+        run_id.as_deref(),
+        Json::Obj(metrics_doc),
+        &[],
+        code,
+    )
+}
+
+fn cmd_manifest_check(args: &Args) -> i32 {
+    let path = match args.opt("path") {
+        Some(p) => p.to_string(),
+        None => {
+            eprintln!("manifest-check: --path is required");
+            return 2;
+        }
+    };
+    let text = match std::fs::read_to_string(&path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("manifest-check: {path}: {e}");
+            return 2;
+        }
+    };
+    let doc = match Json::parse(text.trim()) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("manifest-check: {path}: parse error: {e}");
+            return 2;
+        }
+    };
+    // Artifact paths are resolved relative to the manifest's directory,
+    // so a manifest checked from a CI artifact bundle still re-hashes
+    // the files that travelled with it.
+    let base = Path::new(&path).parent().map(|p| p.to_path_buf()).unwrap_or_default();
+    match manifest::validate(&doc, &base) {
+        Ok(()) => {
+            let run = doc.get("run_id").and_then(|j| j.as_str()).unwrap_or("?");
+            let arts = doc.get("artifacts").and_then(|j| j.as_arr()).map(|a| a.len()).unwrap_or(0);
+            println!("manifest-check: PASS {path} (run {run}, {arts} artifact(s) re-hashed)");
+            0
+        }
+        Err(errs) => {
+            for e in &errs {
+                eprintln!("manifest-check: {path}: {e}");
+            }
+            eprintln!("manifest-check: FAIL {path} ({} error(s))", errs.len());
+            1
+        }
     }
 }
 
@@ -392,7 +791,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             eprintln!("failed to append summary to {md_path}: {e}");
         }
     }
-    match write_json(std::path::Path::new(&out), &to_json(&cfg, &points)) {
+    let code = match write_json(std::path::Path::new(&out), &to_json(&cfg, &points)) {
         Ok(()) => {
             println!("wrote {out}");
             0
@@ -401,7 +800,13 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             eprintln!("failed to write {out}: {e}");
             1
         }
-    }
+    };
+    let manifest_path = args.opt("manifest");
+    let run_id = manifest_path.map(|_| manifest::gen_run_id());
+    // The bench JSON is the manifest's artifact: CI re-hashes it, so a
+    // baseline swapped after the gate ran can no longer pass silently.
+    let artifacts: &[&str] = if code == 0 { &[&out] } else { &[] };
+    finish_manifest(manifest_path, run_id.as_deref(), Json::Obj(Default::default()), artifacts, code)
 }
 
 fn cmd_bench_compare(args: &Args) -> i32 {
@@ -466,13 +871,23 @@ fn cmd_bench_compare(args: &Args) -> i32 {
             eprintln!("failed to append summary to {md_path}: {e}");
         }
     }
+    // Provenance escalation: a modeled bootstrap baseline keeps the
+    // gate report-only; the moment a measured baseline is committed the
+    // gate arms itself — no workflow edit required.
     if report.bootstrap_baseline {
         println!(
-            "baseline is the modeled bootstrap placeholder — gate reports only; commit a \
-             measured BENCH_rmq.json (the CI bench artifact) over {baseline_path} to arm it"
+            "bench-gate: provenance={} — REPORT-ONLY (baseline is the modeled bootstrap \
+             placeholder; commit a measured BENCH_rmq.json over {baseline_path} to arm it)",
+            report.baseline_provenance
+        );
+    } else {
+        println!(
+            "bench-gate: provenance={} — ENFORCING (>{:.0}% regressions fail the build)",
+            report.baseline_provenance,
+            max_regress * 100.0
         );
     }
-    if report.failed() {
+    let code = if report.failed() {
         eprintln!(
             "bench-compare: {} regression(s), {} missing point(s) beyond +{:.0}% tolerance",
             report.regressions().len(),
@@ -483,7 +898,18 @@ fn cmd_bench_compare(args: &Args) -> i32 {
     } else {
         println!("bench-gate: PASS ({} metrics compared)", report.rows.len());
         0
-    }
+    };
+    let manifest_path = args.opt("manifest");
+    let run_id = manifest_path.map(|_| manifest::gen_run_id());
+    // Both gate inputs are recorded: the manifest pins exactly which
+    // baseline and which fresh run produced this verdict.
+    finish_manifest(
+        manifest_path,
+        run_id.as_deref(),
+        Json::Obj(Default::default()),
+        &[&baseline_path, &current_path],
+        code,
+    )
 }
 
 fn cmd_memory(args: &Args) -> i32 {

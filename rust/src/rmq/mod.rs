@@ -262,6 +262,47 @@
 //!   against the oracle. `panic` at `stage.commit` is rejected by the
 //!   parser (a commit panic could strand a half-applied batch); the
 //!   `err` kind forces the conflict-fallback path instead.
+//!
+//! # Multi-tenant scheduling & QoS (design note)
+//!
+//! One process serves many named arrays (`coordinator::tenants`): each
+//! tenant owns the full per-array stack above — epoch lifecycle,
+//! observer, sharded engine, metrics, fault counters — and the only
+//! shared pieces are threads: a small work-stealing executor and one
+//! background builder pool. The scheduling contract:
+//!
+//! - **One FIFO queue per tenant, class at the head.** Requests are
+//!   classified once at admission — *interactive* iff query-only with
+//!   mean range length ≤ the tenant's ceiling (default √n, the paper's
+//!   small-range sweet spot) — and a tenant's current class is its
+//!   queue head's class. Keeping each tenant strictly FIFO is what
+//!   makes the per-tenant differential oracle valid: answers are
+//!   bit-identical to a dedicated single-array coordinator regardless
+//!   of cross-tenant interleaving (`tests/tenant_isolation.rs`).
+//! - **Two-pass weighted-deficit pick.** Idle executor workers scan
+//!   interactive-headed tenants strictly before bulk-headed ones, so
+//!   small-range traffic is never queued behind another tenant's
+//!   update/rebuild work; within a class, each scan adds the tenant's
+//!   weight to a deficit counter and the largest deficit wins (reset on
+//!   pick) — weights share the executor proportionally without
+//!   starving anyone. A per-tenant claim (CAS) keeps execution serial
+//!   per array (the fence ordering survives) while workers steal
+//!   freely across tenants.
+//! - **Layered admission.** A global queued-request watermark sheds
+//!   before any per-tenant watermark is consulted; per-tenant
+//!   `--shed-watermark`/`--deadline-ms` keep one tenant's burst from
+//!   consuming the process. Batches drain only consecutive same-class
+//!   requests, so a class flip splits the batch instead of smuggling
+//!   bulk work into an interactive pick.
+//! - **Shared builder, isolated failures.** Rebuild/re-shard jobs from
+//!   every tenant funnel through one builder pool with *per-tenant*
+//!   panic backoff; an executor-batch kill (`tenant.exec` fault site,
+//!   fired before any segment executes) fails that batch atomically —
+//!   no update applies, every other tenant's counters and answers stay
+//!   untouched. The nightly 3-tenant chaos soak pins the QoS claim
+//!   end-to-end: a flooding bulk tenant saturates its own watermark
+//!   (shed > 0) while the interactive tenant finishes with
+//!   shed = expired = 0.
 
 pub mod cartesian;
 pub mod exhaustive;

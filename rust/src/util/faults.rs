@@ -58,6 +58,10 @@ pub const SITES: &[&str] = &[
     "pool.worker",
     // Batcher hand-off (next_batch, serving thread, pre-execution).
     "batcher.handoff",
+    // Multi-tenant executor, per claimed batch (coordinator/tenants.rs):
+    // fires inside the batch backstop, so a panic rejects exactly that
+    // tenant's batch with Failed and touches no other tenant.
+    "tenant.exec",
 ];
 
 /// What an armed rule does when its probability draw hits.

@@ -1,0 +1,422 @@
+//! Versioned, hashed **run manifests**: the machine-checkable record a
+//! CLI run leaves behind (`serve`/`bench-smoke`/`bench-compare`
+//! `--manifest PATH`, re-validated by `rtxrmq manifest-check`).
+//!
+//! A manifest captures what a soak or bench run *was* — the command and
+//! its exit code, a metrics snapshot, and every artifact it produced
+//! with its `sha256` and byte size — so CI claims stop being grep'd log
+//! tails and become versioned documents any host can re-verify:
+//!
+//! - `schema_version` — semver; validators accept any `1.x.y`.
+//! - `run_id` — random hex token, also threaded into the `Metrics`
+//!   display header (`run=<id> ...`) so log lines correlate with the
+//!   manifest that summarizes them.
+//! - `commands[]` — `{argv, exit_code, duration_ms}` per command.
+//! - `artifacts[]` / `logs[]` — `{path, sha256, bytes}`; the validator
+//!   re-reads each file and re-hashes it, so a swapped or truncated
+//!   artifact fails the check.
+//! - `metrics` — free-form snapshot object (per-tenant summaries for
+//!   multi-tenant soaks, gate mode for `bench-compare`).
+//! - `manifest_sha256` — SHA-256 of the **canonical JSON** of the
+//!   whole document with this field removed. `Json::Obj` is backed by
+//!   a `BTreeMap` and [`Json::to_string_compact`] prints sorted keys
+//!   with `,`/`:` separators, so the compact form *is* the canonical
+//!   form — same convention as `json.dumps(sort_keys=True,
+//!   separators=(',', ':'))`.
+
+use crate::util::json::{obj, Json};
+use crate::util::sha256::sha256_hex;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// Current manifest schema. Validators require the same major.
+pub const SCHEMA_VERSION: &str = "1.0.0";
+
+/// Random-enough run token: time + pid through a splitmix64 finalizer.
+/// Collision resistance only needs to cover "runs a human might ever
+/// compare", not adversaries.
+pub fn gen_run_id() -> String {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut state = nanos ^ ((std::process::id() as u64) << 32) ^ 0x9e37_79b9_7f4a_7c15;
+    format!("{:016x}", crate::util::rng::splitmix64(&mut state))
+}
+
+/// Accumulates one run's record; [`finish`](Self::finish) seals it with
+/// the canonical-JSON hash.
+pub struct ManifestBuilder {
+    run_id: String,
+    started: Instant,
+    timestamp_s: u64,
+    commands: Vec<Json>,
+    logs: Vec<Json>,
+    artifacts: Vec<Json>,
+    metrics: Json,
+}
+
+impl ManifestBuilder {
+    pub fn new(run_id: &str) -> ManifestBuilder {
+        let timestamp_s = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        ManifestBuilder {
+            run_id: run_id.to_string(),
+            started: Instant::now(),
+            timestamp_s,
+            commands: Vec::new(),
+            logs: Vec::new(),
+            artifacts: Vec::new(),
+            metrics: Json::Obj(BTreeMap::new()),
+        }
+    }
+
+    pub fn run_id(&self) -> &str {
+        &self.run_id
+    }
+
+    /// Record the invoking command. Call once per command the manifest
+    /// covers (the CLI records its own argv + computed exit code).
+    pub fn command(&mut self, argv: &[String], exit_code: i32) {
+        let duration_ms = self.started.elapsed().as_millis() as u64;
+        self.commands.push(obj(vec![
+            ("argv", Json::Arr(argv.iter().map(|a| Json::Str(a.clone())).collect())),
+            ("exit_code", Json::Num(exit_code as f64)),
+            ("duration_ms", Json::Num(duration_ms as f64)),
+        ]));
+    }
+
+    pub fn metrics(&mut self, metrics: Json) {
+        self.metrics = metrics;
+    }
+
+    /// Hash a produced file into `artifacts[]`. Missing files are an
+    /// error: a manifest must not silently claim artifacts.
+    pub fn artifact(&mut self, path: &Path) -> std::io::Result<()> {
+        self.artifacts.push(file_record(path)?);
+        Ok(())
+    }
+
+    /// Hash a log file into `logs[]` (same record shape as artifacts).
+    pub fn log(&mut self, path: &Path) -> std::io::Result<()> {
+        self.logs.push(file_record(path)?);
+        Ok(())
+    }
+
+    /// Seal: compute `manifest_sha256` over the canonical JSON of the
+    /// document without that field, then embed it.
+    pub fn finish(self) -> Json {
+        let mut doc = BTreeMap::new();
+        doc.insert("schema_version".into(), Json::Str(SCHEMA_VERSION.into()));
+        doc.insert("run_id".into(), Json::Str(self.run_id));
+        doc.insert("timestamp".into(), Json::Num(self.timestamp_s as f64));
+        doc.insert(
+            "env".into(),
+            obj(vec![
+                ("os", Json::Str(std::env::consts::OS.into())),
+                ("arch", Json::Str(std::env::consts::ARCH.into())),
+            ]),
+        );
+        doc.insert("commands".into(), Json::Arr(self.commands));
+        doc.insert("logs".into(), Json::Arr(self.logs));
+        doc.insert("artifacts".into(), Json::Arr(self.artifacts));
+        doc.insert("metrics".into(), self.metrics);
+        let hash = canonical_sha256(&Json::Obj(doc.clone()));
+        doc.insert("manifest_sha256".into(), Json::Str(hash));
+        Json::Obj(doc)
+    }
+
+    /// Seal and write (compact JSON + trailing newline, parents
+    /// created). Returns the sealed document for further inspection.
+    pub fn write(self, path: &Path) -> std::io::Result<Json> {
+        let doc = self.finish();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", doc.to_string_compact()))?;
+        Ok(doc)
+    }
+}
+
+fn file_record(path: &Path) -> std::io::Result<Json> {
+    let bytes = std::fs::read(path)?;
+    Ok(obj(vec![
+        ("path", Json::Str(path.to_string_lossy().into_owned())),
+        ("sha256", Json::Str(sha256_hex(&bytes))),
+        ("bytes", Json::Num(bytes.len() as f64)),
+    ]))
+}
+
+/// Canonical hash of a manifest document: serialize compact (sorted
+/// keys, `,`/`:` separators) with `manifest_sha256` removed.
+pub fn canonical_sha256(doc: &Json) -> String {
+    let canon = match doc {
+        Json::Obj(map) => {
+            let mut m = map.clone();
+            m.remove("manifest_sha256");
+            Json::Obj(m)
+        }
+        other => other.clone(),
+    };
+    sha256_hex(canon.to_string_compact().as_bytes())
+}
+
+/// Validate a parsed manifest: schema shape, semver major, and — the
+/// part that gives CI teeth — re-read and re-hash every referenced
+/// file against `base` (the manifest's own directory). Returns every
+/// problem found, not just the first.
+pub fn validate(doc: &Json, base: &Path) -> Result<(), Vec<String>> {
+    let mut errs = Vec::new();
+    let require_str = |key: &str, errs: &mut Vec<String>| -> Option<String> {
+        match doc.get(key).and_then(|v| v.as_str()) {
+            Some(s) if !s.is_empty() => Some(s.to_string()),
+            _ => {
+                errs.push(format!("missing or empty required field '{key}'"));
+                None
+            }
+        }
+    };
+    if let Some(v) = require_str("schema_version", &mut errs) {
+        match v.split('.').next().and_then(|m| m.parse::<u64>().ok()) {
+            Some(1) => {}
+            Some(major) => errs.push(format!("unsupported schema major {major} (want 1.x.y)")),
+            None => errs.push(format!("schema_version '{v}' is not semver")),
+        }
+    }
+    require_str("run_id", &mut errs);
+    if doc.get("timestamp").and_then(|v| v.as_u64()).is_none() {
+        errs.push("missing numeric field 'timestamp'".into());
+    }
+    for key in ["os", "arch"] {
+        if doc.get("env").and_then(|e| e.get(key)).and_then(|v| v.as_str()).is_none() {
+            errs.push(format!("missing env.{key}"));
+        }
+    }
+    match doc.get("commands").and_then(|v| v.as_arr()) {
+        None => errs.push("missing array field 'commands'".into()),
+        Some(cmds) => {
+            if cmds.is_empty() {
+                errs.push("commands[] must record at least one command".into());
+            }
+            for (i, c) in cmds.iter().enumerate() {
+                if c.get("argv").and_then(|v| v.as_arr()).map(|a| a.is_empty()).unwrap_or(true) {
+                    errs.push(format!("commands[{i}]: missing non-empty argv"));
+                }
+                for key in ["exit_code", "duration_ms"] {
+                    if c.get(key).and_then(|v| v.as_f64()).is_none() {
+                        errs.push(format!("commands[{i}]: missing numeric {key}"));
+                    }
+                }
+            }
+        }
+    }
+    if doc.get("metrics").is_none() {
+        errs.push("missing field 'metrics'".into());
+    }
+    for section in ["artifacts", "logs"] {
+        match doc.get(section).and_then(|v| v.as_arr()) {
+            None => errs.push(format!("missing array field '{section}'")),
+            Some(files) => {
+                for (i, f) in files.iter().enumerate() {
+                    validate_file_record(section, i, f, base, &mut errs);
+                }
+            }
+        }
+    }
+    match doc.get("manifest_sha256").and_then(|v| v.as_str()) {
+        None => errs.push("missing field 'manifest_sha256'".into()),
+        Some(claimed) => {
+            let actual = canonical_sha256(doc);
+            if claimed != actual {
+                errs.push(format!(
+                    "manifest_sha256 mismatch: manifest says {claimed}, canonical body hashes \
+                     to {actual}"
+                ));
+            }
+        }
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
+fn validate_file_record(section: &str, i: usize, f: &Json, base: &Path, errs: &mut Vec<String>) {
+    let at = format!("{section}[{i}]");
+    let (path, sha, bytes) = match (
+        f.get("path").and_then(|v| v.as_str()),
+        f.get("sha256").and_then(|v| v.as_str()),
+        f.get("bytes").and_then(|v| v.as_u64()),
+    ) {
+        (Some(p), Some(s), Some(b)) => (p, s, b),
+        _ => {
+            errs.push(format!("{at}: needs path, sha256 and bytes"));
+            return;
+        }
+    };
+    // Relative paths resolve against the manifest's own directory
+    // first (a CI artifact bundle travels as one tree), falling back to
+    // the working directory (a manifest written to `manifests/` while
+    // its artifacts stayed in the repo root).
+    let full: PathBuf = if Path::new(path).is_absolute() {
+        PathBuf::from(path)
+    } else {
+        let joined = base.join(path);
+        if !joined.exists() && Path::new(path).exists() {
+            PathBuf::from(path)
+        } else {
+            joined
+        }
+    };
+    match std::fs::read(&full) {
+        Err(e) => errs.push(format!("{at}: cannot read {}: {e}", full.display())),
+        Ok(data) => {
+            if data.len() as u64 != bytes {
+                errs.push(format!(
+                    "{at}: {path} is {} bytes, manifest says {bytes}",
+                    data.len()
+                ));
+            }
+            let actual = sha256_hex(&data);
+            if actual != sha {
+                errs.push(format!("{at}: {path} hashes to {actual}, manifest says {sha}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("rtxrmq_manifest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn build_one(dir: &Path) -> (PathBuf, Json) {
+        let artifact = dir.join("bench.json");
+        std::fs::write(&artifact, b"{\"bench\":\"rmq_smoke\"}\n").unwrap();
+        let mut mb = ManifestBuilder::new("cafe0123deadbeef");
+        mb.command(&["rtxrmq".into(), "bench-smoke".into()], 0);
+        mb.metrics(obj(vec![("points", Json::Num(12.0))]));
+        mb.artifact(&artifact).unwrap();
+        let path = dir.join("manifest.json");
+        let doc = mb.write(&path).unwrap();
+        (path, doc)
+    }
+
+    #[test]
+    fn roundtrip_validates() {
+        let dir = tmp_dir("roundtrip");
+        let (path, doc) = build_one(&dir);
+        // From the sealed document in memory…
+        validate(&doc, &dir).unwrap();
+        // …and re-parsed from disk (what manifest-check does).
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(text.trim()).unwrap();
+        validate(&parsed, &dir).unwrap();
+        assert_eq!(parsed.get("schema_version").unwrap().as_str(), Some(SCHEMA_VERSION));
+        assert_eq!(parsed.get("run_id").unwrap().as_str(), Some("cafe0123deadbeef"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn tampered_artifact_fails_the_hash_check() {
+        let dir = tmp_dir("tamper");
+        let (path, _) = build_one(&dir);
+        std::fs::write(dir.join("bench.json"), b"{\"bench\":\"swapped\"}\n").unwrap();
+        let parsed = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        let errs = validate(&parsed, &dir).unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("hashes to")), "{errs:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn edited_body_fails_the_manifest_hash() {
+        let dir = tmp_dir("editbody");
+        let (_, doc) = build_one(&dir);
+        let mut map = match doc {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        map.insert("run_id".into(), Json::Str("0000000000000000".into()));
+        let errs = validate(&Json::Obj(map), &dir).unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("manifest_sha256 mismatch")), "{errs:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_fields_are_each_reported() {
+        let doc = obj(vec![("schema_version", Json::Str("2.0.0".into()))]);
+        let errs = validate(&doc, Path::new(".")).unwrap_err();
+        assert!(errs.iter().any(|e| e.contains("unsupported schema major 2")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("run_id")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("commands")), "{errs:?}");
+        assert!(errs.iter().any(|e| e.contains("manifest_sha256")), "{errs:?}");
+    }
+
+    #[test]
+    fn canonical_hash_ignores_embedded_hash_only() {
+        let dir = tmp_dir("canon");
+        let (_, doc) = build_one(&dir);
+        let h1 = canonical_sha256(&doc);
+        // Stripping the hash field does not change the canonical hash…
+        let stripped = match &doc {
+            Json::Obj(m) => {
+                let mut m = m.clone();
+                m.remove("manifest_sha256");
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        assert_eq!(h1, canonical_sha256(&stripped));
+        // …but touching any other field does.
+        let touched = match &doc {
+            Json::Obj(m) => {
+                let mut m = m.clone();
+                m.insert("timestamp".into(), Json::Num(0.0));
+                Json::Obj(m)
+            }
+            _ => unreachable!(),
+        };
+        assert_ne!(h1, canonical_sha256(&touched));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn relative_artifact_falls_back_to_cwd() {
+        // The CLI records artifact paths as given on the command line
+        // (often CWD-relative) while `--manifest manifests/run.json`
+        // puts the manifest in a subdirectory; the validator must find
+        // the artifact via the working directory when the
+        // manifest-directory join misses.
+        let rel = PathBuf::from(format!("target/manifest_cwd_fallback_{}", std::process::id()));
+        std::fs::create_dir_all(&rel).unwrap();
+        let artifact = rel.join("bench.json");
+        std::fs::write(&artifact, b"{\"bench\":\"rmq_smoke\"}\n").unwrap();
+        let mut mb = ManifestBuilder::new("cafe0123deadbeef");
+        mb.command(&["rtxrmq".into(), "bench-smoke".into()], 0);
+        mb.artifact(&artifact).unwrap();
+        let doc = mb.finish();
+        let missing_base = std::env::temp_dir().join("rtxrmq_no_such_base_dir");
+        validate(&doc, &missing_base).unwrap();
+        std::fs::remove_dir_all(&rel).ok();
+    }
+
+    #[test]
+    fn run_ids_are_hex_and_distinct() {
+        let a = gen_run_id();
+        let b = gen_run_id();
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+        assert_ne!(a, b, "two draws share a token only on a splitmix collision");
+    }
+}

@@ -1,16 +1,19 @@
 //! Substrate utilities built from scratch for the offline environment
 //! (no rand / clap / rayon / serde / criterion / proptest — see DESIGN.md
 //! §0): PRNG + distributions, CLI parsing, scoped thread pool, statistics,
-//! JSON/CSV, bit utilities, timing, and a mini property-test harness.
+//! JSON/CSV, bit utilities, timing, a mini property-test harness, and
+//! the hashed run-manifest contract (SHA-256 + builder/validator).
 
 pub mod bits;
 pub mod cli;
 pub mod csv;
 pub mod faults;
 pub mod json;
+pub mod manifest;
 pub mod pool;
 pub mod proptest;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod sync;
 pub mod timer;

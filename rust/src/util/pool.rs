@@ -21,6 +21,7 @@
 
 use crate::util::faults;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 
 /// Number of workers to use: `RTXRMQ_THREADS` env override, else the
 /// machine's available parallelism.
@@ -133,6 +134,44 @@ where
         }
     });
     out
+}
+
+/// Exclusive-ownership token for work-stealing over many logical
+/// queues: workers race [`try_claim`](Self::try_claim), the winner
+/// drains that queue, and the [`ClaimGuard`] hands it back on drop —
+/// panic included, so a dying worker can never orphan a queue. The
+/// multi-tenant executor (`coordinator/tenants.rs`) uses one `Claim`
+/// per tenant to let any idle worker steal any ready tenant while
+/// still guaranteeing at most one worker executes a given tenant's
+/// stream at a time (the per-tenant fence is strict stream order).
+#[derive(Debug, Default)]
+pub struct Claim(AtomicBool);
+
+impl Claim {
+    pub const fn new() -> Claim {
+        Claim(AtomicBool::new(false))
+    }
+
+    /// Race for ownership; the winner gets a releasing guard.
+    pub fn try_claim(&self) -> Option<ClaimGuard<'_>> {
+        self.0
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .ok()
+            .map(|_| ClaimGuard(self))
+    }
+
+    pub fn is_claimed(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// RAII release of a [`Claim`].
+pub struct ClaimGuard<'a>(&'a Claim);
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        self.0 .0.store(false, Ordering::Release);
+    }
 }
 
 /// Run `workers` copies of a worker function that pull whole pre-computed
@@ -265,6 +304,29 @@ mod tests {
         assert!(v.iter().enumerate().all(|(i, &x)| x == i));
         assert_eq!(sums.len(), 4);
         assert_eq!(sums.iter().sum::<usize>(), (0..1000).sum::<usize>());
+    }
+
+    #[test]
+    fn claim_is_exclusive_and_releases_on_drop() {
+        let c = Claim::new();
+        assert!(!c.is_claimed());
+        let g = c.try_claim().expect("first claim wins");
+        assert!(c.is_claimed());
+        assert!(c.try_claim().is_none(), "held claim rejects the race");
+        drop(g);
+        assert!(!c.is_claimed());
+        assert!(c.try_claim().is_some(), "released claim is takeable again");
+    }
+
+    #[test]
+    fn claim_releases_across_a_panic() {
+        let c = Claim::new();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = c.try_claim().unwrap();
+            panic!("worker dies holding the claim");
+        }));
+        assert!(r.is_err());
+        assert!(!c.is_claimed(), "guard drop ran during unwind");
     }
 
     #[test]

@@ -170,6 +170,39 @@ pub fn gen_mixed(
         .collect()
 }
 
+/// Per-tenant load shape for the multi-tenant serving front-end
+/// (`coordinator::tenants`): a named array with its own size, range
+/// distribution, and update mix, optionally shifting to a second
+/// distribution mid-run (the drift that trips the reshard lifecycle).
+#[derive(Clone, Debug)]
+pub struct TenantLoad {
+    pub name: String,
+    pub n: usize,
+    pub dist: RangeDist,
+    pub update_frac: f64,
+    /// When set, requests generated past 50% progress draw from this
+    /// distribution instead of `dist` — a mid-soak traffic shift.
+    pub shift: Option<RangeDist>,
+}
+
+impl TenantLoad {
+    /// The distribution in effect at `progress` ∈ [0, 1].
+    pub fn dist_at(&self, progress: f64) -> RangeDist {
+        match self.shift {
+            Some(d) if progress >= 0.5 => d,
+            _ => self.dist,
+        }
+    }
+
+    /// One request's op stream at the given run progress. Each tenant
+    /// owns its own `Rng` stream, so interleaving tenants never
+    /// perturbs any single tenant's sequence — the property the
+    /// isolation differential tests lean on.
+    pub fn gen_request(&self, ops: usize, progress: f64, rng: &mut Rng) -> Vec<Op> {
+        gen_mixed(self.n, ops, self.update_frac, self.dist_at(progress), rng)
+    }
+}
+
 /// Mean range length of a batch (the router's classification feature).
 pub fn mean_range_len(queries: &[Query]) -> f64 {
     if queries.is_empty() {
@@ -332,5 +365,61 @@ mod tests {
         let b = gen_array(1000, 7);
         assert_eq!(a, b);
         assert!(a.iter().all(|&x| (0.0..1.0).contains(&x)));
+    }
+
+    #[test]
+    fn tenant_load_shifts_distribution_at_half_progress() {
+        let t = TenantLoad {
+            name: "shifty".into(),
+            n: 1 << 16,
+            dist: RangeDist::Small,
+            update_frac: 0.0,
+            shift: Some(RangeDist::Large),
+        };
+        assert_eq!(t.dist_at(0.0), RangeDist::Small);
+        assert_eq!(t.dist_at(0.49), RangeDist::Small);
+        assert_eq!(t.dist_at(0.5), RangeDist::Large);
+        assert_eq!(t.dist_at(1.0), RangeDist::Large);
+        // No shift configured: the base distribution holds throughout.
+        let steady = TenantLoad { shift: None, ..t.clone() };
+        assert_eq!(steady.dist_at(0.9), RangeDist::Small);
+        // The generated streams actually move: mean range length after
+        // the shift lands near the Large mean, far above Small's.
+        let mut rng = Rng::new(23);
+        let early: Vec<Query> = t
+            .gen_request(512, 0.0, &mut rng)
+            .iter()
+            .filter_map(|o| if let Op::Query(q) = o { Some(*q) } else { None })
+            .collect();
+        let late: Vec<Query> = t
+            .gen_request(512, 0.75, &mut rng)
+            .iter()
+            .filter_map(|o| if let Op::Query(q) = o { Some(*q) } else { None })
+            .collect();
+        assert!(mean_range_len(&late) > 16.0 * mean_range_len(&early));
+    }
+
+    #[test]
+    fn tenant_streams_are_independent_per_rng() {
+        let t = TenantLoad {
+            name: "t0".into(),
+            n: 4096,
+            dist: RangeDist::Medium,
+            update_frac: 0.2,
+            shift: None,
+        };
+        // Same seed, same progress → same stream, regardless of what
+        // any other tenant's rng did in between.
+        let a = t.gen_request(64, 0.0, &mut Rng::new(5));
+        let mut other = Rng::new(99);
+        let _ = t.gen_request(64, 0.0, &mut other);
+        let b = t.gen_request(64, 0.0, &mut Rng::new(5));
+        assert_eq!(a, b);
+        for op in &a {
+            match *op {
+                Op::Query((l, r)) => assert!(l <= r && (r as usize) < 4096),
+                Op::Update { i, v } => assert!((i as usize) < 4096 && v.is_finite()),
+            }
+        }
     }
 }

@@ -1,0 +1,187 @@
+//! Cross-tenant isolation, differentially tested: the multi-tenant
+//! coordinator must behave — per tenant — exactly like a dedicated
+//! single-array coordinator, no matter how the executor interleaves
+//! other tenants' work.
+//!
+//! Three contracts:
+//! - **Answer isolation**: every accepted response is bit-identical to
+//!   a sequential re-solve of that tenant's own op stream (leftmost
+//!   ties included), even with concurrent clients hammering the other
+//!   tenants.
+//! - **Fault isolation**: an injected executor-batch kill in one tenant
+//!   fails that tenant's request *atomically* (none of its updates
+//!   apply) and leaves every other tenant's accepted answers and fault
+//!   counters untouched.
+//! - **Epoch isolation**: per-tenant epoch versions are monotonic in
+//!   submission order, and a forced static rebuild in one tenant does
+//!   not move any other tenant's epoch.
+
+use rtxrmq::coordinator::batcher::ServeError;
+use rtxrmq::coordinator::engine::{BuildJob, EngineCfg, LifecycleCfg};
+use rtxrmq::coordinator::tenants::{MultiCfg, MultiCoordinator, TenantCfg};
+use rtxrmq::rmq::naive_rmq;
+use rtxrmq::util::faults::{self, FaultPlan};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_array, gen_mixed, Op, RangeDist};
+
+/// The chaos test arms the **process-global** fault registry; the clean
+/// tests assert exact per-tenant counters. Same serialization idiom as
+/// `mixed_stream.rs`.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Sequential semantics of one tenant's op stream: apply to a plain
+/// array, answer queries by rescan.
+fn oracle_run(xs: &mut [f32], ops: &[Op]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for op in ops {
+        match *op {
+            Op::Query((l, r)) => out.push(naive_rmq(xs, l as usize, r as usize) as u32),
+            Op::Update { i, v } => xs[i as usize] = v,
+        }
+    }
+    out
+}
+
+fn start_tenants(specs: &[(&str, usize)]) -> MultiCoordinator {
+    let arrays = specs
+        .iter()
+        .enumerate()
+        .map(|(i, (name, n))| {
+            let mut tc = TenantCfg::named(name);
+            tc.engines = EngineCfg::default();
+            tc.lifecycle = LifecycleCfg::default();
+            (tc, gen_array(*n, 7 + i as u64))
+        })
+        .collect();
+    MultiCoordinator::start(arrays, None, MultiCfg::default())
+}
+
+#[test]
+fn interleaved_tenants_answer_their_own_oracles() {
+    let _g = serial();
+    let specs: &[(&str, usize, RangeDist, f64)] = &[
+        ("alpha", 512, RangeDist::Small, 0.3),
+        ("beta", 1024, RangeDist::Large, 0.1),
+        ("gamma", 768, RangeDist::Medium, 0.5),
+    ];
+    let mc = start_tenants(&specs.iter().map(|(n, sz, _, _)| (*n, *sz)).collect::<Vec<_>>());
+    std::thread::scope(|s| {
+        for (i, &(name, n, dist, uf)) in specs.iter().enumerate() {
+            let mc = &mc;
+            s.spawn(move || {
+                let mut rng = Rng::new(100 + i as u64);
+                let mut oracle = gen_array(n, 7 + i as u64);
+                for round in 0..24 {
+                    let ops = gen_mixed(n, 32, uf, dist, &mut rng);
+                    let want = oracle_run(&mut oracle, &ops);
+                    let resp = mc
+                        .submit(name, ops, None)
+                        .unwrap_or_else(|e| panic!("{name} round {round}: {e}"));
+                    assert_eq!(
+                        resp.answers, want,
+                        "{name} round {round}: answers diverged from the single-array oracle"
+                    );
+                }
+            });
+        }
+    });
+    mc.shutdown();
+}
+
+#[test]
+fn fault_in_one_tenant_leaves_other_answers_untouched() {
+    let _g = serial();
+    let n = 512;
+    let mc = start_tenants(&[("victim", n), ("bystander", n)]);
+    let mut victim_oracle = gen_array(n, 7);
+    let mut bystander_oracle = gen_array(n, 8);
+
+    // First two executor batches die wholesale; blocking submits make
+    // the victim's two requests exactly those batches.
+    faults::arm(FaultPlan::parse("tenant.exec:panic:1.0:2", 99).unwrap());
+    let mut rng = Rng::new(5);
+    for _ in 0..2 {
+        // Updates included on purpose: a failed batch must apply none.
+        let ops = gen_mixed(n, 16, 0.5, RangeDist::Small, &mut rng);
+        let err = mc.submit("victim", ops, None).expect_err("armed batch must fail");
+        assert!(
+            matches!(err.downcast_ref::<ServeError>(), Some(ServeError::Failed)),
+            "expected ServeError::Failed, got {err}"
+        );
+    }
+    faults::disarm();
+
+    // The failed requests applied nothing: the victim's array still
+    // matches the oracle that never saw those ops.
+    for _ in 0..8 {
+        let ops = gen_mixed(n, 24, 0.3, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut victim_oracle, &ops);
+        let resp = mc.submit("victim", ops, None).expect("post-fault victim submit");
+        assert_eq!(resp.answers, want, "victim state drifted after its failed batches");
+    }
+    // The bystander never saw a fault: answers exact, no degraded
+    // events, nothing shed or expired.
+    for _ in 0..8 {
+        let ops = gen_mixed(n, 24, 0.3, RangeDist::Medium, &mut rng);
+        let want = oracle_run(&mut bystander_oracle, &ops);
+        let resp = mc.submit("bystander", ops, None).expect("bystander submit");
+        assert_eq!(resp.answers, want, "bystander answers diverged");
+    }
+    let bm = mc.metrics("bystander").unwrap();
+    let bm = bm.lock();
+    assert_eq!(bm.degraded_fallbacks, 0, "fault leaked into the bystander's counters");
+    assert_eq!(bm.shed + bm.deadline_expired, 0);
+    drop(bm);
+    let vm = mc.metrics("victim").unwrap();
+    assert!(vm.lock().degraded_fallbacks >= 2, "victim must record its killed batches");
+    mc.shutdown();
+}
+
+#[test]
+fn epochs_are_monotonic_and_rebuilds_are_isolated_per_tenant() {
+    let _g = serial();
+    let n = 512;
+    let mc = start_tenants(&[("a", n), ("b", n)]);
+    let mut rng = Rng::new(13);
+    let mut oracle_a = gen_array(n, 7);
+    let mut oracle_b = gen_array(n, 8);
+
+    // Epochs observed by a's responses never go backwards.
+    let mut last_epoch = 0u64;
+    for _ in 0..12 {
+        let ops = gen_mixed(n, 24, 0.4, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle_a, &ops);
+        let resp = mc.submit("a", ops, None).expect("a submit");
+        assert_eq!(resp.answers, want);
+        assert!(resp.epoch >= last_epoch, "epoch went backwards: {} < {last_epoch}", resp.epoch);
+        last_epoch = resp.epoch;
+    }
+
+    // Force a static rebuild in `a` only (the shared builder pool's
+    // job, run synchronously here for determinism).
+    let a_before = mc.lifecycle("a").unwrap().epoch_version();
+    let b_before = mc.lifecycle("b").unwrap().epoch_version();
+    let am = mc.metrics("a").unwrap();
+    mc.lifecycle("a").unwrap().run_job(BuildJob::Statics, &am);
+    assert!(mc.lifecycle("a").unwrap().epoch_version() > a_before, "rebuild must bump a's epoch");
+    assert_eq!(
+        mc.lifecycle("b").unwrap().epoch_version(),
+        b_before,
+        "a's rebuild moved b's epoch"
+    );
+
+    // Both tenants still answer exactly after the publish.
+    for _ in 0..4 {
+        let ops = gen_mixed(n, 24, 0.2, RangeDist::Medium, &mut rng);
+        let want = oracle_run(&mut oracle_a, &ops);
+        assert_eq!(mc.submit("a", ops, None).expect("a submit").answers, want);
+        let ops = gen_mixed(n, 24, 0.2, RangeDist::Medium, &mut rng);
+        let want = oracle_run(&mut oracle_b, &ops);
+        assert_eq!(mc.submit("b", ops, None).expect("b submit").answers, want);
+    }
+    mc.shutdown();
+}
