@@ -87,6 +87,7 @@ impl Suite {
         let scale = batch as f64 / queries.len() as f64;
         let scaled = Counters {
             nodes_visited: (c.nodes_visited as f64 * scale) as u64,
+            node_fetches: (c.node_fetches as f64 * scale) as u64,
             aabb_tests: (c.aabb_tests as f64 * scale) as u64,
             tri_tests: (c.tri_tests as f64 * scale) as u64,
             rays: (c.rays as f64 * scale) as u64,

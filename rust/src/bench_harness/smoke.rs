@@ -44,6 +44,12 @@ pub struct SmokeCfg {
     /// Updates per grid point as a fraction of the batch size; 0
     /// disables the write-path column.
     pub update_frac: f64,
+    /// Ray-packet width for the A/B column pair (`--packet-width`): when
+    /// > 0 the grid grows `wide-pN` and `sharded-pN` columns running the
+    /// packetized traversal drivers next to their scalar twins, so one
+    /// report shows the on/off `node_fetches_per_query` amortization
+    /// directly. 0 keeps the scalar-only grid.
+    pub packet_width: usize,
 }
 
 impl Default for SmokeCfg {
@@ -55,6 +61,7 @@ impl Default for SmokeCfg {
             seed: 0xBE9C,
             shard_block: ShardBlock::Sqrt,
             update_frac: 0.0,
+            packet_width: 0,
         }
     }
 }
@@ -76,7 +83,17 @@ pub struct SmokePoint {
     /// resident-memory column the instanced backend is meant to shrink
     /// (ISSUE 7's ≥4× acceptance gate reads this).
     pub resident_bytes: usize,
+    /// Ray-packet width this column ran with (0 = scalar traversal).
+    pub packet_width: usize,
     pub counters: Counters,
+}
+
+impl SmokePoint {
+    /// Node-record fetches per query — the packet-amortization figure
+    /// (equals `nodes_visited / batch` on scalar columns).
+    pub fn node_fetches_per_query(&self) -> f64 {
+        self.counters.node_fetches as f64 / self.batch.max(1) as f64
+    }
 }
 
 /// Uniform queries: l uniform over [0, n), r uniform over [l, n).
@@ -94,6 +111,15 @@ fn uniform_queries(n: usize, count: usize, rng: &mut Rng) -> Vec<Query> {
 /// answer (a smoke result over wrong answers would be meaningless).
 pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
     let mut points = Vec::new();
+    // Column labels for the packet A/B pair carry the width (e.g.
+    // "wide-p8"), so bench-compare treats each width as its own column
+    // and the CI pin (`--packet-width 8`) stays label-stable run to run.
+    let packet_labels: Option<(&'static str, &'static str)> = (cfg.packet_width > 0).then(|| {
+        (
+            &*Box::leak(format!("{LABEL_WIDE}-p{}", cfg.packet_width).into_boxed_str()),
+            &*Box::leak(format!("{LABEL_SHARDED}-p{}", cfg.packet_width).into_boxed_str()),
+        )
+    });
     for &n in &cfg.ns {
         let xs = gen_array(n, cfg.seed);
         let mode = if n > (1 << 16) {
@@ -121,6 +147,31 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                 (layout, solver, ms, bytes)
             })
             .collect();
+        // The packet A/B twins: identical geometry, packetized driver.
+        let packet_solvers = packet_labels.map(|_| {
+            let t0 = std::time::Instant::now();
+            let wide = RtxRmq::with_options(
+                &xs,
+                RtxOptions {
+                    mode,
+                    layout: AccelLayout::Wide,
+                    packet_width: cfg.packet_width,
+                    ..Default::default()
+                },
+            );
+            let wide_build = (t0.elapsed().as_secs_f64() * 1e3, wide.memory_bytes());
+            let t0 = std::time::Instant::now();
+            let shard = ShardedRmq::with_options(
+                &xs,
+                ShardedOptions {
+                    block_size: cfg.shard_block.resolve(n),
+                    packet_width: cfg.packet_width,
+                    ..Default::default()
+                },
+            );
+            let shard_build = (t0.elapsed().as_secs_f64() * 1e3, shard.memory_bytes());
+            (wide, wide_build, shard, shard_build)
+        });
         for &batch in &cfg.batches {
             let mut rng = Rng::new(cfg.seed ^ (n as u64) ^ ((batch as u64) << 32));
             let queries = uniform_queries(n, batch, &mut rng);
@@ -130,6 +181,7 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                  run: &dyn Fn(&[Query], usize) -> (Vec<u32>, Counters),
                  build_ms: f64,
                  resident_bytes: usize,
+                 packet_width: usize,
                  points: &mut Vec<SmokePoint>| {
                     // Warm the structures (page-in, branch predictors)
                     // off the clock, then time one full batch.
@@ -153,6 +205,7 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                         upd_ns_per_op: 0.0,
                         build_ms,
                         resident_bytes,
+                        packet_width,
                         counters,
                     });
                 };
@@ -161,15 +214,46 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                     AccelLayout::Binary => LABEL_BINARY,
                     AccelLayout::Wide => LABEL_WIDE,
                 };
-                measure(label, &|q, w| solver.batch_counted(q, w), *build_ms, *bytes, &mut points);
+                measure(
+                    label,
+                    &|q, w| solver.batch_counted(q, w),
+                    *build_ms,
+                    *bytes,
+                    0,
+                    &mut points,
+                );
             }
             measure(
                 LABEL_SHARDED,
                 &|q, w| sharded.batch_counted(q, w),
                 sharded_build.0,
                 sharded_build.1,
+                0,
                 &mut points,
             );
+            // The packet pair rides after the scalar columns, so the
+            // cross-column answer check also pins packet == scalar
+            // bit-for-bit on every grid point.
+            if let (Some((wide_l, shard_l)), Some((wide, wide_b, shard, shard_b))) =
+                (packet_labels, packet_solvers.as_ref())
+            {
+                measure(
+                    wide_l,
+                    &|q, w| wide.batch_counted(q, w),
+                    wide_b.0,
+                    wide_b.1,
+                    cfg.packet_width,
+                    &mut points,
+                );
+                measure(
+                    shard_l,
+                    &|q, w| shard.batch_counted(q, w),
+                    shard_b.0,
+                    shard_b.1,
+                    cfg.packet_width,
+                    &mut points,
+                );
+            }
 
             // Write path: time one update batch per solver, then roll the
             // values back off the clock so later grid points (and the
@@ -179,9 +263,11 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                 let updates = gen_updates(n, count, &mut rng);
                 let rollback: Vec<(usize, f32)> =
                     updates.iter().map(|&(i, _)| (i, xs[i])).collect();
-                // The grid point pushed one row per RTX layout plus the
-                // sharded row, in that order — mirror it structurally.
-                let base = points.len() - (rtx.len() + 1);
+                // The grid point pushed one row per RTX layout, the
+                // sharded row, then the read-only packet pair (when
+                // enabled), in that order — mirror it structurally.
+                let packet_rows = if packet_labels.is_some() { 2 } else { 0 };
+                let base = points.len() - (rtx.len() + 1 + packet_rows);
                 for (slot, (_, solver, ..)) in rtx.iter_mut().enumerate() {
                     let t0 = std::time::Instant::now();
                     solver.update_values(&updates);
@@ -254,7 +340,10 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
                 ("upd_ns_per_op", Json::from(p.upd_ns_per_op)),
                 ("build_ms", Json::from(p.build_ms)),
                 ("resident_bytes", Json::from(p.resident_bytes)),
+                ("packet_width", Json::from(p.packet_width)),
                 ("nodes_visited", Json::from(p.counters.nodes_visited)),
+                ("node_fetches", Json::from(p.counters.node_fetches)),
+                ("node_fetches_per_query", Json::from(p.node_fetches_per_query())),
                 ("aabb_tests", Json::from(p.counters.aabb_tests)),
                 ("tri_tests", Json::from(p.counters.tri_tests)),
                 ("rays", Json::from(p.counters.rays)),
@@ -280,6 +369,7 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
         ("seed", Json::from(cfg.seed)),
         ("workers", Json::from(cfg.workers)),
         ("update_frac", Json::from(cfg.update_frac)),
+        ("packet_width", Json::from(cfg.packet_width)),
         ("points", Json::Arr(point_rows)),
         ("speedups", Json::Arr(speedup_rows)),
     ])
@@ -293,8 +383,8 @@ pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
         "seed `{:#x}`, {} workers, update fraction {}\n\n",
         cfg.seed, cfg.workers, cfg.update_frac
     ));
-    s.push_str("| solver | n | batch | ns/query | ns/update | build ms | resident MiB | speedup vs binary |\n");
-    s.push_str("|---|---:|---:|---:|---:|---:|---:|---:|\n");
+    s.push_str("| solver | n | batch | ns/query | ns/update | fetches/query | build ms | resident MiB | speedup vs binary |\n");
+    s.push_str("|---|---:|---:|---:|---:|---:|---:|---:|---:|\n");
     let sp = speedups(points);
     for p in points {
         let speedup = if p.layout == LABEL_BINARY {
@@ -310,12 +400,13 @@ pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
             "-".to_string()
         };
         s.push_str(&format!(
-            "| {} | {} | {} | {:.1} | {} | {:.2} | {:.2} | {} |\n",
+            "| {} | {} | {} | {:.1} | {} | {:.1} | {:.2} | {:.2} | {} |\n",
             p.layout,
             p.n,
             p.batch,
             p.ns_per_query,
             upd,
+            p.node_fetches_per_query(),
             p.build_ms,
             p.resident_bytes as f64 / (1 << 20) as f64,
             speedup
@@ -355,6 +446,7 @@ mod tests {
             seed: 7,
             shard_block: ShardBlock::Fixed(32),
             update_frac: 0.0,
+            packet_width: 0,
         };
         let points = run_smoke(&cfg);
         // Three solver columns × one n × one batch.
@@ -398,6 +490,9 @@ mod tests {
             assert!(p.get("build_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
             assert!(p.get("resident_bytes").and_then(|v| v.as_u64()).unwrap() > 0);
             assert!(p.get("nodes_visited").and_then(|v| v.as_u64()).is_some());
+            assert!(p.get("node_fetches").and_then(|v| v.as_u64()).is_some());
+            assert!(p.get("node_fetches_per_query").and_then(|v| v.as_f64()).unwrap() > 0.0);
+            assert_eq!(p.get("packet_width").and_then(|v| v.as_u64()), Some(0));
             assert!(p.get("aabb_tests").and_then(|v| v.as_u64()).is_some());
             assert!(p.get("tri_tests").and_then(|v| v.as_u64()).is_some());
         }
@@ -413,6 +508,7 @@ mod tests {
             seed: 9,
             shard_block: ShardBlock::Fixed(32),
             update_frac: 0.25,
+            packet_width: 0,
         };
         // Two identical batch sizes: the rollback must restore the array
         // so both grid points agree with each other (run_smoke asserts
@@ -445,6 +541,7 @@ mod tests {
             upd_ns_per_op: 0.0,
             build_ms: 1.0,
             resident_bytes: 64,
+            packet_width: 0,
             counters: Counters::default(),
         };
         let points = vec![
@@ -468,6 +565,59 @@ mod tests {
         let cfg = SmokeCfg::default();
         let md = summary_md(&cfg, &points);
         assert!(md.contains("| - |"), "{md}");
+    }
+
+    #[test]
+    fn packet_column_pair_reports_decreasing_node_fetches() {
+        // The acceptance curve: with left-endpoint sorting on, node
+        // fetches per query strictly decrease as the packet width
+        // grows. The sharded column's probes are small-range by
+        // construction (per-block local ranges), so its packet path
+        // amortizes on any query mix; same seed ⇒ same queries, so the
+        // three runs are directly comparable.
+        let mk_cfg = |packet_width: usize| SmokeCfg {
+            ns: vec![1024],
+            batches: vec![256],
+            workers: 2,
+            seed: 11,
+            shard_block: ShardBlock::Fixed(32),
+            update_frac: 0.0,
+            packet_width,
+        };
+        let scalar = run_smoke(&mk_cfg(0));
+        assert_eq!(scalar.len(), 3, "no packet columns when the knob is off");
+        let p4 = run_smoke(&mk_cfg(4));
+        let p8 = run_smoke(&mk_cfg(8));
+        assert_eq!(p4.len(), 5, "scalar columns plus the wide/sharded packet pair");
+        assert!(p4.iter().any(|p| p.layout == "wide-p4" && p.packet_width == 4));
+        assert!(p8.iter().any(|p| p.layout == "sharded-p8" && p.packet_width == 8));
+        let fetches = |points: &[SmokePoint], label: &str| {
+            points.iter().find(|p| p.layout == label).unwrap().node_fetches_per_query()
+        };
+        let base = fetches(&scalar, LABEL_SHARDED);
+        let f4 = fetches(&p4, "sharded-p4");
+        let f8 = fetches(&p8, "sharded-p8");
+        assert!(
+            f8 < f4 && f4 < base,
+            "fetches/query must strictly decrease with width: {base} > {f4} > {f8}"
+        );
+        // The scalar twin columns are untouched by the knob, and the
+        // packet columns never fetch more than they visit.
+        assert_eq!(fetches(&p8, LABEL_SHARDED), base);
+        for p in p8.iter().filter(|p| p.packet_width > 0) {
+            assert!(p.counters.node_fetches <= p.counters.nodes_visited, "{}", p.layout);
+        }
+        // The JSON report carries the amortization column per row.
+        let json = to_json(&mk_cfg(8), &p8);
+        assert_eq!(json.get("packet_width").and_then(|v| v.as_u64()), Some(8));
+        let rows = json.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert!(rows.iter().any(|r| {
+            r.get("layout").and_then(|l| l.as_str()) == Some("sharded-p8")
+                && r.get("node_fetches_per_query").and_then(|v| v.as_f64()).unwrap() > 0.0
+        }));
+        // And the markdown table shows the fetch column for eyeballs.
+        let md = summary_md(&mk_cfg(8), &p8);
+        assert!(md.contains("fetches/query") && md.contains("sharded-p8"), "{md}");
     }
 
     #[test]

@@ -428,6 +428,7 @@ impl InstancedBlock {
                 continue;
             }
             c.nodes_visited += 1;
+            c.node_fetches += 1;
             let qmin = &self.node_qmin[ni];
             // Re-check on pop: best_val may have improved since push.
             let node_min = qmin.iter().copied().min().unwrap();
@@ -454,6 +455,125 @@ impl InstancedBlock {
         }
         debug_assert!(best != usize::MAX, "query range always contains a record");
         best
+    }
+
+    /// Packet probe: resolve several `(l, r)` ranges over the *same*
+    /// block in one shared descent, writing the leftmost argmin of
+    /// range `i` to `out[i]`. Bit-identical to calling
+    /// [`probe`](Self::probe) per range:
+    ///
+    /// - lanes screen on the packet's **position envelope**
+    ///   `[min l, max r]` and on the quantized lane min vs the loosest
+    ///   per-range best (`dequant` lower-bounds every value in the
+    ///   subtree, so a skip can't lose any range's strict improvement);
+    /// - surviving leaf lanes resolve **per range** with the scalar
+    ///   rule verbatim (own `[l, r]` clamp, quantized screen, strict
+    ///   exact compare) — and the shared stack still pops lanes in
+    ///   strict position order, which is what leftmost ties ride on.
+    ///
+    /// Counter semantics mirror `bvh::wide::closest_hit_packet`:
+    /// `rays` counts ranges, `nodes_visited` counts node expands *per
+    /// range serviced* (the scalar-equivalent per-query work — one
+    /// shared expand charges the packet size), `node_fetches` counts
+    /// one per expand per *packet*, so `nodes_visited / node_fetches`
+    /// is the amortization factor.
+    pub fn probe_packet(
+        &self,
+        xs: &[f32],
+        ranges: &[(usize, usize)],
+        out: &mut [usize],
+        c: &mut Counters,
+    ) {
+        debug_assert_eq!(ranges.len(), out.len());
+        if ranges.is_empty() {
+            return;
+        }
+        if ranges.len() == 1 {
+            out[0] = self.probe(xs, ranges[0].0, ranges[0].1, c);
+            return;
+        }
+        debug_assert_eq!(xs.len(), self.shape.len);
+        let p = ranges.len();
+        c.rays += p as u64;
+        let mut env_l = u32::MAX;
+        let mut env_r = 0u32;
+        for &(l, r) in ranges {
+            debug_assert!(l <= r && r < self.shape.len);
+            env_l = env_l.min(l as u32);
+            env_r = env_r.max(r as u32);
+        }
+        let mut best = vec![usize::MAX; p];
+        let mut best_val = vec![f32::INFINITY; p];
+        // Loosest per-packet bound; recomputed on demand (p ≤ 16).
+        let packet_best = |best_val: &[f32]| -> f32 {
+            let mut m = f32::NEG_INFINITY;
+            for &v in best_val {
+                m = m.max(v);
+            }
+            m
+        };
+        const LEAF: u32 = 1;
+        let mut stack: Vec<u32> = Vec::with_capacity(32);
+        stack.push(0);
+        while let Some(item) = stack.pop() {
+            let ni = (item >> 3) as usize;
+            let nd = &self.shape.nodes[ni];
+            if item & LEAF != 0 {
+                let lane = ((item >> 1) & 0x3) as usize;
+                for i in 0..p {
+                    let (l, r) = ranges[i];
+                    c.aabb_tests += 1;
+                    let a = (nd.pmin[lane] as usize).max(l);
+                    let b = (nd.pmax[lane] as usize).min(r);
+                    if a > b {
+                        continue; // this range deactivates for the lane
+                    }
+                    for pos in a..=b {
+                        c.tri_tests += 1;
+                        if self.dequant(self.qval[pos]) < best_val[i] {
+                            let v = xs[pos];
+                            if v < best_val[i] {
+                                best[i] = pos;
+                                best_val[i] = v;
+                            }
+                        }
+                    }
+                }
+                continue;
+            }
+            c.nodes_visited += p as u64;
+            c.node_fetches += 1;
+            let qmin = &self.node_qmin[ni];
+            // Re-check on pop against the loosest best: skipping is safe
+            // only when *no* range could still strictly improve.
+            let node_min = qmin.iter().copied().min().unwrap();
+            if self.dequant(node_min) >= packet_best(&best_val) {
+                continue;
+            }
+            for lane in (0..4).rev() {
+                if nd.lane_is_empty(lane) {
+                    continue;
+                }
+                c.aabb_tests += 1;
+                // Position-envelope screen: outside [env_l, env_r] no
+                // range intersects the lane.
+                if (nd.pmax[lane] as u32) < env_l || (nd.pmin[lane] as u32) > env_r {
+                    continue;
+                }
+                if self.dequant(qmin[lane]) >= packet_best(&best_val) {
+                    continue;
+                }
+                if nd.count[lane] > 0 {
+                    stack.push(((ni as u32) << 3) | ((lane as u32) << 1) | LEAF);
+                } else {
+                    stack.push(nd.child[lane] << 3);
+                }
+            }
+        }
+        for i in 0..p {
+            debug_assert!(best[i] != usize::MAX, "query range always contains a record");
+            out[i] = best[i];
+        }
     }
 
     /// Instance bytes (leaf table + lane minima). The shared shape is
@@ -596,6 +716,63 @@ mod tests {
                 assert_eq!(inst.probe(&flat, l, r, &mut c), l, "leftmost of all-equal");
             }
         }
+    }
+
+    #[test]
+    fn probe_packet_matches_scalar_probe() {
+        // Packet probes must equal per-range scalar probes bit-for-bit —
+        // tie-heavy values stress the leftmost invariant through the
+        // shared descent, and widths cover 1/non-pow2/8/16.
+        let mut rng = Rng::new(53);
+        let mut set = ShapeSet::default();
+        for &len in &[5usize, 16, 48, 130, 700] {
+            let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+            let xs: Vec<f32> = (0..len).map(|_| (rng.f32() * 8.0).floor() / 4.0).collect();
+            let inst = InstancedBlock::build(&xs, shape.clone());
+            for &width in &[1usize, 4, 7, 8, 16] {
+                let mut ranges = Vec::new();
+                for _ in 0..width {
+                    let l = rng.range(0, len - 1);
+                    let r = rng.range(l, len - 1);
+                    ranges.push((l, r));
+                }
+                let mut out = vec![0usize; width];
+                let mut cp = Counters::default();
+                inst.probe_packet(&xs, &ranges, &mut out, &mut cp);
+                let mut cs = Counters::default();
+                for (i, &(l, r)) in ranges.iter().enumerate() {
+                    let want = inst.probe(&xs, l, r, &mut cs);
+                    assert_eq!(out[i], want, "len={len} width={width} range ({l},{r})");
+                    assert_eq!(want, naive(&xs, l, r));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn probe_packet_amortizes_node_fetches() {
+        // Coherent consecutive ranges over one block: a shared descent
+        // must fetch strictly fewer nodes than per-range probes.
+        let mut rng = Rng::new(59);
+        let mut set = ShapeSet::default();
+        let len = 2048;
+        let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+        let xs: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+        let inst = InstancedBlock::build(&xs, shape);
+        let ranges: Vec<(usize, usize)> = (0..8).map(|i| (i * 16, i * 16 + 100)).collect();
+        let mut out = vec![0usize; ranges.len()];
+        let mut cp = Counters::default();
+        inst.probe_packet(&xs, &ranges, &mut out, &mut cp);
+        let mut cs = Counters::default();
+        for &(l, r) in &ranges {
+            inst.probe(&xs, l, r, &mut cs);
+        }
+        assert!(
+            cp.node_fetches < cs.node_fetches,
+            "packet {} vs scalar {} node fetches",
+            cp.node_fetches,
+            cs.node_fetches
+        );
     }
 
     #[test]

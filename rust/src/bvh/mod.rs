@@ -37,6 +37,45 @@
 //! `tri_tests` and `rays` mean the same thing in both layouts. The cost
 //! model weighs both `nodes_visited` and `aabb_tests`, which is what
 //! makes modeled times comparable across layouts.
+//!
+//! # Packet traversal (SIMD-over-queries)
+//!
+//! [`wide::closest_hit_packet`] carries P sorted queries down the wide
+//! tree together — one descent per *packet* instead of one per ray,
+//! mirroring how RT hardware amortizes node fetches across a warp of
+//! coherent rays. Three rules make it exact:
+//!
+//! - **Envelope pruning.** A child lane is descended iff its (y, z)
+//!   slabs intersect the packet's *interval envelope* (the union of the
+//!   member origins) and its conservative entry `xmin − max(ox)` can
+//!   still beat some active ray's best t. The envelope test is a
+//!   superset of every member's scalar lane test, so no lane a member
+//!   ray would visit is ever skipped — pruning stays conservative
+//!   per ray.
+//! - **Per-ray resolution.** Leaves are resolved with the scalar accept
+//!   rule verbatim (reject `t < 0`, strict footprint, strict
+//!   `(t, prim)` lexicographic improvement, carried-hit tie ownership),
+//!   and lanes are pushed in the same reversed order, so pops stay
+//!   left-to-right. Since every scalar prune is strict, the scalar
+//!   result is the global lexicographic minimum over footprint-passing
+//!   prims — any conservative traversal order with the same accept rule
+//!   lands on the same hit, bit for bit. The same argument covers
+//!   [`instanced::InstancedBlock::probe_packet`], whose quantized lane
+//!   screen is conservative for the packet's position envelope while
+//!   exact values decide each range.
+//! - **Divergence fallback.** When the packet's envelope exceeds
+//!   [`wide::PACKET_DIVERGENCE_FRAC`] of the root's extent, the shared
+//!   descent would visit nearly the union of the members' node sets and
+//!   amortize nothing; the packet drops to per-ray scalar traversal.
+//!   Either path returns identical hits — the knob trades work, never
+//!   answers.
+//!
+//! Packet counters split the per-node cost: `nodes_visited` charges a
+//! shared pop once per ray serviced while `node_fetches` counts the
+//! single node-record fetch, so `nodes_visited / node_fetches` reads
+//! directly as the amortization factor (and equality is the
+//! scalar/fallback signature). `RtCostModel::c_packet` prices the
+//! fetch-shaped share of the per-node cost.
 
 pub mod build;
 pub mod instanced;

@@ -18,6 +18,16 @@ pub struct Counters {
     pub tri_tests: u64,
     /// Rays launched.
     pub rays: u64,
+    /// Node memory fetches. In scalar traversal this equals
+    /// `nodes_visited` (one fetch per pop, one ray per pop); in packet
+    /// traversal (`bvh::wide::closest_hit_packet`,
+    /// `bvh::instanced::probe_packet`) a node popped once serves every
+    /// ray in the packet, so `node_fetches` counts one per pop per
+    /// *packet* while `nodes_visited` charges the pop per ray serviced —
+    /// `nodes_visited / node_fetches` is the amortization factor
+    /// bench-smoke reports, and equality is the scalar/fallback
+    /// signature.
+    pub node_fetches: u64,
 }
 
 impl Counters {
@@ -26,6 +36,7 @@ impl Counters {
         self.aabb_tests += o.aabb_tests;
         self.tri_tests += o.tri_tests;
         self.rays += o.rays;
+        self.node_fetches += o.node_fetches;
     }
 }
 
@@ -103,6 +114,7 @@ pub fn closest_hit_from(
             }
         }
         counters.nodes_visited += 1;
+        counters.node_fetches += 1;
         let node = &bvh.nodes[ni as usize];
         if node.is_leaf() {
             for k in node.first..node.first + node.count {

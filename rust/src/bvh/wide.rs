@@ -185,6 +185,7 @@ pub fn closest_hit_wide_from(
             continue;
         }
         counters.nodes_visited += 1;
+        counters.node_fetches += 1;
         let node = &wb.nodes[ni as usize];
         counters.aabb_tests += 4;
 
@@ -264,6 +265,301 @@ pub fn closest_hit_wide_from(
         Some(Hit { t: best_t, prim: best_prim })
     } else {
         None
+    }
+}
+
+/// A bundle of up to `packet_width` +X query rays traversed together
+/// (SIMD over queries, not just child lanes). SoA: per-ray origins plus
+/// per-ray best-hit state, exactly the scalar traversal's registers.
+/// See the "Packet traversal" design note in `bvh/mod.rs` for why the
+/// result is bit-identical to casting each ray alone.
+#[derive(Default)]
+pub struct RayPacket {
+    ox: Vec<f32>,
+    oy: Vec<f32>,
+    oz: Vec<f32>,
+    best_t: Vec<f32>,
+    best_prim: Vec<u32>,
+    have: Vec<bool>,
+    carried: Vec<bool>,
+}
+
+impl RayPacket {
+    pub fn new() -> RayPacket {
+        RayPacket::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.ox.clear();
+        self.oy.clear();
+        self.oz.clear();
+        self.best_t.clear();
+        self.best_prim.clear();
+        self.have.clear();
+        self.carried.clear();
+    }
+
+    /// Add one ray, optionally seeded with a carried hit from an earlier
+    /// Algorithm-6 sub-ray of the *same query* (per-ray seeds, so a
+    /// packet can mix queries at different phases of their decomposition).
+    pub fn push(&mut self, ray: &Ray, init_best: Option<Hit>) {
+        let [ox, oy, oz] = ray.origin;
+        self.ox.push(ox);
+        self.oy.push(oy);
+        self.oz.push(oz);
+        match init_best {
+            Some(h) => {
+                self.best_t.push(h.t);
+                self.best_prim.push(h.prim);
+                self.have.push(true);
+                self.carried.push(true);
+            }
+            None => {
+                self.best_t.push(f32::INFINITY);
+                self.best_prim.push(u32::MAX);
+                self.have.push(false);
+                self.carried.push(false);
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ox.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ox.is_empty()
+    }
+
+    /// Final hit of ray `i` (call after [`closest_hit_packet`]).
+    pub fn hit(&self, i: usize) -> Option<Hit> {
+        if self.have[i] {
+            Some(Hit { t: self.best_t[i], prim: self.best_prim[i] })
+        } else {
+            None
+        }
+    }
+
+    /// The (y, z) interval envelope of every origin in the packet.
+    fn envelope(&self) -> (f32, f32, f32, f32) {
+        let mut ey_min = f32::INFINITY;
+        let mut ey_max = f32::NEG_INFINITY;
+        let mut ez_min = f32::INFINITY;
+        let mut ez_max = f32::NEG_INFINITY;
+        for i in 0..self.len() {
+            ey_min = ey_min.min(self.oy[i]);
+            ey_max = ey_max.max(self.oy[i]);
+            ez_min = ez_min.min(self.oz[i]);
+            ez_max = ez_max.max(self.oz[i]);
+        }
+        (ey_min, ey_max, ez_min, ez_max)
+    }
+
+    /// Loosest per-packet prune bound: the largest per-ray `best_t`
+    /// (rays with no hit yet contribute +inf). A node whose entry
+    /// exceeds this cannot improve any ray.
+    fn tmax(&self) -> f32 {
+        let mut tm = f32::NEG_INFINITY;
+        for i in 0..self.len() {
+            tm = tm.max(if self.have[i] { self.best_t[i] } else { f32::INFINITY });
+        }
+        tm
+    }
+}
+
+/// Fraction of the root extent past which a packet's origin envelope is
+/// considered divergent: the shared descent would visit roughly the
+/// union of every ray's node set, so amortization is lost and the
+/// per-ray path is cheaper. Results are identical either way — the
+/// fallback is a pure cost decision.
+pub const PACKET_DIVERGENCE_FRAC: f32 = 0.25;
+
+/// Traverse the wide BVH once for a whole packet of +X rays, updating
+/// each ray's best hit in place. Bit-identical to running
+/// [`closest_hit_wide_from`] per ray (with its `init_best` seed):
+/// every per-ray accept test below is the scalar rule verbatim, and all
+/// scalar prunes are strict, so any traversal order with conservative
+/// (envelope / packet-max) pruning converges to the same
+/// lexicographic-min (t, prim) answer per ray.
+///
+/// Counters: `rays` counts packet members; `nodes_visited` counts node
+/// pops *per ray serviced* (one shared pop visits the node on behalf of
+/// every packet member, so the charge is the packet size — the
+/// scalar-equivalent per-ray work); `node_fetches` counts one per pop
+/// per *packet* — the amortized memory quantity, so
+/// `nodes_visited / node_fetches` is the amortization factor and
+/// `node_fetches == nodes_visited` is the scalar/fallback signature;
+/// `aabb_tests` counts 4 envelope lane tests per pop plus one per-ray
+/// containment test per surviving lane; `tri_tests` counts per-ray prim
+/// tests as scalar.
+pub fn closest_hit_packet(
+    wb: &WideBvh,
+    packet: &mut RayPacket,
+    ts: &mut WideStack,
+    counters: &mut Counters,
+) {
+    let p = packet.len();
+    if p == 0 {
+        return;
+    }
+    counters.rays += p as u64;
+    let (ey_min, ey_max, ez_min, ez_max) = packet.envelope();
+
+    // Divergence fallback: compare the envelope extent to the root's
+    // lane-bounds union. A packet spread over a large fraction of the
+    // scene shares almost no traversal, so descend per ray instead
+    // (scalar counting; `rays` was already charged above).
+    let root = &wb.nodes[0];
+    let (mut ry_min, mut ry_max) = (f32::INFINITY, f32::NEG_INFINITY);
+    let (mut rz_min, mut rz_max) = (f32::INFINITY, f32::NEG_INFINITY);
+    for k in 0..4 {
+        if root.child[k] == INVALID_LANE {
+            continue;
+        }
+        ry_min = ry_min.min(root.ymin[k]);
+        ry_max = ry_max.max(root.ymax[k]);
+        rz_min = rz_min.min(root.zmin[k]);
+        rz_max = rz_max.max(root.zmax[k]);
+    }
+    let root_extent = (ry_max - ry_min).max(0.0) + (rz_max - rz_min).max(0.0);
+    let env_extent = (ey_max - ey_min) + (ez_max - ez_min);
+    if p > 1 && env_extent > PACKET_DIVERGENCE_FRAC * root_extent {
+        for i in 0..p {
+            let ray = Ray::new([packet.ox[i], packet.oy[i], packet.oz[i]]);
+            let init = if packet.carried[i] {
+                Some(Hit { t: packet.best_t[i], prim: packet.best_prim[i] })
+            } else {
+                None
+            };
+            let mut solo = Counters::default();
+            let hit = closest_hit_wide_from(wb, &ray, ts, &mut solo, init);
+            // The per-ray cast re-counts its own ray; keep ours.
+            solo.rays = 0;
+            counters.add(&solo);
+            match hit {
+                Some(h) => {
+                    packet.best_t[i] = h.t;
+                    packet.best_prim[i] = h.prim;
+                    packet.have[i] = true;
+                    packet.carried[i] = false;
+                }
+                None => {
+                    packet.have[i] = false;
+                }
+            }
+        }
+        return;
+    }
+
+    // All rays in one batch share the ray-origin plane θ, but take the
+    // max defensively: entry computed from max_ox lower-bounds every
+    // per-ray entry, keeping the packet prune conservative.
+    let mut max_ox = f32::NEG_INFINITY;
+    for i in 0..p {
+        max_ox = max_ox.max(packet.ox[i]);
+    }
+
+    ts.stack.clear();
+    ts.stack.push((0, 0.0));
+    while let Some((ni, min_entry)) = ts.stack.pop() {
+        // Packet prune: conservative analogue of the scalar strict
+        // `entry > best_t` — skip only when *no* ray can improve.
+        if min_entry > packet.tmax() {
+            continue;
+        }
+        // One fetch serves the whole packet; the visit charge stays
+        // per-ray so `nodes_visited / node_fetches` reads as the
+        // amortization factor (see the fn docs).
+        counters.nodes_visited += p as u64;
+        counters.node_fetches += 1;
+        let node = &wb.nodes[ni as usize];
+        counters.aabb_tests += 4;
+
+        let mut lane_t = [0.0f32; 4];
+        let mut lane_k = [0usize; 4];
+        let mut m = 0usize;
+        for k in 0..4 {
+            let child = node.child[k];
+            if child == INVALID_LANE {
+                continue;
+            }
+            // Envelope screen: if the packet's (y, z) envelope misses
+            // the lane interval, every member origin misses it too.
+            let overlap = ey_max >= node.ymin[k]
+                && ey_min <= node.ymax[k]
+                && ez_max >= node.zmin[k]
+                && ez_min <= node.zmax[k];
+            if !overlap {
+                continue;
+            }
+            let t = (node.xmin[k] - max_ox).max(0.0);
+            if t > packet.tmax() {
+                continue;
+            }
+            let mut i = m;
+            while i > 0 && lane_t[i - 1] > t {
+                lane_t[i] = lane_t[i - 1];
+                lane_k[i] = lane_k[i - 1];
+                i -= 1;
+            }
+            lane_t[i] = t;
+            lane_k[i] = k;
+            m += 1;
+        }
+
+        // Nearest-first as in the scalar path: leaf lanes resolve per
+        // ray inline (tightening the packet bound before farther lanes),
+        // internal lanes defer to the shared stack far-to-near.
+        let mut defer = [(0u32, 0.0f32); 4];
+        let mut d = 0usize;
+        for li in 0..m {
+            let k = lane_k[li];
+            let cnt = node.count[k] as usize;
+            if cnt == 0 {
+                defer[d] = (node.child[k], lane_t[li]);
+                d += 1;
+                continue;
+            }
+            let first = node.child[k] as usize;
+            for i in 0..p {
+                let (oy, oz) = (packet.oy[i], packet.oz[i]);
+                counters.aabb_tests += 1;
+                let inside = oy >= node.ymin[k]
+                    && oy <= node.ymax[k]
+                    && oz >= node.zmin[k]
+                    && oz <= node.zmax[k];
+                if !inside {
+                    continue; // this ray deactivates for the lane
+                }
+                let t = (node.xmin[k] - packet.ox[i]).max(0.0);
+                if packet.have[i] && t > packet.best_t[i] {
+                    continue;
+                }
+                for pr in &wb.prims[first..first + cnt] {
+                    counters.tri_tests += 1;
+                    let t = pr.x_plane - packet.ox[i];
+                    if t < 0.0 {
+                        continue;
+                    }
+                    if packet.have[i]
+                        && (t > packet.best_t[i]
+                            || (t == packet.best_t[i]
+                                && (packet.carried[i] || pr.prim >= packet.best_prim[i])))
+                    {
+                        continue;
+                    }
+                    if oy > pr.y_lo && oy < pr.y_hi && oz > pr.z_lo && oz < pr.z_hi {
+                        packet.best_t[i] = t;
+                        packet.best_prim[i] = pr.prim;
+                        packet.have[i] = true;
+                        packet.carried[i] = false;
+                    }
+                }
+            }
+        }
+        for i in (0..d).rev() {
+            ts.stack.push(defer[i]);
+        }
     }
 }
 
@@ -645,6 +941,130 @@ mod tests {
             cw.nodes_visited,
             cb.nodes_visited
         );
+    }
+
+    #[test]
+    fn packet_matches_scalar_per_ray() {
+        // The tentpole equivalence: a packet of random rays — some seeded
+        // with carried hits — finishes with the exact per-ray hits the
+        // scalar traversal produces, for every packet width incl. 1 and
+        // a non-power-of-two.
+        check("packet == scalar per ray", 40, |rng| {
+            let xs = gen::dup_array(rng, 2..=400, 2);
+            let n = xs.len();
+            let tris = build_scene(&xs);
+            let bvh = build(&tris, Builder::BinnedSah, 4);
+            let wb = collapse_to_wide(&bvh, &tris);
+            let theta = ray_origin_x(&xs);
+            let mut ws = WideStack::new();
+            let mut cs = Counters::default();
+            for &width in &[1usize, 4, 7, 8, 16] {
+                let mut packet = RayPacket::new();
+                let mut rays = Vec::new();
+                let mut seeds = Vec::new();
+                for _ in 0..width {
+                    let (l, r) = gen::query(rng, n);
+                    let ray = ray_for_query(l as u32, r as u32, n, theta);
+                    // Half the rays carry a seed hit from another query.
+                    let seed = if rng.range(0, 1) == 1 {
+                        let (l2, r2) = gen::query(rng, n);
+                        let prev = ray_for_query(l2 as u32, r2 as u32, n, theta);
+                        closest_hit_wide(&wb, &prev, &mut ws, &mut cs)
+                    } else {
+                        None
+                    };
+                    packet.push(&ray, seed);
+                    rays.push(ray);
+                    seeds.push(seed);
+                }
+                let mut cp = Counters::default();
+                closest_hit_packet(&wb, &mut packet, &mut ws, &mut cp);
+                for i in 0..width {
+                    let want = closest_hit_wide_from(&wb, &rays[i], &mut ws, &mut cs, seeds[i]);
+                    if packet.hit(i) != want {
+                        return Err(format!(
+                            "width {width} ray {i}: packet {:?} scalar {want:?}",
+                            packet.hit(i)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packet_node_fetches_decrease_with_width() {
+        // The point of the packet path: coherent sorted queries fetch
+        // strictly fewer nodes per query as the packet widens.
+        let xs = crate::util::rng::Rng::new(21).uniform_f32_vec(4096);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let wb = collapse_to_wide(&bvh, &tris);
+        let theta = ray_origin_x(&xs);
+        // Sorted small-range batch: the regime PR 1's chunk sort creates.
+        let queries: Vec<(u32, u32)> = (0..256u32).map(|i| (i * 8, i * 8 + 48)).collect();
+        let mut fetches = Vec::new();
+        let mut hits_ref: Option<Vec<Option<Hit>>> = None;
+        for &width in &[1usize, 4, 8, 16] {
+            let mut c = Counters::default();
+            let mut ws = WideStack::new();
+            let mut packet = RayPacket::new();
+            let mut hits = Vec::new();
+            for chunk in queries.chunks(width) {
+                packet.clear();
+                for &(l, r) in chunk {
+                    packet.push(&ray_for_query(l, r, 4096, theta), None);
+                }
+                closest_hit_packet(&wb, &mut packet, &mut ws, &mut c);
+                for i in 0..chunk.len() {
+                    hits.push(packet.hit(i));
+                }
+            }
+            match &hits_ref {
+                None => hits_ref = Some(hits),
+                Some(prev) => assert_eq!(prev, &hits, "width {width} answers differ"),
+            }
+            fetches.push(c.node_fetches);
+        }
+        for w in 1..fetches.len() {
+            assert!(
+                fetches[w] < fetches[w - 1],
+                "node fetches not strictly decreasing: {fetches:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn packet_divergence_falls_back_and_matches() {
+        // Rays spread across the whole scene: the envelope blows past
+        // PACKET_DIVERGENCE_FRAC of the root extent, the packet drops to
+        // per-ray descents, and answers still match scalar exactly.
+        let xs = crate::util::rng::Rng::new(22).uniform_f32_vec(2048);
+        let tris = build_scene(&xs);
+        let bvh = build(&tris, Builder::BinnedSah, 4);
+        let wb = collapse_to_wide(&bvh, &tris);
+        let theta = ray_origin_x(&xs);
+        let n = xs.len();
+        let queries: [(u32, u32); 4] =
+            [(0, 10), (600, 1400), (2000, 2047), (5, (n as u32) - 5)];
+        let mut packet = RayPacket::new();
+        for &(l, r) in &queries {
+            packet.push(&ray_for_query(l, r, n, theta), None);
+        }
+        let mut ws = WideStack::new();
+        let mut cp = Counters::default();
+        closest_hit_packet(&wb, &mut packet, &mut ws, &mut cp);
+        // Fallback taken: per-ray counting means one fetch per pop, and
+        // four solo descents pop more nodes than one shared descent of a
+        // tight packet would — equal to nodes_visited is the signature.
+        assert_eq!(cp.node_fetches, cp.nodes_visited, "expected scalar fallback counting");
+        let mut cs = Counters::default();
+        for (i, &(l, r)) in queries.iter().enumerate() {
+            let ray = ray_for_query(l, r, n, theta);
+            let want = closest_hit_wide(&wb, &ray, &mut ws, &mut cs);
+            assert_eq!(packet.hit(i), want, "ray {i} diverged from scalar");
+        }
     }
 
     #[test]

@@ -447,14 +447,28 @@ impl ShardBlock {
 pub struct EngineCfg {
     /// Block-size rule of the sharded engine.
     pub shard_block: ShardBlock,
+    /// Ray-packet width for the RTX and sharded traversal drivers
+    /// (`--packet-width`; 0 = the scalar path). Answers are
+    /// bit-identical at every width — this is an A/B performance knob.
+    pub packet_width: usize,
+    /// Disable left-endpoint batch sorting (`--no-sort-queries`).
+    /// Inverted so the zero `Default` keeps sorting on, matching the
+    /// solver defaults.
+    pub no_sort_queries: bool,
 }
 
 /// Build the static engines for an array (everything except the sharded
 /// engine, which outlives epochs). `runtime` enables the XLA engine
-/// when an artifact variant fits.
-fn build_static_engines(xs: &[f32], runtime: Option<Arc<Runtime>>) -> Vec<Arc<dyn Engine>> {
+/// when an artifact variant fits; `cfg` carries the traversal-driver
+/// knobs (`--packet-width`, `--no-sort-queries`) into the RTX engine.
+fn build_static_engines(
+    xs: &[f32],
+    runtime: Option<Arc<Runtime>>,
+    cfg: EngineCfg,
+) -> Vec<Arc<dyn Engine>> {
+    let rtx = RtxRmq::new_auto_tuned(xs, cfg.packet_width, !cfg.no_sort_queries);
     let mut engines: Vec<Arc<dyn Engine>> = vec![
-        Arc::new(SolverEngine { kind: EngineKind::Rtx, solver: RtxRmq::new_auto(xs) }),
+        Arc::new(SolverEngine { kind: EngineKind::Rtx, solver: rtx }),
         Arc::new(SolverEngine { kind: EngineKind::Lca, solver: LcaRmq::new(xs) }),
         Arc::new(SolverEngine { kind: EngineKind::Hrmq, solver: Hrmq::new(xs) }),
         Arc::new(SolverEngine { kind: EngineKind::Exhaustive, solver: Exhaustive::new(xs) }),
@@ -470,7 +484,12 @@ fn build_static_engines(xs: &[f32], runtime: Option<Arc<Runtime>>) -> Vec<Arc<dy
 fn build_sharded(xs: &[f32], cfg: EngineCfg) -> Arc<ShardedEngine> {
     Arc::new(ShardedEngine::new(ShardedRmq::with_options(
         xs,
-        ShardedOptions { block_size: cfg.shard_block.resolve(xs.len()), ..Default::default() },
+        ShardedOptions {
+            block_size: cfg.shard_block.resolve(xs.len()),
+            packet_width: cfg.packet_width,
+            sort_queries: !cfg.no_sort_queries,
+            ..Default::default()
+        },
     )))
 }
 
@@ -492,7 +511,7 @@ impl EngineSet {
     /// Build with explicit knobs (e.g. `--shard-block`).
     pub fn build_with(xs: &[f32], runtime: Option<Arc<Runtime>>, cfg: EngineCfg) -> EngineSet {
         let sharded = build_sharded(xs, cfg);
-        let mut engines = build_static_engines(xs, runtime);
+        let mut engines = build_static_engines(xs, runtime, cfg);
         let sharded_dyn: Arc<dyn Engine> = sharded.clone();
         engines.insert(1, sharded_dyn);
         EngineSet { n: xs.len(), engines, sharded }
@@ -653,7 +672,7 @@ impl EpochState {
         cfg: LifecycleCfg,
     ) -> Arc<EpochState> {
         let sharded = build_sharded(xs, engine_cfg);
-        let mut engines = build_static_engines(xs, runtime.clone());
+        let mut engines = build_static_engines(xs, runtime.clone(), engine_cfg);
         let sharded_dyn: Arc<dyn Engine> = sharded.clone();
         engines.insert(1, sharded_dyn);
         let epoch = Arc::new(EngineEpoch::new(0, 0, xs.len(), engines));
@@ -808,7 +827,7 @@ impl EpochState {
                 faults::fire("build.statics");
                 let t0 = Instant::now();
                 let (xs, seq) = self.sharded.snapshot();
-                let mut engines = build_static_engines(&xs, self.runtime.clone());
+                let mut engines = build_static_engines(&xs, self.runtime.clone(), self.engine_cfg);
                 let sharded_dyn: Arc<dyn Engine> = self.sharded.clone();
                 engines.insert(1, sharded_dyn);
                 let version = self.version.fetch_add(1, Ordering::AcqRel) + 1;
@@ -977,11 +996,44 @@ mod tests {
     fn shard_block_knob_reaches_engine() {
         let xs = Rng::new(63).uniform_f32_vec(512);
         let set =
-            EngineSet::build_with(&xs, None, EngineCfg { shard_block: ShardBlock::Fixed(32) });
+            EngineSet::build_with(&xs, None, EngineCfg { shard_block: ShardBlock::Fixed(32), ..Default::default() });
         let e = set.get(EngineKind::Sharded).expect("sharded built");
         let queries = vec![(0u32, 511u32), (31, 32), (100, 100)];
         assert_eq!(e.solve(&queries, 2).unwrap(), oracle_batch(&xs, &queries));
         assert!(e.memory_bytes() > 0);
+    }
+
+    #[test]
+    fn packet_knobs_reach_engines_and_stay_bit_identical() {
+        // --packet-width / --no-sort-queries are pure A/B knobs: every
+        // combination must answer exactly like the scalar default on
+        // both traversal-driven engines.
+        let mut rng = Rng::new(90);
+        let xs = rng.uniform_f32_vec(3000);
+        let queries = gen_queries(3000, 256, RangeDist::Small, &mut rng);
+        let want = oracle_batch(&xs, &queries);
+        for packet_width in [0usize, 8] {
+            for no_sort_queries in [false, true] {
+                let set = EngineSet::build_with(
+                    &xs,
+                    None,
+                    EngineCfg {
+                        shard_block: ShardBlock::Fixed(64),
+                        packet_width,
+                        no_sort_queries,
+                    },
+                );
+                for kind in [EngineKind::Rtx, EngineKind::Sharded] {
+                    let got = set.get(kind).unwrap().solve(&queries, 2).unwrap();
+                    assert_eq!(
+                        got,
+                        want,
+                        "{} packet_width={packet_width} no_sort={no_sort_queries}",
+                        kind.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]
@@ -1009,6 +1061,7 @@ mod tests {
             None,
             EngineCfg {
                 shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.1 },
+                ..Default::default()
             },
         );
         let e = set.get(EngineKind::Sharded).expect("sharded built");
@@ -1022,7 +1075,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(32) },
+            EngineCfg { shard_block: ShardBlock::Fixed(32), ..Default::default() },
             LifecycleCfg::default(),
         );
         let epoch = state.current();
@@ -1055,7 +1108,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            EngineCfg { shard_block: ShardBlock::Fixed(64), ..Default::default() },
             LifecycleCfg::default(),
         );
         let batch = vec![(5usize, -1.0f32), (63, -0.5), (64, -0.25), (900, -2.0)];
@@ -1089,7 +1142,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(32) },
+            EngineCfg { shard_block: ShardBlock::Fixed(32), ..Default::default() },
             LifecycleCfg::default(),
         );
         let batch = vec![(10usize, -1.0f32), (11, 0.9)];
@@ -1117,7 +1170,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            EngineCfg { shard_block: ShardBlock::Fixed(64), ..Default::default() },
             LifecycleCfg::default(),
         );
         let batch = vec![(100usize, -1.0f32), (2000, -0.5)];
@@ -1142,7 +1195,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            EngineCfg { shard_block: ShardBlock::Fixed(64), ..Default::default() },
             LifecycleCfg::default(),
         );
         let updates = vec![(100usize, -0.5f32), (900, -0.25)];
@@ -1180,7 +1233,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            EngineCfg { shard_block: ShardBlock::Fixed(64), ..Default::default() },
             LifecycleCfg::default(),
         );
         assert_eq!(state.shard_block_live(), 64);
@@ -1209,7 +1262,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(128) },
+            EngineCfg { shard_block: ShardBlock::Fixed(128), ..Default::default() },
             LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
         );
         let mut rng = Rng::new(69);
@@ -1251,6 +1304,7 @@ mod tests {
             None,
             EngineCfg {
                 shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+                ..Default::default()
             },
             LifecycleCfg { observer_half_life: 4.0, ..Default::default() },
         );
@@ -1296,6 +1350,7 @@ mod tests {
             None,
             EngineCfg {
                 shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+                ..Default::default()
             },
             LifecycleCfg::default(),
         );
@@ -1324,6 +1379,7 @@ mod tests {
             None,
             EngineCfg {
                 shard_block: ShardBlock::Auto { dist: RangeDist::Small, update_frac: 0.3 },
+                ..Default::default()
             },
             LifecycleCfg::default(),
         );
@@ -1367,7 +1423,7 @@ mod tests {
         let state = EpochState::bootstrap(
             &xs,
             None,
-            EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            EngineCfg { shard_block: ShardBlock::Fixed(64), ..Default::default() },
             LifecycleCfg::default(),
         );
         state.update_batch(&[(7, -0.5)], 1).unwrap();

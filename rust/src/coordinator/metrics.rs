@@ -71,6 +71,16 @@ pub struct Metrics {
     /// back to the direct apply, or a batch lost to the serving-loop
     /// backstop.
     pub degraded_fallbacks: u64,
+    /// QoS: fused batches served while the drained queue head was
+    /// interactive-class (multi-tenant executor only; the single-array
+    /// coordinator never tags a class, so both stay 0 there).
+    pub interactive_batches: u64,
+    /// QoS: per-batch service latency of interactive-class drains.
+    pub interactive_latency: LatencyHistogram,
+    /// QoS: fused batches served while the drained head was bulk-class.
+    pub bulk_batches: u64,
+    /// QoS: per-batch service latency of bulk-class drains.
+    pub bulk_latency: LatencyHistogram,
     /// Shedding: requests rejected at admission (queue at watermark).
     pub shed: u64,
     /// Shedding: requests dropped because their deadline expired (at
@@ -174,6 +184,21 @@ impl Metrics {
         self.degraded_fallbacks += 1;
     }
 
+    /// One fused batch served by the multi-tenant executor, tagged with
+    /// the QoS class of the queue head that was drained. Interactive
+    /// heads are picked strictly before bulk heads, so the split
+    /// histograms are the direct evidence the pick order holds under
+    /// load (an interactive p99 tracking the bulk p99 means it doesn't).
+    pub fn record_class_batch(&mut self, interactive: bool, latency_ns: u64) {
+        if interactive {
+            self.interactive_batches += 1;
+            self.interactive_latency.record(latency_ns);
+        } else {
+            self.bulk_batches += 1;
+            self.bulk_latency.record(latency_ns);
+        }
+    }
+
     /// A request was shed at admission (queue depth at the watermark).
     pub fn record_shed(&mut self) {
         self.shed += 1;
@@ -241,6 +266,24 @@ impl Metrics {
             ("shed", Json::Num(self.shed as f64)),
             ("deadline_expired", Json::Num(self.deadline_expired as f64)),
         ];
+        // Per-class service latency, present only when the class was
+        // actually drained (keeps single-array summaries unchanged).
+        if self.interactive_batches > 0 {
+            pairs.push(("interactive_batches", Json::Num(self.interactive_batches as f64)));
+            pairs.push((
+                "interactive_p50_ns",
+                Json::Num(self.interactive_latency.quantile_ns(0.5) as f64),
+            ));
+            pairs.push((
+                "interactive_p99_ns",
+                Json::Num(self.interactive_latency.quantile_ns(0.99) as f64),
+            ));
+        }
+        if self.bulk_batches > 0 {
+            pairs.push(("bulk_batches", Json::Num(self.bulk_batches as f64)));
+            pairs.push(("bulk_p50_ns", Json::Num(self.bulk_latency.quantile_ns(0.5) as f64)));
+            pairs.push(("bulk_p99_ns", Json::Num(self.bulk_latency.quantile_ns(0.99) as f64)));
+        }
         if let Some(t) = &self.tenant {
             pairs.push(("tenant", Json::Str(t.clone())));
         }
@@ -280,6 +323,24 @@ impl fmt::Display for Metrics {
                 fmt_ns(e.batch_latency.quantile_ns(0.99) as f64),
                 fmt_ns(e.batch_latency.mean_ns()),
             )?;
+        }
+        // Per-class service lines only under the multi-tenant executor
+        // (the single-array path never tags a class, so nothing prints).
+        for (label, batches, hist) in [
+            ("interactive", self.interactive_batches, &self.interactive_latency),
+            ("bulk", self.bulk_batches, &self.bulk_latency),
+        ] {
+            if batches > 0 {
+                writeln!(
+                    f,
+                    "  {:<10} batches={:<6} batch p50={} p99={} mean={}",
+                    label,
+                    batches,
+                    fmt_ns(hist.quantile_ns(0.5) as f64),
+                    fmt_ns(hist.quantile_ns(0.99) as f64),
+                    fmt_ns(hist.mean_ns()),
+                )?;
+            }
         }
         // Pure-query runs print no empty update histogram line.
         if self.update_batches > 0 && self.updates > 0 {
@@ -497,6 +558,34 @@ mod tests {
         assert_eq!(j.get("shed").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("rebuilds").unwrap().as_u64(), Some(1));
         assert_eq!(j.get("tenant").unwrap().as_str(), Some("interactive"));
+    }
+
+    #[test]
+    fn class_latency_lines_split_by_class_and_stay_suppressed_when_untagged() {
+        let mut m = Metrics::new();
+        m.record_batch(EngineKind::Lca, 64, 1_000);
+        // Single-array path: no class tags, no class lines.
+        let text = m.to_string();
+        assert!(!text.contains("interactive"), "{text}");
+        assert!(!text.contains("bulk"), "{text}");
+        m.record_class_batch(true, 2_000);
+        m.record_class_batch(true, 4_000);
+        let text = m.to_string();
+        assert!(text.contains("interactive"), "{text}");
+        assert!(!text.contains("bulk"), "one drained class prints one line: {text}");
+        m.record_class_batch(false, 8_000);
+        let text = m.to_string();
+        assert!(text.contains("interactive") && text.contains("bulk"), "{text}");
+        assert_eq!(m.interactive_batches, 2);
+        assert_eq!(m.bulk_batches, 1);
+        let j = m.summary_json();
+        assert_eq!(j.get("interactive_batches").unwrap().as_u64(), Some(2));
+        assert_eq!(j.get("bulk_batches").unwrap().as_u64(), Some(1));
+        assert!(j.get("interactive_p99_ns").is_some() && j.get("bulk_p50_ns").is_some());
+        // An untagged snapshot exports none of the class keys.
+        let quiet = Metrics::new();
+        let j = quiet.summary_json();
+        assert!(j.get("interactive_batches").is_none() && j.get("bulk_batches").is_none());
     }
 
     #[test]

@@ -193,7 +193,10 @@ fn pick_next(tenants: &[Arc<Tenant>]) -> Option<usize> {
 /// head cannot ride its pick), capped at `max_batch_ops` ops.
 fn serve_one(shared: &Shared, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>) {
     let t = &shared.tenants[idx];
-    let group = {
+    // The head's class survives the drain: the whole group shares it
+    // (the flip check below), and the per-class latency histogram is
+    // tagged with it after the batch completes.
+    let (group, head_class) = {
         let mut q = t.queue.lock();
         let Some(head_class) = q.front().map(|r| r.interactive) else {
             return;
@@ -210,7 +213,7 @@ fn serve_one(shared: &Shared, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>
             shared.global_queued.fetch_sub(1, Ordering::AcqRel);
             group.push(qr.req);
         }
-        group
+        (group, head_class)
     };
     if group.is_empty() {
         return;
@@ -274,6 +277,7 @@ fn serve_one(shared: &Shared, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>
             {
                 let obs = st.observer.lock().snapshot();
                 let mut g = m.lock();
+                g.record_class_batch(head_class, latency);
                 g.record_observed(obs, st.epoch_version(), st.shard_block_live());
                 g.record_faults(faults::stats());
             }
@@ -914,6 +918,26 @@ mod tests {
         drain_manual(&mc, 0, &jt);
         assert!(r3.try_recv().is_ok());
         assert_eq!(mc.shared.global_queued.load(Ordering::Acquire), 0);
+    }
+
+    #[test]
+    fn class_latency_is_tagged_with_the_drained_head_class() {
+        let (mc, jt) = mk_manual(&["x"], 64);
+        // interactive, interactive, bulk: the first drain serves the two
+        // interactive requests as one batch, the second serves the bulk
+        // request — one histogram sample per class-tagged drain.
+        let r1 = push_raw(&mc, "x", true);
+        let r2 = push_raw(&mc, "x", true);
+        let r3 = push_raw(&mc, "x", false);
+        drain_manual(&mc, 0, &jt);
+        drain_manual(&mc, 0, &jt);
+        assert!(r1.try_recv().is_ok() && r2.try_recv().is_ok() && r3.try_recv().is_ok());
+        let m = mc.metrics("x").unwrap();
+        let g = m.lock();
+        assert_eq!(g.interactive_batches, 1, "two fused interactive requests, one drain");
+        assert_eq!(g.bulk_batches, 1);
+        let text = format!("{}", *g);
+        assert!(text.contains("interactive") && text.contains("bulk"), "{text}");
     }
 
     #[test]

@@ -59,7 +59,9 @@ fn print_help() {
             .opt("q", "queries in the batch (default 4096)")
             .opt("dist", "large|medium|small (default small)")
             .opt("engine", "RTXRMQ|SHARDED|LCA|HRMQ|EXHAUSTIVE|XLA (default: route by cost model)")
-            .opt("shard-block", "block size or 'auto' = cost-model tuner (default √n)"),
+            .opt("shard-block", "block size or 'auto' = cost-model tuner (default √n)")
+            .opt("packet-width", "rays per traversal packet, 0 = scalar (default 0; A/B knob)")
+            .opt("no-sort-queries", "skip the batch sort (disables packet grouping coherence)"),
         Help::new("serve", "run the coordinator under synthetic load")
             .opt("n", "array size (default 2^16)")
             .opt("requests", "number of requests (default 128)")
@@ -83,6 +85,8 @@ fn print_help() {
             .opt("tenant-specs", "multi-tenant mode: 'name,k=v,..;name2,..' — keys n dist uf shift weight watermark deadline-ms depth tail requests batch")
             .opt("global-watermark", "multi-tenant: aggregate queued-request shed cap (default 1024)")
             .opt("exec-workers", "multi-tenant: executor worker threads (default 2)")
+            .opt("packet-width", "rays per traversal packet, 0 = scalar (default 0; A/B knob)")
+            .opt("no-sort-queries", "skip the batch sort (disables packet grouping coherence)")
             .opt("manifest", "write a hashed run manifest (JSON) to this path; threads run= into metrics lines")
             .opt("no-xla", "disable the PJRT/XLA engine"),
         Help::new("bench-smoke", "wall-clock ns/query + build_ms/resident_bytes grid: binary/wide BVH + sharded engine")
@@ -92,6 +96,7 @@ fn print_help() {
             .opt("shard-block", "sharded column block size, or 'auto' (default √n)")
             .opt("dist", "expected range dist fed to the 'auto' tuner (default small)")
             .opt("update-frac", "also time updates: batch×frac points per grid cell (default 0)")
+            .opt("packet-width", "add a wide-pN/sharded-pN packet column pair (0 = off)")
             .opt("summary-md", "append a markdown summary table to this file")
             .opt("out", "output JSON path (default BENCH_rmq.json)")
             .opt("manifest", "write a hashed run manifest recording the bench JSON artifact"),
@@ -134,7 +139,13 @@ fn cmd_solve(args: &Args) -> i32 {
 
     let runtime = Runtime::load(Path::new("artifacts")).ok().map(Arc::new);
     let shard_block = shard_block_arg(args, dist, 0.0);
-    let engines = EngineSet::build_with(&xs, runtime, EngineCfg { shard_block });
+    let packet_width: usize = args.get_or("packet-width", 0usize).unwrap();
+    let no_sort_queries = args.flag("no-sort-queries");
+    let engines = EngineSet::build_with(
+        &xs,
+        runtime,
+        EngineCfg { shard_block, packet_width, no_sort_queries },
+    );
     let kind = match args.opt("engine") {
         Some(name) => EngineKind::parse(name).unwrap_or_else(|| {
             eprintln!("unknown engine {name}");
@@ -218,12 +229,14 @@ fn cmd_serve(args: &Args) -> i32 {
         Runtime::load(Path::new("artifacts")).ok().map(Arc::new)
     };
     let shard_block = shard_block_arg(args, dist, if mixed { update_frac } else { 0.0 });
+    let packet_width: usize = args.get_or("packet-width", 0usize).unwrap();
+    let no_sort_queries = args.flag("no-sort-queries");
     let c = Coordinator::start(
         &xs,
         runtime,
         CoordinatorCfg {
             batcher: BatcherCfg { shed_watermark, ..Default::default() },
-            engines: EngineCfg { shard_block },
+            engines: EngineCfg { shard_block, packet_width, no_sort_queries },
             lifecycle: LifecycleCfg { rebuild, reshard_drift, ..Default::default() },
             pipeline: !args.flag("no-pipeline"),
             ..Default::default()
@@ -350,7 +363,12 @@ fn cmd_serve(args: &Args) -> i32 {
     // respawn during the grace window) into the printed snapshot.
     c.sync_faults();
     println!("{}", c.metrics.lock());
-    let summary = c.metrics.lock().summary_json();
+    let mut summary = c.metrics.lock().summary_json();
+    // The manifest records the A/B traversal knob so a packet run and
+    // its scalar twin stay distinguishable after the fact.
+    if let Json::Obj(m) = &mut summary {
+        m.insert("packet_width".into(), Json::Num(packet_width as f64));
+    }
     c.shutdown();
     faults::disarm();
     let code = if ok { 0 } else { 1 };
@@ -566,6 +584,8 @@ fn cmd_serve_multi(args: &Args) -> i32 {
     let deadline_ms: u64 = args.get_or("deadline-ms", 0u64).unwrap();
     let global_watermark: usize = args.get_or("global-watermark", 1024usize).unwrap();
     let exec_workers: usize = args.get_or("exec-workers", 2usize).unwrap();
+    let packet_width: usize = args.get_or("packet-width", 0usize).unwrap();
+    let no_sort_queries = args.flag("no-sort-queries");
     let manifest_path = args.opt("manifest").map(str::to_string);
     let run_id = manifest_path.as_ref().map(|_| manifest::gen_run_id());
     let runtime = if args.flag("no-xla") {
@@ -580,6 +600,8 @@ fn cmd_serve_multi(args: &Args) -> i32 {
             let mut tc = TenantCfg::named(&spec.load.name);
             tc.engines = EngineCfg {
                 shard_block: shard_block_arg(args, spec.load.dist, spec.load.update_frac),
+                packet_width,
+                no_sort_queries,
             };
             tc.lifecycle = LifecycleCfg { rebuild, reshard_drift, ..Default::default() };
             tc.weight = spec.weight;
@@ -681,6 +703,9 @@ fn cmd_serve_multi(args: &Args) -> i32 {
     );
     mc.shutdown();
     faults::disarm();
+    // Shared A/B knob alongside the per-tenant metric objects; tenant
+    // names never collide with it (TenantSpec names are identifiers).
+    metrics_doc.insert("packet_width".to_string(), Json::Num(packet_width as f64));
     let code = if ok { 0 } else { 1 };
     finish_manifest(
         manifest_path.as_deref(),
@@ -748,6 +773,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         seed: args.get_or("seed", defaults.seed).unwrap(),
         shard_block: shard_block_arg(args, dist, update_frac),
         update_frac,
+        packet_width: args.get_or("packet-width", defaults.packet_width).unwrap(),
     };
     let out = args.str_or("out", "BENCH_rmq.json");
     let points = run_smoke(&cfg);
@@ -762,6 +788,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             format!("{:.2}", p.build_ms),
             fmt_mb(p.resident_bytes as u64),
             p.counters.nodes_visited.to_string(),
+            format!("{:.1}", p.node_fetches_per_query()),
             p.counters.tri_tests.to_string(),
         ]);
     }
@@ -776,6 +803,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             "build_ms",
             "resident",
             "nodes_visited",
+            "fetches/q",
             "tri_tests",
         ],
         &rows,
@@ -806,7 +834,9 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     // The bench JSON is the manifest's artifact: CI re-hashes it, so a
     // baseline swapped after the gate ran can no longer pass silently.
     let artifacts: &[&str] = if code == 0 { &[&out] } else { &[] };
-    finish_manifest(manifest_path, run_id.as_deref(), Json::Obj(Default::default()), artifacts, code)
+    let mut metrics = std::collections::BTreeMap::new();
+    metrics.insert("packet_width".to_string(), Json::Num(cfg.packet_width as f64));
+    finish_manifest(manifest_path, run_id.as_deref(), Json::Obj(metrics), artifacts, code)
 }
 
 fn cmd_bench_compare(args: &Args) -> i32 {

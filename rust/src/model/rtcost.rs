@@ -34,6 +34,18 @@ pub fn saturation(batch: u64, half_sat: f64) -> f64 {
 /// comparable between layouts: the wide layout trades more box tests
 /// per pop for far fewer pops, which is exactly the trade RT hardware
 /// makes.
+///
+/// Packet amortisation: `node_fetches` counts *memory* fetches of node
+/// records — one per pop in scalar traversal (so it equals
+/// `nodes_visited` there), but one per pop per **packet** in packetized
+/// traversal, where P rays share each fetched node. The per-node charge
+/// is split to mirror that: `c_node` prices the per-ray dispatch /
+/// stack work that packets still pay once per member, `c_packet` the
+/// node-record fetch they share. In scalar mode the two counters are
+/// equal and the effective per-node weight is `c_node + c_packet`
+/// (= 1.0 with defaults, so scalar modeled times are unchanged);
+/// packetized counter sets with `node_fetches < nodes_visited` model
+/// strictly cheaper, which is how the tuner sees the new cost shape.
 #[derive(Clone, Copy, Debug)]
 pub struct RtCostModel {
     /// Work units per BVH node visit / per-child AABB test / triangle
@@ -42,6 +54,12 @@ pub struct RtCostModel {
     pub c_aabb: f64,
     pub c_tri: f64,
     pub c_ray: f64,
+    /// Work units per node-record *fetch* (`Counters::node_fetches`) —
+    /// the part of the per-node cost a ray packet amortises across its
+    /// members. Defaults keep `c_node + c_packet` equal to the old
+    /// per-node unit weight, so every scalar-shaped counter set
+    /// (`node_fetches == nodes_visited`) models exactly as before.
+    pub c_packet: f64,
     /// ns per work unit *per query* on the reference GPU (RTX 6000 Ada),
     /// at full saturation. Single-point calibration against the Fig. 12
     /// endpoint (n = 1e8, q = 2^26, large ranges, ≈ 5 ns/RMQ): the
@@ -92,10 +110,11 @@ pub struct RtCostModel {
 impl Default for RtCostModel {
     fn default() -> Self {
         RtCostModel {
-            c_node: 1.0,
+            c_node: 0.55,
             c_aabb: 0.25,
             c_tri: 2.0,
             c_ray: 10.0,
+            c_packet: 0.45,
             ns_per_unit_ref: 0.0159,
             half_sat: (1u64 << 21) as f64,
             launch_overhead_ns: 15_000.0,
@@ -106,9 +125,14 @@ impl Default for RtCostModel {
 }
 
 impl RtCostModel {
-    /// Work units per query from measured counters.
+    /// Work units per query from measured counters. The per-node charge
+    /// is split between pops (`c_node × nodes_visited`) and node-record
+    /// fetches (`c_packet × node_fetches`): scalar traversal pays both
+    /// per pop, packetized traversal shares the fetch half across the
+    /// packet (see the struct docs).
     pub fn work_per_query(&self, c: &Counters, queries: u64) -> f64 {
         let w = c.nodes_visited as f64 * self.c_node
+            + c.node_fetches as f64 * self.c_packet
             + c.aabb_tests as f64 * self.c_aabb
             + c.tri_tests as f64 * self.c_tri
             + c.rays as f64 * self.c_ray;
@@ -131,7 +155,9 @@ impl RtCostModel {
     /// sharded engine — small-range by construction.
     pub fn probe_work(&self, k: f64) -> f64 {
         let depth = k.max(2.0).log2().ceil() + 1.0;
-        self.c_ray + depth * (self.c_node + 4.0 * self.c_aabb) + 2.0 * self.c_tri
+        // A scalar probe fetches every node it pops, so it pays the full
+        // per-node weight c_node + c_packet per level.
+        self.c_ray + depth * (self.c_node + self.c_packet + 4.0 * self.c_aabb) + 2.0 * self.c_tri
     }
 
     /// Modeled work of a leaf-to-root **path refit** in a BVH over `k`
@@ -142,7 +168,7 @@ impl RtCostModel {
     /// Θ(k) refit-and-rescan sweep.
     pub fn path_refit_work(&self, k: f64) -> f64 {
         let depth = k.max(2.0).log2().ceil() + 1.0;
-        self.c_tri + depth * (self.c_node + 4.0 * self.c_aabb)
+        self.c_tri + depth * (self.c_node + self.c_packet + 4.0 * self.c_aabb)
     }
 
     /// Update-side work **per point** at block size `bs` when update
@@ -462,8 +488,11 @@ mod tests {
     fn ref_counters(queries: u64) -> Counters {
         // Typical block-matrix large-range traversal at the calibration
         // point: ~150 node visits, ~25 tri tests, ~3 rays per query.
+        // Scalar traversal fetches each popped node once, so
+        // node_fetches == nodes_visited at the calibration point.
         Counters {
             nodes_visited: 150 * queries,
+            node_fetches: 150 * queries,
             tri_tests: 25 * queries,
             rays: 3 * queries,
             aabb_tests: 300 * queries,
@@ -477,6 +506,26 @@ mod tests {
         let ns = m.ns_per_query(&ref_counters(q), q, &LOVELACE_RTX6000ADA);
         // Paper: ≈ 5 ns/RMQ for large ranges on the RTX 6000 Ada.
         assert!((3.0..8.0).contains(&ns), "ns = {ns}");
+    }
+
+    #[test]
+    fn packet_shaped_counters_model_cheaper_work() {
+        // Packetized traversal shares node fetches across P rays:
+        // node_fetches drops toward nodes_visited / P while every other
+        // counter is identical (bit-identical results, same box/tri
+        // tests). The model must price that strictly cheaper, and the
+        // saving must grow with the amortisation factor.
+        let m = RtCostModel::default();
+        let q = 1u64 << 20;
+        let scalar = ref_counters(q);
+        let packet = |p: u64| Counters { node_fetches: 150 * q / p, ..scalar };
+        let w_scalar = m.work_per_query(&scalar, q);
+        let w_p4 = m.work_per_query(&packet(4), q);
+        let w_p16 = m.work_per_query(&packet(16), q);
+        assert!(w_p16 < w_p4 && w_p4 < w_scalar, "{w_p16} {w_p4} {w_scalar}");
+        // The split keeps the scalar shape priced exactly as the old
+        // unit c_node weight did: c_node + c_packet per node.
+        assert!((m.c_node + m.c_packet - 1.0).abs() < 1e-12);
     }
 
     #[test]

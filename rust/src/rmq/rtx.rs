@@ -24,7 +24,7 @@
 
 use super::{Query, RmqSolver};
 use crate::bvh::traverse::{closest_hit_from, Counters, Hit, TraversalStack};
-use crate::bvh::wide::{closest_hit_wide_from, WideStack};
+use crate::bvh::wide::{closest_hit_packet, closest_hit_wide_from, RayPacket, WideBvh, WideStack};
 use crate::bvh::{AccelLayout, Builder};
 use crate::geometry::blocks::BlockLayout;
 use crate::geometry::precision::{best_block_size, config_valid, OptixLimits};
@@ -53,6 +53,12 @@ pub struct RtxOptions {
     /// written back to their original slots; per-query work is
     /// unchanged — this only improves cache/traversal coherence).
     pub sort_queries: bool,
+    /// Traverse this many queries per shared BVH descent
+    /// ([`crate::bvh::wide::closest_hit_packet`]); `0` keeps the scalar
+    /// per-ray path. Only the wide layout packetizes (the binary layout
+    /// is the correctness oracle and stays scalar). Answers are
+    /// bit-identical at every width.
+    pub packet_width: usize,
 }
 
 impl Default for RtxOptions {
@@ -63,6 +69,7 @@ impl Default for RtxOptions {
             leaf_size: 16,
             layout: AccelLayout::Wide,
             sort_queries: true,
+            packet_width: 0,
         }
     }
 }
@@ -73,6 +80,8 @@ impl Default for RtxOptions {
 pub struct RtxScratch {
     pub bin: TraversalStack,
     pub wide: WideStack,
+    /// Reused ray bundle for the packetized drivers.
+    pub packet: RayPacket,
 }
 
 impl RtxScratch {
@@ -199,6 +208,18 @@ impl RtxRmq {
         Self::with_options(xs, RtxOptions::default())
     }
 
+    /// [`new_auto`](Self::new_auto) with the batch-driver knobs
+    /// overridden (the coordinator's `--packet-width` /
+    /// `--no-sort-queries` surface). Geometry and mode tuning are
+    /// unchanged — only the traversal driver differs, and answers are
+    /// bit-identical for every setting.
+    pub fn new_auto_tuned(xs: &[f32], packet_width: usize, sort_queries: bool) -> RtxRmq {
+        let mut r = Self::new_auto(xs);
+        r.opts.packet_width = packet_width;
+        r.opts.sort_queries = sort_queries;
+        r
+    }
+
     pub fn mode(&self) -> RtxMode {
         self.opts.mode
     }
@@ -261,20 +282,11 @@ impl RtxRmq {
         let (l, r) = (l as usize, r as usize);
         let bs = layout.bs;
         let (bl, br) = (l / bs, r / bs);
-        let to_index = |hit: Hit| -> u32 {
-            let prim = hit.prim as usize;
-            if prim >= layout.n {
-                // Block-min primitive: map back to the global argmin.
-                self.block_argmin[prim - layout.n]
-            } else {
-                prim as u32
-            }
-        };
         // Case #1: query within one block — a single ray.
         if bl == br {
             let ray = layout.ray_for_block_query(bl, l % bs, r % bs, self.theta);
             let hit = self.cast(&ray, scratch, c, None).expect("block sub-query must hit");
-            return to_index(hit);
+            return self.to_global_index(layout, hit);
         }
         // Case #2: left partial, right partial, plus covered blocks —
         // with the paper's payload-min optimisation: the running best
@@ -291,15 +303,215 @@ impl RtxRmq {
         }
         let right_ray = layout.ray_for_block_query(br, 0, r % bs, self.theta);
         best = self.cast(&right_ray, scratch, c, best);
-        to_index(best.expect("left partial block always hits"))
+        self.to_global_index(layout, best.expect("left partial block always hits"))
     }
 
     /// Batch execution with counters (the bench-harness entry point);
     /// see [`batch_counted_impl`] for the worker/scratch/sort structure.
+    /// With `packet_width > 0` and the wide layout built, worker chunks
+    /// run through the packetized driver instead — same answers, shared
+    /// node fetches (see the "Packet traversal" note on [`crate::bvh`]).
     pub fn batch_counted(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
+        if self.opts.packet_width > 0 {
+            if let Some(wb) = &self.scene.wide {
+                return self.batch_counted_packet(wb, queries, workers);
+            }
+        }
         batch_counted_impl(queries, workers, self.opts.sort_queries, |l, r, scratch, c| {
             self.rmq_counted(l, r, scratch, c)
         })
+    }
+
+    /// Packetized batch driver: each worker chunk is (optionally) put in
+    /// left-endpoint order — the same sort the scalar path uses — then
+    /// consecutive runs of `packet_width` queries descend the wide BVH
+    /// together. Flat mode is a single phase; Blocks mode runs the
+    /// Algorithm-6 decomposition in three packet phases so every
+    /// sub-ray keeps its exact scalar seed:
+    ///
+    /// 1. first rays (single-block queries and left partials), unseeded;
+    /// 2. summary rays for queries spanning > 2 blocks, each seeded with
+    ///    its own phase-1 hit (packets carry per-ray seeds);
+    /// 3. right partial rays, seeded with the running best.
+    ///
+    /// Per-ray results are bit-identical to the scalar casts, so the
+    /// combined Algorithm-6 answer is too.
+    fn batch_counted_packet(
+        &self,
+        wb: &WideBvh,
+        queries: &[Query],
+        workers: usize,
+    ) -> (Vec<u32>, Counters) {
+        let width = self.opts.packet_width.max(1);
+        let sort = self.opts.sort_queries;
+        let mut out = vec![0u32; queries.len()];
+        let per_worker: Vec<Counters> = pool::map_chunks_mut(&mut out, workers, |off, slice| {
+            let mut ws = WideStack::new();
+            let mut packet = RayPacket::new();
+            let mut c = Counters::default();
+            let mut order: Vec<u32> = (0..slice.len() as u32).collect();
+            if sort && slice.len() > 1 {
+                order.sort_unstable_by_key(|&k| queries[off + k as usize].0);
+            }
+            let mut group_out: Vec<u32> = Vec::with_capacity(width);
+            for group in order.chunks(width) {
+                group_out.clear();
+                group_out.resize(group.len(), 0);
+                match &self.layout {
+                    None => {
+                        packet.clear();
+                        for &k in group {
+                            let (l, r) = queries[off + k as usize];
+                            let ray = flat::ray_for_query(l, r, self.xs.len(), self.theta);
+                            packet.push(&ray, None);
+                        }
+                        closest_hit_packet(wb, &mut packet, &mut ws, &mut c);
+                        for (i, &k) in group.iter().enumerate() {
+                            slice[k as usize] =
+                                packet.hit(i).expect("in-range query must hit").prim;
+                        }
+                    }
+                    Some(layout) => {
+                        let qs: Vec<Query> =
+                            group.iter().map(|&k| queries[off + k as usize]).collect();
+                        self.rmq_blocks_packet(
+                            layout,
+                            wb,
+                            &qs,
+                            &mut group_out,
+                            &mut packet,
+                            &mut ws,
+                            &mut c,
+                        );
+                        for (i, &k) in group.iter().enumerate() {
+                            slice[k as usize] = group_out[i];
+                        }
+                    }
+                }
+            }
+            c
+        });
+        let mut total = Counters::default();
+        for c in &per_worker {
+            total.add(c);
+        }
+        (out, total)
+    }
+
+    /// Algorithm 6 over a packet of queries (see
+    /// [`batch_counted_packet`](Self::batch_counted_packet) for the
+    /// three-phase structure).
+    fn rmq_blocks_packet(
+        &self,
+        layout: &BlockLayout,
+        wb: &WideBvh,
+        queries: &[Query],
+        out: &mut [u32],
+        packet: &mut RayPacket,
+        ws: &mut WideStack,
+        c: &mut Counters,
+    ) {
+        let bs = layout.bs;
+        let g = queries.len();
+        // Phase 1: one first ray per query.
+        packet.clear();
+        let mut blocks: Vec<(usize, usize)> = Vec::with_capacity(g);
+        for &(l, r) in queries {
+            let (l, r) = (l as usize, r as usize);
+            let (bl, br) = (l / bs, r / bs);
+            let ray = if bl == br {
+                layout.ray_for_block_query(bl, l % bs, r % bs, self.theta)
+            } else {
+                layout.ray_for_block_query(bl, l % bs, layout.block_len(bl) - 1, self.theta)
+            };
+            packet.push(&ray, None);
+            blocks.push((bl, br));
+        }
+        closest_hit_packet(wb, packet, ws, c);
+        let mut best: Vec<Option<Hit>> = (0..g).map(|i| packet.hit(i)).collect();
+        // Phase 2: summary rays for queries spanning covered blocks,
+        // seeded with each query's own running best.
+        packet.clear();
+        let mut members: Vec<usize> = Vec::with_capacity(g);
+        for (i, &(bl, br)) in blocks.iter().enumerate() {
+            if br - bl > 1 {
+                let ray = layout.ray_for_blockmin_query(bl + 1, br - 1, self.theta);
+                packet.push(&ray, best[i]);
+                members.push(i);
+            }
+        }
+        if !packet.is_empty() {
+            closest_hit_packet(wb, packet, ws, c);
+            for (j, &i) in members.iter().enumerate() {
+                best[i] = packet.hit(j);
+            }
+        }
+        // Phase 3: right partial rays for multi-block queries.
+        packet.clear();
+        members.clear();
+        for (i, &(bl, br)) in blocks.iter().enumerate() {
+            if bl != br {
+                let r = queries[i].1 as usize;
+                let ray = layout.ray_for_block_query(br, 0, r % bs, self.theta);
+                packet.push(&ray, best[i]);
+                members.push(i);
+            }
+        }
+        if !packet.is_empty() {
+            closest_hit_packet(wb, packet, ws, c);
+            for (j, &i) in members.iter().enumerate() {
+                best[i] = packet.hit(j);
+            }
+        }
+        for i in 0..g {
+            let hit = best[i].expect("left partial block always hits");
+            out[i] = self.to_global_index(layout, hit);
+        }
+    }
+
+    /// Resolve a group of queries in one shared packet descent (flat
+    /// mode only — the sharded engine's per-block solvers). Answers are
+    /// bit-identical to per-query [`rmq_counted`](Self::rmq_counted);
+    /// the binary layout falls back to scalar casts.
+    pub fn rmq_group_packet(
+        &self,
+        queries: &[Query],
+        out: &mut [u32],
+        scratch: &mut RtxScratch,
+        c: &mut Counters,
+    ) {
+        debug_assert!(self.layout.is_none(), "packet group entry is flat-mode only");
+        debug_assert_eq!(queries.len(), out.len());
+        match &self.scene.wide {
+            Some(wb) => {
+                scratch.packet.clear();
+                for &(l, r) in queries {
+                    let ray = flat::ray_for_query(l, r, self.xs.len(), self.theta);
+                    scratch.packet.push(&ray, None);
+                }
+                closest_hit_packet(wb, &mut scratch.packet, &mut scratch.wide, c);
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = scratch.packet.hit(i).expect("in-range query must hit").prim;
+                }
+            }
+            None => {
+                for (i, &(l, r)) in queries.iter().enumerate() {
+                    out[i] = self.rmq_counted(l, r, scratch, c);
+                }
+            }
+        }
+    }
+
+    /// Map a Blocks-mode hit back to a global element index (block-min
+    /// primitives resolve through the per-block argmin table).
+    #[inline]
+    fn to_global_index(&self, layout: &BlockLayout, hit: Hit) -> u32 {
+        let prim = hit.prim as usize;
+        if prim >= layout.n {
+            self.block_argmin[prim - layout.n]
+        } else {
+            prim as u32
+        }
     }
 
     /// Dynamic RMQ (paper §7.iii): update one value, re-shape the
@@ -628,6 +840,111 @@ mod tests {
         assert_eq!(a, b);
         // Per-query work is order-independent.
         assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn packet_batches_match_scalar_both_modes() {
+        // The public A/B surface: packet_width ∈ {1, 4, 7, 8, 16} must
+        // return the exact scalar batch in both geometry modes, with and
+        // without chunk sorting (tie-heavy arrays pin leftmost ties).
+        check("rtx packet batch == scalar batch", 20, |rng| {
+            let xs = gen::dup_array(rng, 8..=900, 2);
+            let n = xs.len();
+            let bs = 1usize << rng.range(1, 5);
+            let queries: Vec<Query> = (0..96)
+                .map(|_| {
+                    let (l, r) = gen::query(rng, n);
+                    (l as u32, r as u32)
+                })
+                .collect();
+            for mode in [RtxMode::Flat, RtxMode::Blocks { block_size: bs }] {
+                for sort_queries in [true, false] {
+                    let scalar = RtxRmq::with_options(
+                        &xs,
+                        RtxOptions { mode, sort_queries, ..Default::default() },
+                    );
+                    let want = scalar.batch_counted(&queries, 2).0;
+                    for packet_width in [1usize, 4, 7, 8, 16] {
+                        let packed = RtxRmq::with_options(
+                            &xs,
+                            RtxOptions { mode, sort_queries, packet_width, ..Default::default() },
+                        );
+                        let (got, c) = packed.batch_counted(&queries, 2);
+                        if got != want {
+                            return Err(format!(
+                                "{mode:?} sort={sort_queries} width={packet_width}: mismatch"
+                            ));
+                        }
+                        if c.rays == 0 || c.node_fetches == 0 {
+                            return Err("packet path counted no work".into());
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packet_width_ignored_on_binary_layout() {
+        // The binary layout is the correctness oracle: packet_width must
+        // silently fall back to the scalar driver there.
+        let mut rng = crate::util::rng::Rng::new(57);
+        let xs = rng.uniform_f32_vec(400);
+        let s = RtxRmq::with_options(
+            &xs,
+            RtxOptions { layout: AccelLayout::Binary, packet_width: 8, ..Default::default() },
+        );
+        let queries: Vec<Query> = (0..64)
+            .map(|_| {
+                let l = rng.range(0, 399) as u32;
+                (l, rng.range(l as usize, 399) as u32)
+            })
+            .collect();
+        let (got, c) = s.batch_counted(&queries, 2);
+        let st = SparseTable::new(&xs);
+        assert_eq!(got, st.batch(&queries, 1));
+        // Scalar counting: one fetch per node pop.
+        assert_eq!(c.node_fetches, c.nodes_visited);
+    }
+
+    #[test]
+    fn packet_batches_amortize_node_fetches() {
+        // Sorted small-range batches: node fetches per query must
+        // strictly decrease as the packet widens (the ISSUE's acceptance
+        // criterion, asserted here at the solver level).
+        let mut rng = crate::util::rng::Rng::new(58);
+        let xs = rng.uniform_f32_vec(1 << 14);
+        let queries: Vec<Query> = (0..512u32)
+            .map(|i| {
+                let l = i * 8;
+                (l, l + 100)
+            })
+            .collect();
+        let mut fetches = Vec::new();
+        let mut answers: Option<Vec<u32>> = None;
+        for packet_width in [0usize, 4, 8, 16] {
+            let s = RtxRmq::with_options(
+                &xs,
+                RtxOptions {
+                    mode: RtxMode::Blocks { block_size: 128 },
+                    packet_width,
+                    ..Default::default()
+                },
+            );
+            let (got, c) = s.batch_counted(&queries, 1);
+            match &answers {
+                None => answers = Some(got),
+                Some(w) => assert_eq!(w, &got, "width {packet_width} changed answers"),
+            }
+            fetches.push(c.node_fetches);
+        }
+        for w in 1..fetches.len() {
+            assert!(
+                fetches[w] < fetches[w - 1],
+                "node fetches not strictly decreasing across widths: {fetches:?}"
+            );
+        }
     }
 
     #[test]

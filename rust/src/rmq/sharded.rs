@@ -77,6 +77,13 @@ pub struct ShardedOptions {
     pub sort_queries: bool,
     /// Threads used to build blocks; 0 = `pool::default_workers()`.
     pub build_workers: usize,
+    /// Probe this many same-target ranges per shared descent (`0` =
+    /// scalar). The batch driver decomposes each chunk's queries into
+    /// block and summary probes, groups consecutive same-block runs
+    /// into packets, and resolves them through the backend's packet
+    /// entry — answers are bit-identical at every width (probes are
+    /// independent; the strict-`<` combination is unchanged).
+    pub packet_width: usize,
 }
 
 impl Default for ShardedOptions {
@@ -87,6 +94,7 @@ impl Default for ShardedOptions {
             backend: ShardBackend::default(),
             sort_queries: true,
             build_workers: 0,
+            packet_width: 0,
         }
     }
 }
@@ -138,6 +146,39 @@ impl BlockSolver {
             BlockSolver::Instanced(s) => s.probe(xs_block, l as usize, r as usize, c) as u32,
             BlockSolver::Rtx(s) => s.rmq_counted(l, r, scratch, c),
             BlockSolver::Sparse(s) => s.rmq(l, r),
+        }
+    }
+
+    /// Packet analogue of [`rmq_local`](Self::rmq_local): resolve a
+    /// group of local ranges over this one solver in a shared descent
+    /// where the backend supports it (the instanced packet probe, the
+    /// flat-geometry wide packet); the sparse oracle stays scalar.
+    /// Bit-identical to per-range `rmq_local` calls for every group.
+    fn rmq_local_packet(
+        &self,
+        xs_block: &[f32],
+        ranges: &[(u32, u32)],
+        out: &mut [u32],
+        scratch: &mut RtxScratch,
+        c: &mut Counters,
+    ) {
+        debug_assert_eq!(ranges.len(), out.len());
+        match self {
+            BlockSolver::Instanced(s) => {
+                let rs: Vec<(usize, usize)> =
+                    ranges.iter().map(|&(l, r)| (l as usize, r as usize)).collect();
+                let mut local = vec![0usize; rs.len()];
+                s.probe_packet(xs_block, &rs, &mut local, c);
+                for (o, v) in out.iter_mut().zip(local) {
+                    *o = v as u32;
+                }
+            }
+            BlockSolver::Rtx(s) => s.rmq_group_packet(ranges, out, scratch, c),
+            BlockSolver::Sparse(s) => {
+                for (o, &(l, r)) in out.iter_mut().zip(ranges) {
+                    *o = s.rmq(l, r);
+                }
+            }
         }
     }
 
@@ -455,14 +496,166 @@ impl ShardedRmq {
 
     /// Batch execution with counters (bench-harness entry point); the
     /// worker/scratch/sort structure is the shared
-    /// [`batch_counted_impl`](super::rtx) driver.
+    /// [`batch_counted_impl`](super::rtx) driver. With `packet_width >
+    /// 0` chunks run through the probe-decomposition packet driver
+    /// instead — same answers, shared node fetches.
     pub fn batch_counted(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
+        if self.opts.packet_width > 0 {
+            return self.batch_counted_packet(queries, workers);
+        }
         super::rtx::batch_counted_impl(
             queries,
             workers,
             self.opts.sort_queries,
             |l, r, scratch, c| self.rmq_counted(l, r, scratch, c),
         )
+    }
+
+    /// Packetized batch driver. Per worker chunk (in the same optional
+    /// left-endpoint order as the scalar path):
+    ///
+    /// 1. decompose every query into its ≤3 probes — single/left
+    ///    partial, covered-summary, right partial — exactly the scalar
+    ///    [`rmq_counted`](Self::rmq_counted) decomposition;
+    /// 2. stable-sort the block probes by block id, so consecutive
+    ///    probes of one block form runs (queries are sorted by left
+    ///    endpoint, so runs are long), and cut each run into packets of
+    ///    `packet_width`; summary probes all target one solver and
+    ///    packetize directly;
+    /// 3. resolve each packet through the backend's shared-descent
+    ///    entry, then combine candidates per query with the scalar
+    ///    path's strict-`<` compares in the same left < interior <
+    ///    right order.
+    ///
+    /// Probes carry no cross-probe state (unlike Blocks-mode carried
+    /// hits), so regrouping them is exact: every probe returns its
+    /// solver's scalar answer bit-for-bit, and the combination logic is
+    /// shared with the scalar path.
+    fn batch_counted_packet(&self, queries: &[Query], workers: usize) -> (Vec<u32>, Counters) {
+        let width = self.opts.packet_width.max(1);
+        let sort = self.opts.sort_queries;
+        let mut out = vec![0u32; queries.len()];
+        let per_worker: Vec<Counters> = pool::map_chunks_mut(&mut out, workers, |off, slice| {
+            let mut scratch = RtxScratch::new();
+            let mut c = Counters::default();
+            let m = slice.len();
+            let mut order: Vec<u32> = (0..m as u32).collect();
+            if sort && m > 1 {
+                order.sort_unstable_by_key(|&k| queries[off + k as usize].0);
+            }
+            // Decomposition. Block probes: (block, l_local, r_local,
+            // slot, is_right); summary probes: (bl+1, br-1, slot).
+            const RIGHT: u32 = 1;
+            let mut bprobes: Vec<(u32, u32, u32, u32, u32)> = Vec::with_capacity(m * 2);
+            let mut sprobes: Vec<(u32, u32, u32)> = Vec::new();
+            for &k in &order {
+                let (l, r) = queries[off + k as usize];
+                let (l, r) = (l as usize, r as usize);
+                let (bl, br) = (l / self.bs, r / self.bs);
+                let base_l = bl * self.bs;
+                if bl == br {
+                    bprobes.push((bl as u32, (l - base_l) as u32, (r - base_l) as u32, k, 0));
+                    continue;
+                }
+                bprobes.push((
+                    bl as u32,
+                    (l - base_l) as u32,
+                    (self.block_len(bl) - 1) as u32,
+                    k,
+                    0,
+                ));
+                if br - bl > 1 {
+                    sprobes.push(((bl + 1) as u32, (br - 1) as u32, k));
+                }
+                let base_r = br * self.bs;
+                bprobes.push((br as u32, 0, (r - base_r) as u32, k, RIGHT));
+            }
+            // Consecutive same-block runs (stable: within a block the
+            // left-endpoint order survives, keeping packets coherent).
+            bprobes.sort_by_key(|p| p.0);
+            // Per-slot candidates: the left/single probe always exists;
+            // summary and right are optional (u32::MAX = absent).
+            let mut left_cand = vec![0u32; m];
+            let mut sum_cand = vec![u32::MAX; m];
+            let mut right_cand = vec![u32::MAX; m];
+            let mut ranges: Vec<Query> = Vec::with_capacity(width);
+            let mut results: Vec<u32> = Vec::with_capacity(width);
+            let mut i = 0usize;
+            while i < bprobes.len() {
+                let b = bprobes[i].0 as usize;
+                let mut j = i;
+                while j < bprobes.len() && bprobes[j].0 as usize == b {
+                    j += 1;
+                }
+                let base = b * self.bs;
+                let end = base + self.block_len(b);
+                for group in bprobes[i..j].chunks(width) {
+                    ranges.clear();
+                    ranges.extend(group.iter().map(|&(_, l, r, _, _)| (l, r)));
+                    results.clear();
+                    results.resize(group.len(), 0);
+                    self.blocks[b].rmq_local_packet(
+                        &self.xs[base..end],
+                        &ranges,
+                        &mut results,
+                        &mut scratch,
+                        &mut c,
+                    );
+                    for (g, &local) in group.iter().zip(&results) {
+                        let global = (base + local as usize) as u32;
+                        if g.4 == RIGHT {
+                            right_cand[g.3 as usize] = global;
+                        } else {
+                            left_cand[g.3 as usize] = global;
+                        }
+                    }
+                }
+                i = j;
+            }
+            if !sprobes.is_empty() {
+                let summary = self.summary.as_ref().expect("nb > 1 has a summary");
+                for group in sprobes.chunks(width) {
+                    ranges.clear();
+                    ranges.extend(group.iter().map(|&(a, b, _)| (a, b)));
+                    results.clear();
+                    results.resize(group.len(), 0);
+                    summary.rmq_local_packet(
+                        &self.block_min,
+                        &ranges,
+                        &mut results,
+                        &mut scratch,
+                        &mut c,
+                    );
+                    for (g, &b) in group.iter().zip(&results) {
+                        sum_cand[g.2 as usize] = self.block_argmin[b as usize];
+                    }
+                }
+            }
+            // Combine: identical candidate order and strict compares as
+            // the scalar path — left partial < interior < right partial.
+            for k in 0..m {
+                let mut best = left_cand[k];
+                if sum_cand[k] != u32::MAX {
+                    let cand = sum_cand[k];
+                    if self.xs[cand as usize] < self.xs[best as usize] {
+                        best = cand;
+                    }
+                }
+                if right_cand[k] != u32::MAX {
+                    let cand = right_cand[k];
+                    if self.xs[cand as usize] < self.xs[best as usize] {
+                        best = cand;
+                    }
+                }
+                slice[k] = best;
+            }
+            c
+        });
+        let mut total = Counters::default();
+        for c in &per_worker {
+            total.add(c);
+        }
+        (out, total)
     }
 
     /// Point update: rewrite one value, refit the owning block and the
@@ -904,6 +1097,76 @@ mod tests {
         let (b, cb) = unsorted.batch_counted(&queries, 3);
         assert_eq!(a, b);
         assert_eq!(ca, cb);
+    }
+
+    #[test]
+    fn packet_batches_match_scalar_all_backends() {
+        // Probe regrouping must be invisible: every backend, width
+        // {1, 4, 7, 8, 16}, sorted and unsorted chunks, tie-heavy
+        // values — answers equal to the scalar batch bit-for-bit.
+        check("sharded packet batch == scalar batch", 15, |rng| {
+            let xs = gen::dup_array(rng, 16..=1200, 2);
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 6);
+            let queries: Vec<Query> = (0..96)
+                .map(|_| {
+                    let (l, r) = gen::query(rng, n);
+                    (l as u32, r as u32)
+                })
+                .collect();
+            for base in backends() {
+                for sort_queries in [true, false] {
+                    let opts = ShardedOptions { block_size: bs, sort_queries, ..base };
+                    let scalar = ShardedRmq::with_options(&xs, opts);
+                    let want = scalar.batch_counted(&queries, 2).0;
+                    for packet_width in [1usize, 4, 7, 8, 16] {
+                        let packed =
+                            ShardedRmq::with_options(&xs, ShardedOptions { packet_width, ..opts });
+                        let got = packed.batch_counted(&queries, 2).0;
+                        if got != want {
+                            return Err(format!(
+                                "{:?} bs={bs} sort={sort_queries} width={packet_width}: mismatch",
+                                base.backend
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packet_batches_amortize_node_fetches() {
+        // Sorted small-range batches over the instanced backend: node
+        // fetches per query strictly decrease as the packet widens.
+        let xs = Rng::new(104).uniform_f32_vec(1 << 14);
+        let queries: Vec<Query> = (0..512u32)
+            .map(|i| {
+                let l = i * 8;
+                (l, l + 100)
+            })
+            .collect();
+        let mut fetches = Vec::new();
+        let mut answers: Option<Vec<u32>> = None;
+        for packet_width in [0usize, 4, 8, 16] {
+            let s = ShardedRmq::with_options(
+                &xs,
+                ShardedOptions { block_size: 128, packet_width, ..Default::default() },
+            );
+            let (got, c) = s.batch_counted(&queries, 1);
+            match &answers {
+                None => answers = Some(got),
+                Some(w) => assert_eq!(w, &got, "width {packet_width} changed answers"),
+            }
+            fetches.push(c.node_fetches);
+        }
+        for w in 1..fetches.len() {
+            assert!(
+                fetches[w] < fetches[w - 1],
+                "node fetches not strictly decreasing across widths: {fetches:?}"
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Differential suite for packetized traversal (ISSUE 9's acceptance
+//! gate): at every packet width the packet path must answer
+//! **hit-for-hit identically** to scalar traversal — across all three
+//! `RangeDist` regimes, on duplicate-heavy arrays where the leftmost-tie
+//! convention is load-bearing, through blocks-mode carried hits, after
+//! point-update refits, and at instanced quantization-bucket boundaries.
+//! The divergence fallback is exercised explicitly from the batch
+//! driver, both as a correctness case and via its counter signature
+//! (`node_fetches == nodes_visited`).
+
+use rtxrmq::bvh::AccelLayout;
+use rtxrmq::rmq::naive_rmq;
+use rtxrmq::rmq::rtx::{RtxMode, RtxOptions, RtxRmq};
+use rtxrmq::rmq::sharded::{ShardBackend, ShardedOptions, ShardedRmq};
+use rtxrmq::util::proptest::{check, gen};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_array, gen_queries, gen_updates, RangeDist};
+
+/// The acceptance sweep: degenerate single-ray packets, the tuner's
+/// defaults, the widest sensible packet, and a non-power-of-two width
+/// (remainder packets on every chunk).
+const WIDTHS: [usize; 5] = [1, 4, 8, 16, 7];
+
+fn wide(packet_width: usize) -> RtxOptions {
+    RtxOptions { layout: AccelLayout::Wide, packet_width, ..Default::default() }
+}
+
+fn instanced(block_size: usize, packet_width: usize) -> ShardedOptions {
+    ShardedOptions {
+        block_size,
+        backend: ShardBackend::Instanced,
+        packet_width,
+        ..Default::default()
+    }
+}
+
+/// Compare one packet solver against the scalar answers, reporting the
+/// first mismatching query.
+fn expect_identical(
+    tag: &str,
+    queries: &[(u32, u32)],
+    scalar: &[u32],
+    packet: &[u32],
+) -> Result<(), String> {
+    if scalar != packet {
+        let bad = scalar.iter().zip(packet).position(|(a, b)| a != b).unwrap();
+        return Err(format!(
+            "{tag}: query {:?} scalar {} packet {}",
+            queries[bad], scalar[bad], packet[bad]
+        ));
+    }
+    Ok(())
+}
+
+/// Flat wide BVH: every width, every range regime, random arrays.
+#[test]
+fn packet_matches_scalar_across_widths_and_regimes() {
+    check("flat wide packet vs scalar, all regimes", 10, |rng| {
+        let xs = gen::f32_array(rng, 2..=2000);
+        let n = xs.len();
+        let scalar = RtxRmq::with_options(&xs, wide(0));
+        let packets: Vec<(usize, RtxRmq)> =
+            WIDTHS.iter().map(|&w| (w, RtxRmq::with_options(&xs, wide(w)))).collect();
+        for dist in RangeDist::all() {
+            let queries = gen_queries(n, 96, dist, rng);
+            let base = scalar.batch_counted(&queries, 2).0;
+            for (w, solver) in &packets {
+                let got = solver.batch_counted(&queries, 2).0;
+                expect_identical(&format!("{dist:?} n={n} p={w}"), &queries, &base, &got)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Duplicate-heavy arrays force ties in nearly every range; the packet
+/// path must keep the leftmost-minimum convention bit-for-bit (checked
+/// against the naive oracle, not just the scalar solver).
+#[test]
+fn packet_preserves_leftmost_ties() {
+    check("leftmost ties under packets", 10, |rng| {
+        let distinct = rng.range(1, 3);
+        let xs = gen::dup_array(rng, 2..=800, distinct);
+        let n = xs.len();
+        let queries = gen_queries(n, 128, RangeDist::Small, rng);
+        let oracle: Vec<u32> = queries
+            .iter()
+            .map(|&(l, r)| naive_rmq(&xs, l as usize, r as usize) as u32)
+            .collect();
+        for &w in &WIDTHS {
+            let got = RtxRmq::with_options(&xs, wide(w)).batch_counted(&queries, 2).0;
+            expect_identical(&format!("dup={distinct} n={n} p={w}"), &queries, &oracle, &got)?;
+        }
+        Ok(())
+    });
+}
+
+/// Blocks mode answers a query in up to three phases that *carry* the
+/// best hit between geometries; a carried hit must win ties at its own
+/// t inside the packet path exactly as it does in the scalar path.
+#[test]
+fn blocks_mode_carried_hits_match_across_widths() {
+    check("blocks-mode carried hits under packets", 8, |rng| {
+        let xs = gen::dup_array(rng, 64..=1200, rng.range(2, 5));
+        let n = xs.len();
+        let bs = 1usize << rng.range(3, 6);
+        let blocks = |p: usize| RtxOptions {
+            mode: RtxMode::Blocks { block_size: bs },
+            packet_width: p,
+            ..wide(0)
+        };
+        let scalar = RtxRmq::with_options(&xs, blocks(0));
+        for dist in RangeDist::all() {
+            let queries = gen_queries(n, 64, dist, rng);
+            let base = scalar.batch_counted(&queries, 2).0;
+            for &(l, r) in queries.iter().take(4) {
+                assert_eq!(
+                    base[queries.iter().position(|q| *q == (l, r)).unwrap()],
+                    naive_rmq(&xs, l as usize, r as usize) as u32,
+                    "scalar blocks-mode disagrees with the oracle"
+                );
+            }
+            for &w in &WIDTHS {
+                let got = RtxRmq::with_options(&xs, blocks(w)).batch_counted(&queries, 2).0;
+                expect_identical(&format!("{dist:?} bs={bs} p={w}"), &queries, &base, &got)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Point updates refit the wide BVH in place; the packet path reads the
+/// same refitted lanes, so answers must stay identical after every
+/// update batch (checked against a rolling naive oracle).
+#[test]
+fn packet_matches_scalar_after_point_update_refits() {
+    let n = 1500;
+    let mut xs = gen_array(n, 21);
+    let mut rng = Rng::new(22);
+    let mut scalar = RtxRmq::with_options(&xs, wide(0));
+    let mut packets: Vec<(usize, RtxRmq)> =
+        WIDTHS.iter().map(|&w| (w, RtxRmq::with_options(&xs, wide(w)))).collect();
+    for round in 0..4 {
+        let ups = gen_updates(n, 40, &mut rng);
+        scalar.update_values(&ups);
+        for (_, s) in &mut packets {
+            s.update_values(&ups);
+        }
+        for (i, v) in &ups {
+            xs[*i] = *v;
+        }
+        let queries = gen_queries(n, 96, RangeDist::Medium, &mut rng);
+        let base = scalar.batch_counted(&queries, 2).0;
+        for (k, &(l, r)) in queries.iter().enumerate().take(8) {
+            assert_eq!(
+                base[k],
+                naive_rmq(&xs, l as usize, r as usize) as u32,
+                "round {round}: scalar disagrees with the rolling oracle at {:?}",
+                (l, r)
+            );
+        }
+        for (w, s) in &packets {
+            let got = s.batch_counted(&queries, 2).0;
+            expect_identical(&format!("round={round} p={w}"), &queries, &base, &got).unwrap();
+        }
+    }
+}
+
+/// Instanced sharded engine: quantized `u16` lane minima screen the
+/// packet, exact values resolve each range. Duplicate-heavy arrays put
+/// many blocks in shared quantization buckets, where the screen alone
+/// cannot order candidates — the exact strict-`<` resolve must.
+#[test]
+fn instanced_packets_match_at_quantization_boundaries() {
+    check("instanced sharded packets on shared buckets", 10, |rng| {
+        let xs = gen::dup_array(rng, 2..=1500, rng.range(1, 4));
+        let n = xs.len();
+        let bs = 1usize << rng.range(0, 8);
+        let scalar = ShardedRmq::with_options(&xs, instanced(bs, 0));
+        for dist in RangeDist::all() {
+            let queries = gen_queries(n, 64, dist, rng);
+            let base = scalar.batch_counted(&queries, 2).0;
+            for &(l, r) in queries.iter().take(4) {
+                assert_eq!(
+                    base[queries.iter().position(|q| *q == (l, r)).unwrap()],
+                    naive_rmq(&xs, l as usize, r as usize) as u32,
+                    "scalar instanced disagrees with the oracle"
+                );
+            }
+            for &w in &WIDTHS {
+                let got =
+                    ShardedRmq::with_options(&xs, instanced(bs, w)).batch_counted(&queries, 2).0;
+                expect_identical(&format!("{dist:?} n={n} bs={bs} p={w}"), &queries, &base, &got)?;
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The divergence fallback, exercised explicitly from the batch driver:
+/// a packet of origins spread across the whole array exceeds
+/// [`rtxrmq::bvh::wide::PACKET_DIVERGENCE_FRAC`] of the root envelope
+/// and drops to per-ray traversal — identical answers, and the
+/// fallback's counter signature (`node_fetches == nodes_visited`). A
+/// coherent batch on the same solver keeps the shared descent
+/// (`node_fetches < nodes_visited`).
+#[test]
+fn divergence_fallback_is_exercised_and_identical() {
+    let n = 4096;
+    let xs = gen_array(n, 31);
+    let scalar = RtxRmq::with_options(&xs, wide(0));
+    let packet = RtxRmq::with_options(&xs, wide(8));
+
+    // Eight queries spanning the array: one packet, guaranteed past the
+    // divergence threshold, so the whole batch runs per-ray.
+    let divergent: Vec<(u32, u32)> =
+        (0..8u32).map(|i| (i * 500, i * 500 + 20)).collect();
+    let (base, _) = scalar.batch_counted(&divergent, 1);
+    let (got, c) = packet.batch_counted(&divergent, 1);
+    assert_eq!(base, got, "fallback answers must stay bit-identical");
+    assert_eq!(
+        c.node_fetches, c.nodes_visited,
+        "a fully divergent packet carries the scalar counter signature"
+    );
+
+    // Thirty-two near-identical ranges: four packets of eight, all
+    // within the envelope threshold — descents are shared, so fetches
+    // amortize below the per-ray visit charge.
+    let coherent: Vec<(u32, u32)> = (0..32u32).map(|i| (i * 4, i * 4 + 64)).collect();
+    let (base, _) = scalar.batch_counted(&coherent, 1);
+    let (got, c) = packet.batch_counted(&coherent, 1);
+    assert_eq!(base, got, "shared-descent answers must stay bit-identical");
+    assert!(
+        c.node_fetches < c.nodes_visited,
+        "coherent packets share descents: fetches {} !< visits {}",
+        c.node_fetches,
+        c.nodes_visited
+    );
+}
