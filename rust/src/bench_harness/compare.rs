@@ -3,7 +3,8 @@
 //!
 //! Points are matched by (layout, n, batch); for each matched point the
 //! gate checks `ns_per_query`, — when both sides measured the write
-//! path — `upd_ns_per_op`, and — when both sides recorded it —
+//! path — `upd_ns_per_op` and `range_ns_per_op`, and — when both
+//! sides recorded it —
 //! `resident_bytes` (memory regressions gate exactly like time
 //! regressions: the instanced backend's ≥4× footprint win must not
 //! erode silently). Any relative regression above the tolerance
@@ -32,7 +33,7 @@ pub struct CompareRow {
     pub layout: String,
     pub n: u64,
     pub batch: u64,
-    /// "ns/query", "ns/update" or "resident_bytes".
+    /// "ns/query", "ns/update", "ns/range-update" or "resident_bytes".
     pub metric: &'static str,
     pub baseline: f64,
     pub current: f64,
@@ -79,7 +80,9 @@ impl CompareReport {
     }
 }
 
-fn points_of(doc: &Json) -> Result<Vec<(String, u64, u64, f64, f64, f64)>, String> {
+type PointRow = (String, u64, u64, f64, f64, f64, f64);
+
+fn points_of(doc: &Json) -> Result<Vec<PointRow>, String> {
     let arr = doc
         .get("points")
         .and_then(|p| p.as_arr())
@@ -106,7 +109,10 @@ fn points_of(doc: &Json) -> Result<Vec<(String, u64, u64, f64, f64, f64)>, Strin
         // Baselines committed before the memory column existed read as
         // 0.0 and fall through the both-sides-measured guard below.
         let resident = p.get("resident_bytes").and_then(|v| v.as_f64()).unwrap_or(0.0);
-        out.push((layout.to_string(), n, batch, ns, upd, resident));
+        // Likewise for the range-tag column: only --range-frac runs
+        // measure it, and only on the sharded solver.
+        let range = p.get("range_ns_per_op").and_then(|v| v.as_f64()).unwrap_or(0.0);
+        out.push((layout.to_string(), n, batch, ns, upd, resident, range));
     }
     Ok(out)
 }
@@ -129,8 +135,8 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
     let cur = points_of(current)?;
     let mut report =
         CompareReport { bootstrap_baseline, baseline_provenance, tolerance, ..Default::default() };
-    for (layout, n, batch, base_ns, base_upd, base_resident) in &base {
-        let Some(&(_, _, _, cur_ns, cur_upd, cur_resident)) =
+    for (layout, n, batch, base_ns, base_upd, base_resident, base_range) in &base {
+        let Some(&(_, _, _, cur_ns, cur_upd, cur_resident, cur_range)) =
             cur.iter().find(|(l, cn, cb, ..)| l == layout && cn == n && cb == batch)
         else {
             report.missing.push(format!("{layout} n={n} batch={batch}"));
@@ -139,9 +145,10 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
         let mut push = |metric: &'static str, b: f64, c: f64| {
             if b <= 0.0 || c <= 0.0 {
                 // The write path is only measured with --update-frac,
-                // and resident_bytes only exists in post-instancing
-                // runs; a side that didn't measure a metric cannot
-                // gate it.
+                // the range-tag path only with --range-frac (and only
+                // on the sharded solver), and resident_bytes only
+                // exists in post-instancing runs; a side that didn't
+                // measure a metric cannot gate it.
                 return;
             }
             let delta = c / b - 1.0;
@@ -159,6 +166,7 @@ pub fn compare(baseline: &Json, current: &Json, tolerance: f64) -> Result<Compar
         push("ns/query", *base_ns, cur_ns);
         push("ns/update", *base_upd, cur_upd);
         push("resident_bytes", *base_resident, cur_resident);
+        push("ns/range-update", *base_range, cur_range);
     }
     for (layout, n, batch, ..) in &cur {
         if !base.iter().any(|(l, bn, bb, ..)| l == layout && bn == n && bb == batch) {
@@ -282,6 +290,40 @@ mod tests {
         let report = compare(&base, &unmeasured, 0.25).unwrap();
         assert_eq!(report.rows.len(), 1);
         assert!(!report.failed());
+    }
+
+    #[test]
+    fn range_regression_gates_only_when_both_sides_measured() {
+        let with_range = |range: f64| {
+            let rows = vec![obj(vec![
+                ("layout", Json::from("sharded")),
+                ("n", Json::from(65536u64)),
+                ("batch", Json::from(4096u64)),
+                ("ns_per_query", Json::from(300.0)),
+                ("upd_ns_per_op", Json::from(0.0)),
+                ("range_ns_per_op", Json::from(range)),
+            ])];
+            obj(vec![("bench", Json::from("rmq_smoke")), ("points", Json::Arr(rows))])
+        };
+        let base = with_range(800.0);
+        // 2x slower tags: the instanced O(1) cover path eroded.
+        let slow = with_range(1600.0);
+        let report = compare(&base, &slow, 0.25).unwrap();
+        assert!(report.failed());
+        let reg = report.regressions();
+        assert_eq!(reg.len(), 1);
+        assert_eq!(reg[0].metric, "ns/range-update");
+        assert!(summary_md(&report).contains("ns/range-update"));
+        // Within tolerance passes.
+        assert!(!compare(&base, &with_range(900.0), 0.25).unwrap().failed());
+        // A baseline without --range-frac (or predating the column)
+        // cannot gate it: the both-sides-measured guard.
+        let old = smoke_doc(vec![("sharded", 65536, 4096, 300.0, 0.0)], None);
+        let report = compare(&old, &slow, 0.25).unwrap();
+        assert_eq!(report.rows.len(), 1, "ns/query only: {:?}", report.rows);
+        assert!(!report.failed());
+        // Nor can a current run that skipped the range path.
+        assert!(!compare(&base, &with_range(0.0), 0.25).unwrap().failed());
     }
 
     #[test]

@@ -24,7 +24,7 @@ use crate::rmq::sharded::{ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
-use crate::workload::{gen_array, gen_updates};
+use crate::workload::{gen_array, gen_updates, UpdateOp};
 use std::path::Path;
 
 /// Stable column labels for the grid's solver axis.
@@ -44,6 +44,11 @@ pub struct SmokeCfg {
     /// Updates per grid point as a fraction of the batch size; 0
     /// disables the write-path column.
     pub update_frac: f64,
+    /// Lazy range updates (`add`/`assign`, alternating) per grid point
+    /// as a fraction of the batch size; 0 disables the range column.
+    /// Measured on the sharded column only — the monolithic BVHs have
+    /// no range-update API to compare against.
+    pub range_frac: f64,
     /// Ray-packet width for the A/B column pair (`--packet-width`): when
     /// > 0 the grid grows `wide-pN` and `sharded-pN` columns running the
     /// packetized traversal drivers next to their scalar twins, so one
@@ -61,6 +66,7 @@ impl Default for SmokeCfg {
             seed: 0xBE9C,
             shard_block: ShardBlock::Sqrt,
             update_frac: 0.0,
+            range_frac: 0.0,
             packet_width: 0,
         }
     }
@@ -76,6 +82,9 @@ pub struct SmokePoint {
     pub ns_per_query: f64,
     /// Wall-clock ns per applied point update (0 when not measured).
     pub upd_ns_per_op: f64,
+    /// Wall-clock ns per applied lazy range update (0 when not
+    /// measured; sharded column only — see [`SmokeCfg::range_frac`]).
+    pub range_ns_per_op: f64,
     /// Wall-clock ms to build this solver over the n-element array
     /// (shared by every batch row of the same (n, solver) pair).
     pub build_ms: f64,
@@ -203,6 +212,7 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                         batch,
                         ns_per_query: wall_ns / batch as f64,
                         upd_ns_per_op: 0.0,
+                        range_ns_per_op: 0.0,
                         build_ms,
                         resident_bytes,
                         packet_width,
@@ -281,6 +291,43 @@ pub fn run_smoke(cfg: &SmokeCfg) -> Vec<SmokePoint> {
                     t0.elapsed().as_nanos() as f64 / count as f64;
                 sharded.update_batch_with(&rollback, cfg.workers);
             }
+
+            // Range-tag path: time a batch of lazy add/assign range ops
+            // on the sharded column (the monolithic BVHs have no range
+            // API), then restore the union span's pre-image off the
+            // clock — later grid points and the cross-column agreement
+            // check still see the original array.
+            if cfg.range_frac > 0.0 {
+                let count = ((batch as f64 * cfg.range_frac) as usize).max(1);
+                let ops: Vec<UpdateOp> = (0..count)
+                    .map(|k| {
+                        let l = rng.range(0, n - 1);
+                        let r = rng.range(l, n - 1);
+                        if k % 2 == 0 {
+                            UpdateOp::RangeAdd { l, r, v: rng.f32() - 0.5 }
+                        } else {
+                            UpdateOp::RangeAssign { l, r, v: rng.f32() }
+                        }
+                    })
+                    .collect();
+                let (mut lo, mut hi) = (n - 1, 0usize);
+                for op in &ops {
+                    if let UpdateOp::RangeAdd { l, r, .. }
+                    | UpdateOp::RangeAssign { l, r, .. } = *op
+                    {
+                        lo = lo.min(l);
+                        hi = hi.max(r);
+                    }
+                }
+                let pre: Vec<(usize, f32)> = (lo..=hi).map(|i| (i, xs[i])).collect();
+                let packet_rows = if packet_labels.is_some() { 2 } else { 0 };
+                let base = points.len() - (rtx.len() + 1 + packet_rows);
+                let t0 = std::time::Instant::now();
+                sharded.apply_update_ops(&ops, cfg.workers);
+                points[base + rtx.len()].range_ns_per_op =
+                    t0.elapsed().as_nanos() as f64 / count as f64;
+                sharded.update_batch_with(&pre, cfg.workers);
+            }
         }
     }
     points
@@ -338,6 +385,7 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
                 ("batch", Json::from(p.batch)),
                 ("ns_per_query", Json::from(p.ns_per_query)),
                 ("upd_ns_per_op", Json::from(p.upd_ns_per_op)),
+                ("range_ns_per_op", Json::from(p.range_ns_per_op)),
                 ("build_ms", Json::from(p.build_ms)),
                 ("resident_bytes", Json::from(p.resident_bytes)),
                 ("packet_width", Json::from(p.packet_width)),
@@ -369,6 +417,7 @@ pub fn to_json(cfg: &SmokeCfg, points: &[SmokePoint]) -> Json {
         ("seed", Json::from(cfg.seed)),
         ("workers", Json::from(cfg.workers)),
         ("update_frac", Json::from(cfg.update_frac)),
+        ("range_frac", Json::from(cfg.range_frac)),
         ("packet_width", Json::from(cfg.packet_width)),
         ("points", Json::Arr(point_rows)),
         ("speedups", Json::Arr(speedup_rows)),
@@ -383,8 +432,8 @@ pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
         "seed `{:#x}`, {} workers, update fraction {}\n\n",
         cfg.seed, cfg.workers, cfg.update_frac
     ));
-    s.push_str("| solver | n | batch | ns/query | ns/update | fetches/query | build ms | resident MiB | speedup vs binary |\n");
-    s.push_str("|---|---:|---:|---:|---:|---:|---:|---:|---:|\n");
+    s.push_str("| solver | n | batch | ns/query | ns/update | ns/range | fetches/query | build ms | resident MiB | speedup vs binary |\n");
+    s.push_str("|---|---:|---:|---:|---:|---:|---:|---:|---:|---:|\n");
     let sp = speedups(points);
     for p in points {
         let speedup = if p.layout == LABEL_BINARY {
@@ -399,13 +448,19 @@ pub fn summary_md(cfg: &SmokeCfg, points: &[SmokePoint]) -> String {
         } else {
             "-".to_string()
         };
+        let range = if p.range_ns_per_op > 0.0 {
+            format!("{:.1}", p.range_ns_per_op)
+        } else {
+            "-".to_string()
+        };
         s.push_str(&format!(
-            "| {} | {} | {} | {:.1} | {} | {:.1} | {:.2} | {:.2} | {} |\n",
+            "| {} | {} | {} | {:.1} | {} | {} | {:.1} | {:.2} | {:.2} | {} |\n",
             p.layout,
             p.n,
             p.batch,
             p.ns_per_query,
             upd,
+            range,
             p.node_fetches_per_query(),
             p.build_ms,
             p.resident_bytes as f64 / (1 << 20) as f64,
@@ -446,6 +501,7 @@ mod tests {
             seed: 7,
             shard_block: ShardBlock::Fixed(32),
             update_frac: 0.0,
+            range_frac: 0.0,
             packet_width: 0,
         };
         let points = run_smoke(&cfg);
@@ -508,6 +564,7 @@ mod tests {
             seed: 9,
             shard_block: ShardBlock::Fixed(32),
             update_frac: 0.25,
+            range_frac: 0.0,
             packet_width: 0,
         };
         // Two identical batch sizes: the rollback must restore the array
@@ -532,6 +589,41 @@ mod tests {
     }
 
     #[test]
+    fn range_frac_measures_the_tag_path_on_the_sharded_column_only() {
+        let cfg = SmokeCfg {
+            ns: vec![512],
+            batches: vec![128, 128],
+            workers: 2,
+            seed: 13,
+            shard_block: ShardBlock::Fixed(32),
+            update_frac: 0.0,
+            range_frac: 0.1,
+            packet_width: 0,
+        };
+        // Two identical batch sizes: the pre-image rollback must restore
+        // the array so the second grid point's cross-column agreement
+        // check (inside run_smoke) still passes after range tags landed.
+        let points = run_smoke(&cfg);
+        assert_eq!(points.len(), 6);
+        for p in &points {
+            if p.layout == LABEL_SHARDED {
+                assert!(p.range_ns_per_op > 0.0, "sharded column measures ranges");
+            } else {
+                assert_eq!(p.range_ns_per_op, 0.0, "{} has no range API", p.layout);
+            }
+        }
+        let json = to_json(&cfg, &points);
+        assert_eq!(json.get("range_frac").and_then(|v| v.as_f64()), Some(0.1));
+        let rows = json.get("points").and_then(|p| p.as_arr()).unwrap();
+        assert!(rows.iter().any(|r| {
+            r.get("layout").and_then(|l| l.as_str()) == Some(LABEL_SHARDED)
+                && r.get("range_ns_per_op").and_then(|v| v.as_f64()).unwrap() > 0.0
+        }));
+        let md = summary_md(&cfg, &points);
+        assert!(md.contains("ns/range"), "{md}");
+    }
+
+    #[test]
     fn speedups_skip_points_without_a_binary_baseline() {
         let mk = |layout, n, batch, ns| SmokePoint {
             layout,
@@ -539,6 +631,7 @@ mod tests {
             batch,
             ns_per_query: ns,
             upd_ns_per_op: 0.0,
+            range_ns_per_op: 0.0,
             build_ms: 1.0,
             resident_bytes: 64,
             packet_width: 0,
@@ -582,6 +675,7 @@ mod tests {
             seed: 11,
             shard_block: ShardBlock::Fixed(32),
             update_frac: 0.0,
+            range_frac: 0.0,
             packet_width,
         };
         let scalar = run_smoke(&mk_cfg(0));

@@ -54,9 +54,31 @@
 //! shared shape is immutable, so there is no tree to rebuild. A value
 //! below the instance's `v_lo` lowers `v_lo` in place — every stored
 //! `qval` then dequantizes *lower*, which keeps the lower-bound
-//! invariant (bounds get looser, never wrong). Multi-point batches
-//! requantize the whole table ([`InstancedBlock::rebuild_values`],
-//! `O(len)` — still no node construction).
+//! invariant (bounds get looser, never wrong) — and when the live
+//! minimum later rises far above the floor, the refit re-derives the
+//! transform so the 16-bit resolution isn't spent on dead headroom
+//! below the array. Multi-point batches requantize the whole table
+//! ([`InstancedBlock::rebuild_values`], `O(len)` — still no node
+//! construction).
+//!
+//! # Range tags: updates without even a requantize
+//!
+//! Because a block's values enter traversal only through the affine
+//! transform `v_lo + q·scale`, a range update that covers the *whole*
+//! block never needs to touch `qval` or `node_qmin`:
+//!
+//! - `add v` ([`InstancedBlock::apply_add`]) shifts `v_lo` — every
+//!   stored bound translates rigidly with the values (the paper's
+//!   geometry picture: the block's triangles slide together). A short
+//!   safety sweep then walks `v_lo` down by the few ulps that f32
+//!   reassociation (`fl(v_lo + v) + q·scale` vs `fl(xs[p] + v)`) can
+//!   overshoot, so the lower-bound invariant survives exactly.
+//! - `assign v` ([`InstancedBlock::apply_assign`]) collapses the
+//!   transform to the constant block `scale = 0, v_lo = v`: every
+//!   record dequantizes to `v` and the tables are untouched — O(1).
+//!
+//! Neither path reconstructs a node or rewrites a leaf record; the
+//! sharded engine counts these as `tag_hits`.
 
 use super::traverse::Counters;
 use std::sync::Arc;
@@ -346,17 +368,86 @@ impl InstancedBlock {
         }
     }
 
+    /// Full-block `add` tag: shift `v_lo` with the values instead of
+    /// requantizing. `xs` is the block's value slice *after* the add has
+    /// been applied elementwise. `qval`/`node_qmin` are untouched — the
+    /// whole bound structure translates rigidly — but f32 reassociation
+    /// can leave `fl(v_lo + v) + q·scale` a few ulps above
+    /// `fl(xs[p] + v)`, so a sweep walks `v_lo` down until every stored
+    /// record is a lower bound again (reads only; no table writes).
+    pub fn apply_add(&mut self, xs: &[f32], v: f32) {
+        assert_eq!(xs.len(), self.shape.len);
+        self.v_lo += v;
+        for _ in 0..4 {
+            let mut excess = 0.0f32;
+            for (p, &x) in xs.iter().enumerate() {
+                let d = self.dequant(self.qval[p]) - x;
+                if d > excess {
+                    excess = d;
+                }
+            }
+            if excess <= 0.0 {
+                return;
+            }
+            // Pad by a few ulps of the working magnitude so the
+            // subtraction cannot round back to the old v_lo.
+            self.v_lo -= excess + (self.v_lo.abs() + excess) * f32::EPSILON * 4.0;
+        }
+        // Pathological rounding (shouldn't happen with the pad, but a
+        // wrong bound would corrupt answers): requantize exactly.
+        self.rebuild_values(xs);
+    }
+
+    /// Full-block `assign` tag: collapse to the constant block
+    /// `scale = 0, v_lo = v` — every record dequantizes to exactly `v`,
+    /// and neither `qval` nor `node_qmin` is touched (their internal
+    /// consistency is what [`validate`](Self::validate) checks, and a
+    /// constant transform keeps every stored bound ≤ the live value).
+    /// Truly O(1).
+    pub fn apply_assign(&mut self, v: f32) {
+        self.v_lo = v;
+        self.scale = 0.0;
+    }
+
     /// Point update: one leaf-table write plus a leaf-to-root lane-min
     /// walk — `O(leaf + 4·depth)`, no node construction. A value below
     /// the current `v_lo` lowers `v_lo` (all stored bounds shift down
     /// together — looser, never wrong); a value above the build-time
     /// `v_hi` clamps to the top bucket (still a lower bound).
-    pub fn refit_point(&mut self, pos: usize, v: f32) {
+    ///
+    /// `xs` is the block's exact value slice with this write already
+    /// applied. The fast path only ever *lowers* the floor, so after
+    /// values rise back up new writes land deep in the top buckets with
+    /// most of the 16-bit resolution wasted on empty space below the
+    /// array; when this write's quantization error exceeds a quarter of
+    /// the representable span (or the transform is degenerate for a
+    /// differing value), the refit re-derives the transform from `xs`
+    /// instead of quantizing against the stale grid.
+    pub fn refit_point(&mut self, pos: usize, v: f32, xs: &[f32]) {
         assert!(pos < self.shape.len);
+        debug_assert_eq!(xs.len(), self.shape.len);
+        if self.scale <= 0.0 && v != self.v_lo {
+            // All-equal build or an assign collapse: zero resolution to
+            // quantize a differing value into.
+            self.rebuild_values(xs);
+            return;
+        }
         if v < self.v_lo {
             self.v_lo = v;
         }
-        self.qval[pos] = quantize(v, self.v_lo, self.scale);
+        let q = quantize(v, self.v_lo, self.scale);
+        // Floor re-tightening: against a stale (over-lowered) floor the
+        // new value lands in the top buckets with a quantization error
+        // of many buckets — the screen bound goes useless-loose. When
+        // the write's error exceeds a quarter of the representable
+        // span, re-derive the transform from the exact values (O(len),
+        // still no node construction) instead of quantizing against
+        // the stale grid.
+        if v - (self.v_lo + q as f32 * self.scale) > 16384.0 * self.scale {
+            self.rebuild_values(xs);
+            return;
+        }
+        self.qval[pos] = q;
         let mut node = self.shape.node_of_pos[pos] as usize;
         let lane = self.shape.lane_of_pos[pos] as usize;
         let nd = &self.shape.nodes[node];
@@ -793,7 +884,7 @@ mod tests {
                     _ => xs[pos] + 0.25,
                 };
                 xs[pos] = v;
-                inst.refit_point(pos, v);
+                inst.refit_point(pos, v, &xs);
                 inst.validate(&xs).unwrap();
                 let fresh = InstancedBlock::build(&xs, shape.clone());
                 let mut c = Counters::default();
@@ -835,6 +926,119 @@ mod tests {
         inst.validate(&xs).unwrap();
         assert_eq!(inst.probe(&xs, 0, 39, &mut c), 0);
         assert_eq!(inst.memory_bytes(), 40 * 2 + inst.node_qmin.len() * 8);
+    }
+
+    #[test]
+    fn add_tag_shifts_bounds_without_touching_tables() {
+        let mut rng = Rng::new(61);
+        let mut set = ShapeSet::default();
+        for &len in &[1usize, 7, 16, 48, 130] {
+            let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+            // Tie-heavy values so bucket collisions ride through shifts.
+            let mut xs: Vec<f32> = (0..len).map(|_| (rng.f32() * 6.0).floor() / 2.0).collect();
+            let mut inst = InstancedBlock::build(&xs, shape.clone());
+            let qval_before = inst.qval.clone();
+            let qmin_before = inst.node_qmin.clone();
+            let mut c = Counters::default();
+            for &v in &[0.5f32, -1.25, 1e-3, -0.37, 2.0] {
+                for x in xs.iter_mut() {
+                    *x += v; // the oracle's elementwise f32 add
+                }
+                inst.apply_add(&xs, v);
+                inst.validate(&xs).unwrap();
+                for l in 0..len {
+                    for r in l..len {
+                        assert_eq!(
+                            inst.probe(&xs, l, r, &mut c),
+                            naive(&xs, l, r),
+                            "len={len} v={v} ({l},{r})"
+                        );
+                    }
+                }
+            }
+            // The whole point of the tag: the tables were never written.
+            assert_eq!(inst.qval, qval_before, "len={len}: qval rewritten by add tag");
+            assert_eq!(inst.node_qmin, qmin_before, "len={len}: node_qmin rewritten");
+        }
+    }
+
+    #[test]
+    fn assign_tag_collapses_to_a_constant_block() {
+        let mut rng = Rng::new(67);
+        let mut set = ShapeSet::default();
+        let len = 48;
+        let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+        let mut xs: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+        let mut inst = InstancedBlock::build(&xs, shape.clone());
+        let qval_before = inst.qval.clone();
+        xs.iter_mut().for_each(|x| *x = -2.5);
+        inst.apply_assign(-2.5);
+        inst.validate(&xs).unwrap();
+        assert_eq!(inst.scale, 0.0);
+        assert_eq!(inst.qval, qval_before, "assign tag must not rewrite the leaf table");
+        let mut c = Counters::default();
+        for l in 0..len {
+            for r in l..len {
+                assert_eq!(inst.probe(&xs, l, r, &mut c), l, "leftmost of all-equal");
+            }
+        }
+        // assign-then-add composition: the constant block shifts rigidly.
+        xs.iter_mut().for_each(|x| *x += 0.75);
+        inst.apply_add(&xs, 0.75);
+        inst.validate(&xs).unwrap();
+        assert_eq!(inst.probe(&xs, 0, len - 1, &mut c), 0);
+        // A later point refit on the degenerate transform re-derives it.
+        xs[10] = -9.0;
+        inst.refit_point(10, -9.0, &xs);
+        inst.validate(&xs).unwrap();
+        assert!(inst.scale > 0.0, "refit re-derived the transform");
+        for l in 0..len {
+            for r in l..len {
+                assert_eq!(inst.probe(&xs, l, r, &mut c), naive(&xs, l, r));
+            }
+        }
+    }
+
+    #[test]
+    fn refit_retightens_a_stale_floor() {
+        // Regression: lower an element far below the block, raise it
+        // back, repeat. The old refit only ever lowered v_lo, so after
+        // a few cycles every live value quantized into the top slice of
+        // the bucket grid and resolution was effectively lost. The
+        // refit must re-derive the floor once the dead headroom
+        // dominates.
+        let mut rng = Rng::new(71);
+        let mut set = ShapeSet::default();
+        let len = 64;
+        let shape = set.ensure(len, SHAPE_LEAF_SIZE);
+        let mut xs: Vec<f32> = (0..len).map(|_| rng.f32()).collect();
+        let mut inst = InstancedBlock::build(&xs, shape.clone());
+        let mut c = Counters::default();
+        for cycle in 0..6 {
+            let dip = -100.0 * (cycle + 1) as f32;
+            xs[3] = dip;
+            inst.refit_point(3, dip, &xs);
+            inst.validate(&xs).unwrap();
+            let raised = rng.f32();
+            xs[3] = raised;
+            inst.refit_point(3, raised, &xs);
+            inst.validate(&xs).unwrap();
+            for _ in 0..16 {
+                let l = rng.range(0, len - 1);
+                let r = rng.range(l, len - 1);
+                assert_eq!(inst.probe(&xs, l, r, &mut c), naive(&xs, l, r));
+            }
+        }
+        // After the last raise the floor must sit near the live values
+        // again, not at cycle 6's -600: with the re-tighten, at least
+        // three quarters of the span covers the live range.
+        let live_min = xs.iter().cloned().fold(f32::INFINITY, f32::min);
+        let span = 65535.0 * inst.scale;
+        assert!(
+            live_min - inst.v_lo <= span * 0.25 + f32::EPSILON,
+            "stale floor: v_lo={} live_min={live_min} span={span}",
+            inst.v_lo
+        );
     }
 
     #[test]

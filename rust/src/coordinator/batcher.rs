@@ -4,8 +4,9 @@
 //!
 //! Semantics: requests are grouped FIFO; a group closes when it reaches
 //! `max_batch_queries` ops or `max_wait` elapses after its first
-//! request. A request carries an ordered *op stream* (queries and point
-//! updates); the fused batch flattens the streams in arrival order into
+//! request. A request carries an ordered *op stream* (queries, point
+//! updates and range `add`/`assign` tags — every mutation kind fences
+//! identically); the fused batch flattens the streams in arrival order into
 //! [`Segment`]s — maximal same-kind runs. Query segments keep request
 //! order, so answers can be split back losslessly; an update segment is
 //! a **fence**: the server applies it between the neighbouring query
@@ -23,7 +24,7 @@
 
 use crate::rmq::Query;
 use crate::util::faults;
-use crate::workload::Op;
+use crate::workload::{Op, UpdateOp};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender};
 use std::time::{Duration, Instant};
@@ -44,7 +45,9 @@ pub fn is_interactive(ops: &[Op], ceiling: f64) -> bool {
     let mut count = 0u64;
     for op in ops {
         match op {
-            Op::Update { .. } => return false,
+            // Anything that mutates — point writes and range tags alike —
+            // demotes the request to bulk.
+            Op::Update { .. } | Op::RangeAdd { .. } | Op::RangeAssign { .. } => return false,
             Op::Query((l, r)) => {
                 total += u64::from(*r) - u64::from(*l) + 1;
                 count += 1;
@@ -154,7 +157,10 @@ impl Default for BatcherCfg {
 #[derive(Clone, Debug)]
 pub enum Segment {
     Queries(Vec<Query>),
-    Updates(Vec<(usize, f32)>),
+    /// A fenced run of mutations in stream order: point writes and
+    /// range `add`/`assign` tags alike — the fence semantics are
+    /// identical, only the engine-side application differs.
+    Updates(Vec<UpdateOp>),
 }
 
 /// A closed group of requests to run as one fused batch.
@@ -194,21 +200,27 @@ impl FusedBatch {
         for r in &requests {
             let (mut nq, mut nu) = (0usize, 0usize);
             for op in &r.ops {
-                match *op {
+                let up = match *op {
                     Op::Query(q) => {
                         nq += 1;
                         match segments.last_mut() {
                             Some(Segment::Queries(qs)) => qs.push(q),
                             _ => segments.push(Segment::Queries(vec![q])),
                         }
+                        continue;
                     }
-                    Op::Update { i, v } => {
-                        nu += 1;
-                        match segments.last_mut() {
-                            Some(Segment::Updates(us)) => us.push((i as usize, v)),
-                            _ => segments.push(Segment::Updates(vec![(i as usize, v)])),
-                        }
+                    Op::Update { i, v } => UpdateOp::Point { i: i as usize, v },
+                    Op::RangeAdd { l, r, v } => {
+                        UpdateOp::RangeAdd { l: l as usize, r: r as usize, v }
                     }
+                    Op::RangeAssign { l, r, v } => {
+                        UpdateOp::RangeAssign { l: l as usize, r: r as usize, v }
+                    }
+                };
+                nu += 1;
+                match segments.last_mut() {
+                    Some(Segment::Updates(us)) => us.push(up),
+                    _ => segments.push(Segment::Updates(vec![up])),
                 }
             }
             query_splits.push(nq);
@@ -328,6 +340,11 @@ mod tests {
         // A single update anywhere demotes the whole request.
         let upd = vec![Op::Query((0, 1)), Op::Update { i: 2, v: 0.5 }];
         assert!(!is_interactive(&upd, 16.0));
+        // Range mutations demote just like point writes.
+        let radd = vec![Op::Query((0, 1)), Op::RangeAdd { l: 0, r: 3, v: 0.5 }];
+        assert!(!is_interactive(&radd, 16.0));
+        let rasn = vec![Op::RangeAssign { l: 0, r: 3, v: 0.5 }];
+        assert!(!is_interactive(&rasn, 16.0));
         // Empty requests carry no latency claim.
         assert!(!is_interactive(&[], 16.0));
         // Mean is what matters, not the max: one wide query amortized
@@ -361,15 +378,16 @@ mod tests {
             vec![
                 Op::Query((0, 1)),
                 Op::Update { i: 3, v: 0.5 },
-                Op::Update { i: 4, v: 0.25 },
+                Op::RangeAdd { l: 2, r: 6, v: 0.25 },
                 Op::Query((2, 3)),
             ],
         );
-        let (r2, _k2) = mixed(2, vec![Op::Query((4, 5)), Op::Update { i: 0, v: 0.1 }]);
+        let (r2, _k2) = mixed(2, vec![Op::Query((4, 5)), Op::RangeAssign { l: 0, r: 2, v: 0.1 }]);
         let fused = FusedBatch::from_requests(vec![r1, r2], Instant::now());
         // q | uu | q q | u — the trailing query run merges across the
         // request boundary (r2 arrived later, so seeing r1's updates is
-        // exactly arrival-order consistency).
+        // exactly arrival-order consistency). Range ops join the same
+        // fenced runs as point writes, in stream order.
         assert_eq!(fused.segments.len(), 4);
         match (&fused.segments[0], &fused.segments[1], &fused.segments[2], &fused.segments[3]) {
             (
@@ -379,9 +397,15 @@ mod tests {
                 Segment::Updates(u2),
             ) => {
                 assert_eq!(a, &vec![(0, 1)]);
-                assert_eq!(u1, &vec![(3, 0.5), (4, 0.25)]);
+                assert_eq!(
+                    u1,
+                    &vec![
+                        UpdateOp::Point { i: 3, v: 0.5 },
+                        UpdateOp::RangeAdd { l: 2, r: 6, v: 0.25 },
+                    ]
+                );
                 assert_eq!(b, &vec![(2, 3), (4, 5)]);
-                assert_eq!(u2, &vec![(0, 0.1)]);
+                assert_eq!(u2, &vec![UpdateOp::RangeAssign { l: 0, r: 2, v: 0.1 }]);
             }
             s => panic!("unexpected segment shape {s:?}"),
         }
@@ -539,7 +563,11 @@ mod tests {
                 let mut answers = Vec::new();
                 for k in 0..on {
                     if rng.f64() < 0.3 {
-                        ops.push(Op::Update { i: k as u32, v: 0.5 });
+                        ops.push(match rng.range(0, 2) {
+                            0 => Op::Update { i: k as u32, v: 0.5 },
+                            1 => Op::RangeAdd { l: k as u32, r: k as u32 + 4, v: 0.5 },
+                            _ => Op::RangeAssign { l: k as u32, r: k as u32 + 4, v: 0.5 },
+                        });
                     } else {
                         ops.push(Op::Query((k as u32, k as u32 + 1)));
                         counter += 1;

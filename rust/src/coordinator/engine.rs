@@ -37,13 +37,13 @@ use crate::rmq::exhaustive::Exhaustive;
 use crate::rmq::hrmq::Hrmq;
 use crate::rmq::lca::LcaRmq;
 use crate::rmq::rtx::RtxRmq;
-use crate::rmq::sharded::{PreparedBlockUpdate, ShardedOptions, ShardedRmq};
+use crate::rmq::sharded::{PreparedBlockUpdate, RangeStats, ShardedOptions, ShardedRmq};
 use crate::rmq::{Query, RmqSolver};
 use crate::runtime::Runtime;
 use crate::util::faults;
 use crate::util::sync::{Mutex, RwLock};
 use crate::workload::observer::WorkloadObserver;
-use crate::workload::RangeDist;
+use crate::workload::{RangeDist, UpdateOp};
 use anyhow::{anyhow, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -224,10 +224,19 @@ impl ShardedEngine {
     }
 
     /// Consistent (values, applied-seq) snapshot — the rebuild source
-    /// for background static-engine builds.
+    /// for background static-engine builds. Range tags need no special
+    /// handling here: the lazy paths rewrite the value array eagerly
+    /// (only the *structures* are lazy), so `values()` is always the
+    /// served truth.
     pub fn snapshot(&self) -> (Vec<f32>, u64) {
         let g = self.inner.read();
         (g.rmq.values().to_vec(), g.seq)
+    }
+
+    /// Lifetime range-update counters (monotone across re-shards and
+    /// recovery rebuilds — replacements adopt their predecessor's).
+    pub fn range_stats(&self) -> RangeStats {
+        self.inner.read().rmq.range_stats()
     }
 
     /// Online re-shard: build a replacement at `block_size` from a
@@ -254,11 +263,12 @@ impl ShardedEngine {
     /// Bumps the shape generation, which invalidates any update batch
     /// staged against the old decomposition (its commit falls back to
     /// the direct path).
-    pub(crate) fn install(&self, rmq: ShardedRmq, expect_seq: u64) -> bool {
+    pub(crate) fn install(&self, mut rmq: ShardedRmq, expect_seq: u64) -> bool {
         let mut g = self.inner.write();
         if g.seq != expect_seq {
             return false;
         }
+        rmq.adopt_range_stats(g.rmq.range_stats());
         g.rmq = rmq;
         g.shape_gen += 1;
         true
@@ -274,10 +284,20 @@ impl ShardedEngine {
         updates: &[(usize, f32)],
         workers: usize,
     ) -> PreparedUpdate {
+        let ops: Vec<UpdateOp> =
+            updates.iter().map(|&(i, v)| UpdateOp::Point { i, v }).collect();
+        self.prepare_update_ops(&ops, workers)
+    }
+
+    /// Ops-aware staging: pure-point segments stage per-block value
+    /// copies; a segment carrying a range op stages a pointer-sized tag
+    /// spec (the lazy-tag application at commit is cheaper than the
+    /// copy would be), fingerprint-guarded identically.
+    pub fn prepare_update_ops(&self, ops: &[UpdateOp], workers: usize) -> PreparedUpdate {
         let t0 = Instant::now();
         let (spec, seq, shape_gen) = {
             let g = self.inner.read();
-            (g.rmq.stage_update_batch(updates), g.seq, g.shape_gen)
+            (g.rmq.stage_update_ops(ops), g.seq, g.shape_gen)
         };
         let prep = spec.build(workers);
         PreparedUpdate { prep, seq, shape_gen, prep_ns: t0.elapsed().as_nanos() as u64 }
@@ -308,36 +328,69 @@ impl ShardedEngine {
                     // Fingerprint said clean but the decomposition
                     // disagrees — defensive: the direct path is always
                     // correct.
-                    apply_direct(&mut g, back.updates(), workers);
+                    let ops = back.ops().to_vec();
+                    apply_direct(&mut g, &ops, workers);
                     return CommitOutcome::FellBack;
                 }
             }
         }
-        apply_direct(&mut g, p.prep.updates(), workers);
+        let ops = p.prep.ops().to_vec();
+        apply_direct(&mut g, &ops, workers);
         CommitOutcome::FellBack
+    }
+
+    /// Direct write path for an ops segment (point and range mutations
+    /// in stream order), with the same panic backstop and seq accounting
+    /// as the tuple [`update_batch`](Engine::update_batch).
+    pub fn update_ops(&self, ops: &[UpdateOp], workers: usize) -> Result<()> {
+        let mut g = self.inner.write();
+        apply_direct(&mut g, ops, workers);
+        Ok(())
     }
 }
 
-/// Apply an update batch through the direct path with a panic backstop,
-/// bumping the seq exactly once. `update_batch_with` writes the batch's
-/// values into the array *before* any structural refit, so if it
-/// unwinds mid-refit (a bug — injected worker panics are already
-/// absorbed inside `util::pool`) the values array plus the batch is
-/// still a correct source: re-apply the values and rebuild the
-/// decomposition from scratch. The rebuild runs with `build_workers =
-/// 1` — fully inline, it cannot reach any fault-injection site, so
-/// recovery is deterministic.
-fn apply_direct(g: &mut VersionedSharded, updates: &[(usize, f32)], workers: usize) {
-    if catch_unwind(AssertUnwindSafe(|| g.rmq.update_batch_with(updates, workers))).is_err() {
+/// Apply an ops segment through the direct path with a panic backstop,
+/// bumping the seq exactly once. The apply paths write each op's values
+/// into the array *before* any structural refit, so if one unwinds
+/// mid-refit (a bug — injected worker panics are already absorbed
+/// inside `util::pool`) the pre-panic values array plus the segment is
+/// still a correct source: re-apply every op elementwise and rebuild
+/// the decomposition from scratch. The rebuild runs with `build_workers
+/// = 1` — fully inline, it cannot reach any fault-injection site, so
+/// recovery is deterministic. The replacement adopts the lifetime range
+/// counters so the metrics stay monotone across the swap.
+///
+/// Point writes replay as idempotent assigns, but an interrupted range
+/// `add` is not idempotent — so the segment's range-op union span is
+/// snapshotted up front (O(span), the same order as the elementwise
+/// writes the ranges do anyway) and recovery restores it before the
+/// replay.
+fn apply_direct(g: &mut VersionedSharded, ops: &[UpdateOp], workers: usize) {
+    let mut span: Option<(usize, usize)> = None;
+    for op in ops {
+        if let UpdateOp::RangeAdd { l, r, .. } | UpdateOp::RangeAssign { l, r, .. } = *op {
+            span = Some(match span {
+                None => (l, r),
+                Some((a, b)) => (a.min(l), b.max(r)),
+            });
+        }
+    }
+    let pre: Option<Vec<f32>> = span.map(|(a, b)| g.rmq.values()[a..=b].to_vec());
+    if catch_unwind(AssertUnwindSafe(|| g.rmq.apply_update_ops(ops, workers))).is_err() {
         faults::note_caught();
         let mut vals = g.rmq.values().to_vec();
-        for &(i, v) in updates {
-            vals[i] = v;
+        if let (Some((a, _)), Some(pre)) = (span, &pre) {
+            vals[a..a + pre.len()].copy_from_slice(pre);
+        }
+        for op in ops {
+            op.apply_naive(&mut vals);
         }
         let mut opts = g.rmq.options();
         opts.build_workers = 1;
         let block_size = g.rmq.block_size();
+        let stats = g.rmq.range_stats();
         g.rmq = ShardedRmq::reshard_from(&vals, opts, block_size);
+        g.rmq.adopt_range_stats(stats);
     }
     g.seq += 1;
 }
@@ -355,13 +408,13 @@ pub struct PreparedUpdate {
 }
 
 impl PreparedUpdate {
-    /// Number of point updates in the staged batch.
+    /// Number of update ops in the staged segment.
     pub fn len(&self) -> usize {
-        self.prep.updates().len()
+        self.prep.ops().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.prep.updates().is_empty()
+        self.prep.ops().is_empty()
     }
 }
 
@@ -394,9 +447,9 @@ impl Engine for ShardedEngine {
     }
 
     fn update_batch(&self, updates: &[(usize, f32)], workers: usize) -> Result<()> {
-        let mut g = self.inner.write();
-        apply_direct(&mut g, updates, workers);
-        Ok(())
+        let ops: Vec<UpdateOp> =
+            updates.iter().map(|&(i, v)| UpdateOp::Point { i, v }).collect();
+        self.update_ops(&ops, workers)
     }
 }
 
@@ -733,12 +786,25 @@ impl EpochState {
         Ok(EngineKind::Sharded)
     }
 
+    /// Route a fenced ops segment (point + range mutations, stream
+    /// order) to the mutable engine — the range-aware twin of
+    /// [`update_batch`](Self::update_batch).
+    pub fn update_ops(&self, ops: &[UpdateOp], workers: usize) -> Result<EngineKind> {
+        self.sharded.update_ops(ops, workers)?;
+        Ok(EngineKind::Sharded)
+    }
+
+    /// Lifetime range-update counters of the mutable engine.
+    pub fn range_stats(&self) -> RangeStats {
+        self.sharded.range_stats()
+    }
+
     /// Pipelined write path, stage half: run by the serving loop's
     /// staging lane while the *preceding* query segment executes (safe:
     /// the fence only constrains later queries, and staging never
     /// mutates the live structure).
-    pub fn prepare_update(&self, updates: &[(usize, f32)], workers: usize) -> PreparedUpdate {
-        self.sharded.prepare_update_batch(updates, workers)
+    pub fn prepare_update(&self, ops: &[UpdateOp], workers: usize) -> PreparedUpdate {
+        self.sharded.prepare_update_ops(ops, workers)
     }
 
     /// Pipelined write path, commit half: runs at the fence. Seq
@@ -1112,7 +1178,9 @@ mod tests {
             LifecycleCfg::default(),
         );
         let batch = vec![(5usize, -1.0f32), (63, -0.5), (64, -0.25), (900, -2.0)];
-        let prep = state.prepare_update(&batch, 2);
+        let ops: Vec<UpdateOp> =
+            batch.iter().map(|&(i, v)| UpdateOp::Point { i, v }).collect();
+        let prep = state.prepare_update(&ops, 2);
         assert_eq!(prep.len(), 4);
         assert!(!prep.is_empty());
         assert!(prep.prep_ns > 0);
@@ -1133,6 +1201,51 @@ mod tests {
     }
 
     #[test]
+    fn range_ops_flow_and_stats_survive_reshard() {
+        let mut xs = Rng::new(83).uniform_f32_vec(1024);
+        let state = EpochState::bootstrap(
+            &xs,
+            None,
+            EngineCfg { shard_block: ShardBlock::Fixed(64), ..Default::default() },
+            LifecycleCfg::default(),
+        );
+        let ops = vec![
+            UpdateOp::RangeAdd { l: 0, r: 1023, v: 0.5 },
+            UpdateOp::Point { i: 7, v: -1.0 },
+            UpdateOp::RangeAssign { l: 100, r: 300, v: 0.25 },
+        ];
+        state.update_ops(&ops, 2).unwrap();
+        for op in &ops {
+            op.apply_naive(&mut xs);
+        }
+        assert_eq!(state.applied_seq(), 1, "one seq bump per fenced segment");
+        let stats = state.range_stats();
+        assert_eq!(stats.range_updates, 2);
+        assert!(stats.tag_hits >= 16, "full-coverage add takes the tag path: {stats:?}");
+        // A range-carrying segment stages pointer-sized and commits as
+        // tag application under the same fingerprint guard.
+        let seg = vec![UpdateOp::RangeAdd { l: 10, r: 900, v: -0.125 }];
+        let prep = state.prepare_update(&seg, 2);
+        let (_, outcome) = state.commit_prepared(prep, 2);
+        assert_eq!(outcome, CommitOutcome::Installed);
+        for op in &seg {
+            op.apply_naive(&mut xs);
+        }
+        let queries = vec![(0u32, 1023u32), (90, 310), (5, 9)];
+        let got = state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries));
+        // A re-shard swaps the structure but keeps the lifetime
+        // counters monotone (the replacement adopts them).
+        let metrics = Mutex::new(Metrics::new());
+        state.run_job(BuildJob::Reshard(16), &metrics);
+        assert_eq!(state.shard_block_live(), 16);
+        let after = state.range_stats();
+        assert!(after.range_updates >= 3 && after.tag_hits >= stats.tag_hits, "{after:?}");
+        let got = state.current().get(EngineKind::Sharded).unwrap().solve(&queries, 2).unwrap();
+        assert_eq!(got, oracle_batch(&xs, &queries));
+    }
+
+    #[test]
     fn staged_commit_falls_back_on_conflicting_write() {
         // A different update batch lands between stage and commit: the
         // prepared work is void (it was built from pre-conflict values),
@@ -1146,7 +1259,9 @@ mod tests {
             LifecycleCfg::default(),
         );
         let batch = vec![(10usize, -1.0f32), (11, 0.9)];
-        let prep = state.prepare_update(&batch, 2);
+        let ops: Vec<UpdateOp> =
+            batch.iter().map(|&(i, v)| UpdateOp::Point { i, v }).collect();
+        let prep = state.prepare_update(&ops, 2);
         // The conflict: overlaps block 0 (index 11) so the stale
         // prepared block would resurrect old values if installed.
         state.update_batch(&[(11, -3.0), (400, -2.0)], 2).unwrap();
@@ -1174,7 +1289,9 @@ mod tests {
             LifecycleCfg::default(),
         );
         let batch = vec![(100usize, -1.0f32), (2000, -0.5)];
-        let prep = state.prepare_update(&batch, 2);
+        let ops: Vec<UpdateOp> =
+            batch.iter().map(|&(i, v)| UpdateOp::Point { i, v }).collect();
+        let prep = state.prepare_update(&ops, 2);
         let metrics = Mutex::new(Metrics::new());
         state.run_job(BuildJob::Reshard(16), &metrics);
         assert_eq!(state.shard_block_live(), 16);

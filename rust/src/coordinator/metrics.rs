@@ -5,6 +5,7 @@
 //! snapshot so pure-query runs print no dead histogram lines.
 
 use super::engine::EngineKind;
+use crate::rmq::sharded::RangeStats;
 use crate::util::faults::FaultStats;
 use crate::util::stats::{fmt_ns, LatencyHistogram};
 use crate::workload::observer::ObservedWorkload;
@@ -28,6 +29,13 @@ pub struct Metrics {
     /// Write path: total point updates applied.
     pub updates: u64,
     pub update_latency: LatencyHistogram,
+    /// Write path: lazy range updates (`add`/`assign` over `[l,r]`)
+    /// applied by the sharded engine.
+    pub range_updates: u64,
+    /// Write path: fully-covered blocks that took the O(1) lazy-tag
+    /// path (instanced `v_lo` shift or constant-block collapse) instead
+    /// of a value rebuild.
+    pub tag_hits: u64,
     /// Pipeline: update segments whose refit work was staged on the
     /// overlap lane while the preceding query segment executed.
     pub staged_batches: u64,
@@ -173,6 +181,15 @@ impl Metrics {
         self.lock_recoveries = self.lock_recoveries.max(s.lock_recovered);
     }
 
+    /// Mirror the engine's cumulative range-update counters (monotone
+    /// within one engine's lifetime and adopted across installs and
+    /// re-shards, so overwrite-by-max is exact — same contract as
+    /// [`record_faults`](Self::record_faults)).
+    pub fn record_range_stats(&mut self, s: RangeStats) {
+        self.range_updates = self.range_updates.max(s.range_updates);
+        self.tag_hits = self.tag_hits.max(s.tag_hits);
+    }
+
     /// The background builder respawned its job loop after a panic.
     pub fn record_builder_respawn(&mut self) {
         self.builder_respawns += 1;
@@ -253,6 +270,8 @@ impl Metrics {
             ("total_queries", Json::Num(self.total_queries() as f64)),
             ("updates", Json::Num(self.updates as f64)),
             ("update_batches", Json::Num(self.update_batches as f64)),
+            ("range_updates", Json::Num(self.range_updates as f64)),
+            ("tag_hits", Json::Num(self.tag_hits as f64)),
             ("staged_batches", Json::Num(self.staged_batches as f64)),
             ("staged_installed", Json::Num(self.staged_installed as f64)),
             ("epoch_version", Json::Num(self.epoch_version as f64)),
@@ -355,6 +374,14 @@ impl fmt::Display for Metrics {
                 fmt_ns(self.update_latency.mean_ns()),
             )?;
         }
+        // Range-tag line only when a range update landed.
+        if self.range_updates > 0 {
+            writeln!(
+                f,
+                "  {:<10} range_updates={} tag_hits={}",
+                "ranges", self.range_updates, self.tag_hits,
+            )?;
+        }
         // Pipeline line only when the two-lane executor staged work.
         if self.staged_batches > 0 {
             writeln!(
@@ -451,6 +478,25 @@ mod tests {
         assert!(!text.contains("lifecycle"), "{text}");
         assert!(!text.contains("observed"), "{text}");
         assert!(!text.contains("pipeline"), "{text}");
+        assert!(!text.contains("ranges"), "{text}");
+    }
+
+    #[test]
+    fn range_stats_line_appears_and_merges_by_max() {
+        let mut m = Metrics::new();
+        assert!(!m.to_string().contains("ranges"), "{m}");
+        m.record_range_stats(RangeStats { range_updates: 3, tag_hits: 17 });
+        // Cumulative engine counters: a later, larger snapshot
+        // overwrites; a stale smaller one never regresses the line.
+        m.record_range_stats(RangeStats { range_updates: 2, tag_hits: 5 });
+        assert_eq!(m.range_updates, 3);
+        assert_eq!(m.tag_hits, 17);
+        let text = m.to_string();
+        assert!(text.contains("ranges"), "{text}");
+        assert!(text.contains("range_updates=3 tag_hits=17"), "{text}");
+        let j = m.summary_json();
+        assert_eq!(j.get("range_updates").unwrap().as_u64(), Some(3));
+        assert_eq!(j.get("tag_hits").unwrap().as_u64(), Some(17));
     }
 
     #[test]

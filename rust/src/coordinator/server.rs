@@ -42,7 +42,7 @@ use crate::rmq::Query;
 use crate::runtime::Runtime;
 use crate::util::faults;
 use crate::util::sync::Mutex;
-use crate::workload::{validate_ops, Op};
+use crate::workload::{validate_ops, Op, UpdateOp};
 use anyhow::{anyhow, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -120,7 +120,7 @@ impl Coordinator {
         // by a panicked batch can never commit later. A `None` result
         // means the preparation itself died — the fence falls back to
         // the direct apply path.
-        let (stage_tx, stage_rx) = sync_channel::<(u64, Vec<(usize, f32)>)>(1);
+        let (stage_tx, stage_rx) = sync_channel::<(u64, Vec<UpdateOp>)>(1);
         let (done_tx, done_rx) = sync_channel::<(u64, Option<PreparedUpdate>)>(1);
         let stage_state = state.clone();
         let stage_workers = cfg.engine_workers;
@@ -274,7 +274,7 @@ impl Coordinator {
                                     }
                                 }
                                 if applied.is_none() {
-                                    match st.update_batch(ups, workers) {
+                                    match st.update_ops(ups, workers) {
                                         Ok(kind) => applied = Some(kind),
                                         // Admission validated the indices; this
                                         // only fires when no mutable engine is
@@ -317,6 +317,7 @@ impl Coordinator {
                                 st.shard_block_live(),
                             );
                             m.lock().record_faults(faults::stats());
+                            m.lock().record_range_stats(st.range_stats());
                         }
                         if let Some(job) = st.plan() {
                             if jt.try_send(job).is_err() {
@@ -380,10 +381,11 @@ impl Coordinator {
         self.submit_mixed(queries.into_iter().map(Op::Query).collect())
     }
 
-    /// Validated blocking mixed request: queries and point updates
-    /// execute in op order with fencing — an update is visible to every
-    /// later query in the stream (and in any later request) and to no
-    /// earlier one. Returns one answer per query op, in op order.
+    /// Validated blocking mixed request: queries, point updates and
+    /// range `add`/`assign` tags execute in op order with fencing — a
+    /// mutation is visible to every later query in the stream (and in
+    /// any later request) and to no earlier one. Returns one answer per
+    /// query op, in op order.
     pub fn submit_mixed(&self, ops: Vec<Op>) -> Result<Response> {
         self.submit_mixed_deadline(ops, None)
     }
@@ -446,7 +448,7 @@ impl Coordinator {
             ops.into_iter()
                 .filter_map(|op| match op {
                     Op::Query(q) => Some(q),
-                    Op::Update { .. } => None,
+                    _ => None,
                 })
                 .collect()
         };
@@ -731,6 +733,49 @@ mod tests {
         assert!(m.overlap_ns_hidden_total > 0, "preparation overlapped query execution");
         assert!(m.to_string().contains("pipeline"), "{m}");
         drop(m);
+        c.shutdown();
+    }
+
+    #[test]
+    fn range_ops_fence_and_stage_like_point_updates() {
+        // q|u|q|u|q stream where the mutation segments are range tags:
+        // the staged lane must carry them (pointer-sized specs), the
+        // fence must commit them in op order, and the metrics must show
+        // both the staged commits and the lazy-tag counters.
+        let n = 1024usize;
+        let mut xs = Rng::new(92).uniform_f32_vec(n);
+        let c = Coordinator::start(&xs, None, CoordinatorCfg::default());
+        let ops = vec![
+            Op::Query((0, (n - 1) as u32)),
+            Op::RangeAdd { l: 0, r: (n - 1) as u32, v: 0.25 },
+            Op::Query((0, (n - 1) as u32)),
+            Op::RangeAssign { l: 100, r: 300, v: -1.0 },
+            Op::Query((0, (n - 1) as u32)),
+        ];
+        let mut want = Vec::new();
+        want.push(crate::rmq::naive_rmq(&xs, 0, n - 1) as u32);
+        for x in xs.iter_mut() {
+            *x += 0.25;
+        }
+        want.push(crate::rmq::naive_rmq(&xs, 0, n - 1) as u32);
+        for x in xs[100..=300].iter_mut() {
+            *x = -1.0;
+        }
+        want.push(crate::rmq::naive_rmq(&xs, 0, n - 1) as u32);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want);
+        assert_eq!(resp.updates_applied, 2);
+        c.sync_faults();
+        let m = c.metrics.lock();
+        assert_eq!(m.update_batches, 2);
+        assert_eq!(m.staged_batches, 2, "range fences stage like point fences");
+        assert_eq!(m.range_updates, 2);
+        assert!(m.tag_hits > 0, "covered blocks took the lazy-tag path");
+        assert!(m.to_string().contains("ranges"), "{m}");
+        drop(m);
+        // Read-back through a fresh request: tags landed in served truth.
+        let after = c.query(vec![(0, (n - 1) as u32)]).unwrap();
+        assert_eq!(after.answers, vec![crate::rmq::naive_rmq(&xs, 0, n - 1) as u32]);
         c.shutdown();
     }
 

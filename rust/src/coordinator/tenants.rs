@@ -252,7 +252,7 @@ fn serve_one(shared: &Shared, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>
                 }
                 Segment::Updates(ups) => {
                     let ts = Instant::now();
-                    match st.update_batch(ups, workers) {
+                    match st.update_ops(ups, workers) {
                         Ok(kind) => {
                             update_engine.get_or_insert(kind.name());
                             m.lock().record_update_batch(
@@ -280,6 +280,7 @@ fn serve_one(shared: &Shared, idx: usize, job_tx: &SyncSender<(usize, BuildJob)>
                 g.record_class_batch(head_class, latency);
                 g.record_observed(obs, st.epoch_version(), st.shard_block_live());
                 g.record_faults(faults::stats());
+                g.record_range_stats(st.range_stats());
             }
             // Lifecycle work goes to the shared pool, tagged with the
             // tenant index so backoff and accounting stay per tenant.
@@ -537,7 +538,7 @@ impl Drop for MultiCoordinator {
 /// `serve --tenant-specs` joins several with `;`):
 ///
 /// ```text
-/// name[,k=v]*    keys: n, dist, uf, weight, watermark, deadline-ms,
+/// name[,k=v]*    keys: n, dist, uf, rf, weight, watermark, deadline-ms,
 ///                      depth, tail, shift, requests, batch
 /// ```
 #[derive(Clone, Debug)]
@@ -566,6 +567,7 @@ impl TenantSpec {
                 n: 1 << 16,
                 dist: RangeDist::Medium,
                 update_frac: 0.1,
+                range_frac: 0.0,
                 shift: None,
             },
             weight: 1,
@@ -606,6 +608,13 @@ impl TenantSpec {
                         .ok()
                         .filter(|u| (0.0..=1.0).contains(u))
                         .ok_or_else(|| format!("bad uf={v}"))?;
+                }
+                "rf" => {
+                    spec.load.range_frac = v
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|u| (0.0..=1.0).contains(u))
+                        .ok_or_else(|| format!("bad rf={v}"))?;
                 }
                 "shift" => {
                     spec.load.shift =
@@ -681,7 +690,7 @@ mod tests {
     use super::*;
     use crate::rmq::naive_rmq;
     use crate::util::rng::Rng;
-    use crate::workload::{gen_array, gen_mixed};
+    use crate::workload::{gen_array, gen_mixed_ranged};
 
     fn mk_multi(names: &[&str], n: usize, cfg: MultiCfg) -> MultiCoordinator {
         let arrays = names
@@ -801,12 +810,24 @@ mod tests {
         let mut rng = Rng::new(7);
         for round in 0..30 {
             for (ti, name) in ["t0", "t1"].iter().enumerate() {
-                let ops = gen_mixed(n, 16, 0.3, RangeDist::Small, &mut rng);
+                // Mixed stream with range tags riding along: per-tenant
+                // fencing must hold for every mutation kind.
+                let ops = gen_mixed_ranged(n, 16, 0.2, 0.1, RangeDist::Small, &mut rng);
                 let resp = mc.submit(name, ops.clone(), None).expect("accepted");
                 let mut ai = 0;
                 for op in &ops {
                     match *op {
                         Op::Update { i, v } => oracles[ti][i as usize] = v,
+                        Op::RangeAdd { l, r, v } => {
+                            for x in oracles[ti][l as usize..=r as usize].iter_mut() {
+                                *x += v;
+                            }
+                        }
+                        Op::RangeAssign { l, r, v } => {
+                            for x in oracles[ti][l as usize..=r as usize].iter_mut() {
+                                *x = v;
+                            }
+                        }
                         Op::Query((l, r)) => {
                             let want = naive_rmq(&oracles[ti], l as usize, r as usize) as u32;
                             assert_eq!(
@@ -943,13 +964,14 @@ mod tests {
     #[test]
     fn tenant_spec_parses_grammar_and_rejects_junk() {
         let spec = TenantSpec::parse(
-            "bulk,n=64k,dist=large,uf=0.5,weight=2,watermark=4,deadline-ms=250,depth=8,tail=3,shift=small,requests=1k,batch=32",
+            "bulk,n=64k,dist=large,uf=0.5,rf=0.1,weight=2,watermark=4,deadline-ms=250,depth=8,tail=3,shift=small,requests=1k,batch=32",
         )
         .unwrap();
         assert_eq!(spec.load.name, "bulk");
         assert_eq!(spec.load.n, 64 * 1024);
         assert_eq!(spec.load.dist, RangeDist::Large);
         assert_eq!(spec.load.update_frac, 0.5);
+        assert_eq!(spec.load.range_frac, 0.1);
         assert_eq!(spec.load.shift, Some(RangeDist::Small));
         assert_eq!(spec.weight, 2);
         assert_eq!(spec.watermark, Some(4));
@@ -967,6 +989,7 @@ mod tests {
         assert!(TenantSpec::parse("").is_err());
         assert!(TenantSpec::parse("k=v").is_err(), "name must come first");
         assert!(TenantSpec::parse("t,uf=1.5").is_err());
+        assert!(TenantSpec::parse("t,rf=-0.1").is_err());
         assert!(TenantSpec::parse("t,weight=0").is_err());
         assert!(TenantSpec::parse("t,nope=1").is_err());
         assert!(TenantSpec::parse_list("a;b;a").is_err(), "duplicate names");

@@ -23,7 +23,7 @@ use rtxrmq::util::json::Json;
 use rtxrmq::util::manifest::{self, ManifestBuilder};
 use rtxrmq::util::rng::Rng;
 use rtxrmq::util::stats::fmt_mb;
-use rtxrmq::workload::{gen_array, gen_mixed, gen_queries, Op, RangeDist};
+use rtxrmq::workload::{gen_array, gen_mixed_ranged, gen_queries, Op, RangeDist};
 use std::collections::VecDeque;
 use std::path::Path;
 use std::sync::mpsc::Receiver;
@@ -66,8 +66,9 @@ fn print_help() {
             .opt("n", "array size (default 2^16)")
             .opt("requests", "number of requests (default 128)")
             .opt("batch", "ops per request (default 1024)")
-            .opt("mixed", "serve a mixed query+update op stream (gen_mixed)")
-            .opt("update-frac", "update fraction of the mixed stream (default 0.1)")
+            .opt("mixed", "serve a mixed query+update op stream (gen_mixed_ranged)")
+            .opt("update-frac", "point-update fraction of the mixed stream (default 0.1)")
+            .opt("range-frac", "range add/assign fraction of the mixed stream (default 0)")
             .opt("dist", "range distribution of the mixed stream (default small)")
             .opt("shard-block", "block size or 'auto' = workload-fed tuner (default √n)")
             .opt("rebuild", "epoch lifecycle: auto = background rebuild/re-shard, off (default auto)")
@@ -82,7 +83,7 @@ fn print_help() {
             .opt("deadline-ms", "per-request deadline; expired requests are dropped whole (0 = off)")
             .opt("shed-watermark", "queue depth past which admission sheds Overloaded (default 256)")
             .opt("tenants", "multi-tenant mode: serve N default tenants t0..tN-1")
-            .opt("tenant-specs", "multi-tenant mode: 'name,k=v,..;name2,..' — keys n dist uf shift weight watermark deadline-ms depth tail requests batch")
+            .opt("tenant-specs", "multi-tenant mode: 'name,k=v,..;name2,..' — keys n dist uf rf shift weight watermark deadline-ms depth tail requests batch")
             .opt("global-watermark", "multi-tenant: aggregate queued-request shed cap (default 1024)")
             .opt("exec-workers", "multi-tenant: executor worker threads (default 2)")
             .opt("packet-width", "rays per traversal packet, 0 = scalar (default 0; A/B knob)")
@@ -96,6 +97,7 @@ fn print_help() {
             .opt("shard-block", "sharded column block size, or 'auto' (default √n)")
             .opt("dist", "expected range dist fed to the 'auto' tuner (default small)")
             .opt("update-frac", "also time updates: batch×frac points per grid cell (default 0)")
+            .opt("range-frac", "also time lazy range updates: batch×frac range ops per sharded cell (default 0)")
             .opt("packet-width", "add a wide-pN/sharded-pN packet column pair (0 = off)")
             .opt("summary-md", "append a markdown summary table to this file")
             .opt("out", "output JSON path (default BENCH_rmq.json)")
@@ -184,6 +186,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let batch: usize = args.get_or("batch", 1024usize).unwrap();
     let mixed = args.flag("mixed");
     let update_frac: f64 = args.get_or("update-frac", 0.1f64).unwrap();
+    let range_frac: f64 = args.get_or("range-frac", 0.0f64).unwrap();
     let dist = RangeDist::parse(&args.str_or("dist", "small")).unwrap_or(RangeDist::Small);
     let rebuild = RebuildMode::parse(&args.str_or("rebuild", "auto")).unwrap_or_else(|| {
         eprintln!("invalid --rebuild (expected auto|off)");
@@ -258,7 +261,7 @@ fn cmd_serve(args: &Args) -> i32 {
                 Some(sd) if r >= requests / 2 => sd,
                 _ => dist,
             };
-            let ops = gen_mixed(n, batch, update_frac, d, &mut rng);
+            let ops = gen_mixed_ranged(n, batch, update_frac, range_frac, d, &mut rng);
             // A rejected request — shed at admission, expired deadline,
             // or dropped whole by an injected hand-off fault — executed
             // none of its ops, so the rolling oracle skips it entirely.
@@ -285,6 +288,16 @@ fn cmd_serve(args: &Args) -> i32 {
                         k += 1;
                     }
                     Op::Update { i, v } => oracle[i as usize] = v,
+                    Op::RangeAdd { l, r, v } => {
+                        for x in oracle[l as usize..=r as usize].iter_mut() {
+                            *x += v;
+                        }
+                    }
+                    Op::RangeAssign { l, r, v } => {
+                        for x in oracle[l as usize..=r as usize].iter_mut() {
+                            *x = v;
+                        }
+                    }
                 }
             }
         }
@@ -470,6 +483,16 @@ fn check_response(
                 k += 1;
             }
             Op::Update { i, v } => oracle[i as usize] = v,
+            Op::RangeAdd { l, r, v } => {
+                for x in oracle[l as usize..=r as usize].iter_mut() {
+                    *x += v;
+                }
+            }
+            Op::RangeAssign { l, r, v } => {
+                for x in oracle[l as usize..=r as usize].iter_mut() {
+                    *x = v;
+                }
+            }
         }
     }
 }
@@ -765,6 +788,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
     };
     let defaults = SmokeCfg::default();
     let update_frac: f64 = args.get_or("update-frac", defaults.update_frac).unwrap();
+    let range_frac: f64 = args.get_or("range-frac", defaults.range_frac).unwrap();
     let dist = RangeDist::parse(&args.str_or("dist", "small")).unwrap_or(RangeDist::Small);
     let cfg = SmokeCfg {
         ns: args.list_or("ns", &defaults.ns).unwrap(),
@@ -773,6 +797,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
         seed: args.get_or("seed", defaults.seed).unwrap(),
         shard_block: shard_block_arg(args, dist, update_frac),
         update_frac,
+        range_frac,
         packet_width: args.get_or("packet-width", defaults.packet_width).unwrap(),
     };
     let out = args.str_or("out", "BENCH_rmq.json");
@@ -785,6 +810,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             p.batch.to_string(),
             format!("{:.1}", p.ns_per_query),
             if p.upd_ns_per_op > 0.0 { format!("{:.1}", p.upd_ns_per_op) } else { "-".into() },
+            if p.range_ns_per_op > 0.0 { format!("{:.1}", p.range_ns_per_op) } else { "-".into() },
             format!("{:.2}", p.build_ms),
             fmt_mb(p.resident_bytes as u64),
             p.counters.nodes_visited.to_string(),
@@ -800,6 +826,7 @@ fn cmd_bench_smoke(args: &Args) -> i32 {
             "batch",
             "ns/query",
             "ns/update",
+            "ns/range",
             "build_ms",
             "resident",
             "nodes_visited",

@@ -208,6 +208,29 @@ impl RtCostModel {
         self.c_inst * (touched * per_block + summary) / k
     }
 
+    /// Modeled work of one lazy range update (`add`/`assign`) over a
+    /// span of `range_len` elements at block size `bs` ("Lazy range
+    /// tags", `rmq/mod.rs`). Fully-covered blocks absorb the op as a
+    /// per-block tag — an instanced `v_lo` shift or constant-block
+    /// collapse, one bound write each, charged `c_aabb` — while the ≤2
+    /// partial boundary blocks pay a full Θ(B) value refit. The summary
+    /// refit is the single-minimum path route (Θ(log n/B)) when only
+    /// boundary blocks can move, the full Θ(n/B) sweep once covered
+    /// blocks shift too. Everything carries the same
+    /// [`c_inst`](Self::c_inst) discount as the point write path: tags
+    /// are leaf-table bound rewrites, never tree builds.
+    pub fn range_update_work(&self, n: usize, bs: usize, range_len: f64) -> f64 {
+        let b = (bs.max(1)) as f64;
+        let nb = ((n.max(1)) as f64 / b).max(1.0);
+        let m = range_len.max(1.0).min(n.max(1) as f64);
+        let span = (1.0 + (m - 1.0) / b).min(nb);
+        let boundary = span.min(2.0);
+        let covered = (span - boundary).max(0.0);
+        let summary =
+            if covered > 0.0 { nb } else { self.path_refit_work(nb) };
+        self.c_inst * (covered * self.c_aabb + boundary * b + summary)
+    }
+
     /// Modeled work units per op of the two-level sharded engine at
     /// block size `bs` under workload `w` (array length `n`).
     ///
@@ -689,6 +712,38 @@ mod tests {
         // Per-point cost shrinks as batches amortise the shared work.
         assert!(sparse < m.shard_update_work(n, bs, 2.0) || k <= 2.0);
         assert!(dense < prior);
+    }
+
+    #[test]
+    fn range_update_work_prices_tags_far_below_rebuilds() {
+        let m = RtCostModel::default();
+        let (n, bs) = (1usize << 16, 256usize);
+        let (b, nb) = (bs as f64, (n / bs) as f64);
+        // A full-array range: every interior block is one tag write, the
+        // two boundary blocks pay the Θ(B) refit, the summary re-sweeps.
+        let full = m.range_update_work(n, bs, n as f64);
+        let covered = nb - 2.0;
+        assert!(
+            (full - m.c_inst * (covered * m.c_aabb + 2.0 * b + nb)).abs() < 1e-9,
+            "full = {full}"
+        );
+        // The same span as point updates pays Θ(B) per *block* — the
+        // lazy tag path must be far cheaper than rewriting every block.
+        let as_points = nb * m.shard_update_work(n, bs, nb);
+        assert!(full < as_points / 4.0, "tags {full} vs rewrites {as_points}");
+        // A single-element range touches only boundary work and the
+        // cheap single-minimum summary path — no covered or sweep terms.
+        let tiny = m.range_update_work(n, bs, 1.0);
+        assert!(
+            (tiny - m.c_inst * (b + m.path_refit_work(nb))).abs() < 1e-9,
+            "tiny = {tiny}"
+        );
+        assert!(tiny < full);
+        // The c_inst discount scales the whole charge uniformly.
+        let undisc = RtCostModel { c_inst: 1.0, ..Default::default() };
+        let a = undisc.range_update_work(n, bs, 1e4);
+        let d = m.range_update_work(n, bs, 1e4);
+        assert!((d - m.c_inst * a).abs() < 1e-9);
     }
 
     #[test]

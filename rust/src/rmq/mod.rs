@@ -303,6 +303,52 @@
 //!   end-to-end: a flooding bulk tenant saturates its own watermark
 //!   (shed > 0) while the interactive tenant finishes with
 //!   shed = expired = 0.
+//!
+//! # Lazy range tags (design note)
+//!
+//! Range updates — `add v` / `assign v` over `[l, r]`
+//! (`workload::Op::RangeAdd` / `RangeAssign`, `--range-frac` in the
+//! mixed generators) — ride the same block decomposition that makes
+//! point updates cheap, with one extra idea: a **fully covered block
+//! never rebuilds its structure**. `ShardedRmq::range_update` splits
+//! the span into at most two partial boundary blocks plus the covered
+//! interior, and treats the two cases asymmetrically:
+//!
+//! - **Covered blocks take a lazy tag.** The instanced leaf table
+//!   stores quantized values as `v_lo + q·scale`, so a uniform `add v`
+//!   is a pure transform shift: `InstancedBlock::apply_add` moves
+//!   `v_lo` in place — O(1) per block, no requantize, no tree work
+//!   (a bounded excess sweep re-tightens the floor if prior updates
+//!   left slack; `tag_hits` counts exactly these O(1) absorptions). A
+//!   covered `assign v` collapses the block to a constant:
+//!   `apply_assign` sets `{v_lo = v, scale = 0}`, every probe resolves
+//!   the exact constant, and the first later point write re-opens the
+//!   block through the `scale ≤ 0` rebuild arm of `refit_point`. Only
+//!   the *structures* are lazy — the solver-owned `xs` values are
+//!   rewritten eagerly, which is why probe-time exact-value resolution,
+//!   snapshots, and staged-spec builds need no tag-awareness at all.
+//! - **Boundary blocks requantize.** A partially covered block gets
+//!   its sub-range written and its table rebuilt against the cached
+//!   shape (the same O(B) refit-shaped pass staged replacements use),
+//!   then a one-block rescan refreshes its (min, argmin). The summary
+//!   then refits from the changed block minima — the single-min path
+//!   refit when exactly one block moved, the full sweep otherwise.
+//!
+//! Fencing, staging, and recovery all treat range segments as update
+//! segments: the batcher fences them identically, and a segment
+//! containing any range op stages as a **pointer-sized tag spec**
+//! (`has_range`, no prebuilt blocks) that commits by replaying the ops
+//! under the write lock iff the (seq, shape generation) fingerprint
+//! still holds — covered-block work is O(1) per block, so there is
+//! nothing worth precomputing off-thread. Direct applies snapshot the
+//! union span *before* writing because a range `add` is not idempotent:
+//! panic recovery restores the span, then replays. The cost model
+//! prices all of it (`RtCostModel::range_update_work`, in `c_inst`
+//! units): tagged blocks at O(1), boundaries at refit shape — which is
+//! why long spans are *cheaper* per element than their point
+//! decomposition, the claim `tests/range_update_diff.rs` pins with
+//! exact `tag_hits` equalities alongside the bit-identical differential
+//! against the naive oracle (`range_sim.py` mirrors it sans toolchain).
 
 pub mod cartesian;
 pub mod exhaustive;

@@ -33,7 +33,23 @@ use crate::bvh::instanced::{InstancedBlock, ShapeSet, MAX_INSTANCED_LEN, SHAPE_L
 use crate::bvh::traverse::Counters;
 use crate::bvh::AccelLayout;
 use crate::util::pool;
+use crate::workload::UpdateOp;
 use std::collections::BTreeMap;
+
+/// Lifetime range-update counters of one decomposition ("Lazy range
+/// tags" design note, `rmq/mod.rs`). `tag_hits` counts fully-covered
+/// instanced blocks absorbed by a `v_lo` shift or a constant-block
+/// collapse — i.e. with **no** requantize and no node work — so the
+/// O(1)-per-covered-block claim is checkable, not just asserted.
+/// Carried across re-shards/installs via
+/// [`ShardedRmq::adopt_range_stats`] so metrics stay monotone.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RangeStats {
+    /// Range ops applied (`add` + `assign`).
+    pub range_updates: u64,
+    /// Covered instanced blocks that took the lazy-tag path.
+    pub tag_hits: u64,
+}
 
 /// Which solver backs each block (and the summary).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -203,7 +219,7 @@ impl BlockSolver {
         match self {
             BlockSolver::Instanced(s) => {
                 for &(j, v) in local {
-                    s.refit_point(j, v);
+                    s.refit_point(j, v, fresh);
                 }
             }
             BlockSolver::Rtx(s) => s.update_values_point(local),
@@ -254,9 +270,14 @@ pub struct StagedUpdateSpec {
     /// Shared shape cache (Arc-cheap clone) so instanced replacement
     /// blocks build against the same trees with no lock held.
     shapes: ShapeSet,
-    updates: Vec<(usize, f32)>,
-    /// (block id, fresh value slice) per touched block.
+    ops: Vec<UpdateOp>,
+    /// (block id, fresh value slice) per touched block. Empty when the
+    /// segment carries a range op: the lazy-tag application at commit
+    /// is cheaper than copying block slices would be, so the spec stays
+    /// pointer-sized and the work happens at the fence ("Lazy range
+    /// tags", `rmq/mod.rs`).
     blocks: Vec<(usize, Vec<f32>)>,
+    has_range: bool,
 }
 
 impl StagedUpdateSpec {
@@ -285,8 +306,9 @@ impl StagedUpdateSpec {
         PreparedBlockUpdate {
             n: self.n,
             bs: self.bs,
-            updates: self.updates,
+            ops: self.ops,
             blocks: built.into_iter().flatten().collect(),
+            has_range: self.has_range,
         }
     }
 }
@@ -300,20 +322,29 @@ impl StagedUpdateSpec {
 pub struct PreparedBlockUpdate {
     n: usize,
     bs: usize,
-    updates: Vec<(usize, f32)>,
+    ops: Vec<UpdateOp>,
     blocks: Vec<(usize, BlockSolver, u32)>,
+    has_range: bool,
 }
 
 impl PreparedBlockUpdate {
-    /// The original point updates (the direct-apply fallback input when
-    /// a commit-time conflict voids the prepared work).
-    pub fn updates(&self) -> &[(usize, f32)] {
-        &self.updates
+    /// The original update ops in stream order (the direct-apply
+    /// fallback input when a commit-time conflict voids the prepared
+    /// work).
+    pub fn ops(&self) -> &[UpdateOp] {
+        &self.ops
     }
 
-    /// Number of blocks this preparation rebuilt.
+    /// Number of blocks this preparation rebuilt (0 for a tag-only
+    /// spec — range segments defer all work to the commit fence).
     pub fn touched_blocks(&self) -> usize {
         self.blocks.len()
+    }
+
+    /// Whether this preparation is a pointer-sized tag spec (carries a
+    /// range op; no prebuilt blocks, the commit applies lazy tags).
+    pub fn is_tag_only(&self) -> bool {
+        self.has_range
     }
 }
 
@@ -337,6 +368,8 @@ pub struct ShardedRmq {
     /// thousand blocks instance each tree.
     shapes: ShapeSet,
     opts: ShardedOptions,
+    /// Lifetime range-update counters (see [`RangeStats`]).
+    range_stats: RangeStats,
 }
 
 impl ShardedRmq {
@@ -422,6 +455,7 @@ impl ShardedRmq {
             summary,
             shapes,
             opts,
+            range_stats: RangeStats::default(),
         }
     }
 
@@ -758,6 +792,147 @@ impl ShardedRmq {
         self.apply_summary_updates(summary_updates);
     }
 
+    /// Range `add v` over the inclusive span `[l, r]` (elementwise f32,
+    /// exactly as the naive oracle applies it).
+    pub fn range_add(&mut self, l: usize, r: usize, v: f32) {
+        self.range_update(l, r, false, v);
+    }
+
+    /// Range `assign v` over the inclusive span `[l, r]`.
+    pub fn range_assign(&mut self, l: usize, r: usize, v: f32) {
+        self.range_update(l, r, true, v);
+    }
+
+    /// Range update ("Lazy range tags", `rmq/mod.rs`): blocks fully
+    /// inside the span take the lazy-tag path on the instanced backend —
+    /// an `add` shifts the block's `v_lo` transform in place (no
+    /// requantize, no node work) and an `assign` collapses it to a
+    /// constant block — each counted in
+    /// [`tag_hits`](RangeStats::tag_hits). The ≤2 partial boundary
+    /// blocks, and every covered block of a non-instanced backend,
+    /// resolve through the existing rebuild/refit machinery. The value
+    /// array is always rewritten elementwise (it is the served truth and
+    /// the exact-resolution source), and the summary refits from the
+    /// changed block minima, reusing the single-min path refit when only
+    /// one block's minimum moved.
+    pub fn range_update(&mut self, l: usize, r: usize, assign: bool, v: f32) {
+        assert!(l <= r && r < self.xs.len(), "range update ({l},{r}) out of range");
+        self.range_stats.range_updates += 1;
+        let (bl, br) = (l / self.bs, r / self.bs);
+        let mut summary_updates: Vec<(usize, f32)> = Vec::new();
+        for b in bl..=br {
+            let start = b * self.bs;
+            let end = start + self.block_len(b);
+            let covered = l <= start && r >= end - 1;
+            let arg = if covered && assign {
+                for x in &mut self.xs[start..end] {
+                    *x = v;
+                }
+                match &mut self.blocks[b] {
+                    BlockSolver::Instanced(s) => {
+                        s.apply_assign(v);
+                        self.range_stats.tag_hits += 1;
+                    }
+                    solver => {
+                        let local: Vec<(usize, f32)> = (0..end - start).map(|j| (j, v)).collect();
+                        solver.update(&local, &self.xs[start..end]);
+                    }
+                }
+                start // leftmost of an all-equal block
+            } else if covered {
+                // Even a pure shift can move the leftmost argmin — f32
+                // rounding can merge neighbours into fresh ties — so the
+                // min/argmin re-derivation fuses into the same pass that
+                // writes the values.
+                let (mut m, mut a) = (f32::INFINITY, start);
+                for (j, x) in self.xs[start..end].iter_mut().enumerate() {
+                    *x += v;
+                    if *x < m {
+                        m = *x;
+                        a = start + j;
+                    }
+                }
+                match &mut self.blocks[b] {
+                    BlockSolver::Instanced(s) => {
+                        s.apply_add(&self.xs[start..end], v);
+                        self.range_stats.tag_hits += 1;
+                    }
+                    solver => {
+                        let local: Vec<(usize, f32)> =
+                            self.xs[start..end].iter().copied().enumerate().collect();
+                        solver.update(&local, &self.xs[start..end]);
+                    }
+                }
+                a
+            } else {
+                // Boundary block: subrange value write, then the
+                // existing rebuild/requantize path and a block rescan.
+                let (lo, hi) = (l.max(start), r.min(end - 1));
+                let local: Vec<(usize, f32)> = (lo..=hi)
+                    .map(|i| {
+                        let x = if assign { v } else { self.xs[i] + v };
+                        self.xs[i] = x;
+                        (i - start, x)
+                    })
+                    .collect();
+                self.blocks[b].update(&local, &self.xs[start..end]);
+                super::naive_rmq(&self.xs, start, end - 1)
+            };
+            self.block_argmin[b] = arg as u32;
+            let mv = self.xs[arg];
+            if self.block_min[b] != mv {
+                self.block_min[b] = mv;
+                summary_updates.push((b, mv));
+            }
+        }
+        self.apply_summary_updates(summary_updates);
+    }
+
+    /// Apply a fenced update segment in stream order: maximal runs of
+    /// consecutive point writes batch through
+    /// [`update_batch_with`](Self::update_batch_with) (parallel over
+    /// blocks), each range op applies via
+    /// [`range_update`](Self::range_update). Ops are never reordered or
+    /// merged across a range op — f32 adds don't reassociate, so op
+    /// order is part of the answer contract.
+    pub fn apply_update_ops(&mut self, ops: &[UpdateOp], workers: usize) {
+        let mut points: Vec<(usize, f32)> = Vec::new();
+        let mut flush = |s: &mut Self, points: &mut Vec<(usize, f32)>| {
+            if !points.is_empty() {
+                s.update_batch_with(points, workers);
+                points.clear();
+            }
+        };
+        for op in ops {
+            match *op {
+                UpdateOp::Point { i, v } => points.push((i, v)),
+                UpdateOp::RangeAdd { l, r, v } => {
+                    flush(self, &mut points);
+                    self.range_update(l, r, false, v);
+                }
+                UpdateOp::RangeAssign { l, r, v } => {
+                    flush(self, &mut points);
+                    self.range_update(l, r, true, v);
+                }
+            }
+        }
+        flush(self, &mut points);
+    }
+
+    /// Lifetime range-update counters of this decomposition.
+    pub fn range_stats(&self) -> RangeStats {
+        self.range_stats
+    }
+
+    /// Seed the lifetime counters from a predecessor structure — the
+    /// engine layer calls this when a re-shard/install/recovery rebuild
+    /// replaces the decomposition, so the served counters stay monotone
+    /// across structure swaps.
+    pub fn adopt_range_stats(&mut self, prior: RangeStats) {
+        self.range_stats.range_updates += prior.range_updates;
+        self.range_stats.tag_hits += prior.tag_hits;
+    }
+
     /// Fold changed block minima into the summary solver: a single moved
     /// minimum re-shapes one summary triangle and refits its ancestor
     /// path (removing the Θ(n/B) per-batch term the cost model charges
@@ -785,30 +960,51 @@ impl ShardedRmq {
     /// and finally [`commit_prepared`](Self::commit_prepared) under the
     /// write lock at the fence.
     pub fn stage_update_batch(&self, updates: &[(usize, f32)]) -> StagedUpdateSpec {
-        let mut by_block: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
-        for &(i, v) in updates {
-            assert!(i < self.xs.len(), "update index {i} out of range");
-            by_block.entry(i / self.bs).or_default().push((i % self.bs, v));
-        }
-        let blocks = by_block
-            .into_iter()
-            .map(|(b, local)| {
-                let start = b * self.bs;
-                let end = (start + self.bs).min(self.xs.len());
-                let mut vals = self.xs[start..end].to_vec();
-                for (j, v) in local {
-                    vals[j] = v;
+        let ops: Vec<UpdateOp> =
+            updates.iter().map(|&(i, v)| UpdateOp::Point { i, v }).collect();
+        self.stage_update_ops(&ops)
+    }
+
+    /// Ops-aware staging: a pure-point segment stages per-block value
+    /// copies as before; a segment carrying a range op stages a
+    /// pointer-sized tag spec instead — no value copies, no off-lock
+    /// build work — because the lazy-tag application at the commit fence
+    /// is cheaper than the staging copy would be. Either way the spec is
+    /// fingerprint-guarded like any commit, and a conflict feeds the
+    /// same ops back through the direct path.
+    pub fn stage_update_ops(&self, ops: &[UpdateOp]) -> StagedUpdateSpec {
+        let has_range = ops.iter().any(|o| !matches!(o, UpdateOp::Point { .. }));
+        let blocks = if has_range {
+            Vec::new()
+        } else {
+            let mut by_block: BTreeMap<usize, Vec<(usize, f32)>> = BTreeMap::new();
+            for op in ops {
+                if let UpdateOp::Point { i, v } = *op {
+                    assert!(i < self.xs.len(), "update index {i} out of range");
+                    by_block.entry(i / self.bs).or_default().push((i % self.bs, v));
                 }
-                (b, vals)
-            })
-            .collect();
+            }
+            by_block
+                .into_iter()
+                .map(|(b, local)| {
+                    let start = b * self.bs;
+                    let end = (start + self.bs).min(self.xs.len());
+                    let mut vals = self.xs[start..end].to_vec();
+                    for (j, v) in local {
+                        vals[j] = v;
+                    }
+                    (b, vals)
+                })
+                .collect()
+        };
         StagedUpdateSpec {
             n: self.xs.len(),
             bs: self.bs,
             opts: self.opts,
             shapes: self.shapes.clone(),
-            updates: updates.to_vec(),
+            ops: ops.to_vec(),
             blocks,
+            has_range,
         }
     }
 
@@ -820,6 +1016,11 @@ impl ShardedRmq {
         workers: usize,
     ) -> PreparedBlockUpdate {
         self.stage_update_batch(updates).build(workers)
+    }
+
+    /// Ops-aware `stage` + `build` (see [`stage_update_ops`](Self::stage_update_ops)).
+    pub fn prepare_update_ops(&self, ops: &[UpdateOp], workers: usize) -> PreparedBlockUpdate {
+        self.stage_update_ops(ops).build(workers)
     }
 
     /// Install a prepared batch. Fails (returning the preparation
@@ -837,9 +1038,19 @@ impl ShardedRmq {
         if p.n != self.xs.len() || p.bs != self.bs {
             return Err(p);
         }
-        let PreparedBlockUpdate { updates, blocks, .. } = p;
-        for &(i, v) in &updates {
-            self.xs[i] = v;
+        if p.has_range {
+            // Tag-heavy segments carry no prebuilt blocks: the lazy-tag
+            // application *is* the commit (cheaper than the staging
+            // copy would have been), under the same fingerprint guard.
+            let PreparedBlockUpdate { ops, .. } = p;
+            self.apply_update_ops(&ops, 1);
+            return Ok(());
+        }
+        let PreparedBlockUpdate { ops, blocks, .. } = p;
+        for op in &ops {
+            if let UpdateOp::Point { i, v } = *op {
+                self.xs[i] = v;
+            }
         }
         let mut summary_updates: Vec<(usize, f32)> = Vec::new();
         for (b, solver, arg) in blocks {
@@ -1408,10 +1619,14 @@ mod tests {
         // The decomposition the work was staged against is gone.
         let mut resharded = s.reshard(16);
         let back = resharded.commit_prepared(prep).expect_err("shape mismatch must refuse");
-        assert_eq!(back.updates(), &[(10, -1.0), (300, -2.0)]);
+        assert_eq!(
+            back.ops(),
+            &[UpdateOp::Point { i: 10, v: -1.0 }, UpdateOp::Point { i: 300, v: -2.0 }]
+        );
         assert_eq!(resharded.value_of(10), xs[10], "refused commit changes nothing");
         // The returned preparation feeds the direct-apply fallback.
-        resharded.update_batch(back.updates());
+        let ops = back.ops().to_vec();
+        resharded.apply_update_ops(&ops, 2);
         assert_eq!(resharded.value_of(10), -1.0);
         assert_eq!(resharded.rmq(0, 511), 300);
         resharded.validate().unwrap();
@@ -1586,6 +1801,147 @@ mod tests {
                         ));
                     }
                 }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_updates_match_naive_oracle_all_backends() {
+        // Mixed point/range streams vs the elementwise oracle: the
+        // differential house rule, at the solver level. Tag path
+        // (instanced), rebuild path (rtx/sparse), boundary seams and
+        // tie-heavy values all in one property.
+        check("range updates vs oracle", 20, |rng| {
+            let xs = gen::dup_array(rng, 16..=700, 3);
+            let n = xs.len();
+            let bs = 1usize << rng.range(2, 6);
+            for base in backends() {
+                let mut s =
+                    ShardedRmq::with_options(&xs, ShardedOptions { block_size: bs, ..base });
+                let mut local = xs.clone();
+                for _ in 0..8 {
+                    let ops: Vec<UpdateOp> = (0..4)
+                        .map(|_| {
+                            let a = rng.range(0, n - 1);
+                            match rng.range(0, 3) {
+                                0 => UpdateOp::Point { i: a, v: rng.f32() },
+                                1 => UpdateOp::RangeAdd {
+                                    l: a,
+                                    r: rng.range(a, n - 1),
+                                    v: rng.f32() - 0.5,
+                                },
+                                _ => UpdateOp::RangeAssign {
+                                    l: a,
+                                    r: rng.range(a, n - 1),
+                                    v: rng.f32(),
+                                },
+                            }
+                        })
+                        .collect();
+                    for op in &ops {
+                        op.apply_naive(&mut local);
+                    }
+                    s.apply_update_ops(&ops, 3);
+                    if s.values() != &local[..] {
+                        return Err(format!("{:?} bs={bs}: values diverge", base.backend));
+                    }
+                    for _ in 0..10 {
+                        let (l, r) = gen::query(rng, n);
+                        let want = naive_rmq(&local, l, r);
+                        let got = s.rmq(l as u32, r as u32) as usize;
+                        if got != want {
+                            return Err(format!(
+                                "{:?} bs={bs} ({l},{r}): got {got} want {want}",
+                                base.backend
+                            ));
+                        }
+                    }
+                }
+                s.validate()?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn covered_add_takes_the_tag_path() {
+        // A full-coverage add over the instanced backend must absorb
+        // every interior block as a tag hit — the O(1)-per-block claim,
+        // checked via the counter, not trusted.
+        let xs = Rng::new(105).uniform_f32_vec(512);
+        let mut s = ShardedRmq::with_options(
+            &xs,
+            ShardedOptions { block_size: 32, ..Default::default() },
+        );
+        assert_eq!(s.range_stats(), RangeStats::default());
+        s.range_add(0, 511, 0.25); // covers all 16 blocks
+        assert_eq!(s.range_stats(), RangeStats { range_updates: 1, tag_hits: 16 });
+        s.range_assign(32, 95, -1.0); // covers blocks 1–2
+        assert_eq!(s.range_stats(), RangeStats { range_updates: 2, tag_hits: 18 });
+        s.range_add(40, 100, 0.5); // blocks 1 and 3 partial, block 2 covered
+        assert_eq!(s.range_stats(), RangeStats { range_updates: 3, tag_hits: 19 });
+        let mut local = xs.clone();
+        for x in &mut local[0..512] {
+            *x += 0.25;
+        }
+        for x in &mut local[32..=95] {
+            *x = -1.0;
+        }
+        for x in &mut local[40..=100] {
+            *x += 0.5;
+        }
+        assert_eq!(s.values(), &local[..]);
+        s.validate().unwrap();
+        // Counters survive a structure swap via adoption.
+        let mut resharded = s.reshard(16);
+        assert_eq!(resharded.range_stats(), RangeStats::default());
+        resharded.adopt_range_stats(s.range_stats());
+        assert_eq!(resharded.range_stats(), s.range_stats());
+        assert_eq!(resharded.values(), s.values());
+    }
+
+    #[test]
+    fn tag_only_stage_commits_like_direct_apply() {
+        // A segment carrying a range op stages pointer-sized (no block
+        // copies, no off-lock build) and the commit applies the tags —
+        // answer-identical to the direct ops path on every backend.
+        check("tag-only stage vs direct", 15, |rng| {
+            let xs = gen::f32_array(rng, 64..=800);
+            let n = xs.len();
+            let bs = 1usize << rng.range(3, 6);
+            for base in backends() {
+                let opts = ShardedOptions { block_size: bs, ..base };
+                let mut staged = ShardedRmq::with_options(&xs, opts);
+                let mut direct = ShardedRmq::with_options(&xs, opts);
+                for _ in 0..4 {
+                    let a = rng.range(0, n - 1);
+                    let ops = vec![
+                        UpdateOp::Point { i: rng.range(0, n - 1), v: rng.f32() },
+                        UpdateOp::RangeAdd { l: a, r: rng.range(a, n - 1), v: rng.f32() - 0.5 },
+                        UpdateOp::Point { i: rng.range(0, n - 1), v: rng.f32() },
+                    ];
+                    let prep = staged.prepare_update_ops(&ops, 2);
+                    assert!(prep.is_tag_only());
+                    assert_eq!(prep.touched_blocks(), 0, "tag spec prebuilds nothing");
+                    staged.commit_prepared(prep).map_err(|_| "commit refused".to_string())?;
+                    direct.apply_update_ops(&ops, 1);
+                    if staged.values() != direct.values() {
+                        return Err(format!("{:?} bs={bs}: values diverge", base.backend));
+                    }
+                    for _ in 0..10 {
+                        let (l, r) = gen::query(rng, n);
+                        let (a, b) =
+                            (staged.rmq(l as u32, r as u32), direct.rmq(l as u32, r as u32));
+                        if a != b {
+                            return Err(format!(
+                                "{:?} bs={bs} ({l},{r}): staged {a} != direct {b}",
+                                base.backend
+                            ));
+                        }
+                    }
+                }
+                staged.validate()?;
             }
             Ok(())
         });

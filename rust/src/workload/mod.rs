@@ -108,6 +108,11 @@ pub fn gen_updates(n: usize, count: usize, rng: &mut Rng) -> Vec<(usize, f32)> {
 pub enum Op {
     Query(Query),
     Update { i: u32, v: f32 },
+    /// `xs[i] += v` for every i in `[l, r]` (inclusive), applied in f32
+    /// exactly as a naive elementwise loop would — the oracle contract.
+    RangeAdd { l: u32, r: u32, v: f32 },
+    /// `xs[i] = v` for every i in `[l, r]` (inclusive).
+    RangeAssign { l: u32, r: u32, v: f32 },
 }
 
 impl Op {
@@ -115,8 +120,41 @@ impl Op {
         matches!(self, Op::Query(_))
     }
 
+    /// Any mutating op — point writes and both range shapes.
     pub fn is_update(&self) -> bool {
-        matches!(self, Op::Update { .. })
+        !self.is_query()
+    }
+}
+
+/// A mutating op in executor form: indices widened to `usize`, queries
+/// stripped. This is the payload of an update segment — the batcher
+/// fences runs of these between query segments, and
+/// `ShardedRmq::apply_update_ops` consumes them in stream order
+/// (f32 adds do not reassociate, so order is part of the contract).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum UpdateOp {
+    Point { i: usize, v: f32 },
+    RangeAdd { l: usize, r: usize, v: f32 },
+    RangeAssign { l: usize, r: usize, v: f32 },
+}
+
+impl UpdateOp {
+    /// Apply this op to a plain values array — the naive oracle the
+    /// differential suites compare every backend against.
+    pub fn apply_naive(&self, xs: &mut [f32]) {
+        match *self {
+            UpdateOp::Point { i, v } => xs[i] = v,
+            UpdateOp::RangeAdd { l, r, v } => {
+                for x in &mut xs[l..=r] {
+                    *x += v;
+                }
+            }
+            UpdateOp::RangeAssign { l, r, v } => {
+                for x in &mut xs[l..=r] {
+                    *x = v;
+                }
+            }
+        }
     }
 }
 
@@ -142,6 +180,14 @@ pub fn validate_ops(n: usize, ops: &[Op]) -> Result<(), String> {
                     return Err(format!("op {k}: update value {v} is not finite"));
                 }
             }
+            Op::RangeAdd { l, r, v } | Op::RangeAssign { l, r, v } => {
+                if l > r || (r as usize) >= n {
+                    return Err(format!("op {k}: range update ({l},{r}) invalid for n={n}"));
+                }
+                if !v.is_finite() {
+                    return Err(format!("op {k}: range update value {v} is not finite"));
+                }
+            }
         }
     }
     Ok(())
@@ -158,9 +204,36 @@ pub fn gen_mixed(
     dist: RangeDist,
     rng: &mut Rng,
 ) -> Vec<Op> {
+    gen_mixed_ranged(n, count, update_frac, 0.0, dist, rng)
+}
+
+/// [`gen_mixed`] with a range-update share: each op is a range update
+/// with probability `range_frac` (alternating `add`/`assign`, endpoints
+/// drawn from `dist` like a query's), a point update with probability
+/// `update_frac`, otherwise a query. `add` deltas are centered on zero
+/// so long streams don't drift the array out of [0, 1).
+pub fn gen_mixed_ranged(
+    n: usize,
+    count: usize,
+    update_frac: f64,
+    range_frac: f64,
+    dist: RangeDist,
+    rng: &mut Rng,
+) -> Vec<Op> {
+    let mut add_next = true;
     (0..count)
         .map(|_| {
-            if rng.f64() < update_frac {
+            let x = rng.f64();
+            if x < range_frac {
+                let len = dist.sample_len(n, rng);
+                let (l, r) = place_query(n, len, rng);
+                add_next = !add_next;
+                if add_next {
+                    Op::RangeAssign { l, r, v: rng.f32() }
+                } else {
+                    Op::RangeAdd { l, r, v: rng.f32() - 0.5 }
+                }
+            } else if x < range_frac + update_frac {
                 Op::Update { i: rng.range(0, n - 1) as u32, v: rng.f32() }
             } else {
                 let len = dist.sample_len(n, rng);
@@ -180,6 +253,8 @@ pub struct TenantLoad {
     pub n: usize,
     pub dist: RangeDist,
     pub update_frac: f64,
+    /// Share of ops that are range updates (`add`/`assign` over [l,r]).
+    pub range_frac: f64,
     /// When set, requests generated past 50% progress draw from this
     /// distribution instead of `dist` — a mid-soak traffic shift.
     pub shift: Option<RangeDist>,
@@ -199,7 +274,14 @@ impl TenantLoad {
     /// perturbs any single tenant's sequence — the property the
     /// isolation differential tests lean on.
     pub fn gen_request(&self, ops: usize, progress: f64, rng: &mut Rng) -> Vec<Op> {
-        gen_mixed(self.n, ops, self.update_frac, self.dist_at(progress), rng)
+        gen_mixed_ranged(
+            self.n,
+            ops,
+            self.update_frac,
+            self.range_frac,
+            self.dist_at(progress),
+            rng,
+        )
     }
 }
 
@@ -328,6 +410,9 @@ mod tests {
                 Op::Update { i, v } => {
                     assert!((i as usize) < n && (0.0..1.0).contains(&v))
                 }
+                Op::RangeAdd { .. } | Op::RangeAssign { .. } => {
+                    panic!("gen_mixed must not emit range ops")
+                }
             }
         }
         // Pure-query and pure-update endpoints.
@@ -337,6 +422,61 @@ mod tests {
         assert!(gen_mixed(n, 50, 1.0, RangeDist::Large, &mut rng)
             .iter()
             .all(|o| matches!(o, Op::Update { .. })));
+    }
+
+    #[test]
+    fn ranged_stream_respects_fractions_and_validity() {
+        let mut rng = Rng::new(31);
+        let n = 1000;
+        let ops = gen_mixed_ranged(n, 4000, 0.2, 0.1, RangeDist::Small, &mut rng);
+        assert!(validate_ops(n, &ops).is_ok());
+        let ranges =
+            ops.iter().filter(|o| matches!(o, Op::RangeAdd { .. } | Op::RangeAssign { .. }));
+        let frac = ranges.count() as f64 / ops.len() as f64;
+        assert!((0.07..0.13).contains(&frac), "range fraction {frac}");
+        // Both range shapes appear (the generator alternates them).
+        assert!(ops.iter().any(|o| matches!(o, Op::RangeAdd { .. })));
+        assert!(ops.iter().any(|o| matches!(o, Op::RangeAssign { .. })));
+        // Point updates still show up at their own fraction.
+        let upd = ops.iter().filter(|o| matches!(o, Op::Update { .. })).count() as f64
+            / ops.len() as f64;
+        assert!((0.16..0.24).contains(&upd), "point-update fraction {upd}");
+        // range_frac = 0 reduces to the old generator exactly.
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        assert_eq!(
+            gen_mixed(n, 200, 0.3, RangeDist::Medium, &mut a),
+            gen_mixed_ranged(n, 200, 0.3, 0.0, RangeDist::Medium, &mut b),
+        );
+        // is_update covers every mutating shape.
+        assert!(Op::RangeAdd { l: 0, r: 3, v: 0.5 }.is_update());
+        assert!(Op::RangeAssign { l: 0, r: 3, v: 0.5 }.is_update());
+        assert!(!Op::RangeAdd { l: 0, r: 3, v: 0.5 }.is_query());
+    }
+
+    #[test]
+    fn validate_ops_checks_range_updates() {
+        assert!(validate_ops(8, &[Op::RangeAdd { l: 0, r: 7, v: 0.25 }]).is_ok());
+        assert!(validate_ops(8, &[Op::RangeAssign { l: 3, r: 3, v: -1.0 }]).is_ok());
+        assert!(validate_ops(8, &[Op::RangeAdd { l: 5, r: 4, v: 0.1 }]).is_err());
+        assert!(validate_ops(8, &[Op::RangeAssign { l: 0, r: 8, v: 0.1 }]).is_err());
+        assert!(validate_ops(8, &[Op::RangeAdd { l: 0, r: 1, v: f32::NAN }]).is_err());
+        assert!(validate_ops(8, &[Op::RangeAssign { l: 0, r: 1, v: f32::INFINITY }]).is_err());
+    }
+
+    #[test]
+    fn update_op_naive_application_matches_loops() {
+        let mut xs = vec![0.5f32, 0.25, 0.75, 0.125, 0.625];
+        UpdateOp::Point { i: 2, v: 0.1 }.apply_naive(&mut xs);
+        assert_eq!(xs[2], 0.1);
+        xs[2] = 0.0625;
+        UpdateOp::RangeAdd { l: 1, r: 3, v: 0.25 }.apply_naive(&mut xs);
+        assert_eq!(xs, vec![0.5, 0.5, 0.3125, 0.375, 0.625]);
+        UpdateOp::RangeAssign { l: 0, r: 4, v: -1.0 }.apply_naive(&mut xs);
+        assert!(xs.iter().all(|&x| x == -1.0));
+        // Single-element range: touches exactly one slot.
+        UpdateOp::RangeAdd { l: 2, r: 2, v: 0.5 }.apply_naive(&mut xs);
+        assert_eq!(xs, vec![-1.0, -1.0, -0.5, -1.0, -1.0]);
     }
 
     #[test]
@@ -374,6 +514,7 @@ mod tests {
             n: 1 << 16,
             dist: RangeDist::Small,
             update_frac: 0.0,
+            range_frac: 0.0,
             shift: Some(RangeDist::Large),
         };
         assert_eq!(t.dist_at(0.0), RangeDist::Small);
@@ -406,6 +547,7 @@ mod tests {
             n: 4096,
             dist: RangeDist::Medium,
             update_frac: 0.2,
+            range_frac: 0.1,
             shift: None,
         };
         // Same seed, same progress → same stream, regardless of what
@@ -415,11 +557,6 @@ mod tests {
         let _ = t.gen_request(64, 0.0, &mut other);
         let b = t.gen_request(64, 0.0, &mut Rng::new(5));
         assert_eq!(a, b);
-        for op in &a {
-            match *op {
-                Op::Query((l, r)) => assert!(l <= r && (r as usize) < 4096),
-                Op::Update { i, v } => assert!((i as usize) < 4096 && v.is_finite()),
-            }
-        }
+        assert!(validate_ops(4096, &a).is_ok());
     }
 }

@@ -1,0 +1,507 @@
+//! Differential suite for lazy-tag range updates (the PR's acceptance
+//! gate): `add v` / `assign v` over `[l, r]` must be **bit-identical**
+//! to both a naive elementwise re-solve and to the same stream with
+//! every range op decomposed into point writes — across all three
+//! shard backends, at block seams, through snapshot/re-shard/staged
+//! commit round-trips, under tie-heavy arrays, and end to end through
+//! the pipelined and serial coordinators with faults injected into the
+//! staging lane. The Instanced fast path is additionally pinned
+//! *structurally*: `tag_hits` must count exactly the fully-covered
+//! blocks, which is the O(1)-per-covered-block claim made checkable.
+
+use rtxrmq::coordinator::engine::{CommitOutcome, EngineCfg, ShardBlock, ShardedEngine};
+use rtxrmq::coordinator::router::Policy;
+use rtxrmq::coordinator::server::{Coordinator, CoordinatorCfg};
+use rtxrmq::rmq::naive_rmq;
+use rtxrmq::rmq::sharded::{ShardBackend, ShardedOptions, ShardedRmq};
+use rtxrmq::rmq::RmqSolver;
+use rtxrmq::util::faults::{self, FaultPlan};
+use rtxrmq::util::rng::Rng;
+use rtxrmq::workload::{gen_array, gen_mixed_ranged, Op, RangeDist, UpdateOp};
+
+/// The chaos test arms the **process-global** fault registry and the
+/// clean coordinator tests assert exact pipeline counters; same
+/// serialization idiom as `mixed_stream.rs`.
+static SERIAL: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+fn serial() -> std::sync::MutexGuard<'static, ()> {
+    SERIAL.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn opts(backend: ShardBackend, bs: usize) -> ShardedOptions {
+    ShardedOptions { block_size: bs, backend, ..Default::default() }
+}
+
+/// Sequential semantics of a mixed op stream (the coordinator tests).
+fn oracle_run(xs: &mut [f32], ops: &[Op]) -> Vec<u32> {
+    let mut out = Vec::new();
+    for op in ops {
+        match *op {
+            Op::Query((l, r)) => out.push(naive_rmq(xs, l as usize, r as usize) as u32),
+            Op::Update { i, v } => xs[i as usize] = v,
+            Op::RangeAdd { l, r, v } => {
+                for x in &mut xs[l as usize..=r as usize] {
+                    *x += v;
+                }
+            }
+            Op::RangeAssign { l, r, v } => {
+                for x in &mut xs[l as usize..=r as usize] {
+                    *x = v;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Decompose an update stream into pure point writes against a rolling
+/// value oracle — the reference semantics every range op must match.
+/// The oracle advances with the same elementwise f32 ops
+/// (`apply_naive`), so the produced values are bit-identical by
+/// construction; what the decomposition checks is the *structures*.
+fn decompose_to_points(ops: &[UpdateOp], oracle: &mut [f32]) -> Vec<UpdateOp> {
+    let mut out = Vec::new();
+    for op in ops {
+        match *op {
+            UpdateOp::Point { .. } => out.push(*op),
+            UpdateOp::RangeAdd { l, r, .. } | UpdateOp::RangeAssign { l, r, .. } => {
+                op.apply_naive(oracle);
+                for i in l..=r {
+                    out.push(UpdateOp::Point { i, v: oracle[i] });
+                }
+                continue;
+            }
+        }
+        op.apply_naive(oracle);
+    }
+    out
+}
+
+fn random_update_stream(n: usize, count: usize, rng: &mut Rng) -> Vec<UpdateOp> {
+    (0..count)
+        .map(|_| {
+            let x = rng.f64();
+            if x < 0.25 {
+                let l = rng.range(0, n - 1);
+                UpdateOp::RangeAdd { l, r: rng.range(l, n - 1), v: rng.f32() - 0.5 }
+            } else if x < 0.5 {
+                let l = rng.range(0, n - 1);
+                UpdateOp::RangeAssign { l, r: rng.range(l, n - 1), v: rng.f32() }
+            } else {
+                UpdateOp::Point { i: rng.range(0, n - 1), v: rng.f32() }
+            }
+        })
+        .collect()
+}
+
+fn assert_matches_naive(solver: &ShardedRmq, xs: &[f32], rng: &mut Rng, ctx: &str) {
+    let n = xs.len();
+    let mut queries: Vec<(u32, u32)> = (0..96)
+        .map(|_| {
+            let l = rng.range(0, n - 1);
+            (l as u32, rng.range(l, n - 1) as u32)
+        })
+        .collect();
+    queries.push((0, n as u32 - 1));
+    let got = solver.batch(&queries, 2);
+    for (k, &(l, r)) in queries.iter().enumerate() {
+        assert_eq!(
+            got[k] as usize,
+            naive_rmq(xs, l as usize, r as usize),
+            "{ctx}: ({l},{r})"
+        );
+    }
+}
+
+#[test]
+fn range_ops_match_point_decomposition_across_backends() {
+    let _g = serial();
+    for backend in [ShardBackend::Instanced, ShardBackend::Rtx, ShardBackend::Sparse] {
+        let mut rng = Rng::new(0x2201);
+        for &(n, bs) in &[(700usize, 32usize), (1024, 64), (129, 16)] {
+            let xs = gen_array(n, 71);
+            let mut oracle = xs.clone();
+            let mut ranged = ShardedRmq::with_options(&xs, opts(backend, bs));
+            let mut pointwise = ShardedRmq::with_options(&xs, opts(backend, bs));
+            for round in 0..6 {
+                let ops = random_update_stream(n, 12, &mut rng);
+                let points = decompose_to_points(&ops, &mut oracle);
+                ranged.apply_update_ops(&ops, 2);
+                pointwise.apply_update_ops(&points, 2);
+                assert_eq!(
+                    ranged.values(),
+                    &oracle[..],
+                    "{backend:?} n={n} bs={bs} round {round}: values drifted"
+                );
+                assert_eq!(ranged.values(), pointwise.values());
+                let ctx = format!("{backend:?} n={n} bs={bs} round {round} ranged");
+                assert_matches_naive(&ranged, &oracle, &mut rng, &ctx);
+                let ctx = format!("{backend:?} n={n} bs={bs} round {round} pointwise");
+                assert_matches_naive(&pointwise, &oracle, &mut rng, &ctx);
+            }
+            ranged.validate().unwrap_or_else(|e| panic!("{backend:?} n={n} bs={bs}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn boundary_seams_and_partial_blocks_stay_exact() {
+    let _g = serial();
+    let (n, bs) = (1024usize, 64usize);
+    let mut rng = Rng::new(0x2202);
+    for backend in [ShardBackend::Instanced, ShardBackend::Sparse] {
+        let xs = gen_array(n, 72);
+        let mut oracle = xs.clone();
+        let mut solver = ShardedRmq::with_options(&xs, opts(backend, bs));
+        // Every decomposition case: exact block spans (pure covered),
+        // seam-straddling two-partial spans, a strict-interior
+        // single-block span, single elements at both seam sides, the
+        // full array, and a span whose partials sandwich covered blocks.
+        let spans: Vec<(usize, usize)> = vec![
+            (bs, 3 * bs - 1),          // aligned: blocks 1,2 fully covered
+            (bs - 1, bs),              // seam straddle: two partial blocks
+            (2 * bs + 5, 3 * bs - 7),  // interior of block 2 only
+            (4 * bs - 1, 4 * bs - 1),  // single element, right edge
+            (4 * bs, 4 * bs),          // single element, left edge
+            (0, n - 1),                // full array
+            (bs / 2, n - bs / 2 - 1),  // partial + covered run + partial
+        ];
+        for (k, &(l, r)) in spans.iter().enumerate() {
+            let v = rng.f32() - 0.5;
+            if k % 2 == 0 {
+                solver.range_add(l, r, v);
+                for x in &mut oracle[l..=r] {
+                    *x += v;
+                }
+            } else {
+                solver.range_assign(l, r, v);
+                for x in &mut oracle[l..=r] {
+                    *x = v;
+                }
+            }
+            // Sweep every query window crossing the mutated seams.
+            for seam in [l, r + 1] {
+                let lo = seam.saturating_sub(3);
+                for ql in lo..(seam + 3).min(n) {
+                    for qr in ql..(seam + 3).min(n) {
+                        assert_eq!(
+                            solver.rmq(ql as u32, qr as u32) as usize,
+                            naive_rmq(&oracle, ql, qr),
+                            "{backend:?} span {k} ({l},{r}) query ({ql},{qr})"
+                        );
+                    }
+                }
+            }
+            assert_matches_naive(&solver, &oracle, &mut rng, &format!("{backend:?} span {k}"));
+        }
+        solver.validate().unwrap();
+    }
+}
+
+#[test]
+fn assign_then_add_composition_on_covered_blocks() {
+    let _g = serial();
+    let (n, bs) = (512usize, 32usize);
+    let xs = gen_array(n, 73);
+    let mut oracle = xs.clone();
+    let mut solver = ShardedRmq::with_options(&xs, opts(ShardBackend::Instanced, bs));
+    // assign collapses covered blocks to the constant-block fast path
+    // (scale = 0); the add after it must shift that constant exactly,
+    // and the point write after *that* must reopen the block correctly.
+    let ops = vec![
+        UpdateOp::RangeAssign { l: 0, r: n - 1, v: 0.75 },
+        UpdateOp::RangeAdd { l: bs, r: 5 * bs - 1, v: -0.25 },
+        UpdateOp::RangeAdd { l: 2 * bs, r: 3 * bs - 1, v: -0.25 },
+        UpdateOp::Point { i: 2 * bs + 7, v: -2.0 },
+        UpdateOp::RangeAdd { l: 0, r: n - 1, v: 0.125 },
+        UpdateOp::RangeAssign { l: 3 * bs, r: 7 * bs - 1, v: -1.5 },
+        UpdateOp::RangeAdd { l: 3 * bs + 1, r: 4 * bs, v: 3.0 },
+    ];
+    let mut rng = Rng::new(0x2203);
+    for (k, op) in ops.iter().enumerate() {
+        solver.apply_update_ops(std::slice::from_ref(op), 1);
+        op.apply_naive(&mut oracle);
+        assert_eq!(solver.values(), &oracle[..], "op {k}: values drifted");
+        assert_matches_naive(&solver, &oracle, &mut rng, &format!("after op {k}"));
+    }
+    solver.validate().unwrap();
+    // Ops 0, 1, 2, 4 and 5 hit covered instanced blocks; the counter
+    // proves the tag path (not a requantize) absorbed them.
+    let stats = solver.range_stats();
+    assert_eq!(stats.range_updates, 6, "six range ops applied");
+    assert!(stats.tag_hits > 0, "covered blocks must take the tag path");
+}
+
+#[test]
+fn covered_add_is_o1_per_block_via_tag_hits() {
+    let _g = serial();
+    let (n, bs) = (4096usize, 64usize);
+    let nb = n / bs;
+    let xs = gen_array(n, 74);
+    let mut oracle = xs.clone();
+    let mut inst = ShardedRmq::with_options(&xs, opts(ShardBackend::Instanced, bs));
+    // Full-array add: every block fully covered, every block a tag hit —
+    // the counter equality IS the O(1)-per-covered-block assertion (a
+    // requantize or node rebuild never increments it).
+    inst.range_add(0, n - 1, 0.5);
+    for x in &mut oracle[..] {
+        *x += 0.5;
+    }
+    let s = inst.range_stats();
+    assert_eq!(s.range_updates, 1);
+    assert_eq!(s.tag_hits, nb as u64, "all {nb} covered blocks must be absorbed as tags");
+    // Unaligned span: the two boundary blocks rebuild, the interior
+    // blocks tag — the counter grows by exactly covered = span - 2.
+    let (l, r) = (bs / 2, n - bs / 2 - 1);
+    inst.range_add(l, r, -0.25);
+    for x in &mut oracle[l..=r] {
+        *x -= 0.25;
+    }
+    let s = inst.range_stats();
+    assert_eq!(s.range_updates, 2);
+    assert_eq!(s.tag_hits, (nb + nb - 2) as u64, "interior blocks tag, boundaries rebuild");
+    let mut rng = Rng::new(0x2204);
+    assert_matches_naive(&inst, &oracle, &mut rng, "after counted adds");
+    inst.validate().unwrap();
+    // The non-instanced backends have no tag path: same ops, zero hits,
+    // same answers.
+    let mut sparse = ShardedRmq::with_options(&xs, opts(ShardBackend::Sparse, bs));
+    sparse.range_add(0, n - 1, 0.5);
+    sparse.range_add(l, r, -0.25);
+    assert_eq!(sparse.range_stats().range_updates, 2);
+    assert_eq!(sparse.range_stats().tag_hits, 0, "sparse blocks never tag");
+    assert_eq!(sparse.values(), inst.values());
+}
+
+#[test]
+fn tie_heavy_streams_keep_leftmost_ties_through_v_lo_shifts() {
+    let _g = serial();
+    // Values and deltas are exact multiples of 0.25 (exactly
+    // representable), so every add preserves exact equality between
+    // tied positions — any argmin drift through the shifted `v_lo`
+    // transform or the collapsed constant blocks is a leftmost-tie bug,
+    // not rounding.
+    let (n, bs) = (512usize, 32usize);
+    let xs: Vec<f32> = gen_array(n, 75).iter().map(|v| (v * 4.0).floor() / 4.0).collect();
+    let mut oracle = xs.clone();
+    let mut inst = ShardedRmq::with_options(&xs, opts(ShardBackend::Instanced, bs));
+    let mut rng = Rng::new(0x2205);
+    for round in 0..10 {
+        let op = match round % 3 {
+            0 => {
+                let b = rng.range(0, n / bs - 2);
+                UpdateOp::RangeAdd {
+                    l: b * bs,
+                    r: (b + 2) * bs - 1,
+                    v: (rng.range(0, 4) as f32 - 2.0) * 0.25,
+                }
+            }
+            1 => {
+                let l = rng.range(0, n - 1);
+                UpdateOp::RangeAssign {
+                    l,
+                    r: rng.range(l, n - 1),
+                    v: rng.range(0, 3) as f32 * 0.25,
+                }
+            }
+            _ => UpdateOp::Point { i: rng.range(0, n - 1), v: rng.range(0, 3) as f32 * 0.25 },
+        };
+        inst.apply_update_ops(std::slice::from_ref(&op), 1);
+        op.apply_naive(&mut oracle);
+        // Exhaustive-ish sweep: strided windows catch any tie that
+        // resolves to a non-leftmost position.
+        for l in (0..n).step_by(3) {
+            for r in (l..n).step_by(5) {
+                assert_eq!(
+                    inst.rmq(l as u32, r as u32) as usize,
+                    naive_rmq(&oracle, l, r),
+                    "round {round} ({l},{r})"
+                );
+            }
+        }
+    }
+    assert!(inst.range_stats().tag_hits > 0, "covered quantized adds must tag");
+    inst.validate().unwrap();
+}
+
+#[test]
+fn tags_survive_snapshot_reshard_and_staged_commits() {
+    let _g = serial();
+    let n = 768usize;
+    let xs = gen_array(n, 76);
+    let mut oracle = xs.clone();
+    let engine = ShardedEngine::new(ShardedRmq::with_options(
+        &xs,
+        opts(ShardBackend::Instanced, 32),
+    ));
+    let mut rng = Rng::new(0x2206);
+    let solve = |queries: &[(u32, u32)], oracle: &[f32], ctx: &str| {
+        let got = rtxrmq::coordinator::engine::Engine::solve(&engine, queries, 2).unwrap();
+        for (k, &(l, r)) in queries.iter().enumerate() {
+            assert_eq!(got[k] as usize, naive_rmq(oracle, l as usize, r as usize), "{ctx} ({l},{r})");
+        }
+    };
+    let queries: Vec<(u32, u32)> = (0..120)
+        .map(|_| {
+            let l = rng.range(0, n - 1);
+            (l as u32, rng.range(l, n - 1) as u32)
+        })
+        .collect();
+
+    // Direct ops, then a snapshot: values() is eager truth, so the
+    // snapshot must already contain every tag's effect.
+    let ops = random_update_stream(n, 10, &mut rng);
+    engine.update_ops(&ops, 2).unwrap();
+    for op in &ops {
+        op.apply_naive(&mut oracle);
+    }
+    let (snap, seq) = engine.snapshot();
+    assert_eq!(snap, oracle, "snapshot must carry the tags' values");
+    assert_eq!(seq, 1);
+    solve(&queries, &oracle, "post-direct");
+
+    // A range-carrying segment stages as a pointer-sized tag spec and
+    // commits clean at the fence.
+    let ops = vec![
+        UpdateOp::Point { i: 5, v: -0.5 },
+        UpdateOp::RangeAdd { l: 64, r: 447, v: 0.25 },
+        UpdateOp::RangeAssign { l: 200, r: 263, v: -1.0 },
+    ];
+    // Solver-level shape check: the staged spec carries no prebuilt
+    // blocks (that is what "pointer-sized" means operationally).
+    {
+        let probe = ShardedRmq::with_options(&oracle, opts(ShardBackend::Instanced, 32));
+        let spec = probe.prepare_update_ops(&ops, 2);
+        assert!(spec.is_tag_only(), "range-carrying segments stage tag-only");
+        assert_eq!(spec.touched_blocks(), 0, "no per-block value copies staged");
+    }
+    let before = engine.range_stats();
+    let prep = engine.prepare_update_ops(&ops, 2);
+    assert_eq!(engine.commit_prepared(prep, 2), CommitOutcome::Installed);
+    for op in &ops {
+        op.apply_naive(&mut oracle);
+    }
+    solve(&queries, &oracle, "post-staged-commit");
+    let after = engine.range_stats();
+    assert_eq!(after.range_updates, before.range_updates + 2);
+    assert!(after.tag_hits > before.tag_hits, "covered blocks tagged at the fence");
+
+    // Conflicted commit: a direct write between stage and commit voids
+    // the prepared tag spec; the fallback applies the same ops in
+    // commit order, bit-identically.
+    let staged_ops = vec![UpdateOp::RangeAdd { l: 0, r: n - 1, v: -0.125 }];
+    let prep = engine.prepare_update_ops(&staged_ops, 2);
+    let conflict = vec![UpdateOp::Point { i: 100, v: 9.0 }];
+    engine.update_ops(&conflict, 2).unwrap();
+    assert_eq!(engine.commit_prepared(prep, 2), CommitOutcome::FellBack);
+    for op in conflict.iter().chain(&staged_ops) {
+        op.apply_naive(&mut oracle);
+    }
+    solve(&queries, &oracle, "post-conflicted-commit");
+
+    // Re-shard: the replacement must adopt the lifetime counters
+    // (monotone metrics) and keep answering exactly; fresh range ops on
+    // the new decomposition keep counting from there.
+    let stats_before = engine.range_stats();
+    assert!(engine.reshard(64), "quiet re-shard installs");
+    assert_eq!(engine.block_size(), 64);
+    assert_eq!(engine.range_stats(), stats_before, "re-shard adopts the counters");
+    solve(&queries, &oracle, "post-reshard");
+    engine.update_ops(&[UpdateOp::RangeAdd { l: 0, r: n - 1, v: 0.5 }], 2).unwrap();
+    for x in &mut oracle[..] {
+        *x += 0.5;
+    }
+    solve(&queries, &oracle, "post-reshard range op");
+    let stats = engine.range_stats();
+    assert_eq!(stats.range_updates, stats_before.range_updates + 1);
+    assert!(stats.tag_hits >= stats_before.tag_hits + (n as u64 / 64), "new blocks tag too");
+}
+
+#[test]
+fn pipelined_and_serial_coordinators_agree_on_ranged_streams() {
+    let _g = serial();
+    let n = 1 << 12;
+    let xs = gen_array(n, 77);
+    let mk = |pipeline: bool| {
+        Coordinator::start(
+            &xs,
+            None,
+            CoordinatorCfg {
+                policy: Policy::ModeledCost,
+                engines: EngineCfg { shard_block: ShardBlock::Fixed(64) },
+                pipeline,
+                ..Default::default()
+            },
+        )
+    };
+    let pipelined = mk(true);
+    let serial_c = mk(false);
+    let mut oracle = xs.clone();
+    let mut rng = Rng::new(0x2207);
+    for round in 0..10 {
+        let ops = gen_mixed_ranged(n, 96, 0.2, 0.15, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let a = pipelined.submit_mixed(ops.clone()).unwrap();
+        let b = serial_c.submit_mixed(ops).unwrap();
+        assert_eq!(a.answers, want, "pipelined, round {round}");
+        assert_eq!(b.answers, want, "serial, round {round}");
+        assert_eq!(a.updates_applied, b.updates_applied);
+    }
+    let mp = pipelined.metrics.lock();
+    assert!(mp.range_updates > 0, "the stream must contain range ops: {mp}");
+    assert!(mp.tag_hits > 0, "instanced default backend must absorb covered blocks");
+    assert!(mp.staged_batches > 0, "ranged segments ride the overlap lane");
+    drop(mp);
+    let ms = serial_c.metrics.lock();
+    assert_eq!(ms.staged_batches, 0);
+    assert_eq!(ms.range_updates, pipelined.metrics.lock().range_updates);
+    drop(ms);
+    pipelined.shutdown();
+    serial_c.shutdown();
+}
+
+#[test]
+fn chaos_staging_faults_keep_ranged_answers_exact() {
+    let _g = serial();
+    // The schedule aims at exactly the lane the tag-only specs ride:
+    // the staged-prepare worker dies twice, commits are forced into the
+    // conflict-fallback path, and pool workers panic sporadically. The
+    // guarantee: every *accepted* answer stays bit-identical to the
+    // sequential oracle — range adds are not idempotent, so this also
+    // exercises the union-span recovery snapshot in the direct path.
+    let arm = faults::arm_guard(
+        FaultPlan::parse(
+            "stage.prepare:panic:1.0:2,stage.commit:err:0.5:3,pool.worker:panic:0.1:4",
+            0x2208,
+        )
+        .unwrap(),
+    );
+    let n = 1 << 12;
+    let xs = gen_array(n, 78);
+    let mut oracle = xs.clone();
+    let c = Coordinator::start(
+        &xs,
+        None,
+        CoordinatorCfg {
+            policy: Policy::ModeledCost,
+            engines: EngineCfg { shard_block: ShardBlock::Fixed(64) },
+            ..Default::default()
+        },
+    );
+    let mut rng = Rng::new(0x2209);
+    for round in 0..12 {
+        let ops = gen_mixed_ranged(n, 64, 0.2, 0.2, RangeDist::Small, &mut rng);
+        let want = oracle_run(&mut oracle, &ops);
+        let resp = c.submit_mixed(ops).unwrap();
+        assert_eq!(resp.answers, want, "chaos round {round}");
+    }
+    c.sync_faults();
+    let m = c.metrics.lock();
+    assert!(m.injected_faults >= 4, "the schedule must actually fire: {m}");
+    assert!(m.caught_panics >= 1, "injected panics were caught, not propagated");
+    assert!(m.range_updates > 0, "range ops flowed under faults");
+    assert!(m.tag_hits > 0);
+    drop(m);
+    drop(arm);
+    c.shutdown();
+}

@@ -41,6 +41,16 @@ fn oracle_run(xs: &mut [f32], ops: &[Op]) -> Vec<u32> {
         match *op {
             Op::Query((l, r)) => out.push(naive_rmq(xs, l as usize, r as usize) as u32),
             Op::Update { i, v } => xs[i as usize] = v,
+            Op::RangeAdd { l, r, v } => {
+                for x in &mut xs[l as usize..=r as usize] {
+                    *x += v;
+                }
+            }
+            Op::RangeAssign { l, r, v } => {
+                for x in &mut xs[l as usize..=r as usize] {
+                    *x = v;
+                }
+            }
         }
     }
     out
